@@ -1,0 +1,158 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts + meta.json.
+
+This is the only place python touches the build.  Each entry point from
+``model.py`` is jitted, lowered to StableHLO, converted to an
+XlaComputation and dumped as **HLO text** (NOT ``.serialize()`` — jax>=0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/README.md).
+
+Outputs in ``--out-dir`` (default ``artifacts/``):
+
+    <name>.hlo.txt        one per entry point
+    meta.json             artifact signatures + model configs + param specs
+    init_params.bin       f32-LE concatenation of the transformer init
+    lstm_init_params.bin  f32-LE concatenation of the LSTM init
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_of(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+
+
+def lower_entry(name, fn, arg_specs, out_dir):
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_tree = jax.eval_shape(fn, *arg_specs)
+    outs = [out_tree] if not isinstance(out_tree, (tuple, list)) else list(out_tree)
+    # XLA drops inputs whose value cannot affect any output (e.g. the last
+    # block's bias in a gradient-only lowering).  Record which logical
+    # inputs survive so the rust runtime feeds exactly those buffers.
+    kept = sorted(lowered._lowering.compile_args.get(
+        "kept_var_idx", range(len(arg_specs))))
+    dt = time.time() - t0
+    drop = len(arg_specs) - len(kept)
+    print(f"  {name}: {len(text)/1e6:.2f} MB HLO, "
+          f"{len(arg_specs)} in ({drop} DCE'd) / {len(outs)} out, {dt:.1f}s")
+    return {
+        "file": f"{name}.hlo.txt",
+        "inputs": [_shape_of(s) for s in arg_specs],
+        "outputs": [_shape_of(s) for s in outs],
+        "kept_inputs": list(kept),
+    }
+
+
+def dump_params(params, path):
+    flat = np.concatenate([np.asarray(p, np.float32).reshape(-1) for p in params])
+    flat.tofile(path)
+    return len(flat)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) ignored if --out-dir set")
+    ap.add_argument("--preset", default="small", choices=sorted(M.PRESETS))
+    ap.add_argument("--batch", type=int, default=8,
+                    help="mini-batch size per data-parallel worker")
+    ap.add_argument("--microbatch", type=int, default=4,
+                    help="microbatch size for pipeline-stage artifacts")
+    ap.add_argument("--lstm-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-lstm", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out and not os.path.isdir(out_dir):
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = M.PRESETS[args.preset]
+    print(f"preset={args.preset} params={M.count_params(cfg):,} "
+          f"batch={args.batch} microbatch={args.microbatch}")
+
+    meta = {
+        "preset": args.preset,
+        "transformer": {
+            "config": cfg.__dict__ | {"head_dim": cfg.head_dim},
+            "n_params_total": M.count_params(cfg),
+            "batch": args.batch,
+            "microbatch": args.microbatch,
+            "param_specs": [
+                {"name": n, "shape": list(s)} for n, s in M.param_specs(cfg)
+            ],
+            "stage0_params": M.stage_param_slices(cfg)[0].stop,
+        },
+        "artifacts": {},
+    }
+
+    # Transformer entry points: full-batch surfaces at B, pipeline-stage
+    # surfaces at the microbatch size.
+    full = M.make_entry_points(cfg, args.batch)
+    micro = M.make_entry_points(cfg, args.microbatch)
+    plan = {
+        "loss_eval": full, "grad_step": full, "apply_update": full,
+        "train_step": full,
+        "stage0_fwd": micro, "stage1_grad": micro, "stage0_grad": micro,
+    }
+    for name, table in plan.items():
+        fn, specs = table[name]
+        meta["artifacts"][name] = lower_entry(name, fn, specs, out_dir)
+
+    n = dump_params(M.init_params(cfg, args.seed),
+                    os.path.join(out_dir, "init_params.bin"))
+    meta["transformer"]["init_params_file"] = "init_params.bin"
+    meta["transformer"]["init_params_floats"] = n
+
+    if not args.skip_lstm:
+        lcfg = M.LstmConfig()
+        meta["lstm"] = {
+            "config": lcfg.__dict__,
+            "n_params_total": M.lstm_count_params(lcfg),
+            "batch": args.lstm_batch,
+            "param_specs": [
+                {"name": nme, "shape": list(s)}
+                for nme, s in M.lstm_param_specs(lcfg)
+            ],
+        }
+        for name, (fn, specs) in M.lstm_make_entry_points(
+                lcfg, args.lstm_batch).items():
+            meta["artifacts"][name] = lower_entry(name, fn, specs, out_dir)
+        n = dump_params(M.lstm_init_params(lcfg, args.seed),
+                        os.path.join(out_dir, "lstm_init_params.bin"))
+        meta["lstm"]["init_params_file"] = "lstm_init_params.bin"
+        meta["lstm"]["init_params_floats"] = n
+
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {out_dir}/meta.json with {len(meta['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

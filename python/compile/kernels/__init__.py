@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels (interpret=True) for the hybrid-parallelism repro.
+
+Each kernel is the TPU re-think of a hot-spot the paper's networks spend
+their time in on V100s (see DESIGN.md §Hardware-Adaptation):
+
+- ``matmul``       — VMEM-tiled MXU-style matmul (the conv/FC/attention core)
+- ``lstm_cell``    — fused LSTM cell (cuDNN "fused RNN kernel" analog)
+- ``softmax_xent`` — fused softmax + cross-entropy (BigLSTM projection layer)
+- ``sgd_momentum`` — fused SGD-with-momentum parameter update
+
+All kernels run under ``interpret=True`` so they lower to plain HLO that the
+CPU PJRT client can execute; real-TPU perf is estimated from the BlockSpec
+structure in DESIGN.md §Perf, not wall-clock.
+"""
+
+from .matmul import matmul
+from .lstm_cell import lstm_cell
+from .softmax_xent import softmax_xent
+from .sgd import sgd_momentum
+
+__all__ = ["matmul", "lstm_cell", "softmax_xent", "sgd_momentum"]

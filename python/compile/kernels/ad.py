@@ -1,0 +1,110 @@
+"""Differentiable wrappers around the Pallas kernels.
+
+``pallas_call`` has no registered autodiff rule, so each kernel gets a
+``jax.custom_vjp``: the forward pass runs the Pallas kernel, the backward
+pass is expressed in terms of the same kernels where the math allows
+(matmul) or as the closed-form gradient with rematerialized activations
+(lstm_cell, softmax_xent) — the rematerialize-in-backward choice mirrors
+what the paper's pipeline-parallel stages must do anyway (activations are
+not kept live across the stage boundary).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul as _mm_raw
+from .lstm_cell import lstm_cell as _lstm_raw
+from .softmax_xent import softmax_xent as _sx_raw
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def matmul(x, y):
+    return _mm_raw(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _mm_raw(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # dX = g @ Y^T, dY = X^T @ g — both are themselves MXU-tiled matmuls.
+    return _mm_raw(g, y.T), _mm_raw(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+# --------------------------------------------------------------------------
+# lstm_cell
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def lstm_cell(x, h, c, wx, wh, b):
+    return _lstm_raw(x, h, c, wx, wh, b)
+
+
+def _lstm_fwd(x, h, c, wx, wh, b):
+    h_new, c_new = _lstm_raw(x, h, c, wx, wh, b)
+    return (h_new, c_new), (x, h, c, wx, wh, b, c_new)
+
+
+def _lstm_bwd(res, grads):
+    x, h, c, wx, wh, b, c_new = res
+    dh_new, dc_new = grads
+    hidden = h.shape[1]
+    # Rematerialize the gates (cheaper than carrying the (B, 4H) tensor).
+    gates = x @ wx + h @ wh + b
+    i = jax.nn.sigmoid(gates[:, 0 * hidden:1 * hidden])
+    f = jax.nn.sigmoid(gates[:, 1 * hidden:2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden:3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden:4 * hidden])
+    tc = jnp.tanh(c_new)
+    do = dh_new * tc
+    dc_total = dc_new + dh_new * o * (1.0 - tc * tc)
+    di = dc_total * g
+    df = dc_total * c
+    dg = dc_total * i
+    dc_prev = dc_total * f
+    d_gates = jnp.concatenate([
+        di * i * (1.0 - i),
+        df * f * (1.0 - f),
+        dg * (1.0 - g * g),
+        do * o * (1.0 - o),
+    ], axis=1)
+    dx = d_gates @ wx.T
+    dh = d_gates @ wh.T
+    dwx = x.T @ d_gates
+    dwh = h.T @ d_gates
+    db = jnp.sum(d_gates, axis=0)
+    return dx, dh, dc_prev, dwx, dwh, db
+
+
+lstm_cell.defvjp(_lstm_fwd, _lstm_bwd)
+
+
+# --------------------------------------------------------------------------
+# softmax_xent
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def softmax_xent(logits, labels):
+    return _sx_raw(logits, labels)
+
+
+def _sx_fwd(logits, labels):
+    return _sx_raw(logits, labels), (logits, labels)
+
+
+def _sx_bwd(res, g):
+    logits, labels = res
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    return ((p - onehot) * g[:, None]).astype(logits.dtype), None
+
+
+softmax_xent.defvjp(_sx_fwd, _sx_bwd)

@@ -1,0 +1,192 @@
+"""Fused LSTM cell Pallas kernel.
+
+GNMT and BigLSTM spend their step time in cuDNN's *fused RNN kernels*
+(paper §4.4): one GEMM producing all four gate pre-activations followed by
+the gate nonlinearities and state update, fused so the (B, 4H) gate tensor
+never round-trips to HBM.  The TPU re-think keeps the same fusion but
+expresses it as a Pallas kernel: for each batch tile, the x/h tiles and the
+(D+H, 4H) weight slabs stream through VMEM, the two gate GEMMs hit the MXU,
+and the elementwise gate math + state update run on the VPU over the
+VMEM-resident gate tile.
+
+Gate layout follows cuDNN order: [i, f, g, o] along the 4H axis.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
+                      h_out_ref, c_out_ref, *, hidden: int):
+    """One batch tile: gates = x@Wx + h@Wh + b; update (h, c)."""
+    gates = (
+        jnp.dot(x_ref[...], wx_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h_ref[...], wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    i = jax.nn.sigmoid(gates[:, 0 * hidden:1 * hidden])
+    f = jax.nn.sigmoid(gates[:, 1 * hidden:2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden:3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden:4 * hidden])
+    c_new = f * c_ref[...].astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("bb",))
+def lstm_cell(x: jax.Array, h: jax.Array, c: jax.Array, wx: jax.Array,
+              wh: jax.Array, b: jax.Array, *, bb: int = 64):
+    """Fused LSTM cell step.
+
+    Args:
+      x:  (B, D) input at this timestep.
+      h:  (B, H) previous hidden state.
+      c:  (B, H) previous cell state.
+      wx: (D, 4H) input->gates weights (cuDNN [i,f,g,o] order).
+      wh: (H, 4H) hidden->gates weights.
+      b:  (4H,)  gate bias.
+      bb: batch tile size (VMEM blocking dimension).
+
+    Returns:
+      (h_new, c_new), each (B, H).
+    """
+    batch, d = x.shape
+    hidden = h.shape[1]
+    assert wx.shape == (d, 4 * hidden), (wx.shape, d, hidden)
+    assert wh.shape == (hidden, 4 * hidden)
+    assert b.shape == (4 * hidden,)
+    bb = min(bb, batch)
+    assert batch % bb == 0, f"batch {batch} must tile by {bb}"
+    grid = (batch // bb,)
+    kernel = partial(_lstm_cell_kernel, hidden=hidden)
+    h_new, c_new = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((d, 4 * hidden), lambda i: (0, 0)),
+            pl.BlockSpec((hidden, 4 * hidden), lambda i: (0, 0)),
+            pl.BlockSpec((4 * hidden,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, hidden), x.dtype),
+            jax.ShapeDtypeStruct((batch, hidden), x.dtype),
+        ],
+        interpret=True,
+    )(x, h, c, wx, wh, b)
+    return h_new, c_new
+
+
+def _lstm_cell_tiled_kernel(x_ref, h_ref, c_ref, wx4_ref, wh4_ref, b4_ref,
+                            h_out_ref, c_out_ref):
+    """One (batch-tile, hidden-tile) grid step over gate-major weights.
+
+    wx4/wh4 are laid out (4, D, th)/(4, H, th) so each hidden tile's four
+    gate slabs are contiguous blocks — the §Perf L1 iteration that brings
+    BigLSTM-scale cells (H=8192) under the VMEM budget (see vmem_bytes vs
+    vmem_bytes_tiled in perf_report).
+    """
+    x = x_ref[...]
+    h = h_ref[...]
+
+    def gate(i):
+        return (
+            jnp.dot(x, wx4_ref[i], preferred_element_type=jnp.float32)
+            + jnp.dot(h, wh4_ref[i], preferred_element_type=jnp.float32)
+            + b4_ref[i]
+        )
+
+    i_g = jax.nn.sigmoid(gate(0))
+    f_g = jax.nn.sigmoid(gate(1))
+    g_g = jnp.tanh(gate(2))
+    o_g = jax.nn.sigmoid(gate(3))
+    c_new = f_g * c_ref[...].astype(jnp.float32) + i_g * g_g
+    h_new = o_g * jnp.tanh(c_new)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+
+
+def pack_gate_major(wx: jax.Array, wh: jax.Array, b: jax.Array):
+    """Repack cuDNN-layout (D,4H)/(H,4H)/(4H,) weights to gate-major
+    (4,D,H)/(4,H,H)/(4,H) for the tiled kernel (a one-time build-path
+    transform, analogous to cuDNN's weight-space conversion)."""
+    d, four_h = wx.shape
+    hidden = four_h // 4
+    wx4 = jnp.stack([wx[:, k * hidden:(k + 1) * hidden] for k in range(4)])
+    wh4 = jnp.stack([wh[:, k * hidden:(k + 1) * hidden] for k in range(4)])
+    b4 = b.reshape(4, hidden)
+    return wx4, wh4, b4
+
+
+@partial(jax.jit, static_argnames=("bb", "th"))
+def lstm_cell_tiled(x: jax.Array, h: jax.Array, c: jax.Array,
+                    wx4: jax.Array, wh4: jax.Array, b4: jax.Array,
+                    *, bb: int = 8, th: int = 64):
+    """VMEM-tiled fused LSTM cell over gate-major weights.
+
+    Grid is (B/bb, H/th); each step streams only the four (D|H, th) gate
+    slabs for its hidden tile, so VMEM scales with th instead of H.
+    Matches `lstm_cell` bit-for-bit on repacked weights (pytest-checked).
+    """
+    batch, d = x.shape
+    hidden = h.shape[1]
+    assert wx4.shape == (4, d, hidden)
+    assert wh4.shape == (4, hidden, hidden)
+    assert b4.shape == (4, hidden)
+    bb = min(bb, batch)
+    th = min(th, hidden)
+    assert batch % bb == 0 and hidden % th == 0
+    grid = (batch // bb, hidden // th)
+    h_new, c_new = pl.pallas_call(
+        _lstm_cell_tiled_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, th), lambda i, j: (i, j)),
+            pl.BlockSpec((4, d, th), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((4, hidden, th), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((4, th), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, th), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, th), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, hidden), x.dtype),
+            jax.ShapeDtypeStruct((batch, hidden), x.dtype),
+        ],
+        interpret=True,
+    )(x, h, c, wx4, wh4, b4)
+    return h_new, c_new
+
+
+def vmem_bytes_tiled(bb: int, d: int, hidden: int, th: int,
+                     dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM of the tiled variant: x/h tiles + c tile + four
+    (d,th) and (hidden,th) weight slabs + bias + f32 gates + outputs."""
+    tiles = bb * (d + hidden + th) * dtype_bytes
+    weights = 4 * (d + hidden) * th * dtype_bytes + 4 * th * dtype_bytes
+    gates_f32 = bb * 4 * th * 4
+    outs = 2 * bb * th * dtype_bytes
+    return tiles + weights + gates_f32 + outs
+
+
+def vmem_bytes(bb: int, d: int, hidden: int, dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM footprint: x/h/c tiles, both weight slabs, bias,
+    the f32 gate tile, and the two output tiles."""
+    tiles = bb * (d + 2 * hidden) * dtype_bytes
+    weights = (d + hidden) * 4 * hidden * dtype_bytes + 4 * hidden * dtype_bytes
+    gate_f32 = bb * 4 * hidden * 4
+    outs = 2 * bb * hidden * dtype_bytes
+    return tiles + weights + gate_f32 + outs

@@ -1,0 +1,71 @@
+"""Fused SGD-with-momentum update Pallas kernel.
+
+The optimizer update is bandwidth-bound: unfused it reads/writes each of
+(param, momentum, grad) in separate HBM passes.  Fusing the
+``v = mu*v + g; p = p - lr*v`` chain into one VMEM pass per tile cuts HBM
+traffic from 5 tensor-passes to the 3-read/2-write minimum — the same
+reasoning as cuDNN/apex fused optimizers on V100, restated for the
+HBM<->VMEM hierarchy.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sgd_kernel(p_ref, v_ref, g_ref, lr_ref, mu_ref, p_out_ref, v_out_ref):
+    v_new = mu_ref[0] * v_ref[...] + g_ref[...]
+    p_out_ref[...] = p_ref[...] - lr_ref[0] * v_new
+    v_out_ref[...] = v_new
+
+
+@partial(jax.jit, static_argnames=("bt",))
+def sgd_momentum(param: jax.Array, vel: jax.Array, grad: jax.Array,
+                 lr, mu, *, bt: int = 16384):
+    """Fused momentum-SGD step over a flat (or flattened) parameter tensor.
+
+    Returns (param_new, vel_new).
+    """
+    shape = param.shape
+    p = param.reshape(-1)
+    v = vel.reshape(-1)
+    g = grad.reshape(-1)
+    n = p.shape[0]
+    bt = min(bt, n)
+    # Pad to a tile multiple so any parameter size is accepted.
+    pad = (-n) % bt
+    if pad:
+        p = jnp.pad(p, (0, pad))
+        v = jnp.pad(v, (0, pad))
+        g = jnp.pad(g, (0, pad))
+    total = p.shape[0]
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1)
+    mu_arr = jnp.asarray(mu, jnp.float32).reshape(1)
+    p_new, v_new = pl.pallas_call(
+        _sgd_kernel,
+        grid=(total // bt,),
+        in_specs=[
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((total,), param.dtype),
+            jax.ShapeDtypeStruct((total,), param.dtype),
+        ],
+        interpret=True,
+    )(p, v, g, lr_arr, mu_arr)
+    return p_new[:n].reshape(shape), v_new[:n].reshape(shape)
+
+
+def vmem_bytes(bt: int, dtype_bytes: int = 4) -> int:
+    """3 input tiles + 2 output tiles + 2 scalars per grid step."""
+    return 5 * bt * dtype_bytes + 2 * 4

@@ -1,0 +1,379 @@
+"""Layer-2 JAX models: the data-/model-parallel workloads the rust
+coordinator trains.
+
+Two model families, mirroring the paper's evaluation mix:
+
+- ``TransformerLM`` — the end-to-end training workload (decoder-only LM on
+  synthetic token streams).  It exposes the entry points the L3
+  coordinator needs for every parallelization strategy the paper studies:
+
+    * ``grad_step``    — fwd+bwd, returns grads (DP: rust all-reduces them)
+    * ``apply_update`` — SGD update (runs after the all-reduce)
+    * ``train_step``   — fused fwd+bwd+update (single-device baseline)
+    * ``stage{0,1}_*`` — a 2-way pipeline split (MP: each stage lives on a
+      different simulated device; activations/grads cross the link)
+
+- ``LstmLM`` — BigLSTM analog: embedding -> stacked LSTM (Pallas fused
+  cell) -> projection -> fused softmax-xent.  Used by the BigLSTM-analog
+  convergence example.
+
+All entry points take/return *flat positional tensors* (no pytrees) so the
+AOT artifacts have plain HLO signatures the rust side can drive.  Parameter
+order is fixed by ``param_specs`` and recorded in ``artifacts/meta.json``.
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ad as K
+
+
+# ==========================================================================
+# Transformer LM
+# ==========================================================================
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 64
+    # Layer index at which the 2-way pipeline split happens: stage0 owns
+    # embed + layers[:split]; stage1 owns layers[split:] + head.
+    split: int = 2
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+PRESETS = {
+    # quick CI / default e2e preset (~1.1M params)
+    "small": TransformerConfig(),
+    # ~30M params — the e2e driver preset for the loss-curve run
+    "medium": TransformerConfig(vocab=4096, d_model=512, n_layers=8,
+                                n_heads=8, d_ff=2048, seq_len=128, split=4),
+    # ~103M params — the paper-scale configuration (lowering works; CPU
+    # training at this size is slow, used for artifact-size/HLO checks)
+    "large": TransformerConfig(vocab=8192, d_model=768, n_layers=12,
+                               n_heads=12, d_ff=3072, seq_len=256, split=6),
+}
+
+
+def param_specs(cfg: TransformerConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Fixed (name, shape) order of the flat parameter list."""
+    d, ff, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    specs = [("embed", (v, d)), ("pos", (s, d))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1_scale", (d,)), (p + "ln1_bias", (d,)),
+            (p + "wq", (d, d)), (p + "wk", (d, d)),
+            (p + "wv", (d, d)), (p + "wo", (d, d)),
+            (p + "ln2_scale", (d,)), (p + "ln2_bias", (d,)),
+            (p + "w1", (d, ff)), (p + "b1", (ff,)),
+            (p + "w2", (ff, d)), (p + "b2", (d,)),
+        ]
+    specs += [("lnf_scale", (d,)), ("lnf_bias", (d,)), ("unembed", (d, v))]
+    return specs
+
+
+PARAMS_PER_LAYER = 12
+HEAD_PARAMS = 3  # lnf_scale, lnf_bias, unembed
+
+
+def stage_param_slices(cfg: TransformerConfig) -> Tuple[slice, slice]:
+    """Index ranges of the flat param list owned by stage0 / stage1."""
+    n0 = 2 + cfg.split * PARAMS_PER_LAYER
+    total = 2 + cfg.n_layers * PARAMS_PER_LAYER + HEAD_PARAMS
+    return slice(0, n0), slice(n0, total)
+
+
+def init_params(cfg: TransformerConfig, seed: int) -> List[jax.Array]:
+    """Deterministic scaled-normal init (fan-in scaling, GPT-2 style)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("_bias", ".b1", ".b2")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = 0.02 if name in ("embed", "pos") else fan_in ** -0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _mm(x2d, w):
+    """Route through the Pallas matmul when the shapes tile cleanly."""
+    m, k = x2d.shape
+    n = w.shape[1]
+    if m % 8 == 0 and k % 8 == 0 and n % 8 == 0:
+        return K.matmul(x2d, w)
+    return x2d @ w
+
+
+def _attention(cfg: TransformerConfig, x, wq, wk, wv, wo):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    x2 = x.reshape(b * s, d)
+    q = _mm(x2, wq).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = _mm(x2, wk).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = _mm(x2, wv).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b * s, d)
+    return _mm(out, wo).reshape(b, s, d)
+
+
+def _block(cfg, x, lp):
+    (ln1s, ln1b, wq, wk, wv, wo, ln2s, ln2b, w1, b1, w2, b2) = lp
+    x = x + _attention(cfg, _layer_norm(x, ln1s, ln1b), wq, wk, wv, wo)
+    b, s, d = x.shape
+    h = _layer_norm(x, ln2s, ln2b).reshape(b * s, d)
+    h = jax.nn.gelu(_mm(h, w1) + b1)
+    h = _mm(h, w2) + b2
+    return x + h.reshape(b, s, d)
+
+
+def _embed(cfg, params, tokens):
+    embed, pos = params[0], params[1]
+    return embed[tokens] + pos[None, :tokens.shape[1], :]
+
+
+def stage0_apply(cfg: TransformerConfig, p0: List[jax.Array], tokens):
+    """Embedding + first ``split`` blocks -> activations (B, S, D)."""
+    x = _embed(cfg, p0, tokens)
+    for i in range(cfg.split):
+        lp = p0[2 + i * PARAMS_PER_LAYER: 2 + (i + 1) * PARAMS_PER_LAYER]
+        x = _block(cfg, x, lp)
+    return x
+
+
+def stage1_apply(cfg: TransformerConfig, p1: List[jax.Array], x, targets):
+    """Remaining blocks + head -> mean loss."""
+    n1 = cfg.n_layers - cfg.split
+    for i in range(n1):
+        lp = p1[i * PARAMS_PER_LAYER: (i + 1) * PARAMS_PER_LAYER]
+        x = _block(cfg, x, lp)
+    lnf_s, lnf_b, unembed = p1[n1 * PARAMS_PER_LAYER:]
+    x = _layer_norm(x, lnf_s, lnf_b)
+    b, s, d = x.shape
+    logits = _mm(x.reshape(b * s, d), unembed)
+    loss = K.softmax_xent(logits, targets.reshape(b * s))
+    return jnp.mean(loss)
+
+
+def loss_fn(cfg: TransformerConfig, params: List[jax.Array], tokens, targets):
+    s0, s1 = stage_param_slices(cfg)
+    acts = stage0_apply(cfg, params[s0], tokens)
+    return stage1_apply(cfg, params[s1], acts, targets)
+
+
+# ---- flat entry points (AOT surfaces) ------------------------------------
+
+def make_entry_points(cfg: TransformerConfig, batch: int):
+    """Build the flat-signature functions the coordinator drives.
+
+    Returns a dict name -> (fn, example_arg_specs) ready for
+    ``jax.jit(fn).lower(*specs)``.
+    """
+    specs = param_specs(cfg)
+    n_params = len(specs)
+    s0, _ = stage_param_slices(cfg)
+    n0 = s0.stop
+    tok = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    tgt = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    lr_s = jax.ShapeDtypeStruct((), jnp.float32)
+    p_specs = [jax.ShapeDtypeStruct(sh, jnp.float32) for _, sh in specs]
+    act = jax.ShapeDtypeStruct((batch, cfg.seq_len, cfg.d_model), jnp.float32)
+
+    def loss_eval(*args):
+        params, tokens, targets = list(args[:n_params]), args[-2], args[-1]
+        return (loss_fn(cfg, params, tokens, targets),)
+
+    def grad_step(*args):
+        params, tokens, targets = list(args[:n_params]), args[-2], args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens, targets))(params)
+        return (*grads, loss)
+
+    def apply_update(*args):
+        params = list(args[:n_params])
+        grads = list(args[n_params:2 * n_params])
+        lr = args[-1]
+        return tuple(p - lr * g for p, g in zip(params, grads))
+
+    def train_step(*args):
+        params = list(args[:n_params])
+        tokens, targets, lr = args[-3], args[-2], args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens, targets))(params)
+        new = [p - lr * g for p, g in zip(params, grads)]
+        return (*new, loss)
+
+    def stage0_fwd(*args):
+        p0, tokens = list(args[:n0]), args[-1]
+        return (stage0_apply(cfg, p0, tokens),)
+
+    def stage1_grad(*args):
+        n1 = n_params - n0
+        p1, acts, targets = list(args[:n1]), args[-2], args[-1]
+
+        def f(p1_, acts_):
+            return stage1_apply(cfg, p1_, acts_, targets)
+
+        loss, (g_p1, g_acts) = jax.value_and_grad(f, argnums=(0, 1))(p1, acts)
+        return (*g_p1, g_acts, loss)
+
+    def stage0_grad(*args):
+        p0, tokens, g_acts = list(args[:n0]), args[-2], args[-1]
+        # Rematerialize the stage-0 forward (pipeline stages do not keep
+        # activations live across the boundary).
+        _, vjp = jax.vjp(lambda p: stage0_apply(cfg, p, tokens), p0)
+        (g_p0,) = vjp(g_acts)
+        return tuple(g_p0)
+
+    p0_specs = p_specs[:n0]
+    p1_specs = p_specs[n0:]
+    return {
+        "loss_eval": (loss_eval, [*p_specs, tok, tgt]),
+        "grad_step": (grad_step, [*p_specs, tok, tgt]),
+        "apply_update": (apply_update, [*p_specs, *p_specs, lr_s]),
+        "train_step": (train_step, [*p_specs, tok, tgt, lr_s]),
+        "stage0_fwd": (stage0_fwd, [*p0_specs, tok]),
+        "stage1_grad": (stage1_grad, [*p1_specs, act, tgt]),
+        "stage0_grad": (stage0_grad, [*p0_specs, tok, act]),
+    }
+
+
+def count_params(cfg: TransformerConfig) -> int:
+    total = 0
+    for _, sh in param_specs(cfg):
+        n = 1
+        for d in sh:
+            n *= d
+        total += n
+    return total
+
+
+# ==========================================================================
+# LSTM LM (BigLSTM analog)
+# ==========================================================================
+
+@dataclass(frozen=True)
+class LstmConfig:
+    vocab: int = 512
+    d_embed: int = 128
+    d_hidden: int = 256
+    n_layers: int = 2
+    seq_len: int = 32
+
+
+def lstm_param_specs(cfg: LstmConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    specs = [("embed", (cfg.vocab, cfg.d_embed))]
+    d_in = cfg.d_embed
+    for i in range(cfg.n_layers):
+        p = f"lstm{i}."
+        specs += [
+            (p + "wx", (d_in, 4 * cfg.d_hidden)),
+            (p + "wh", (cfg.d_hidden, 4 * cfg.d_hidden)),
+            (p + "b", (4 * cfg.d_hidden,)),
+        ]
+        d_in = cfg.d_hidden
+    specs += [("proj", (cfg.d_hidden, cfg.vocab)), ("proj_b", (cfg.vocab,))]
+    return specs
+
+
+def lstm_init_params(cfg: LstmConfig, seed: int) -> List[jax.Array]:
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in lstm_param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".b", "proj_b")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            std = 0.05 if name == "embed" else shape[0] ** -0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def lstm_loss_fn(cfg: LstmConfig, params: List[jax.Array], tokens, targets):
+    """Stacked-LSTM LM loss.  Time loop is a lax.scan (not unrolled) so the
+    lowered HLO stays compact at any seq_len — the scan-vs-unroll choice
+    from DESIGN.md §Perf(L2)."""
+    embed = params[0]
+    b, s = tokens.shape
+    layer_in = embed[tokens]  # (B, S, E)
+    idx = 1
+    for _ in range(cfg.n_layers):
+        wx, wh, bias = params[idx], params[idx + 1], params[idx + 2]
+        idx += 3
+        h0 = jnp.zeros((b, cfg.d_hidden), jnp.float32)
+        c0 = jnp.zeros((b, cfg.d_hidden), jnp.float32)
+
+        def step(carry, xt):
+            h, c = carry
+            h2, c2 = K.lstm_cell(xt, h, c, wx, wh, bias)
+            return (h2, c2), h2
+
+        _, hs = jax.lax.scan(step, (h0, c0), layer_in.transpose(1, 0, 2))
+        layer_in = hs.transpose(1, 0, 2)  # (B, S, H)
+    proj, proj_b = params[idx], params[idx + 1]
+    logits = layer_in.reshape(b * s, cfg.d_hidden) @ proj + proj_b
+    loss = K.softmax_xent(logits, targets.reshape(b * s))
+    return jnp.mean(loss)
+
+
+def lstm_make_entry_points(cfg: LstmConfig, batch: int):
+    specs = lstm_param_specs(cfg)
+    n_params = len(specs)
+    tok = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    tgt = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    lr_s = jax.ShapeDtypeStruct((), jnp.float32)
+    p_specs = [jax.ShapeDtypeStruct(sh, jnp.float32) for _, sh in specs]
+
+    def lstm_train_step(*args):
+        params = list(args[:n_params])
+        tokens, targets, lr = args[-3], args[-2], args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda p: lstm_loss_fn(cfg, p, tokens, targets))(params)
+        new = [p - lr * g for p, g in zip(params, grads)]
+        return (*new, loss)
+
+    def lstm_grad_step(*args):
+        params, tokens, targets = list(args[:n_params]), args[-2], args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda p: lstm_loss_fn(cfg, p, tokens, targets))(params)
+        return (*grads, loss)
+
+    return {
+        "lstm_train_step": (lstm_train_step, [*p_specs, tok, tgt, lr_s]),
+        "lstm_grad_step": (lstm_grad_step, [*p_specs, tok, tgt]),
+    }
+
+
+def lstm_count_params(cfg: LstmConfig) -> int:
+    total = 0
+    for _, sh in lstm_param_specs(cfg):
+        n = 1
+        for d in sh:
+            n *= d
+        total += n
+    return total

@@ -1,0 +1,95 @@
+"""AOT artifact checks: meta.json consistency, HLO text loadability
+(round-trip through the XLA text parser), and init-params binary layout.
+
+These run against a throwaway artifact dir so they don't depend on (or
+dirty) the repo-level ``artifacts/`` built by make.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "_aot_test_artifacts")
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    if not os.path.exists(os.path.join(ART, "meta.json")):
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", ART,
+             "--preset", "small", "--batch", "2", "--microbatch", "2"],
+            check=True, cwd=os.path.dirname(os.path.dirname(__file__)))
+    with open(os.path.join(ART, "meta.json")) as f:
+        return json.load(f)
+
+
+def test_meta_lists_all_artifacts(artifacts):
+    want = {"loss_eval", "grad_step", "apply_update", "train_step",
+            "stage0_fwd", "stage1_grad", "stage0_grad",
+            "lstm_train_step", "lstm_grad_step"}
+    assert want == set(artifacts["artifacts"])
+
+
+def test_artifact_files_exist_and_parse(artifacts):
+    for name, info in artifacts["artifacts"].items():
+        path = os.path.join(ART, info["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_grad_step_signature(artifacts):
+    cfg = M.PRESETS["small"]
+    n = len(M.param_specs(cfg))
+    gs = artifacts["artifacts"]["grad_step"]
+    assert len(gs["inputs"]) == n + 2
+    assert len(gs["outputs"]) == n + 1
+    # grads mirror param shapes exactly
+    for spec, out in zip(artifacts["transformer"]["param_specs"],
+                         gs["outputs"][:-1]):
+        assert spec["shape"] == out["shape"]
+    assert gs["outputs"][-1]["shape"] == []
+
+
+def test_stage_partition_covers_params(artifacts):
+    t = artifacts["transformer"]
+    n0 = t["stage0_params"]
+    n = len(t["param_specs"])
+    s0 = artifacts["artifacts"]["stage0_fwd"]
+    s1 = artifacts["artifacts"]["stage1_grad"]
+    assert len(s0["inputs"]) == n0 + 1          # p0 + tokens
+    assert len(s1["inputs"]) == (n - n0) + 2    # p1 + acts + targets
+    assert len(s1["outputs"]) == (n - n0) + 2   # g_p1 + g_acts + loss
+
+
+def test_init_params_bin_layout(artifacts):
+    t = artifacts["transformer"]
+    data = np.fromfile(os.path.join(ART, t["init_params_file"]), np.float32)
+    assert len(data) == t["init_params_floats"]
+    total = sum(int(np.prod(s["shape"])) for s in t["param_specs"])
+    assert len(data) == total
+    # scale params were initialised to exactly 1.0 — check the first one.
+    cfg = M.PRESETS["small"]
+    offset = 0
+    for name, shape in M.param_specs(cfg):
+        size = int(np.prod(shape))
+        if name.endswith("_scale"):
+            np.testing.assert_array_equal(data[offset:offset + size], 1.0)
+            break
+        offset += size
+
+
+def test_config_round_trip(artifacts):
+    c = artifacts["transformer"]["config"]
+    cfg = M.PRESETS["small"]
+    assert c["vocab"] == cfg.vocab
+    assert c["d_model"] == cfg.d_model
+    assert c["n_layers"] == cfg.n_layers
+    assert c["split"] == cfg.split

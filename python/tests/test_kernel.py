@@ -1,0 +1,295 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every Pallas kernel is checked against its pure-jnp oracle in ``ref.py``,
+both with fixed production-like shapes and with hypothesis sweeps over
+shapes/dtypes/seeds (the shape strategy respects each kernel's tiling
+contract, which is itself asserted by the kernels).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, lstm_cell, softmax_xent, sgd_momentum
+from compile.kernels import ref
+from compile.kernels import ad
+import importlib
+matmul_mod = importlib.import_module("compile.kernels.matmul")
+lstm_mod = importlib.import_module("compile.kernels.lstm_cell")
+sx_mod = importlib.import_module("compile.kernels.softmax_xent")
+sgd_mod = importlib.import_module("compile.kernels.sgd")
+
+RNG = np.random.default_rng
+
+
+def rnd(rng, *shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype) * scale)
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (128, 128, 128), (256, 384, 128), (8, 8, 8), (64, 512, 256),
+        (512, 128, 384), (1, 1, 1), (16, 1024, 16),
+    ])
+    def test_matches_ref(self, m, k, n):
+        rng = RNG(m * 1000 + k * 10 + n)
+        x, y = rnd(rng, m, k), rnd(rng, k, n)
+        np.testing.assert_allclose(
+            matmul_mod.matmul(x, y), ref.matmul_ref(x, y),
+            rtol=2e-5, atol=2e-5 * k ** 0.5)
+
+    @pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (64, 128, 32),
+                                          (128, 64, 64)])
+    def test_block_shape_invariance(self, bm, bn, bk):
+        """Result must be identical (up to fp assoc) across block shapes."""
+        rng = RNG(7)
+        x, y = rnd(rng, 128, 128), rnd(rng, 128, 128)
+        out = matmul_mod.matmul(x, y, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(out, ref.matmul_ref(x, y),
+                                   rtol=2e-5, atol=3e-4)
+
+    def test_rejects_untileable(self):
+        x, y = jnp.ones((100, 64)), jnp.ones((64, 64))
+        with pytest.raises(AssertionError):
+            matmul_mod.matmul(x, y, bm=64)
+
+    def test_rejects_mismatched_inner(self):
+        with pytest.raises(AssertionError):
+            matmul_mod.matmul(jnp.ones((8, 16)), jnp.ones((8, 8)))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 64, 128, 256]),
+        k=st.sampled_from([8, 32, 128, 384]),
+        n=st.sampled_from([8, 16, 128, 256]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        rng = RNG(seed)
+        x, y = rnd(rng, m, k), rnd(rng, k, n)
+        np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y),
+                                   rtol=2e-5, atol=2e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_bf16(self, seed):
+        rng = RNG(seed)
+        x = rnd(rng, 64, 64).astype(jnp.bfloat16)
+        y = rnd(rng, 64, 64).astype(jnp.bfloat16)
+        got = matmul(x, y).astype(jnp.float32)
+        want = ref.matmul_ref(x.astype(jnp.float32), y.astype(jnp.float32))
+        # bf16 inputs, f32 accumulation: tolerance set by input rounding.
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-1)
+
+    def test_vmem_estimate_positive(self):
+        assert matmul_mod.vmem_bytes(128, 128, 128) == 128 * 128 * 4 * 3
+        assert 0.99 < matmul_mod.mxu_utilization_estimate(128, 128, 128)
+        assert matmul_mod.mxu_utilization_estimate(8, 128, 128) < 0.1
+
+
+# --------------------------------------------------------------------------
+# lstm_cell
+# --------------------------------------------------------------------------
+
+class TestLstmCell:
+    @pytest.mark.parametrize("b,d,h", [(64, 96, 80), (8, 8, 8),
+                                       (128, 256, 256), (32, 1024, 512)])
+    def test_matches_ref(self, b, d, h):
+        rng = RNG(b + d + h)
+        x = rnd(rng, b, d)
+        hh, cc = rnd(rng, b, h), rnd(rng, b, h)
+        wx, wh = rnd(rng, d, 4 * h, scale=0.1), rnd(rng, h, 4 * h, scale=0.1)
+        bias = rnd(rng, 4 * h, scale=0.1)
+        h1, c1 = lstm_mod.lstm_cell(x, hh, cc, wx, wh, bias)
+        h2, c2 = ref.lstm_cell_ref(x, hh, cc, wx, wh, bias)
+        np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-5)
+
+    def test_gate_saturation_extremes(self):
+        """Large positive forget-gate bias must preserve cell state."""
+        b, d, h = 8, 8, 8
+        x = jnp.zeros((b, d))
+        hh = jnp.zeros((b, h))
+        cc = jnp.full((b, h), 3.0)
+        wx, wh = jnp.zeros((d, 4 * h)), jnp.zeros((h, 4 * h))
+        bias = jnp.concatenate([
+            jnp.full((h,), -30.0),  # i -> 0
+            jnp.full((h,), 30.0),   # f -> 1
+            jnp.zeros((h,)),        # g
+            jnp.full((h,), -30.0),  # o -> 0
+        ])
+        h1, c1 = lstm_mod.lstm_cell(x, hh, cc, wx, wh, bias)
+        np.testing.assert_allclose(c1, cc, rtol=1e-6)
+        np.testing.assert_allclose(h1, jnp.zeros_like(h1), atol=1e-9)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.sampled_from([8, 16, 64]),
+        d=st.sampled_from([8, 32, 128]),
+        h=st.sampled_from([8, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, b, d, h, seed):
+        rng = RNG(seed)
+        x = rnd(rng, b, d)
+        hh, cc = rnd(rng, b, h), rnd(rng, b, h)
+        wx, wh = rnd(rng, d, 4 * h, scale=0.2), rnd(rng, h, 4 * h, scale=0.2)
+        bias = rnd(rng, 4 * h, scale=0.2)
+        h1, c1 = lstm_cell(x, hh, cc, wx, wh, bias)
+        h2, c2 = ref.lstm_cell_ref(x, hh, cc, wx, wh, bias)
+        np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("b,d,h,bb,th", [
+        (16, 96, 128, 8, 32), (8, 64, 64, 8, 64), (32, 128, 256, 16, 64),
+    ])
+    def test_tiled_matches_ref(self, b, d, h, bb, th):
+        rng = RNG(b * d + h)
+        x = rnd(rng, b, d)
+        hh, cc = rnd(rng, b, h), rnd(rng, b, h)
+        wx, wh = rnd(rng, d, 4 * h, scale=0.1), rnd(rng, h, 4 * h, scale=0.1)
+        bias = rnd(rng, 4 * h, scale=0.1)
+        wx4, wh4, b4 = lstm_mod.pack_gate_major(wx, wh, bias)
+        h1, c1 = lstm_mod.lstm_cell_tiled(x, hh, cc, wx4, wh4, b4,
+                                          bb=bb, th=th)
+        h2, c2 = ref.lstm_cell_ref(x, hh, cc, wx, wh, bias)
+        np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-5)
+
+    def test_tiled_vmem_budget(self):
+        """The §Perf finding: untiled blows 16 MiB at BigLSTM scale, the
+        gate-tiled variant fits."""
+        budget = 16 * 2**20
+        assert lstm_mod.vmem_bytes(8, 1024, 8192) > budget
+        assert lstm_mod.vmem_bytes_tiled(8, 1024, 8192, 64) < budget
+
+    def test_vjp_matches_jnp_grad(self):
+        """ad.lstm_cell backward == autodiff of the pure-jnp reference."""
+        rng = RNG(3)
+        b, d, h = 16, 24, 32
+        args = (rnd(rng, b, d), rnd(rng, b, h), rnd(rng, b, h),
+                rnd(rng, d, 4 * h, scale=0.2), rnd(rng, h, 4 * h, scale=0.2),
+                rnd(rng, 4 * h, scale=0.2))
+
+        def loss_k(*a):
+            hn, cn = ad.lstm_cell(*a)
+            return jnp.sum(hn ** 2) + jnp.sum(jnp.tanh(cn))
+
+        def loss_r(*a):
+            hn, cn = ref.lstm_cell_ref(*a)
+            return jnp.sum(hn ** 2) + jnp.sum(jnp.tanh(cn))
+
+        gk = jax.grad(loss_k, argnums=tuple(range(6)))(*args)
+        gr = jax.grad(loss_r, argnums=tuple(range(6)))(*args)
+        for a, b_ in zip(gk, gr):
+            np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# softmax_xent
+# --------------------------------------------------------------------------
+
+class TestSoftmaxXent:
+    @pytest.mark.parametrize("b,v", [(128, 512), (8, 8), (256, 2048),
+                                     (64, 50000)])
+    def test_matches_ref(self, b, v):
+        rng = RNG(b + v)
+        logits = rnd(rng, b, v, scale=3.0)
+        labels = jnp.asarray(rng.integers(0, v, b), jnp.int32)
+        np.testing.assert_allclose(
+            sx_mod.softmax_xent(logits, labels),
+            ref.softmax_xent_ref(logits, labels), rtol=1e-5, atol=1e-5)
+
+    def test_extreme_logits_stable(self):
+        """logsumexp shift must avoid overflow at |logit| ~ 1e4."""
+        logits = jnp.array([[1e4, -1e4, 0.0, 5.0]] * 8, jnp.float32)
+        labels = jnp.zeros((8,), jnp.int32)
+        out = sx_mod.softmax_xent(logits, labels)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        np.testing.assert_allclose(out, jnp.zeros(8), atol=1e-5)
+
+    def test_uniform_logits_is_log_v(self):
+        v = 1000
+        logits = jnp.zeros((16, v))
+        labels = jnp.arange(16, dtype=jnp.int32)
+        np.testing.assert_allclose(sx_mod.softmax_xent(logits, labels),
+                                   jnp.full(16, np.log(v)), rtol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.sampled_from([8, 32, 128]),
+        v=st.sampled_from([8, 512, 4096]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, b, v, seed):
+        rng = RNG(seed)
+        logits = rnd(rng, b, v, scale=2.0)
+        labels = jnp.asarray(rng.integers(0, v, b), jnp.int32)
+        np.testing.assert_allclose(
+            softmax_xent(logits, labels),
+            ref.softmax_xent_ref(logits, labels), rtol=1e-5, atol=1e-5)
+
+    def test_vjp_is_softmax_minus_onehot(self):
+        rng = RNG(5)
+        logits = rnd(rng, 16, 64)
+        labels = jnp.asarray(rng.integers(0, 64, 16), jnp.int32)
+        g = jax.grad(lambda lg: jnp.sum(ad.softmax_xent(lg, labels)))(logits)
+        want = jax.nn.softmax(logits) - jax.nn.one_hot(labels, 64)
+        np.testing.assert_allclose(g, want, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# sgd_momentum
+# --------------------------------------------------------------------------
+
+class TestSgdMomentum:
+    @pytest.mark.parametrize("shape", [(1000, 7), (8,), (128, 128),
+                                       (3, 5, 7), (16385,)])
+    def test_matches_ref(self, shape):
+        rng = RNG(sum(shape))
+        p, g = rnd(rng, *shape), rnd(rng, *shape)
+        v = rnd(rng, *shape, scale=0.5)
+        pn, vn = sgd_mod.sgd_momentum(p, v, g, 0.01, 0.9)
+        pr, vr = ref.sgd_momentum_ref(p, v, g, 0.01, 0.9)
+        np.testing.assert_allclose(pn, pr, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(vn, vr, rtol=1e-6, atol=1e-6)
+
+    def test_zero_momentum_is_plain_sgd(self):
+        rng = RNG(1)
+        p, g = rnd(rng, 64), rnd(rng, 64)
+        v = jnp.zeros(64)
+        pn, _ = sgd_mod.sgd_momentum(p, v, g, 0.1, 0.0)
+        np.testing.assert_allclose(pn, p - 0.1 * g, rtol=1e-6)
+
+    def test_momentum_accumulates(self):
+        """Constant grad for k steps: v_k = sum mu^i g (geometric)."""
+        p = jnp.zeros(16)
+        v = jnp.zeros(16)
+        g = jnp.ones(16)
+        mu = 0.5
+        for _ in range(4):
+            p, v = sgd_mod.sgd_momentum(p, v, g, 1.0, mu)
+        want_v = sum(mu ** i for i in range(4))
+        np.testing.assert_allclose(v, jnp.full(16, want_v), rtol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(1, 40000),
+        lr=st.floats(1e-5, 1.0),
+        mu=st.floats(0.0, 0.999),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_flat(self, n, lr, mu, seed):
+        rng = RNG(seed)
+        p, g = rnd(rng, n), rnd(rng, n)
+        v = rnd(rng, n, scale=0.1)
+        pn, vn = sgd_momentum(p, v, g, lr, mu)
+        pr, vr = ref.sgd_momentum_ref(p, v, g, lr, mu)
+        np.testing.assert_allclose(pn, pr, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(vn, vr, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,92 @@
+//! Collective micro-benchmarks: ring vs tree vs parameter-server across
+//! payload sizes and worker counts, on NVLink-only and multi-node
+//! topologies; host wall-clock + simulated time + α-β model agreement.
+//!
+//! This regenerates the scaling-efficiency substrate behind the paper's
+//! SE_N discussion (§3.1/§4.3): ring all-reduce cost grows with N and
+//! with crossing slow inter-node links, and PS collapses at scale.
+
+use hybridpar::bench::{bench, f3, Table};
+use hybridpar::cluster::{dgx1, multi_node, HwGraph};
+use hybridpar::collective::compress::ring_allreduce_bf16;
+use hybridpar::collective::{parameter_server, ring_allreduce, ring_cost,
+                            tree_allreduce};
+use hybridpar::util::rng::Rng;
+
+fn bufs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..len).map(|_| rng.f32()).collect()).collect()
+}
+
+fn main() {
+    // --- sweep: payload size on a 4-GPU NVLink ring ----------------------
+    let hw = dgx1(4);
+    let devs = hw.devices();
+    let mut table = Table::new(&["MB", "ring sim", "bf16 ring", "tree sim",
+                                 "PS sim", "ring αβ model", "model err %"]);
+    for mb in [0.25f64, 1.0, 4.0, 16.0, 64.0] {
+        let len = (mb * 1e6 / 4.0) as usize;
+        let mut b1 = bufs(4, len, 1);
+        let ring = ring_allreduce(&mut b1, &hw, &devs).unwrap();
+        let mut b2 = bufs(4, len, 1);
+        let tree = tree_allreduce(&mut b2, &hw, &devs).unwrap();
+        let mut b3 = bufs(4, len, 1);
+        let ps = parameter_server(&mut b3, &hw, &devs).unwrap();
+        let mut b4 = bufs(4, len, 1);
+        let bf16 = ring_allreduce_bf16(&mut b4, &hw, &devs).unwrap();
+        let model = ring_cost(4, mb * 1e6, 1.3e-6, 25e9);
+        let err = (ring.sim_time - model).abs() / model * 100.0;
+        table.row(&[
+            format!("{mb}"),
+            f3(ring.sim_time * 1e3),
+            f3(bf16.sim_time * 1e3),
+            f3(tree.sim_time * 1e3),
+            f3(ps.sim_time * 1e3),
+            f3(model * 1e3),
+            format!("{err:.1}"),
+        ]);
+        assert!(err < 15.0, "ring sim should track the α-β model: {err}%");
+        assert!(bf16.sim_time < 0.6 * ring.sim_time,
+                "bf16 wire should ~halve the collective time");
+    }
+    table.print("all-reduce simulated time (ms) vs payload, 4x NVLink");
+
+    // --- sweep: worker count, multi-node ---------------------------------
+    let mut table = Table::new(&["workers", "topology", "ring sim ms",
+                                 "PS sim ms", "PS/ring"]);
+    for (workers, hw) in [(4usize, dgx1(4)),
+                          (8, multi_node(2, 4)),
+                          (16, multi_node(4, 4))] {
+        let hw: HwGraph = hw;
+        let devs: Vec<usize> = hw.devices();
+        let len = 4_000_000; // 16 MB
+        let mut b1 = bufs(workers, len, 2);
+        let ring = ring_allreduce(&mut b1, &hw, &devs).unwrap();
+        let mut b2 = bufs(workers, len, 2);
+        let ps = parameter_server(&mut b2, &hw, &devs).unwrap();
+        table.row(&[
+            workers.to_string(),
+            hw.name.clone(),
+            f3(ring.sim_time * 1e3),
+            f3(ps.sim_time * 1e3),
+            f3(ps.sim_time / ring.sim_time),
+        ]);
+        assert!(ps.sim_time > ring.sim_time,
+                "PS must lose to ring at {workers} workers");
+    }
+    table.print("ring vs parameter-server at scale (16 MB gradients)");
+
+    // --- host-side throughput of the real reduction ----------------------
+    let hw = dgx1(4);
+    let devs = hw.devices();
+    let len = 4_000_000;
+    let m = bench("ring_allreduce_16MBx4_host", 5, 2.0, || {
+        let mut b = bufs(4, len, 3);
+        ring_allreduce(&mut b, &hw, &devs).unwrap();
+        std::hint::black_box(&b);
+    });
+    let gbps = (2.0 * 3.0 / 4.0 * (len * 4 * 4) as f64) / m.mean_s / 1e9;
+    println!("host reduction throughput ≈ {gbps:.2} GB/s of wire-equivalent \
+              traffic");
+    println!("allreduce OK");
+}

@@ -1,0 +1,49 @@
+//! Fig. 3 reproduction: the paper's hypothetical scenario — DP-only vs
+//! hybrid speedup curves with SU² = 1.45 and SU⁴ = 1.65.
+//!
+//! Expected shape (paper §3.4): DP-only scales well to 32 devices then
+//! saturates; 32-way DP × 2-way MP beats 64-way DP; the 4-way-MP hybrid
+//! underperforms the 2-way hybrid because SU⁴ does not pay for using 4
+//! devices per worker.
+
+use hybridpar::bench::{f2, Table};
+use hybridpar::parallel::{NetworkModel, ScalingEfficiency};
+use hybridpar::statistical::EpochModel;
+
+fn main() {
+    let net = NetworkModel {
+        name: "fig3-hypothetical".into(),
+        epochs: EpochModel::fig3_example(),
+        mini_batch: 1,
+        se: ScalingEfficiency::Perfect,
+        mp_speedups: vec![(2, 1.45), (4, 1.65)],
+    };
+
+    let mut table = Table::new(&["devices", "DP-only", "hybrid M=2",
+                                 "hybrid M=4"]);
+    let mut n = 1usize;
+    while n <= 256 {
+        let cell = |v: Option<f64>| v.map(f2).unwrap_or_else(|| "-".into());
+        table.row(&[
+            n.to_string(),
+            cell(net.su_dp(n)),
+            cell(net.su_hybrid(n, 2)),
+            cell(net.su_hybrid(n, 4)),
+        ]);
+        n *= 2;
+    }
+    table.print("Fig. 3 — hypothetical DP vs hybrid speedup");
+
+    // Paper-shape assertions.
+    let dp64 = net.su_dp(64).unwrap();
+    let hy64 = net.su_hybrid(64, 2).unwrap();
+    assert!(hy64 > dp64, "hybrid must beat DP at 64 ({hy64} vs {dp64})");
+    let hy128_2 = net.su_hybrid(128, 2).unwrap();
+    let hy128_4 = net.su_hybrid(128, 4).unwrap();
+    assert!(hy128_2 > hy128_4, "2-way hybrid must beat 4-way at 128");
+    let x = net.crossover_point(2, 1024).unwrap();
+    println!("\ncrossover (Eq. 6): {x} devices (paper narrative: between \
+              32 and 64)");
+    assert!(x == 64, "crossover expected at 64, got {x}");
+    println!("fig3_hypothetical OK");
+}

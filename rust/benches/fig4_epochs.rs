@@ -1,0 +1,56 @@
+//! Fig. 4 reproduction: epochs-to-converge vs GPU count (global batch)
+//! for Inception-V3, GNMT and BigLSTM, from the calibrated E(B) models.
+//!
+//! Anchor values from the paper's text: Inception 4 epochs → 7 beyond 32
+//! GPUs → 23 at 256; GNMT slight dip at 4 GPUs, rapid growth past 64;
+//! BigLSTM 3.2× more epochs at 32-way vs 16-way, divergence beyond 32.
+
+use hybridpar::bench::Table;
+use hybridpar::statistical::EpochModel;
+
+fn main() {
+    let nets: Vec<(EpochModel, usize)> = vec![
+        (EpochModel::inception_v3(), 64),
+        (EpochModel::gnmt(), 128),
+        (EpochModel::biglstm(), 64),
+    ];
+    let gpu_counts = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
+
+    let mut table = Table::new(&["gpus", "inception-v3", "gnmt", "biglstm"]);
+    for &g in &gpu_counts {
+        let mut row = vec![g.to_string()];
+        for (model, mb) in &nets {
+            let b = (g * mb) as f64;
+            row.push(match model.epochs(b) {
+                Some(e) => format!("{e:.1}"),
+                None => "diverged".into(),
+            });
+        }
+        table.row(&row);
+    }
+    table.print("Fig. 4 — epochs to converge vs #GPUs (global batch = \
+                 gpus × mini-batch)");
+
+    // Anchor assertions from the paper's text.
+    let inc = EpochModel::inception_v3();
+    assert_eq!(inc.epochs(32.0 * 64.0).unwrap().round() as i64, 4);
+    assert_eq!(inc.epochs(64.0 * 64.0).unwrap().round() as i64, 7);
+    assert_eq!(inc.epochs(256.0 * 64.0).unwrap().round() as i64, 23);
+
+    let gn = EpochModel::gnmt();
+    assert!(gn.epochs(4.0 * 128.0).unwrap() < gn.epochs(2.0 * 128.0).unwrap(),
+            "GNMT dips slightly at 4 GPUs (tuned LR)");
+    assert!(gn.epochs(256.0 * 128.0).unwrap()
+            > 1.5 * gn.epochs(64.0 * 128.0).unwrap(),
+            "GNMT grows rapidly past 64 GPUs");
+
+    let bl = EpochModel::biglstm();
+    let e16 = bl.epochs(16.0 * 64.0).unwrap();
+    let e32 = bl.epochs(32.0 * 64.0).unwrap();
+    assert!((e32 / e16 - 3.2).abs() < 0.05,
+            "BigLSTM 32-way needs 3.2x epochs of 16-way (got {})",
+            e32 / e16);
+    assert!(bl.epochs(64.0 * 64.0).is_none(),
+            "BigLSTM diverges beyond 32-way");
+    println!("fig4_epochs OK (all paper anchors hold)");
+}

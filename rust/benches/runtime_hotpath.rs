@@ -1,0 +1,103 @@
+//! L3 hot-path micro-benchmarks (§Perf baseline): PJRT execution latency
+//! per artifact, literal clone/flatten costs, and the end-to-end DP step
+//! breakdown.  Skips (exit 0) when artifacts are absent.
+
+use std::path::PathBuf;
+
+use hybridpar::bench::{bench, Table};
+use hybridpar::cluster;
+use hybridpar::coordinator::{flatten_grads, unflatten_grads, Coordinator,
+                             Strategy, TrainConfig};
+use hybridpar::data::Corpus;
+use hybridpar::runtime::Engine;
+use hybridpar::util::fmt_secs;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("meta.json").exists() {
+        println!("runtime_hotpath: skipping (run `make artifacts`)");
+        return;
+    }
+    let eng = Engine::load(&dir, &["grad_step", "train_step",
+                                   "apply_update", "stage0_fwd"])
+        .unwrap();
+    let tm = eng.meta.transformer.clone();
+    let n = tm.param_specs.len();
+    let params = eng.meta.load_init_params(&tm).unwrap();
+    let mut rng = hybridpar::util::rng::Rng::new(5);
+    let tok: Vec<i32> = (0..tm.batch * tm.seq_len)
+        .map(|_| rng.range(0, tm.vocab as i64 - 1) as i32)
+        .collect();
+    let tok_l = Engine::i32_tensor(&tok, &[tm.batch, tm.seq_len]).unwrap();
+    let tgt_l = Engine::i32_tensor(&tok, &[tm.batch, tm.seq_len]).unwrap();
+
+    // --- PJRT execution latencies ---------------------------------------
+    let mut results = Vec::new();
+    let m = bench("exec:grad_step", 5, 3.0, || {
+        let mut inputs: Vec<xla::Literal> = params
+            .iter()
+            .map(|p| Engine::clone_literal(p).unwrap())
+            .collect();
+        inputs.push(Engine::clone_literal(&tok_l).unwrap());
+        inputs.push(Engine::clone_literal(&tgt_l).unwrap());
+        let outs = eng.exec("grad_step", &inputs).unwrap();
+        std::hint::black_box(outs.len());
+    });
+    results.push(("grad_step (incl. clones)", m.mean_s));
+
+    let m = bench("exec:train_step", 5, 3.0, || {
+        let mut inputs: Vec<xla::Literal> = params
+            .iter()
+            .map(|p| Engine::clone_literal(p).unwrap())
+            .collect();
+        inputs.push(Engine::clone_literal(&tok_l).unwrap());
+        inputs.push(Engine::clone_literal(&tgt_l).unwrap());
+        inputs.push(Engine::f32_scalar(0.1));
+        let outs = eng.exec("train_step", &inputs).unwrap();
+        std::hint::black_box(outs.len());
+    });
+    results.push(("train_step (incl. clones)", m.mean_s));
+
+    // --- host-side data movement costs ----------------------------------
+    let m = bench("clone_params", 10, 1.0, || {
+        let c: Vec<xla::Literal> = params
+            .iter()
+            .map(|p| Engine::clone_literal(p).unwrap())
+            .collect();
+        std::hint::black_box(c.len());
+    });
+    results.push(("clone all params", m.mean_s));
+
+    let grads: Vec<xla::Literal> = params
+        .iter()
+        .map(|p| Engine::clone_literal(p).unwrap())
+        .collect();
+    let m = bench("flatten+unflatten", 10, 1.0, || {
+        let flat = flatten_grads(&grads).unwrap();
+        let back = unflatten_grads(&grads, &flat).unwrap();
+        std::hint::black_box(back.len());
+    });
+    results.push(("flatten+unflatten grads", m.mean_s));
+
+    // --- end-to-end DP step ----------------------------------------------
+    let coord = Coordinator::new(&dir, cluster::dgx1(2)).unwrap();
+    let mut corpus = Corpus::new(tm.vocab, 1_000_000, 9);
+    let cfg = TrainConfig {
+        strategy: Strategy::DataParallel { workers: 2, delayed_factor: 1 },
+        steps: 8,
+        log_every: 0,
+        ..Default::default()
+    };
+    let report = coord.train(&mut corpus, &cfg).unwrap();
+    results.push(("DP-2 full step (wall)", report.mean_step_wall_s));
+    let grad_exec = results[0].1;
+    let overhead = report.mean_step_wall_s - 2.0 * grad_exec;
+    results.push(("  coordinator overhead", overhead.max(0.0)));
+
+    let mut table = Table::new(&["path", "mean"]);
+    for (name, t) in &results {
+        table.row(&[name.to_string(), fmt_secs(*t)]);
+    }
+    table.print("L3 hot-path latencies");
+    println!("runtime_hotpath OK");
+}

@@ -1,0 +1,152 @@
+//! Micro-benchmark harness (criterion unavailable offline).
+//!
+//! Provides warmup + timed iterations with mean/p50/p95 statistics and a
+//! criterion-like console report, plus a table printer used by the
+//! paper-figure benches to emit the same rows/series the paper reports.
+
+use std::time::Instant;
+
+use crate::util::{fmt_secs, mean, percentile};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+/// Run `f` with warmup and timing. `min_iters`/`min_time_s` bound the
+/// sampling effort.
+pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_time_s: f64,
+                         mut f: F) -> Measurement {
+    // Warmup: 2 calls or 10% of budget.
+    f();
+    f();
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters
+        || (start.elapsed().as_secs_f64() < min_time_s
+            && samples.len() < 10_000)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let m = Measurement {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean(&samples),
+        p50_s: percentile(&samples, 50.0),
+        p95_s: percentile(&samples, 95.0),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    };
+    println!(
+        "bench {:<44} {:>10}/iter (p50 {:>10}, p95 {:>10}, n={})",
+        m.name,
+        fmt_secs(m.mean_s),
+        fmt_secs(m.p50_s),
+        fmt_secs(m.p95_s),
+        m.iters
+    );
+    m
+}
+
+/// Simple aligned table printer for paper-figure data series.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        for r in &self.rows {
+            line(r);
+        }
+    }
+
+    /// CSV dump for EXPERIMENTS.md ingestion.
+    pub fn to_csv(&self) -> String {
+        let mut s = self.headers.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// `f2` helper: format a float with 2 decimals (bench tables).
+pub fn f2(x: f64) -> String {
+    format!("{:.2}", x)
+}
+
+/// `f3` helper.
+pub fn f3(x: f64) -> String {
+    format!("{:.3}", x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_minimum_iters() {
+        let mut count = 0;
+        let m = bench("noop", 5, 0.0, || count += 1);
+        assert!(m.iters >= 5);
+        assert!(count >= 7); // warmup + iters
+        assert!(m.min_s <= m.mean_s);
+        assert!(m.mean_s <= m.p95_s + 1e-9);
+    }
+
+    #[test]
+    fn table_round_trip() {
+        let mut t = Table::new(&["n", "speedup"]);
+        t.row(&["2".into(), f2(1.45)]);
+        t.row(&["4".into(), f2(1.65)]);
+        let csv = t.to_csv();
+        assert!(csv.contains("n,speedup"));
+        assert!(csv.contains("2,1.45"));
+        t.print("test table");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

@@ -1,0 +1,358 @@
+//! Hardware graph (paper §6, "Inputs: Hardware Graph").
+//!
+//! A system is compute nodes `N` (GPUs/TPUs) and router nodes `R`
+//! (NVSwitch / PCIe switches / NICs) connected by bidirectional physical
+//! links `L` with bandwidth B(l) and latency L(l).  Topology builders cover
+//! the paper's testbed (DGX-1 NVLink mesh) and the multi-node scale-out
+//! systems its projections assume.
+
+use anyhow::{bail, Result};
+
+/// Kind of physical interconnect; sets default bandwidth/latency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// NVLink 2.0 per-direction (DGX-1 era): 25 GB/s, ~1.3 µs.
+    NvLink,
+    /// PCIe 3.0 x16: 12 GB/s effective, ~2 µs.
+    Pcie,
+    /// 100 Gb InfiniBand inter-node: 12 GB/s, ~2.5 µs.
+    Infiniband,
+    /// Custom.
+    Custom,
+}
+
+impl LinkKind {
+    pub fn bandwidth(self) -> f64 {
+        match self {
+            LinkKind::NvLink => 25e9,
+            LinkKind::Pcie => 12e9,
+            LinkKind::Infiniband => 12e9,
+            LinkKind::Custom => 10e9,
+        }
+    }
+
+    pub fn latency(self) -> f64 {
+        match self {
+            LinkKind::NvLink => 1.3e-6,
+            LinkKind::Pcie => 2.0e-6,
+            LinkKind::Infiniband => 2.5e-6,
+            LinkKind::Custom => 2.0e-6,
+        }
+    }
+}
+
+/// A node in the hardware graph: a compute device or a router.
+#[derive(Clone, Debug)]
+pub struct HwNode {
+    pub name: String,
+    pub is_compute: bool,
+    /// Sustained FLOP/s for compute nodes (V100 fp32 ≈ 14 TFLOP/s, with
+    /// tensor cores ≈ 112 TFLOP/s on GEMM; we use a blended sustained rate).
+    pub flops_per_sec: f64,
+    /// Device memory capacity Mem(n), bytes.
+    pub mem_capacity: f64,
+}
+
+/// Physical link `l ∈ L` (bidirectional).
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    pub a: usize,
+    pub b: usize,
+    pub bandwidth: f64,
+    pub latency: f64,
+}
+
+/// The hardware graph.
+#[derive(Clone, Debug, Default)]
+pub struct HwGraph {
+    pub name: String,
+    pub nodes: Vec<HwNode>,
+    pub links: Vec<Link>,
+}
+
+/// V100-16GB-like device profile used by the builders.
+pub const V100_FLOPS: f64 = 14e12;
+pub const V100_MEM: f64 = 16e9;
+/// V100-32GB (the paper's BigLSTM system).
+pub const V100_32G_MEM: f64 = 32e9;
+
+impl HwGraph {
+    pub fn new(name: &str) -> Self {
+        HwGraph { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn add_compute(&mut self, name: &str, flops: f64, mem: f64) -> usize {
+        self.nodes.push(HwNode {
+            name: name.to_string(),
+            is_compute: true,
+            flops_per_sec: flops,
+            mem_capacity: mem,
+        });
+        self.nodes.len() - 1
+    }
+
+    pub fn add_router(&mut self, name: &str) -> usize {
+        self.nodes.push(HwNode {
+            name: name.to_string(),
+            is_compute: false,
+            flops_per_sec: 0.0,
+            mem_capacity: 0.0,
+        });
+        self.nodes.len() - 1
+    }
+
+    pub fn add_link(&mut self, a: usize, b: usize, kind: LinkKind) {
+        self.links.push(Link {
+            a,
+            b,
+            bandwidth: kind.bandwidth(),
+            latency: kind.latency(),
+        });
+    }
+
+    pub fn add_link_custom(&mut self, a: usize, b: usize, bandwidth: f64,
+                           latency: f64) {
+        self.links.push(Link { a, b, bandwidth, latency });
+    }
+
+    /// Indices of compute nodes.
+    pub fn devices(&self) -> Vec<usize> {
+        (0..self.nodes.len()).filter(|&i| self.nodes[i].is_compute).collect()
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices().len()
+    }
+
+    /// Adjacency list of (neighbor, link index).
+    pub fn adjacency(&self) -> Vec<Vec<(usize, usize)>> {
+        let mut adj = vec![Vec::new(); self.nodes.len()];
+        for (li, l) in self.links.iter().enumerate() {
+            adj[l.a].push((l.b, li));
+            adj[l.b].push((l.a, li));
+        }
+        adj
+    }
+
+    /// Dijkstra shortest path (by transfer time of `bytes`) between two
+    /// nodes.  Returns (total_time, link indices along the path).
+    pub fn route(&self, from: usize, to: usize, bytes: f64)
+                 -> Result<(f64, Vec<usize>)> {
+        if from == to {
+            return Ok((0.0, Vec::new()));
+        }
+        let adj = self.adjacency();
+        let n = self.nodes.len();
+        let mut dist = vec![f64::INFINITY; n];
+        let mut prev: Vec<Option<(usize, usize)>> = vec![None; n];
+        dist[from] = 0.0;
+        let mut visited = vec![false; n];
+        for _ in 0..n {
+            // O(n^2) Dijkstra: hardware graphs are tiny (≤ hundreds).
+            let mut u = usize::MAX;
+            let mut best = f64::INFINITY;
+            for v in 0..n {
+                if !visited[v] && dist[v] < best {
+                    best = dist[v];
+                    u = v;
+                }
+            }
+            if u == usize::MAX {
+                break;
+            }
+            visited[u] = true;
+            if u == to {
+                break;
+            }
+            for &(v, li) in &adj[u] {
+                let l = self.links[li];
+                let cost = bytes / l.bandwidth + l.latency;
+                if dist[u] + cost < dist[v] {
+                    dist[v] = dist[u] + cost;
+                    prev[v] = Some((u, li));
+                }
+            }
+        }
+        if dist[to].is_infinite() {
+            bail!("no path from {} to {} in '{}'", from, to, self.name);
+        }
+        let mut path = Vec::new();
+        let mut cur = to;
+        while cur != from {
+            let (p, li) = prev[cur].unwrap();
+            path.push(li);
+            cur = p;
+        }
+        path.reverse();
+        Ok((dist[to], path))
+    }
+
+    /// Transfer time of `bytes` between two devices over the best route
+    /// (Eq. 11's Δe for a shortest-path C_el assignment).
+    pub fn transfer_time(&self, from: usize, to: usize, bytes: f64) -> f64 {
+        if from == to {
+            return 0.0;
+        }
+        self.route(from, to, bytes).map(|(t, _)| t).unwrap_or(f64::INFINITY)
+    }
+
+    /// Minimum link bandwidth along the ring of the given devices —
+    /// the bottleneck term in ring all-reduce cost.
+    pub fn ring_bottleneck_bw(&self, ring: &[usize]) -> f64 {
+        let mut bw = f64::INFINITY;
+        for i in 0..ring.len() {
+            let a = ring[i];
+            let b = ring[(i + 1) % ring.len()];
+            if let Ok((_, path)) = self.route(a, b, 1.0) {
+                for li in path {
+                    bw = bw.min(self.links[li].bandwidth);
+                }
+            }
+        }
+        bw
+    }
+}
+
+/// DGX-1-like single node: `n` V100s in an NVLink hybrid-cube-mesh.
+/// For n<=4 we use the fully-connected NVLink quad of the paper's testbed.
+pub fn dgx1(n_gpus: usize) -> HwGraph {
+    dgx1_mem(n_gpus, V100_MEM)
+}
+
+/// DGX-1 with configurable per-GPU memory (32 GB for the BigLSTM system).
+pub fn dgx1_mem(n_gpus: usize, mem: f64) -> HwGraph {
+    let mut g = HwGraph::new(&format!("dgx1-{}gpu", n_gpus));
+    let ids: Vec<usize> = (0..n_gpus)
+        .map(|i| g.add_compute(&format!("gpu{}", i), V100_FLOPS, mem))
+        .collect();
+    if n_gpus <= 4 {
+        // Fully-connected NVLink quad (paper's 4-GPU DGX-1 subset).
+        for i in 0..n_gpus {
+            for j in (i + 1)..n_gpus {
+                g.add_link(ids[i], ids[j], LinkKind::NvLink);
+            }
+        }
+    } else {
+        // Hybrid cube-mesh for 8 GPUs: two quads + cross links.
+        for q in 0..2 {
+            let base = q * 4;
+            for i in 0..4.min(n_gpus - base) {
+                for j in (i + 1)..4.min(n_gpus - base) {
+                    g.add_link(ids[base + i], ids[base + j], LinkKind::NvLink);
+                }
+            }
+        }
+        for i in 0..4 {
+            if i + 4 < n_gpus {
+                g.add_link(ids[i], ids[i + 4], LinkKind::NvLink);
+            }
+        }
+    }
+    g
+}
+
+/// Multi-node cluster: `nodes` DGX boxes of `gpus_per_node`, joined through
+/// per-node NICs and a single IB switch (the slower inter-node fabric the
+/// paper cites as the SE_N killer at scale).
+pub fn multi_node(nodes: usize, gpus_per_node: usize) -> HwGraph {
+    let mut g = HwGraph::new(&format!("cluster-{}x{}", nodes, gpus_per_node));
+    let switch = g.add_router("ib-switch");
+    for nd in 0..nodes {
+        let gpus: Vec<usize> = (0..gpus_per_node)
+            .map(|i| {
+                g.add_compute(&format!("n{}g{}", nd, i), V100_FLOPS, V100_MEM)
+            })
+            .collect();
+        for i in 0..gpus_per_node {
+            for j in (i + 1)..gpus_per_node {
+                g.add_link(gpus[i], gpus[j], LinkKind::NvLink);
+            }
+        }
+        let nic = g.add_router(&format!("n{}nic", nd));
+        for &gpu in &gpus {
+            g.add_link(gpu, nic, LinkKind::Pcie);
+        }
+        g.add_link(nic, switch, LinkKind::Infiniband);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dgx1_quad_fully_connected() {
+        let g = dgx1(4);
+        assert_eq!(g.n_devices(), 4);
+        assert_eq!(g.links.len(), 6);
+        // Direct NVLink between any pair.
+        let (t, path) = g.route(0, 3, 1e6).unwrap();
+        assert_eq!(path.len(), 1);
+        assert!((t - (1e6 / 25e9 + 1.3e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dgx1_8gpu_cube_mesh_connected() {
+        let g = dgx1(8);
+        assert_eq!(g.n_devices(), 8);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!(g.transfer_time(i, j, 1e6).is_finite());
+            }
+        }
+        // Cross-quad non-paired GPUs need 2 hops.
+        let (_, path) = g.route(0, 5, 1e6).unwrap();
+        assert!(path.len() >= 2);
+    }
+
+    #[test]
+    fn multi_node_routes_through_switch() {
+        let g = multi_node(2, 4);
+        assert_eq!(g.n_devices(), 8);
+        let devs = g.devices();
+        let (t_intra, p_intra) = g.route(devs[0], devs[1], 1e6).unwrap();
+        let (t_inter, p_inter) = g.route(devs[0], devs[4], 1e6).unwrap();
+        assert!(p_intra.len() < p_inter.len());
+        assert!(t_intra < t_inter, "intra {t_intra} inter {t_inter}");
+    }
+
+    #[test]
+    fn self_transfer_free() {
+        let g = dgx1(2);
+        assert_eq!(g.transfer_time(0, 0, 1e9), 0.0);
+    }
+
+    #[test]
+    fn no_path_errors() {
+        let mut g = HwGraph::new("split");
+        g.add_compute("a", 1.0, 1.0);
+        g.add_compute("b", 1.0, 1.0);
+        assert!(g.route(0, 1, 1.0).is_err());
+    }
+
+    #[test]
+    fn ring_bottleneck_multi_node_is_ib() {
+        let g = multi_node(2, 2);
+        let devs = g.devices();
+        let bw = g.ring_bottleneck_bw(&devs);
+        assert!((bw - LinkKind::Infiniband.bandwidth()).abs() < 1.0);
+        let g1 = dgx1(4);
+        assert!((g1.ring_bottleneck_bw(&g1.devices())
+                 - LinkKind::NvLink.bandwidth()).abs() < 1.0);
+    }
+
+    #[test]
+    fn route_prefers_faster_path() {
+        let mut g = HwGraph::new("tri");
+        let a = g.add_compute("a", 1.0, 1.0);
+        let b = g.add_compute("b", 1.0, 1.0);
+        let r = g.add_router("r");
+        // Slow direct link vs fast 2-hop via router.
+        g.add_link_custom(a, b, 1e9, 1e-6);
+        g.add_link_custom(a, r, 100e9, 1e-7);
+        g.add_link_custom(r, b, 100e9, 1e-7);
+        let (_, path) = g.route(a, b, 100e6).unwrap();
+        assert_eq!(path.len(), 2, "should take the fast 2-hop route");
+    }
+}

@@ -1,0 +1,104 @@
+//! Gradient-compressed ring all-reduce (paper §7.3 ablation).
+//!
+//! The paper notes framework developers keep shrinking DP's communication
+//! overhead (its conservative SE_N = 1 assumption exists because of this).
+//! One standard lever is half-precision gradient exchange: this module
+//! implements a **bf16-on-the-wire** ring all-reduce — gradients are
+//! rounded to bfloat16 before each hop while accumulation stays f32 — and
+//! an α-β model for it.  The allreduce bench quantifies the SE_N gain and
+//! the rounding error it buys.
+
+use anyhow::Result;
+
+use crate::cluster::HwGraph;
+
+use super::{ring_allreduce, ring_cost, CollectiveResult};
+
+/// Round an f32 to bfloat16 precision (truncate mantissa, round to
+/// nearest even) and back.
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // Round-to-nearest-even on the dropped 16 bits.
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    f32::from_bits(rounded & 0xFFFF_0000)
+}
+
+/// α-β cost of the compressed ring: halves the bandwidth term.
+pub fn ring_cost_bf16(n: usize, f32_bytes: f64, alpha: f64, beta_bw: f64)
+                      -> f64 {
+    ring_cost(n, f32_bytes / 2.0, alpha, beta_bw)
+}
+
+/// bf16-on-the-wire ring all-reduce.
+///
+/// Every value is rounded to bf16 before it leaves a rank (simulating the
+/// wire format); the receiving rank accumulates in f32.  Simulated time is
+/// the plain ring's with half the payload.
+pub fn ring_allreduce_bf16(bufs: &mut [Vec<f32>], hw: &HwGraph,
+                           ring: &[usize]) -> Result<CollectiveResult> {
+    // Wire-format rounding of each rank's contribution.
+    for b in bufs.iter_mut() {
+        for x in b.iter_mut() {
+            *x = bf16_round(*x);
+        }
+    }
+    let r = ring_allreduce(bufs, hw, ring)?;
+    Ok(CollectiveResult {
+        sim_time: r.sim_time / 2.0, // half the bytes over the same links
+        bytes_on_wire: r.bytes_on_wire / 2.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::dgx1;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bf16_round_trip_properties() {
+        assert_eq!(bf16_round(0.0), 0.0);
+        assert_eq!(bf16_round(1.0), 1.0);
+        assert_eq!(bf16_round(-2.5), -2.5);
+        // Relative error bounded by 2^-8.
+        let mut rng = Rng::new(4);
+        for _ in 0..10_000 {
+            let x = (rng.normal() * 100.0) as f32;
+            let y = bf16_round(x);
+            if x != 0.0 {
+                assert!(((y - x) / x).abs() < 0.5f32 / 128.0 + 1e-7,
+                        "{x} -> {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_ring_close_to_exact() {
+        let hw = dgx1(4);
+        let devs = hw.devices();
+        let mut rng = Rng::new(7);
+        let len = 4096;
+        let exact: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut a = exact.clone();
+        ring_allreduce(&mut a, &hw, &devs).unwrap();
+        let mut b = exact.clone();
+        let r = ring_allreduce_bf16(&mut b, &hw, &devs).unwrap();
+        // Half the wire traffic...
+        assert!(r.bytes_on_wire < 0.51 * (2.0 * 3.0 * (len * 4) as f64));
+        // ...and bounded rounding error.
+        for (x, y) in a[0].iter().zip(&b[0]) {
+            assert!((x - y).abs() < 0.05 * x.abs().max(1.0),
+                    "exact {x} vs bf16 {y}");
+        }
+    }
+
+    #[test]
+    fn cost_model_halves_bandwidth_term() {
+        let full = ring_cost(8, 100e6, 0.0, 25e9);
+        let half = ring_cost_bf16(8, 100e6, 0.0, 25e9);
+        assert!((half - full / 2.0).abs() < 1e-12);
+    }
+}

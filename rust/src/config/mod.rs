@@ -1,0 +1,331 @@
+//! Configuration system: a TOML-subset parser + typed run configuration.
+//!
+//! Supports the TOML constructs the configs need — `[section]` headers,
+//! `key = value` with string/int/float/bool/array values, `#` comments —
+//! parsed into a flat `section.key -> value` map with typed accessors.
+//! (The `toml` crate is unavailable offline; see DESIGN.md substitutions.)
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{Strategy, TrainConfig};
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+fn parse_value(raw: &str) -> Result<TomlValue> {
+    let v = raw.trim();
+    if v.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(stripped) = v.strip_prefix('"') {
+        let Some(end) = stripped.find('"') else {
+            bail!("unterminated string: {v}")
+        };
+        return Ok(TomlValue::Str(stripped[..end].to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if v.starts_with('[') {
+        let inner = v
+            .strip_prefix('[')
+            .and_then(|s| s.strip_suffix(']'))
+            .ok_or_else(|| anyhow!("bad array: {v}"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if v.contains('.') || v.contains('e') || v.contains('E') {
+        if let Ok(f) = v.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    // Bare word -> string (lenient, convenient for enum-ish values).
+    Ok(TomlValue::Str(v.to_string()))
+}
+
+/// Parsed config document: `section.key` -> value (top-level keys have no
+/// dot prefix).
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    pub values: BTreeMap<String, TomlValue>,
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // Don't strip '#' inside quoted strings.
+                Some(i) if !raw[..i].contains('"')
+                    || raw[..i].matches('"').count() % 2 == 0 =>
+                {
+                    &raw[..i]
+                }
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: bad section header",
+                                           lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                anyhow!("line {}: expected key = value", lineno + 1)
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{}.{}", section, k.trim())
+            };
+            values.insert(key, parse_value(v).map_err(|e| {
+                anyhow!("line {}: {e}", lineno + 1)
+            })?);
+        }
+        Ok(Toml { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Toml> {
+        Toml::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.as_i64().ok())
+            .map(|i| i as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool().ok()).unwrap_or(default)
+    }
+}
+
+/// Top-level run configuration (config file `[run]`, `[cluster]`,
+/// `[train]` sections).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub artifacts_dir: String,
+    /// "dgx1" or "multinode".
+    pub topology: String,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub train: TrainConfig,
+    pub corpus_vocab: usize,
+    pub epoch_tokens: u64,
+    pub out_csv: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: "artifacts".into(),
+            topology: "dgx1".into(),
+            nodes: 1,
+            gpus_per_node: 8,
+            train: TrainConfig::default(),
+            corpus_vocab: 512,
+            epoch_tokens: 1_000_000,
+            out_csv: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from a parsed TOML document.
+    pub fn from_toml(t: &Toml) -> Result<RunConfig> {
+        let mut c = RunConfig {
+            artifacts_dir: t.str_or("run.artifacts_dir", "artifacts"),
+            topology: t.str_or("cluster.topology", "dgx1"),
+            nodes: t.usize_or("cluster.nodes", 1),
+            gpus_per_node: t.usize_or("cluster.gpus_per_node", 8),
+            corpus_vocab: t.usize_or("data.vocab", 512),
+            epoch_tokens: t.usize_or("data.epoch_tokens", 1_000_000) as u64,
+            out_csv: t.get("run.out_csv").and_then(|v| v.as_str().ok())
+                .map(|s| s.to_string()),
+            ..Default::default()
+        };
+        let strategy = t.str_or("train.strategy", "single");
+        c.train.strategy = match strategy.as_str() {
+            "single" => Strategy::Single,
+            "dp" => Strategy::DataParallel {
+                workers: t.usize_or("train.workers", 2),
+                delayed_factor: t.usize_or("train.delayed_factor", 1),
+            },
+            "hybrid" => Strategy::Hybrid {
+                dp_workers: t.usize_or("train.dp_workers", 2),
+                microbatches: t.usize_or("train.microbatches", 2),
+            },
+            other => bail!("unknown strategy '{other}'"),
+        };
+        c.train.lr = t.f64_or("train.lr", 0.2) as f32;
+        c.train.steps = t.usize_or("train.steps", 100);
+        c.train.seed = t.usize_or("train.seed", 0) as u64;
+        c.train.log_every = t.usize_or("train.log_every", 10);
+        if let Some(v) = t.get("train.target_loss") {
+            c.train.target_loss = Some(v.as_f64()? as f32);
+        }
+        Ok(c)
+    }
+
+    /// Build the simulated cluster this config describes.
+    pub fn build_cluster(&self) -> Result<crate::cluster::HwGraph> {
+        match self.topology.as_str() {
+            "dgx1" => Ok(crate::cluster::dgx1(self.gpus_per_node)),
+            "multinode" => Ok(crate::cluster::multi_node(self.nodes,
+                                                         self.gpus_per_node)),
+            other => bail!("unknown topology '{other}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# comment
+[run]
+artifacts_dir = "artifacts"   # trailing comment
+out_csv = "out/loss.csv"
+
+[cluster]
+topology = "multinode"
+nodes = 2
+gpus_per_node = 4
+
+[train]
+strategy = "hybrid"
+dp_workers = 2
+microbatches = 2
+lr = 0.5
+steps = 42
+target_loss = 3.5
+sizes = [1, 2, 3]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = Toml::parse(DOC).unwrap();
+        assert_eq!(t.str_or("cluster.topology", ""), "multinode");
+        assert_eq!(t.usize_or("cluster.nodes", 0), 2);
+        assert_eq!(t.f64_or("train.lr", 0.0), 0.5);
+        match t.get("train.sizes").unwrap() {
+            TomlValue::Array(a) => assert_eq!(a.len(), 3),
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn run_config_from_toml() {
+        let t = Toml::parse(DOC).unwrap();
+        let c = RunConfig::from_toml(&t).unwrap();
+        assert_eq!(c.topology, "multinode");
+        assert_eq!(c.train.steps, 42);
+        assert_eq!(c.train.target_loss, Some(3.5));
+        assert!(matches!(c.train.strategy,
+                         Strategy::Hybrid { dp_workers: 2, microbatches: 2 }));
+        assert_eq!(c.out_csv.as_deref(), Some("out/loss.csv"));
+        let hw = c.build_cluster().unwrap();
+        assert_eq!(hw.n_devices(), 8);
+    }
+
+    #[test]
+    fn bad_strategy_rejected() {
+        let t = Toml::parse("[train]\nstrategy = \"magic\"\n").unwrap();
+        assert!(RunConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn bare_words_are_strings() {
+        let t = Toml::parse("mode = fast\n").unwrap();
+        assert_eq!(t.str_or("mode", ""), "fast");
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Toml::parse("[broken\n").is_err());
+        assert!(Toml::parse("novalue\n").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let t = Toml::parse("").unwrap();
+        let c = RunConfig::from_toml(&t).unwrap();
+        assert_eq!(c.topology, "dgx1");
+        assert!(matches!(c.train.strategy, Strategy::Single));
+    }
+}

@@ -1,0 +1,207 @@
+//! Alternative distributed-training algorithms (paper §7.3).
+//!
+//! The paper surveys techniques that attack DP's scaling limits without
+//! model parallelism, and argues they trade statistical efficiency or
+//! generality:
+//!
+//! * **Asynchronous SGD** (parameter server, stale gradients) — "can still
+//!   result in poor statistical efficiency while making performance
+//!   debugging difficult" (§3.1/§7.3).  [`Coordinator::train_async_ps`]
+//!   implements it: workers push gradients computed against parameter
+//!   snapshots `staleness` updates old, the server applies them as they
+//!   arrive (no barrier).
+//! * **Model averaging / local SGD** (Crossbow-style, §7.3) — workers train
+//!   independently and periodically average parameters.
+//!   [`Coordinator::train_local_sgd`].
+//!
+//! Both run through the same PJRT artifacts and are compared against
+//! sync-SGD in the integration suite: at equal data, async with real
+//! staleness must not beat sync (the paper's statistical-efficiency
+//! argument, checked empirically).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::data::Corpus;
+use crate::metrics::LossCurve;
+use crate::runtime::Engine;
+
+use super::{flatten_grads, unflatten_grads, Coordinator, TrainConfig,
+            TrainReport};
+
+impl Coordinator {
+    /// Asynchronous parameter-server SGD with bounded staleness.
+    ///
+    /// Round-robin worker scheduling: worker w's gradient at global update
+    /// t is computed against the parameters as of update `t - staleness`
+    /// (staleness 0 degenerates to fully-serial SGD at mini-batch size).
+    pub fn train_async_ps(&self, corpus: &mut Corpus, cfg: &TrainConfig,
+                          workers: usize, staleness: usize)
+                          -> Result<TrainReport> {
+        if workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        let tm = self.engine.meta.transformer.clone();
+        let n = tm.param_specs.len();
+        let mut params = self.engine.meta.load_init_params(&tm)?;
+        // History of flattened params for staleness lookup.
+        let mut history: VecDeque<Vec<f32>> =
+            VecDeque::with_capacity(staleness + 1);
+        history.push_back(flatten_grads(&params)?);
+
+        let mut curve = LossCurve::new();
+        let mut walls = Vec::new();
+        let start_tokens = corpus.stream.tokens_emitted;
+        let mut reached = false;
+        let mut steps_run = 0;
+
+        for step in 0..cfg.steps {
+            let t0 = Instant::now();
+            let mut losses = 0.0f32;
+            for _w in 0..workers {
+                // Stale snapshot (oldest retained = `staleness` back).
+                let stale_flat = history.front().unwrap();
+                let stale = unflatten_grads(&params, stale_flat)?;
+                let (tok, tgt) = {
+                    let seq = tm.seq_len;
+                    let (a, b) = corpus.stream.next_batch(tm.batch, seq);
+                    (Engine::i32_tensor(&a, &[tm.batch, seq])?,
+                     Engine::i32_tensor(&b, &[tm.batch, seq])?)
+                };
+                let mut refs: Vec<&xla::Literal> = stale.iter().collect();
+                refs.push(&tok);
+                refs.push(&tgt);
+                let outs = self.engine.exec_ref("grad_step", &refs)?;
+                losses += Engine::scalar_f32(&outs[n])?;
+                // Server applies immediately (async, no averaging).
+                let lr = Engine::f32_scalar(cfg.lr);
+                let mut upd: Vec<&xla::Literal> = params.iter().collect();
+                upd.extend(outs[..n].iter());
+                upd.push(&lr);
+                params = self.engine.exec_ref("apply_update", &upd)?;
+                // Advance history.
+                history.push_back(flatten_grads(&params)?);
+                while history.len() > staleness + 1 {
+                    history.pop_front();
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let loss = losses / workers as f32;
+            walls.push(dt);
+            // Async has no barrier: simulated step ≈ one worker's share.
+            curve.push(step, loss, dt, dt / workers as f64);
+            steps_run = step + 1;
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                eprintln!("  async step {:>5}  loss {:.4}", step, loss);
+            }
+            if let Some(t) = cfg.target_loss {
+                if curve.smoothed_loss(5).map_or(false, |l| l <= t) {
+                    reached = true;
+                    break;
+                }
+            }
+        }
+        let sims: Vec<f64> =
+            walls.iter().map(|w| w / workers as f64).collect();
+        Ok(self.report(curve, steps_run, reached, corpus, start_tokens,
+                       &walls, &sims))
+    }
+
+    /// Local SGD with periodic model averaging (Crossbow-style).
+    ///
+    /// Each worker trains independently with the fused `train_step`;
+    /// every `sync_every` steps the parameter vectors are averaged (the
+    /// communication pattern of one all-reduce, amortised).
+    pub fn train_local_sgd(&self, corpus: &mut Corpus, cfg: &TrainConfig,
+                           workers: usize, sync_every: usize)
+                           -> Result<TrainReport> {
+        if workers == 0 || sync_every == 0 {
+            bail!("workers/sync_every must be >= 1");
+        }
+        if workers > self.hw.n_devices() {
+            bail!("{} workers > {} devices", workers, self.hw.n_devices());
+        }
+        let tm = self.engine.meta.transformer.clone();
+        let n = tm.param_specs.len();
+        let init = self.engine.meta.load_init_params(&tm)?;
+        let mut replicas: Vec<Vec<xla::Literal>> = (0..workers)
+            .map(|_| {
+                init.iter()
+                    .map(Engine::clone_literal)
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<_>>()?;
+
+        let ring: Vec<usize> =
+            self.hw.devices().into_iter().take(workers).collect();
+        let mut curve = LossCurve::new();
+        let (mut walls, mut sims) = (Vec::new(), Vec::new());
+        let start_tokens = corpus.stream.tokens_emitted;
+        let mut reached = false;
+        let mut steps_run = 0;
+
+        for step in 0..cfg.steps {
+            let t0 = Instant::now();
+            let mut losses = 0.0f32;
+            let mut worker_walls = Vec::with_capacity(workers);
+            for rep in replicas.iter_mut() {
+                let w0 = Instant::now();
+                let seq = tm.seq_len;
+                let (a, b) = corpus.stream.next_batch(tm.batch, seq);
+                let tok = Engine::i32_tensor(&a, &[tm.batch, seq])?;
+                let tgt = Engine::i32_tensor(&b, &[tm.batch, seq])?;
+                let lr = Engine::f32_scalar(cfg.lr);
+                let mut refs: Vec<&xla::Literal> = rep.iter().collect();
+                refs.push(&tok);
+                refs.push(&tgt);
+                refs.push(&lr);
+                let outs = self.engine.exec_ref("train_step", &refs)?;
+                losses += Engine::scalar_f32(&outs[n])?;
+                *rep = outs.into_iter().take(n).collect();
+                worker_walls.push(w0.elapsed().as_secs_f64());
+            }
+            let mut comm = 0.0;
+            if (step + 1) % sync_every == 0 && workers > 1 {
+                // Average the replicas via the real ring all-reduce.
+                let mut flats: Vec<Vec<f32>> = replicas
+                    .iter()
+                    .map(|r| flatten_grads(r))
+                    .collect::<Result<_>>()?;
+                let coll = crate::collective::ring_allreduce(
+                    &mut flats, &self.hw, &ring)?;
+                comm = coll.sim_time;
+                let inv = 1.0 / workers as f32;
+                let avg: Vec<f32> =
+                    flats[0].iter().map(|&x| x * inv).collect();
+                let averaged = unflatten_grads(&replicas[0], &avg)?;
+                for rep in replicas.iter_mut() {
+                    *rep = averaged
+                        .iter()
+                        .map(Engine::clone_literal)
+                        .collect::<Result<_>>()?;
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let loss = losses / workers as f32;
+            let sim = worker_walls.iter().cloned().fold(0.0, f64::max)
+                + comm;
+            walls.push(dt);
+            sims.push(sim);
+            curve.push(step, loss, dt, sim);
+            steps_run = step + 1;
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                eprintln!("  local-sgd step {:>5}  loss {:.4}", step, loss);
+            }
+            if let Some(t) = cfg.target_loss {
+                if curve.smoothed_loss(5).map_or(false, |l| l <= t) {
+                    reached = true;
+                    break;
+                }
+            }
+        }
+        Ok(self.report(curve, steps_run, reached, corpus, start_tokens,
+                       &walls, &sims))
+    }
+}

@@ -1,0 +1,508 @@
+//! L3 training coordinator — the paper's system contribution, realised.
+//!
+//! Orchestrates data-parallel, model-parallel (2-stage pipeline) and hybrid
+//! training of the AOT-compiled JAX/Pallas model over a *simulated* device
+//! cluster: every worker's forward/backward runs for real through PJRT
+//! ([`crate::runtime`]), gradients are exchanged with the real chunked
+//! ring all-reduce ([`crate::collective`]) whose wall time is accounted on
+//! the simulated topology, and weight updates go back through the
+//! `apply_update` artifact.  Python never runs here.
+//!
+//! Strategies:
+//! * [`Strategy::Single`]    — fused `train_step` on one device;
+//! * [`Strategy::DataParallel`] — N workers × `grad_step`, ring all-reduce,
+//!   shared `apply_update`; supports the paper's §4.2 *delayed gradient
+//!   update* emulation (accumulate k mini-batches per worker to emulate
+//!   k·N-way DP);
+//! * [`Strategy::Hybrid`]    — N DP workers, each a 2-stage pipeline
+//!   (`stage0_fwd` → `stage1_grad` → `stage0_grad`) over micro-batches,
+//!   then the same DP all-reduce across workers.
+
+pub mod alt;
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::HwGraph;
+use crate::collective::ring_allreduce;
+use crate::data::Corpus;
+use crate::metrics::LossCurve;
+use crate::runtime::Engine;
+
+/// Parallelization strategy for a training run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// One device, fused step.
+    Single,
+    /// `workers`-way DP; each worker accumulates `delayed_factor`
+    /// mini-batches before the all-reduce (1 = plain sync-SGD), emulating
+    /// `workers × delayed_factor`-way DP statistics (paper §4.2).
+    DataParallel { workers: usize, delayed_factor: usize },
+    /// `dp_workers`-way DP of 2-way pipeline-MP workers with
+    /// `microbatches` micro-batches per mini-batch.
+    Hybrid { dp_workers: usize, microbatches: usize },
+}
+
+impl Strategy {
+    /// Number of simulated devices consumed.
+    pub fn devices(&self) -> usize {
+        match self {
+            Strategy::Single => 1,
+            Strategy::DataParallel { workers, .. } => *workers,
+            Strategy::Hybrid { dp_workers, .. } => dp_workers * 2,
+        }
+    }
+
+    /// Emulated global batch size in sequences, given the per-exec batch.
+    pub fn global_batch(&self, engine_batch: usize, microbatch: usize)
+                        -> usize {
+        match self {
+            Strategy::Single => engine_batch,
+            Strategy::DataParallel { workers, delayed_factor } => {
+                engine_batch * workers * delayed_factor
+            }
+            Strategy::Hybrid { dp_workers, microbatches } => {
+                microbatch * microbatches * dp_workers
+            }
+        }
+    }
+}
+
+/// Training run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub strategy: Strategy,
+    pub lr: f32,
+    pub steps: usize,
+    /// Stop early when smoothed loss reaches this value (None = run all
+    /// steps).
+    pub target_loss: Option<f32>,
+    pub seed: u64,
+    /// Log every n steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            strategy: Strategy::Single,
+            lr: 0.2,
+            steps: 100,
+            target_loss: None,
+            seed: 0,
+            log_every: 10,
+        }
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub curve: LossCurve,
+    pub steps_run: usize,
+    pub final_loss: f32,
+    pub reached_target: bool,
+    /// Epochs of the corpus consumed (global-batch tokens / epoch tokens).
+    pub epochs_used: f64,
+    /// Mean wall-clock per step of real PJRT compute (this host).
+    pub mean_step_wall_s: f64,
+    /// Mean simulated per-step time (compute wall of slowest worker +
+    /// simulated collective time).
+    pub mean_step_sim_s: f64,
+}
+
+/// The coordinator: engine + simulated cluster.
+pub struct Coordinator {
+    pub engine: Engine,
+    pub hw: HwGraph,
+}
+
+impl Coordinator {
+    /// Load artifacts and build the simulated cluster.
+    pub fn new(artifacts_dir: &Path, hw: HwGraph) -> Result<Self> {
+        let engine = Engine::load(
+            artifacts_dir,
+            &["train_step", "grad_step", "apply_update", "loss_eval",
+              "stage0_fwd", "stage1_grad", "stage0_grad"],
+        )?;
+        Ok(Coordinator { engine, hw })
+    }
+
+    /// Train the transformer LM on `corpus` under `cfg`.
+    pub fn train(&self, corpus: &mut Corpus, cfg: &TrainConfig)
+                 -> Result<TrainReport> {
+        match cfg.strategy {
+            Strategy::Single => self.train_single(corpus, cfg),
+            Strategy::DataParallel { workers, delayed_factor } => {
+                self.train_dp(corpus, cfg, workers, delayed_factor)
+            }
+            Strategy::Hybrid { dp_workers, microbatches } => {
+                self.train_hybrid(corpus, cfg, dp_workers, microbatches)
+            }
+        }
+    }
+
+    fn batch_literals(&self, corpus: &mut Corpus, batch: usize)
+                      -> Result<(xla::Literal, xla::Literal)> {
+        let seq = self.engine.meta.transformer.seq_len;
+        let (tok, tgt) = corpus.stream.next_batch(batch, seq);
+        Ok((
+            Engine::i32_tensor(&tok, &[batch, seq])?,
+            Engine::i32_tensor(&tgt, &[batch, seq])?,
+        ))
+    }
+
+    // --- single device -----------------------------------------------------
+
+    fn train_single(&self, corpus: &mut Corpus, cfg: &TrainConfig)
+                    -> Result<TrainReport> {
+        let tm = self.engine.meta.transformer.clone();
+        let n = tm.param_specs.len();
+        let mut params = self.engine.meta.load_init_params(&tm)?;
+        let mut curve = LossCurve::new();
+        let mut wall = Vec::new();
+        let start_tokens = corpus.stream.tokens_emitted;
+        let mut reached = false;
+        let mut steps_run = 0;
+        for step in 0..cfg.steps {
+            let (tok, tgt) = self.batch_literals(corpus, tm.batch)?;
+            let t0 = Instant::now();
+            let lr = Engine::f32_scalar(cfg.lr);
+            let mut refs: Vec<&xla::Literal> = params.iter().collect();
+            refs.push(&tok);
+            refs.push(&tgt);
+            refs.push(&lr);
+            let outs = self.engine.exec_ref("train_step", &refs)?;
+            let dt = t0.elapsed().as_secs_f64();
+            let loss = Engine::scalar_f32(&outs[n])?;
+            params = outs.into_iter().take(n).collect();
+            wall.push(dt);
+            curve.push(step, loss, dt, dt);
+            steps_run = step + 1;
+            self.log(cfg, step, loss);
+            if self.hit_target(cfg, &curve) {
+                reached = true;
+                break;
+            }
+        }
+        Ok(self.report(curve, steps_run, reached, corpus, start_tokens,
+                       &wall, &wall.clone()))
+    }
+
+    // --- data parallel ------------------------------------------------------
+
+    fn train_dp(&self, corpus: &mut Corpus, cfg: &TrainConfig,
+                workers: usize, delayed: usize) -> Result<TrainReport> {
+        if workers == 0 || delayed == 0 {
+            bail!("workers/delayed_factor must be >= 1");
+        }
+        if workers > self.hw.n_devices() {
+            bail!("{} workers > {} simulated devices", workers,
+                  self.hw.n_devices());
+        }
+        let tm = self.engine.meta.transformer.clone();
+        let n = tm.param_specs.len();
+        let mut params = self.engine.meta.load_init_params(&tm)?;
+        let ring: Vec<usize> =
+            self.hw.devices().into_iter().take(workers).collect();
+        let mut curve = LossCurve::new();
+        let (mut walls, mut sims) = (Vec::new(), Vec::new());
+        let start_tokens = corpus.stream.tokens_emitted;
+        let mut reached = false;
+        let mut steps_run = 0;
+
+        for step in 0..cfg.steps {
+            // Each worker: `delayed` sequential grad_steps, accumulated.
+            let mut grad_bufs: Vec<Vec<f32>> = Vec::with_capacity(workers);
+            let mut losses = 0.0f32;
+            let mut worker_walls = Vec::with_capacity(workers);
+            for _w in 0..workers {
+                let t0 = Instant::now();
+                let mut acc: Option<Vec<f32>> = None;
+                for _k in 0..delayed {
+                    let (tok, tgt) = self.batch_literals(corpus, tm.batch)?;
+                    let mut refs: Vec<&xla::Literal> =
+                        params.iter().collect();
+                    refs.push(&tok);
+                    refs.push(&tgt);
+                    let outs = self.engine.exec_ref("grad_step", &refs)?;
+                    losses += Engine::scalar_f32(&outs[n])?;
+                    let flat = flatten_grads(&outs[..n])?;
+                    acc = Some(match acc {
+                        None => flat,
+                        Some(mut a) => {
+                            for (x, y) in a.iter_mut().zip(&flat) {
+                                *x += *y;
+                            }
+                            a
+                        }
+                    });
+                }
+                let mut g = acc.unwrap();
+                if delayed > 1 {
+                    let inv = 1.0 / delayed as f32;
+                    for x in g.iter_mut() {
+                        *x *= inv;
+                    }
+                }
+                grad_bufs.push(g);
+                worker_walls.push(t0.elapsed().as_secs_f64());
+            }
+            // Ring all-reduce (real data) over the simulated topology.
+            let coll = ring_allreduce(&mut grad_bufs, &self.hw, &ring)?;
+            let inv = 1.0 / workers as f32;
+            let avg: Vec<f32> =
+                grad_bufs[0].iter().map(|&x| x * inv).collect();
+            // Apply update once; all workers share the result (sync-SGD
+            // invariant: identical params on every worker).
+            let grads = unflatten_grads(&params, &avg)?;
+            let lr = Engine::f32_scalar(cfg.lr);
+            let mut refs: Vec<&xla::Literal> = params.iter().collect();
+            refs.extend(grads.iter());
+            refs.push(&lr);
+            params = self.engine.exec_ref("apply_update", &refs)?;
+
+            let loss = losses / (workers * delayed) as f32;
+            let wall: f64 = worker_walls.iter().sum();
+            // Simulated step: workers run in parallel -> slowest; comm
+            // from the collective's topology accounting.
+            let sim = worker_walls.iter().cloned().fold(0.0, f64::max)
+                + coll.sim_time;
+            walls.push(wall);
+            sims.push(sim);
+            curve.push(step, loss, wall, sim);
+            steps_run = step + 1;
+            self.log(cfg, step, loss);
+            if self.hit_target(cfg, &curve) {
+                reached = true;
+                break;
+            }
+        }
+        Ok(self.report(curve, steps_run, reached, corpus, start_tokens,
+                       &walls, &sims))
+    }
+
+    // --- hybrid: DP over 2-stage pipeline workers ---------------------------
+
+    fn train_hybrid(&self, corpus: &mut Corpus, cfg: &TrainConfig,
+                    dp_workers: usize, microbatches: usize)
+                    -> Result<TrainReport> {
+        if dp_workers == 0 || microbatches == 0 {
+            bail!("dp_workers/microbatches must be >= 1");
+        }
+        let tm = self.engine.meta.transformer.clone();
+        let n0 = tm.stage0_params;
+        if dp_workers * 2 > self.hw.n_devices() {
+            bail!("hybrid needs {} devices, cluster has {}", dp_workers * 2,
+                  self.hw.n_devices());
+        }
+        let mut params = self.engine.meta.load_init_params(&tm)?;
+        // DP ring over the *first* device of each MP pair (gradient
+        // all-reduce happens between corresponding stages).
+        let devs = self.hw.devices();
+        let ring: Vec<usize> =
+            (0..dp_workers).map(|w| devs[w * 2]).collect();
+        let mut curve = LossCurve::new();
+        let (mut walls, mut sims) = (Vec::new(), Vec::new());
+        let start_tokens = corpus.stream.tokens_emitted;
+        let mut reached = false;
+        let mut steps_run = 0;
+
+        for step in 0..cfg.steps {
+            let mut grad_bufs: Vec<Vec<f32>> = Vec::with_capacity(dp_workers);
+            let mut losses = 0.0f32;
+            let mut worker_walls = Vec::with_capacity(dp_workers);
+            for _w in 0..dp_workers {
+                let t0 = Instant::now();
+                let mut acc: Option<Vec<f32>> = None;
+                for _m in 0..microbatches {
+                    let (tok, tgt) =
+                        self.batch_literals(corpus, tm.microbatch)?;
+                    // stage0 fwd on device A.
+                    let mut s0: Vec<&xla::Literal> =
+                        params[..n0].iter().collect();
+                    s0.push(&tok);
+                    let acts = self.engine.exec_ref("stage0_fwd", &s0)?;
+                    // stage1 fwd+bwd on device B.
+                    let mut s1: Vec<&xla::Literal> =
+                        params[n0..].iter().collect();
+                    s1.push(&acts[0]);
+                    s1.push(&tgt);
+                    let s1_out = self.engine.exec_ref("stage1_grad", &s1)?;
+                    let loss =
+                        Engine::scalar_f32(s1_out.last().unwrap())?;
+                    losses += loss;
+                    let g_acts = &s1_out[s1_out.len() - 2];
+                    // stage0 bwd on device A.
+                    let mut s0g: Vec<&xla::Literal> =
+                        params[..n0].iter().collect();
+                    s0g.push(&tok);
+                    s0g.push(g_acts);
+                    let g_p0 = self.engine.exec_ref("stage0_grad", &s0g)?;
+                    // Flatten [g_p0, g_p1].
+                    let mut flat = flatten_grads(&g_p0)?;
+                    flat.extend(flatten_grads(
+                        &s1_out[..s1_out.len() - 2])?);
+                    acc = Some(match acc {
+                        None => flat,
+                        Some(mut a) => {
+                            for (x, y) in a.iter_mut().zip(&flat) {
+                                *x += *y;
+                            }
+                            a
+                        }
+                    });
+                }
+                let mut g = acc.unwrap();
+                let inv = 1.0 / microbatches as f32;
+                for x in g.iter_mut() {
+                    *x *= inv;
+                }
+                grad_bufs.push(g);
+                worker_walls.push(t0.elapsed().as_secs_f64());
+            }
+            let coll = ring_allreduce(&mut grad_bufs, &self.hw, &ring)?;
+            let inv = 1.0 / dp_workers as f32;
+            let avg: Vec<f32> =
+                grad_bufs[0].iter().map(|&x| x * inv).collect();
+            let grads = unflatten_grads(&params, &avg)?;
+            let lr = Engine::f32_scalar(cfg.lr);
+            let mut refs: Vec<&xla::Literal> = params.iter().collect();
+            refs.extend(grads.iter());
+            refs.push(&lr);
+            params = self.engine.exec_ref("apply_update", &refs)?;
+
+            let loss = losses / (dp_workers * microbatches) as f32;
+            let wall: f64 = worker_walls.iter().sum();
+            let sim = worker_walls.iter().cloned().fold(0.0, f64::max)
+                + coll.sim_time;
+            walls.push(wall);
+            sims.push(sim);
+            curve.push(step, loss, wall, sim);
+            steps_run = step + 1;
+            self.log(cfg, step, loss);
+            if self.hit_target(cfg, &curve) {
+                reached = true;
+                break;
+            }
+        }
+        Ok(self.report(curve, steps_run, reached, corpus, start_tokens,
+                       &walls, &sims))
+    }
+
+    // --- shared helpers -----------------------------------------------------
+
+    fn log(&self, cfg: &TrainConfig, step: usize, loss: f32) {
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            eprintln!("  step {:>5}  loss {:.4}", step, loss);
+        }
+    }
+
+    fn hit_target(&self, cfg: &TrainConfig, curve: &LossCurve) -> bool {
+        match cfg.target_loss {
+            Some(t) => curve.smoothed_loss(5).map_or(false, |l| l <= t),
+            None => false,
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn report(&self, curve: LossCurve, steps_run: usize, reached: bool,
+              corpus: &Corpus, start_tokens: u64, walls: &[f64],
+              sims: &[f64]) -> TrainReport {
+        let final_loss = curve.last_loss().unwrap_or(f32::NAN);
+        let used = (corpus.stream.tokens_emitted - start_tokens) as f64
+            / corpus.epoch_tokens as f64;
+        TrainReport {
+            curve,
+            steps_run,
+            final_loss,
+            reached_target: reached,
+            epochs_used: used,
+            mean_step_wall_s: crate::util::mean(walls),
+            mean_step_sim_s: crate::util::mean(sims),
+        }
+    }
+}
+
+/// Flatten a slice of f32 literals into one contiguous vector.
+pub fn flatten_grads(lits: &[xla::Literal]) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    for l in lits {
+        out.extend(Engine::to_f32(l)?);
+    }
+    Ok(out)
+}
+
+/// Slice a flat gradient vector back into literals shaped like `like`.
+pub fn unflatten_grads(like: &[xla::Literal], flat: &[f32])
+                       -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::with_capacity(like.len());
+    let mut off = 0;
+    for l in like {
+        let shape = l.array_shape().map_err(|e| anyhow!("{e}"))?;
+        let n: usize = shape.dims().iter().map(|&d| d as usize).product();
+        if off + n > flat.len() {
+            bail!("flat gradient too short");
+        }
+        let lit = xla::Literal::vec1(&flat[off..off + n]);
+        out.push(lit.reshape(&shape.dims().to_vec())
+                     .map_err(|e| anyhow!("{e}"))?);
+        off += n;
+    }
+    if off != flat.len() {
+        bail!("flat gradient too long: {} vs {}", flat.len(), off);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_device_math() {
+        assert_eq!(Strategy::Single.devices(), 1);
+        assert_eq!(
+            Strategy::DataParallel { workers: 4, delayed_factor: 2 }
+                .devices(),
+            4);
+        assert_eq!(
+            Strategy::Hybrid { dp_workers: 3, microbatches: 2 }.devices(),
+            6);
+    }
+
+    #[test]
+    fn global_batch_math() {
+        let dp = Strategy::DataParallel { workers: 4, delayed_factor: 4 };
+        assert_eq!(dp.global_batch(8, 4), 128); // 8 * 4 * 4
+        let hy = Strategy::Hybrid { dp_workers: 4, microbatches: 2 };
+        assert_eq!(hy.global_batch(8, 4), 32); // 4 micro * 2 * 4 workers
+    }
+
+    #[test]
+    fn unflatten_round_trip() {
+        let a = xla::Literal::vec1(&[1f32, 2., 3., 4.])
+            .reshape(&[2, 2])
+            .unwrap();
+        let b = xla::Literal::vec1(&[5f32, 6.]).reshape(&[2]).unwrap();
+        let flat = flatten_grads(&[
+            Engine::clone_literal(&a).unwrap(),
+            Engine::clone_literal(&b).unwrap(),
+        ])
+        .unwrap();
+        assert_eq!(flat, vec![1., 2., 3., 4., 5., 6.]);
+        let back = unflatten_grads(&[a, b], &flat).unwrap();
+        assert_eq!(back[0].to_vec::<f32>().unwrap(), vec![1., 2., 3., 4.]);
+        assert_eq!(back[1].to_vec::<f32>().unwrap(), vec![5., 6.]);
+    }
+
+    #[test]
+    fn unflatten_rejects_bad_lengths() {
+        let a = xla::Literal::vec1(&[1f32, 2.]).reshape(&[2]).unwrap();
+        assert!(unflatten_grads(&[Engine::clone_literal(&a).unwrap()],
+                                &[1.0]).is_err());
+        assert!(unflatten_grads(&[a], &[1.0, 2.0, 3.0]).is_err());
+    }
+}

@@ -1,0 +1,45 @@
+//! # hybrid-parallel
+//!
+//! Production-grade reproduction of *"Optimizing Multi-GPU Parallelization
+//! Strategies for Deep Learning Training"* (Pal, Ebrahimi, Zulfiqar, Fu,
+//! Zhang, Migacz, Nellans, Gupta — 2019, DOI 10.1109/MM.2019.2935967).
+//!
+//! The paper's two contributions, plus every substrate they depend on, are
+//! implemented here as a three-layer rust + JAX + Pallas stack:
+//!
+//! 1. **The hybrid DP+MP analytical framework** ([`parallel`]) — decomposes
+//!    time-to-converge `C = T × S × E` (paper Eq. 1), quantifies N-way
+//!    data-parallel speedup `SU_N = SE_N × N × E1/EN` (Eq. 3), and finds the
+//!    crossover (Eq. 6) past which a hybrid strategy (N-way DP of M-way-MP
+//!    workers) beats (M·N)-way DP.
+//! 2. **DLPlacer** ([`placer`]) — ILP-based operation-to-device placement
+//!    (paper Eq. 7–13) over an in-repo MILP solver ([`milp`]), validated
+//!    against a discrete-event cluster simulator ([`sim`]) standing in for
+//!    the paper's "silicon" runs.
+//!
+//! The training side is real: the L3 [`coordinator`] drives AOT-compiled
+//! JAX/Pallas artifacts through the PJRT C API ([`runtime`]), exchanging
+//! gradients with an actual chunked ring all-reduce ([`collective`]) across
+//! simulated devices — python never runs on the training path.
+
+pub mod util;
+pub mod dfg;
+pub mod cluster;
+pub mod sim;
+pub mod milp;
+pub mod collective;
+pub mod statistical;
+pub mod models;
+pub mod placer;
+pub mod pipeline;
+pub mod parallel;
+pub mod data;
+pub mod config;
+pub mod metrics;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+pub mod prop;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

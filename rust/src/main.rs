@@ -1,0 +1,320 @@
+//! `hybridpar` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   train      train the transformer LM under a parallelization strategy
+//!   place      run DLPlacer on an analytic model DFG
+//!   analyze    print the Eq. 1-6 strategy projection for a network
+//!   allreduce  micro-benchmark the collective implementations
+//!   info       show loaded artifact signatures
+//!
+//! Run `hybridpar <cmd> --help` semantics are informal: every option has a
+//! default, so bare invocations work.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use hybridpar::cluster;
+use hybridpar::collective;
+use hybridpar::config::{RunConfig, Toml};
+use hybridpar::coordinator::{Coordinator, Strategy};
+use hybridpar::data::Corpus;
+use hybridpar::models;
+use hybridpar::parallel::{NetworkModel, ScalingEfficiency};
+use hybridpar::pipeline;
+use hybridpar::placer;
+use hybridpar::runtime::Meta;
+use hybridpar::util::cli::Args;
+use hybridpar::util::fmt_secs;
+
+const USAGE: &str = "\
+hybridpar — hybrid DP+MP training framework (Pal et al. 2019 reproduction)
+
+USAGE: hybridpar <COMMAND> [OPTIONS]
+
+COMMANDS:
+  train      --config cfg.toml | --strategy single|dp|hybrid|async|local-sgd
+             --workers N --steps N --lr F --dp-workers N --microbatches N
+             [--delayed-factor K] [--staleness K] [--sync-every K]
+             [--target-loss F] [--out-csv path]
+  place      --model inception|gnmt|biglstm|transformer --devices N
+             [--heuristic] [--dot out.dot]
+  analyze    --model inception|gnmt|biglstm [--max-devices N] [--real-se]
+  allreduce  [--mbytes M] [--workers N] [--topology dgx1|multinode]
+  info       [--artifacts dir]
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let cmd = std::env::args().nth(1).unwrap_or_default();
+    let args = Args::from_env(2, &["heuristic", "real-se", "verbose"]);
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "place" => cmd_place(&args),
+        "analyze" => cmd_analyze(&args),
+        "allreduce" => cmd_allreduce(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_toml(&Toml::load(&PathBuf::from(path))?)?,
+        None => RunConfig::default(),
+    };
+    // CLI overrides.
+    if let Some(s) = args.get("strategy") {
+        cfg.train.strategy = match s {
+            "single" => Strategy::Single,
+            "dp" => Strategy::DataParallel {
+                workers: args.get_usize("workers", 2)?,
+                delayed_factor: args.get_usize("delayed-factor", 1)?,
+            },
+            "hybrid" => Strategy::Hybrid {
+                dp_workers: args.get_usize("dp-workers", 2)?,
+                microbatches: args.get_usize("microbatches", 2)?,
+            },
+            "async" | "local-sgd" => Strategy::Single, // dispatched below
+            other => bail!("unknown strategy {other}"),
+        };
+    }
+    cfg.train.steps = args.get_usize("steps", cfg.train.steps)?;
+    cfg.train.lr = args.get_f64("lr", cfg.train.lr as f64)? as f32;
+    if let Some(t) = args.get("target-loss") {
+        cfg.train.target_loss = Some(t.parse()?);
+    }
+    if let Some(p) = args.get("out-csv") {
+        cfg.out_csv = Some(p.to_string());
+    }
+    let artifacts = PathBuf::from(
+        args.get_or("artifacts", &cfg.artifacts_dir));
+
+    let hw = cfg.build_cluster()?;
+    eprintln!("cluster: {} ({} devices); strategy: {:?}", hw.name,
+              hw.n_devices(), cfg.train.strategy);
+    let coord = Coordinator::new(&artifacts, hw)?;
+    let mut corpus = Corpus::new(cfg.corpus_vocab, cfg.epoch_tokens,
+                                 cfg.train.seed);
+    // §7.3 alternative algorithms ride on dedicated entry points.
+    let report = match args.get("strategy") {
+        Some("async") => coord.train_async_ps(
+            &mut corpus, &cfg.train,
+            args.get_usize("workers", 2)?,
+            args.get_usize("staleness", 2)?)?,
+        Some("local-sgd") => coord.train_local_sgd(
+            &mut corpus, &cfg.train,
+            args.get_usize("workers", 2)?,
+            args.get_usize("sync-every", 4)?)?,
+        _ => coord.train(&mut corpus, &cfg.train)?,
+    };
+    println!(
+        "steps={} final_loss={:.4} epochs_used={:.3} \
+         step_wall={} step_sim={} reached_target={}",
+        report.steps_run, report.final_loss, report.epochs_used,
+        fmt_secs(report.mean_step_wall_s), fmt_secs(report.mean_step_sim_s),
+        report.reached_target
+    );
+    if let Some(path) = &cfg.out_csv {
+        report.curve.write_csv(&PathBuf::from(path))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------------------
+
+fn model_profile(name: &str) -> Result<models::ModelProfile> {
+    Ok(match name {
+        "inception" | "inception-v3" => models::inception_v3(32),
+        "gnmt" => models::gnmt(128),
+        "biglstm" => models::biglstm(64),
+        "transformer" => {
+            models::transformer_lm(4, 128.0, 512.0, 512.0, 64.0, 8)
+        }
+        other => bail!("unknown model '{other}'"),
+    })
+}
+
+fn cmd_place(args: &Args) -> Result<()> {
+    let prof = model_profile(&args.get_or("model", "inception"))?;
+    let nd = args.get_usize("devices", 2)?;
+    let hw = cluster::dgx1_mem(nd.max(1).min(8), cluster::V100_32G_MEM);
+    let times = prof.dfg.op_times(7e12, 15e-6);
+    let serial: f64 = times.iter().sum();
+    let placement = if args.has_flag("heuristic") {
+        placer::place_heuristic(&prof.dfg, &hw, &times, nd)?
+    } else {
+        placer::place(&prof.dfg, &hw, &times,
+                      &placer::PlacerOptions {
+                          max_devices: nd,
+                          ..Default::default()
+                      })?
+    };
+    placer::validate_placement(&prof.dfg, &hw, &placement.assignment)?;
+    println!("model={} devices={} serial={} predicted={} speedup={:.3} \
+              optimal={}",
+             prof.name, nd, fmt_secs(serial),
+             fmt_secs(placement.predicted_time),
+             serial / placement.predicted_time, placement.optimal);
+    // Per-device op listing (Fig. 7 textual form).
+    for d in hw.devices() {
+        let ops: Vec<&str> = placement
+            .assignment
+            .iter()
+            .enumerate()
+            .filter(|&(_, &a)| a == d)
+            .map(|(i, _)| prof.dfg.ops[i].name.as_str())
+            .collect();
+        if !ops.is_empty() {
+            println!("  device {}: {} ops: {}", d, ops.len(),
+                     ops.join(", "));
+        }
+    }
+    if let Some(dot) = args.get("dot") {
+        std::fs::write(dot, prof.dfg.to_dot(Some(&placement.assignment)))?;
+        eprintln!("wrote {dot}");
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------------------
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let name = args.get_or("model", "inception");
+    let prof = model_profile(&name)?;
+    let max_dev = args.get_usize("max-devices", 256)?;
+    let times = prof.dfg.op_times(7e12, 15e-6);
+    let step_compute: f64 = times.iter().sum();
+
+    // MP speedup source: DLPlacer for branchy graphs, pipeline for chains.
+    let su2 = if name.starts_with("inception") {
+        let hw = cluster::dgx1_mem(2, cluster::V100_32G_MEM);
+        let p = placer::place(&prof.dfg, &hw, &times,
+                              &placer::PlacerOptions::default())?;
+        step_compute / p.predicted_time
+    } else {
+        let cfg = pipeline::PipeConfig {
+            mini_batch: prof.mini_batch,
+            saturation_batch: prof.pipe_saturation,
+            ..Default::default()
+        };
+        pipeline::pipeline_speedup(&prof.dfg, &times, 2, 16, cfg)?.speedup
+    };
+
+    let se = if args.has_flag("real-se") {
+        ScalingEfficiency::RingAllReduce {
+            step_compute_s: step_compute,
+            grad_bytes: prof.grad_bytes,
+            alpha: 5e-6,
+            beta_bw: 12e9,
+        }
+    } else {
+        ScalingEfficiency::Perfect
+    };
+    let net = NetworkModel {
+        name: prof.name.clone(),
+        epochs: prof.epochs.clone(),
+        mini_batch: prof.mini_batch,
+        se,
+        mp_speedups: vec![(2, su2)],
+    };
+    println!("network={} SU^2={:.3} mini_batch={}", net.name, su2,
+             net.mini_batch);
+    println!("{:>8} {:>12} {:>14} {:>10}", "devices", "DP-only",
+             "hybrid(M=2)", "best");
+    let mut n = 1usize;
+    while n <= max_dev {
+        let dp = net.su_dp(n);
+        let hy = net.su_hybrid(n, 2);
+        let best = net.best_strategy(n);
+        println!(
+            "{:>8} {:>12} {:>14} {:>10}",
+            n,
+            dp.map(|v| format!("{v:.2}")).unwrap_or("diverged".into()),
+            hy.map(|v| format!("{v:.2}")).unwrap_or("-".into()),
+            best.map(|(m, v)| format!("M={m} ({v:.2})"))
+                .unwrap_or("-".into())
+        );
+        n *= 2;
+    }
+    if let Some(x) = net.crossover_point(2, max_dev) {
+        println!("crossover: hybrid (M=2) overtakes DP-only at {x} devices");
+    } else {
+        println!("no crossover up to {max_dev} devices");
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------------------
+
+fn cmd_allreduce(args: &Args) -> Result<()> {
+    let mbytes = args.get_f64("mbytes", 16.0)?;
+    let workers = args.get_usize("workers", 4)?;
+    let topo = args.get_or("topology", "dgx1");
+    let hw = match topo.as_str() {
+        "dgx1" => cluster::dgx1(workers.min(8)),
+        "multinode" => cluster::multi_node(workers.div_ceil(4), 4),
+        other => bail!("unknown topology {other}"),
+    };
+    let devs: Vec<usize> =
+        hw.devices().into_iter().cycle().take(workers).collect();
+    let len = (mbytes * 1e6 / 4.0) as usize;
+    let mut rng = hybridpar::util::rng::Rng::new(1);
+    let make = |rng: &mut hybridpar::util::rng::Rng| -> Vec<Vec<f32>> {
+        (0..workers)
+            .map(|_| (0..len).map(|_| rng.f32()).collect())
+            .collect()
+    };
+    for (name, f) in [
+        ("ring", collective::ring_allreduce
+            as fn(&mut [Vec<f32>], &cluster::HwGraph, &[usize])
+                  -> Result<collective::CollectiveResult>),
+        ("tree", collective::tree_allreduce),
+        ("param-server", collective::parameter_server),
+    ] {
+        let mut bufs = make(&mut rng);
+        let t0 = std::time::Instant::now();
+        let r = f(&mut bufs, &hw, &devs)?;
+        println!(
+            "{name:>14}: sim_time={} wire={:.1} MB host_wall={}",
+            fmt_secs(r.sim_time),
+            r.bytes_on_wire / 1e6,
+            fmt_secs(t0.elapsed().as_secs_f64())
+        );
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------------------
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let meta = Meta::load(&dir)?;
+    println!("artifacts in {dir:?}:");
+    for (name, a) in &meta.artifacts {
+        println!("  {:<18} {} in / {} out  ({})", name, a.inputs.len(),
+                 a.outputs.len(), a.file);
+    }
+    let t = &meta.transformer;
+    println!("transformer: {} params ({} tensors), batch {}, microbatch {}, \
+              seq {}, vocab {}",
+             t.n_params_total, t.param_specs.len(), t.batch, t.microbatch,
+             t.seq_len, t.vocab);
+    if let Some(l) = &meta.lstm {
+        println!("lstm: {} params, batch {}, seq {}", l.n_params_total,
+                 l.batch, l.seq_len);
+    }
+    Ok(())
+}

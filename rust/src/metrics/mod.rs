@@ -1,0 +1,124 @@
+//! Metrics: loss curves, step timing, CSV export.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// One record per training step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    /// Host wall-clock of all real compute this step.
+    pub wall_s: f64,
+    /// Simulated parallel step time (slowest worker + collective).
+    pub sim_s: f64,
+}
+
+/// Loss curve accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct LossCurve {
+    pub records: Vec<StepRecord>,
+}
+
+impl LossCurve {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, step: usize, loss: f32, wall_s: f64, sim_s: f64) {
+        self.records.push(StepRecord { step, loss, wall_s, sim_s });
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the last `k` steps (None until k records exist).
+    pub fn smoothed_loss(&self, k: usize) -> Option<f32> {
+        if self.records.len() < k || k == 0 {
+            return None;
+        }
+        let tail = &self.records[self.records.len() - k..];
+        Some(tail.iter().map(|r| r.loss).sum::<f32>() / k as f32)
+    }
+
+    /// First step index where the k-smoothed loss reached `target`.
+    pub fn steps_to_reach(&self, target: f32, k: usize) -> Option<usize> {
+        for i in k..=self.records.len() {
+            let window = &self.records[i - k..i];
+            let m = window.iter().map(|r| r.loss).sum::<f32>() / k as f32;
+            if m <= target {
+                return Some(self.records[i - 1].step);
+            }
+        }
+        None
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss,wall_s,sim_s\n");
+        for r in &self.records {
+            let _ = writeln!(s, "{},{},{},{}", r.step, r.loss, r.wall_s,
+                             r.sim_s);
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+
+    /// Total simulated time.
+    pub fn total_sim_s(&self) -> f64 {
+        self.records.iter().map(|r| r.sim_s).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(losses: &[f32]) -> LossCurve {
+        let mut c = LossCurve::new();
+        for (i, &l) in losses.iter().enumerate() {
+            c.push(i, l, 0.1, 0.2);
+        }
+        c
+    }
+
+    #[test]
+    fn smoothing() {
+        let c = curve(&[4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(c.smoothed_loss(2), Some(1.5));
+        assert_eq!(c.smoothed_loss(4), Some(2.5));
+        assert_eq!(c.smoothed_loss(5), None);
+        assert_eq!(c.last_loss(), Some(1.0));
+    }
+
+    #[test]
+    fn steps_to_reach_finds_first_window() {
+        let c = curve(&[5.0, 4.0, 3.0, 2.0, 1.0]);
+        // 2-window means: 4.5, 3.5, 2.5, 1.5 — target 3.0 hit at idx 3.
+        assert_eq!(c.steps_to_reach(3.0, 2), Some(3));
+        assert_eq!(c.steps_to_reach(0.5, 2), None);
+    }
+
+    #[test]
+    fn csv_format() {
+        let c = curve(&[1.0]);
+        let csv = c.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert!(csv.contains("0,1,0.1,0.2"));
+    }
+
+    #[test]
+    fn totals() {
+        let c = curve(&[1.0, 2.0]);
+        assert!((c.total_sim_s() - 0.4).abs() < 1e-12);
+    }
+}

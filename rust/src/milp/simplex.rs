@@ -1,0 +1,399 @@
+//! Dense two-phase primal simplex for LP relaxations.
+//!
+//! Solves `min c^T x  s.t.  A x {<=,>=,=} b,  lo <= x <= hi` by conversion
+//! to standard form (slack/surplus/artificial columns, lower-bound shift,
+//! upper bounds as rows).  Bland's anti-cycling rule kicks in after a
+//! degenerate-pivot streak.  Problem sizes here are DLPlacer-scale
+//! (hundreds of rows/columns), where a dense tableau is both simple and
+//! fast.
+
+use anyhow::{bail, Result};
+
+use super::{Cmp, Problem};
+
+/// LP outcome.
+#[derive(Clone, Debug)]
+pub enum LpOutcome {
+    /// Optimal with objective value and a value per original variable.
+    Optimal { obj: f64, x: Vec<f64> },
+    Infeasible,
+    Unbounded,
+}
+
+const EPS: f64 = 1e-9;
+
+struct Tableau {
+    /// rows x cols coefficient matrix (last col = rhs).
+    a: Vec<Vec<f64>>,
+    basis: Vec<usize>,
+    rows: usize,
+    cols: usize, // number of structural columns (excl rhs)
+}
+
+impl Tableau {
+    fn rhs(&self, r: usize) -> f64 {
+        self.a[r][self.cols]
+    }
+
+    fn pivot(&mut self, pr: usize, pc: usize) {
+        let piv = self.a[pr][pc];
+        debug_assert!(piv.abs() > EPS);
+        let inv = 1.0 / piv;
+        for j in 0..=self.cols {
+            self.a[pr][j] *= inv;
+        }
+        for r in 0..self.rows {
+            if r != pr {
+                let f = self.a[r][pc];
+                if f.abs() > EPS {
+                    for j in 0..=self.cols {
+                        self.a[r][j] -= f * self.a[pr][j];
+                    }
+                }
+            }
+        }
+        self.basis[pr] = pc;
+    }
+
+    /// Reduced costs under current basis for cost vector `c`.
+    fn reduced_costs(&self, c: &[f64]) -> Vec<f64> {
+        // y = c_B B^-1 applied implicitly: since tableau rows are already
+        // B^-1 A, reduced cost_j = c_j - sum_r c_basis[r] * a[r][j].
+        let mut rc = c.to_vec();
+        for r in 0..self.rows {
+            let cb = c[self.basis[r]];
+            if cb != 0.0 {
+                for j in 0..self.cols {
+                    rc[j] -= cb * self.a[r][j];
+                }
+            }
+        }
+        rc
+    }
+
+    fn objective(&self, c: &[f64]) -> f64 {
+        (0..self.rows).map(|r| c[self.basis[r]] * self.rhs(r)).sum()
+    }
+
+    /// Run simplex iterations on cost vector c. Returns false if unbounded.
+    fn optimize(&mut self, c: &[f64], max_iters: usize) -> Result<bool> {
+        let mut degenerate_streak = 0usize;
+        for _ in 0..max_iters {
+            let rc = self.reduced_costs(c);
+            // Entering column: most negative reduced cost (Dantzig), or
+            // Bland (lowest index with rc<0) when cycling is suspected.
+            let bland = degenerate_streak > 20;
+            let mut pc = usize::MAX;
+            let mut best = -1e-7;
+            for j in 0..self.cols {
+                if rc[j] < best {
+                    if bland {
+                        pc = j;
+                        break;
+                    }
+                    best = rc[j];
+                    pc = j;
+                }
+            }
+            if pc == usize::MAX {
+                return Ok(true); // optimal
+            }
+            // Ratio test.
+            let mut pr = usize::MAX;
+            let mut best_ratio = f64::INFINITY;
+            for r in 0..self.rows {
+                let a = self.a[r][pc];
+                if a > EPS {
+                    let ratio = self.rhs(r) / a;
+                    if ratio < best_ratio - EPS
+                        || (ratio < best_ratio + EPS
+                            && pr != usize::MAX
+                            && self.basis[r] < self.basis[pr])
+                    {
+                        best_ratio = ratio;
+                        pr = r;
+                    }
+                }
+            }
+            if pr == usize::MAX {
+                return Ok(false); // unbounded
+            }
+            if best_ratio < EPS {
+                degenerate_streak += 1;
+            } else {
+                degenerate_streak = 0;
+            }
+            self.pivot(pr, pc);
+        }
+        bail!("simplex iteration limit reached");
+    }
+}
+
+/// Solve the LP relaxation of `p` (integrality ignored).
+pub fn solve_lp(p: &Problem) -> Result<LpOutcome> {
+    let n = p.vars.len();
+    // --- normalise: shift lower bounds to zero; collect rows -------------
+    // x = lo + x', x' in [0, hi-lo].
+    let lo: Vec<f64> = p.vars.iter().map(|v| v.lo).collect();
+    for (i, v) in p.vars.iter().enumerate() {
+        if !v.lo.is_finite() {
+            bail!("var {} has -inf lower bound (unsupported)", i);
+        }
+        if v.hi < v.lo - EPS {
+            return Ok(LpOutcome::Infeasible);
+        }
+    }
+
+    struct Row {
+        coeffs: Vec<f64>,
+        cmp: Cmp,
+        rhs: f64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    for c in &p.constraints {
+        let mut coeffs = vec![0.0; n];
+        let mut shift = 0.0;
+        for &(j, a) in &c.coeffs {
+            coeffs[j] += a;
+            shift += a * lo[j];
+        }
+        rows.push(Row { coeffs, cmp: c.cmp, rhs: c.rhs - shift });
+    }
+    // Upper bounds as rows.
+    for (j, v) in p.vars.iter().enumerate() {
+        if v.hi.is_finite() {
+            let ub = v.hi - v.lo;
+            let mut coeffs = vec![0.0; n];
+            coeffs[j] = 1.0;
+            rows.push(Row { coeffs, cmp: Cmp::Le, rhs: ub });
+        }
+    }
+
+    let m = rows.len();
+    // Column layout: [x' (n)] [slack/surplus (m, 0 where Eq)] [artificial].
+    // Make rhs nonnegative by row negation (flips cmp).
+    for r in rows.iter_mut() {
+        if r.rhs < 0.0 {
+            for a in r.coeffs.iter_mut() {
+                *a = -*a;
+            }
+            r.rhs = -r.rhs;
+            r.cmp = match r.cmp {
+                Cmp::Le => Cmp::Ge,
+                Cmp::Ge => Cmp::Le,
+                Cmp::Eq => Cmp::Eq,
+            };
+        }
+    }
+
+    // Count slack columns after the flips settle the row senses.
+    let n_slack = rows.iter().filter(|r| r.cmp != Cmp::Eq).count();
+    // Artificials needed for Ge and Eq rows.
+    let n_art = rows.iter().filter(|r| r.cmp != Cmp::Le).count();
+    let cols = n + n_slack + n_art;
+
+    let mut a = vec![vec![0.0; cols + 1]; m];
+    let mut basis = vec![usize::MAX; m];
+    let mut slack_idx = n;
+    let mut art_idx = n + n_slack;
+    for (ri, r) in rows.iter().enumerate() {
+        a[ri][..n].copy_from_slice(&r.coeffs);
+        a[ri][cols] = r.rhs;
+        match r.cmp {
+            Cmp::Le => {
+                a[ri][slack_idx] = 1.0;
+                basis[ri] = slack_idx;
+                slack_idx += 1;
+            }
+            Cmp::Ge => {
+                a[ri][slack_idx] = -1.0;
+                slack_idx += 1;
+                a[ri][art_idx] = 1.0;
+                basis[ri] = art_idx;
+                art_idx += 1;
+            }
+            Cmp::Eq => {
+                a[ri][art_idx] = 1.0;
+                basis[ri] = art_idx;
+                art_idx += 1;
+            }
+        }
+    }
+
+    let mut t = Tableau { a, basis, rows: m, cols };
+
+    let max_iters = 2000 * (m + cols).max(100);
+
+    // --- phase 1 ----------------------------------------------------------
+    if n_art > 0 {
+        let mut c1 = vec![0.0; cols];
+        for j in (n + n_slack)..cols {
+            c1[j] = 1.0;
+        }
+        if !t.optimize(&c1, max_iters)? {
+            bail!("phase-1 unbounded (impossible)");
+        }
+        if t.objective(&c1) > 1e-6 {
+            return Ok(LpOutcome::Infeasible);
+        }
+        // Drive any artificial still in the basis out (degenerate).
+        for r in 0..t.rows {
+            if t.basis[r] >= n + n_slack {
+                // Find a non-artificial column with nonzero coeff.
+                let mut done = false;
+                for j in 0..(n + n_slack) {
+                    if t.a[r][j].abs() > 1e-7 {
+                        t.pivot(r, j);
+                        done = true;
+                        break;
+                    }
+                }
+                if !done {
+                    // Row is redundant; zero it (keep artificial at 0).
+                }
+            }
+        }
+    }
+
+    // --- phase 2 ----------------------------------------------------------
+    let sign = if p.maximize { -1.0 } else { 1.0 };
+    let mut c2 = vec![0.0; cols];
+    for (j, v) in p.vars.iter().enumerate() {
+        c2[j] = sign * v.obj;
+    }
+    // Forbid artificials from re-entering.
+    for j in (n + n_slack)..cols {
+        c2[j] = 1e12;
+    }
+    if !t.optimize(&c2, max_iters)? {
+        return Ok(LpOutcome::Unbounded);
+    }
+
+    let mut x = lo.clone();
+    for r in 0..t.rows {
+        if t.basis[r] < n {
+            x[t.basis[r]] = lo[t.basis[r]] + t.rhs(r);
+        }
+    }
+    let obj: f64 = p
+        .vars
+        .iter()
+        .enumerate()
+        .map(|(j, v)| v.obj * x[j])
+        .sum();
+    Ok(LpOutcome::Optimal { obj, x })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Problem, Cmp};
+    use super::*;
+
+    fn assert_opt(out: &LpOutcome, want_obj: f64) -> Vec<f64> {
+        match out {
+            LpOutcome::Optimal { obj, x } => {
+                assert!((obj - want_obj).abs() < 1e-6,
+                        "obj {obj} want {want_obj}");
+                x.clone()
+            }
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn textbook_max() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18  => (2, 6), obj 36.
+        let mut p = Problem::maximize();
+        let x = p.add_var("x", 0.0, f64::INFINITY, 3.0);
+        let y = p.add_var("y", 0.0, f64::INFINITY, 5.0);
+        p.add_le(&[(x, 1.0)], 4.0);
+        p.add_le(&[(y, 2.0)], 12.0);
+        p.add_le(&[(x, 3.0), (y, 2.0)], 18.0);
+        let sol = assert_opt(&solve_lp(&p).unwrap(), 36.0);
+        assert!((sol[x] - 2.0).abs() < 1e-6);
+        assert!((sol[y] - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn min_with_ge() {
+        // min 2x + 3y s.t. x + y >= 10, x >= 2 => (8,2)? obj: prefer x
+        // (cheaper): x=10-y; 2(10-y)+3y = 20+y -> y=0, x=10. obj 20.
+        let mut p = Problem::minimize();
+        let x = p.add_var("x", 0.0, f64::INFINITY, 2.0);
+        let y = p.add_var("y", 0.0, f64::INFINITY, 3.0);
+        p.add_ge(&[(x, 1.0), (y, 1.0)], 10.0);
+        let sol = assert_opt(&solve_lp(&p).unwrap(), 20.0);
+        assert!((sol[x] - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equality_constraint() {
+        // min x + y s.t. x + 2y = 4, x,y>=0 => y=2, x=0, obj 2.
+        let mut p = Problem::minimize();
+        let x = p.add_var("x", 0.0, f64::INFINITY, 1.0);
+        let y = p.add_var("y", 0.0, f64::INFINITY, 1.0);
+        p.add_eq(&[(x, 1.0), (y, 2.0)], 4.0);
+        assert_opt(&solve_lp(&p).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut p = Problem::minimize();
+        let x = p.add_var("x", 0.0, 1.0, 1.0);
+        p.add_ge(&[(x, 1.0)], 5.0);
+        assert!(matches!(solve_lp(&p).unwrap(), LpOutcome::Infeasible));
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut p = Problem::maximize();
+        let x = p.add_var("x", 0.0, f64::INFINITY, 1.0);
+        p.add_ge(&[(x, 1.0)], 1.0);
+        assert!(matches!(solve_lp(&p).unwrap(), LpOutcome::Unbounded));
+    }
+
+    #[test]
+    fn bounds_respected() {
+        // max x + y, x in [1,3], y in [2,2.5] => 5.5.
+        let mut p = Problem::maximize();
+        let x = p.add_var("x", 1.0, 3.0, 1.0);
+        let y = p.add_var("y", 2.0, 2.5, 1.0);
+        let sol = assert_opt(&solve_lp(&p).unwrap(), 5.5);
+        assert!((sol[x] - 3.0).abs() < 1e-6);
+        assert!((sol[y] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn negative_rhs_normalised() {
+        // min x s.t. -x <= -3  (i.e. x >= 3).
+        let mut p = Problem::minimize();
+        let x = p.add_var("x", 0.0, f64::INFINITY, 1.0);
+        p.add_le(&[(x, -1.0)], -3.0);
+        assert_opt(&solve_lp(&p).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn degenerate_lp_terminates() {
+        // Classic degenerate polytope; must not cycle.
+        let mut p = Problem::maximize();
+        let x1 = p.add_var("x1", 0.0, f64::INFINITY, 10.0);
+        let x2 = p.add_var("x2", 0.0, f64::INFINITY, -57.0);
+        let x3 = p.add_var("x3", 0.0, f64::INFINITY, -9.0);
+        let x4 = p.add_var("x4", 0.0, f64::INFINITY, -24.0);
+        p.add_le(&[(x1, 0.5), (x2, -5.5), (x3, -2.5), (x4, 9.0)], 0.0);
+        p.add_le(&[(x1, 0.5), (x2, -1.5), (x3, -0.5), (x4, 1.0)], 0.0);
+        p.add_le(&[(x1, 1.0)], 1.0);
+        let out = solve_lp(&p).unwrap();
+        assert_opt(&out, 1.0);
+    }
+
+    #[test]
+    fn shifted_lower_bounds_in_constraints() {
+        // min x + y, x>=5, y>=5, x + y >= 12 => 12.
+        let mut p = Problem::minimize();
+        let x = p.add_var("x", 5.0, f64::INFINITY, 1.0);
+        let y = p.add_var("y", 5.0, f64::INFINITY, 1.0);
+        p.add_ge(&[(x, 1.0), (y, 1.0)], 12.0);
+        assert_opt(&solve_lp(&p).unwrap(), 12.0);
+    }
+}

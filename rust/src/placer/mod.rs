@@ -1,0 +1,691 @@
+//! DLPlacer: ILP-based operation-to-device placement (paper §6).
+//!
+//! Maps a compute DFG onto a hardware graph to minimise per-step training
+//! time, implementing the paper's constraint system:
+//!
+//! * Eq. 7  — each op placed on exactly one device (`P_kn` binaries);
+//! * Eq. 10/11 — dependency scheduling with communication delay
+//!   `Δe = D(e)/B(l) + L(l)` on cut edges (cut-ness is encoded with
+//!   continuous `cut_e ≥ |P_i· − P_j·|` rows — exact under minimisation);
+//! * Eq. 12 — co-located ops cannot overlap (disjunctive big-M rows with
+//!   ordering binaries, only for pairs not already ordered by reachability);
+//! * Eq. 13 — per-device memory capacity.
+//!
+//! **Routing (Eq. 8/9)**: on the paper's DGX-1 quad every device pair is a
+//! single NVLink hop, so explicit routing variables are unnecessary; for
+//! multi-hop topologies the shortest route (Dijkstra over the hardware
+//! graph) supplies `Δe`.  This is the one simplification vs the paper's
+//! full formulation and is recorded in DESIGN.md.
+//!
+//! **Decomposition**: DFGs like Inception-V3 are chains of blocks joined by
+//! filter-concats; every path passes through each concat, so the ILP
+//! decomposes exactly at these sync points.  Each segment is solved
+//! optimally and the makespans add (the paper coarsens to "tensorflow
+//! operation" granularity for the same tractability reason).  A HLFET
+//! list-scheduling heuristic provides both the B&B warm start and the
+//! "expert manual placement" baseline of §5 (21% vs DLPlacer's 32%).
+
+pub mod anneal;
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::HwGraph;
+use crate::dfg::Dfg;
+use crate::milp::{solve_milp, BnbConfig, MilpOutcome, Problem};
+use crate::sim::{simulate, SimConfig};
+
+/// Placement outcome.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// Hardware node index per op.
+    pub assignment: Vec<usize>,
+    /// ILP-predicted (or heuristic-predicted) step time.
+    pub predicted_time: f64,
+    /// True if every segment was solved to proven optimality.
+    pub optimal: bool,
+}
+
+/// DLPlacer options.
+#[derive(Clone, Debug)]
+pub struct PlacerOptions {
+    /// Max devices to use (defaults to all compute nodes).
+    pub max_devices: usize,
+    /// B&B budget per segment.
+    pub bnb: BnbConfig,
+    /// Decompose at sync points (exact for chain-of-blocks DFGs).
+    pub decompose: bool,
+}
+
+impl Default for PlacerOptions {
+    fn default() -> Self {
+        PlacerOptions {
+            max_devices: usize::MAX,
+            bnb: BnbConfig {
+                max_nodes: 20_000,
+                time_limit: Duration::from_secs(30),
+                gap: 1e-6,
+                int_tol: 1e-6,
+            },
+            decompose: true,
+        }
+    }
+}
+
+/// Transfer delay of edge bytes between two devices (shortest route).
+fn edge_delay(hw: &HwGraph, a: usize, b: usize, bytes: f64) -> f64 {
+    hw.transfer_time(a, b, bytes)
+}
+
+/// Reachability matrix over the DAG (transitive closure).
+fn reachability(dfg: &Dfg) -> Result<Vec<Vec<bool>>> {
+    let n = dfg.n_ops();
+    let order = dfg.topo_order()?;
+    let succ = dfg.successors();
+    let mut reach = vec![vec![false; n]; n];
+    for &v in order.iter().rev() {
+        for &s in &succ[v] {
+            reach[v][s] = true;
+            // v reaches everything s reaches.
+            let (row_s, row_v) = if v < s {
+                let (a, b) = reach.split_at_mut(s);
+                (&b[0], &mut a[v])
+            } else {
+                let (a, b) = reach.split_at_mut(v);
+                (&a[s], &mut b[0])
+            };
+            for i in 0..n {
+                if row_s[i] {
+                    row_v[i] = true;
+                }
+            }
+        }
+    }
+    Ok(reach)
+}
+
+/// Sync points: topo positions `i` such that no edge jumps across the
+/// boundary between position `i` and `i+1`... i.e. vertices every path
+/// passes through.  Returns topo order + the indices (into that order) of
+/// sync vertices.
+fn sync_points(dfg: &Dfg) -> Result<(Vec<usize>, Vec<usize>)> {
+    let order = dfg.topo_order()?;
+    let n = order.len();
+    let mut pos = vec![0usize; n];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v] = i;
+    }
+    let mut max_reach = vec![0usize; n];
+    for e in &dfg.edges {
+        let (a, b) = (pos[e.src], pos[e.dst]);
+        max_reach[a] = max_reach[a].max(b);
+    }
+    // Position i is a sync point iff no edge from a position < i lands
+    // past i — every path goes through the vertex at i.
+    let mut run = 0usize;
+    let mut syncs = Vec::new();
+    for i in 0..n {
+        if run <= i {
+            syncs.push(i);
+        }
+        run = run.max(max_reach[i]);
+    }
+    Ok((order, syncs))
+}
+
+/// Build + solve the placement ILP for a sub-DAG given by `ops` (indices
+/// into the full DFG).  `pinned` optionally pins specific ops to devices.
+/// Returns (assignment per op-in-`ops`, makespan, proven_optimal).
+fn solve_segment(dfg: &Dfg, hw: &HwGraph, times: &[f64], ops: &[usize],
+                 devices: &[usize], pinned: &[(usize, usize)],
+                 opts: &PlacerOptions)
+                 -> Result<(Vec<usize>, f64, bool)> {
+    let nd = devices.len();
+    let k = ops.len();
+    let mut local = vec![usize::MAX; dfg.n_ops()];
+    for (li, &op) in ops.iter().enumerate() {
+        local[op] = li;
+    }
+    let seg_edges: Vec<(usize, usize, f64)> = dfg
+        .edges
+        .iter()
+        .filter(|e| local[e.src] != usize::MAX && local[e.dst] != usize::MAX)
+        .map(|e| (local[e.src], local[e.dst], e.bytes))
+        .collect();
+    let seg_times: Vec<f64> = ops.iter().map(|&o| times[o]).collect();
+    let serial: f64 = seg_times.iter().sum();
+    let big_m = 2.0 * serial + 1.0;
+
+    // Worst-case inter-device delay per edge (uniform on DGX quads).
+    let delay = |bytes: f64| -> f64 {
+        let mut worst: f64 = 0.0;
+        for &a in devices {
+            for &b in devices {
+                if a != b {
+                    worst = worst.max(edge_delay(hw, a, b, bytes));
+                }
+            }
+        }
+        worst
+    };
+
+    // ---- warm start: HLFET heuristic on the segment --------------------
+    let (heur_assign, heur_time) =
+        heuristic_segment(dfg, hw, times, ops, devices, pinned)?;
+
+    if nd == 1 || k == 1 {
+        return Ok((heur_assign, heur_time, true));
+    }
+
+    // ---- ILP ------------------------------------------------------------
+    let mut p = Problem::minimize();
+    // P[li][di]
+    let mut pv = vec![vec![0usize; nd]; k];
+    for li in 0..k {
+        for di in 0..nd {
+            pv[li][di] =
+                p.add_binary(&format!("P_{}_{}", li, di), 0.0);
+        }
+        let row: Vec<(usize, f64)> =
+            (0..nd).map(|di| (pv[li][di], 1.0)).collect();
+        p.add_eq(&row, 1.0); // Eq. 7
+    }
+    // Pins.
+    for &(op, dev) in pinned {
+        if local[op] != usize::MAX {
+            let li = local[op];
+            let di = devices.iter().position(|&d| d == dev)
+                .ok_or_else(|| anyhow::anyhow!("pin device not in set"))?;
+            p.add_eq(&[(pv[li][di], 1.0)], 1.0);
+        }
+    }
+    // T[li] and makespan C.
+    let tv: Vec<usize> = (0..k)
+        .map(|li| p.add_var(&format!("T_{li}"), 0.0, big_m, 0.0))
+        .collect();
+    let c = p.add_var("C", 0.0, big_m, 1.0);
+    for li in 0..k {
+        // C >= T + Δ
+        p.add_ge(&[(c, 1.0), (tv[li], -1.0)], seg_times[li]);
+    }
+    // Edges: cut indicator + precedence (Eq. 10/11).
+    for &(i, j, bytes) in &seg_edges {
+        let d = delay(bytes);
+        let cut = p.add_var(&format!("cut_{}_{}", i, j), 0.0, 1.0, 0.0);
+        for di in 0..nd {
+            // cut >= P[i][di] - P[j][di]  and symmetric.
+            p.add_ge(&[(cut, 1.0), (pv[i][di], -1.0), (pv[j][di], 1.0)],
+                     0.0);
+            p.add_ge(&[(cut, 1.0), (pv[j][di], -1.0), (pv[i][di], 1.0)],
+                     0.0);
+        }
+        // T[j] >= T[i] + Δi + d*cut.
+        p.add_ge(&[(tv[j], 1.0), (tv[i], -1.0), (cut, -d)], seg_times[i]);
+    }
+    // Disjunctive no-overlap for unordered co-located pairs (Eq. 12):
+    // ordering binary z (z=1 ⇒ a before b), big-M relaxed unless both ops
+    // share device di.
+    let reach = reachability(dfg)?;
+    let mut pairs = Vec::new();
+    for a in 0..k {
+        for b in (a + 1)..k {
+            let (oa, ob) = (ops[a], ops[b]);
+            if !(reach[oa][ob] || reach[ob][oa]) {
+                pairs.push((a, b));
+            }
+        }
+    }
+    for &(a, b) in &pairs {
+        let z = p.add_binary(&format!("ord_{}_{}", a, b), 0.0);
+        for di in 0..nd {
+            // z=1 ∧ co-located on di ⇒ T[b] ≥ T[a] + Δa.
+            // Relaxation: T[b] − T[a] ≥ Δa − M(1−z) − M(1−Pa) − M(1−Pb)
+            //   ⇔ T[b] − T[a] − M·z − M·Pa − M·Pb ≥ Δa − 3M.
+            p.add_ge(
+                &[(tv[b], 1.0), (tv[a], -1.0), (z, -big_m),
+                  (pv[a][di], -big_m), (pv[b][di], -big_m)],
+                seg_times[a] - 3.0 * big_m,
+            );
+            // z=0 ∧ co-located on di ⇒ T[a] ≥ T[b] + Δb.
+            //   ⇔ T[a] − T[b] + M·z − M·Pa − M·Pb ≥ Δb − 2M.
+            p.add_ge(
+                &[(tv[a], 1.0), (tv[b], -1.0), (z, big_m),
+                  (pv[a][di], -big_m), (pv[b][di], -big_m)],
+                seg_times[b] - 2.0 * big_m,
+            );
+        }
+    }
+    // Memory capacity (Eq. 13).
+    for (di, &dev) in devices.iter().enumerate() {
+        let row: Vec<(usize, f64)> = (0..k)
+            .map(|li| (pv[li][di], dfg.ops[ops[li]].mem_bytes))
+            .collect();
+        p.add_le(&row, hw.nodes[dev].mem_capacity);
+    }
+
+    // Warm-start incumbent from the heuristic.
+    let incumbent = build_incumbent(&p, &pv, &tv, c, &heur_assign, devices,
+                                    dfg, hw, times, ops);
+
+    let out = solve_milp(&p, opts.bnb, incumbent)?;
+    let optimal = matches!(solve_status(&out), Status::Optimal);
+    match out {
+        MilpOutcome::Optimal { obj, x } | MilpOutcome::Feasible { obj, x, .. } => {
+            let mut assign = vec![devices[0]; k];
+            for li in 0..k {
+                for di in 0..nd {
+                    if x[pv[li][di]] > 0.5 {
+                        assign[li] = devices[di];
+                    }
+                }
+            }
+            Ok((assign, obj, optimal))
+        }
+        MilpOutcome::Infeasible => {
+            bail!("placement ILP infeasible (memory too small?)")
+        }
+        MilpOutcome::Unbounded => bail!("placement ILP unbounded (bug)"),
+        MilpOutcome::Unknown => Ok((heur_assign, heur_time, false)),
+    }
+}
+
+enum Status {
+    Optimal,
+    Other,
+}
+
+fn solve_status(o: &MilpOutcome) -> Status {
+    match o {
+        MilpOutcome::Optimal { .. } => Status::Optimal,
+        _ => Status::Other,
+    }
+}
+
+/// Encode a heuristic assignment as a feasible MILP point (P, T, C values
+/// from an ideal-simulation of that assignment).
+#[allow(clippy::too_many_arguments)]
+fn build_incumbent(p: &Problem, pv: &[Vec<usize>], tv: &[usize], c: usize,
+                   assign: &[usize], devices: &[usize], dfg: &Dfg,
+                   hw: &HwGraph, times: &[f64], ops: &[usize])
+                   -> Option<(f64, Vec<f64>)> {
+    // Simulate the segment in the ILP's idealised model to get start times.
+    let sub = segment_dfg(dfg, ops);
+    let seg_times: Vec<f64> = ops.iter().map(|&o| times[o]).collect();
+    let sim = simulate(&sub, hw, assign, &seg_times, SimConfig::ideal()).ok()?;
+    let mut x = vec![0.0; p.vars.len()];
+    for (li, &dev) in assign.iter().enumerate() {
+        let di = devices.iter().position(|&d| d == dev)?;
+        x[pv[li][di]] = 1.0;
+        x[tv[li]] = sim.op_start[li];
+    }
+    x[c] = sim.makespan;
+    // Ordering binaries / cut vars: set from the schedule.
+    for (vi, var) in p.vars.iter().enumerate() {
+        if var.name.starts_with("ord_") {
+            let mut it = var.name.split('_').skip(1);
+            let a: usize = it.next()?.parse().ok()?;
+            let b: usize = it.next()?.parse().ok()?;
+            x[vi] = if sim.op_start[a] <= sim.op_start[b] { 1.0 } else { 0.0 };
+        } else if var.name.starts_with("cut_") {
+            let mut it = var.name.split('_').skip(1);
+            let a: usize = it.next()?.parse().ok()?;
+            let b: usize = it.next()?.parse().ok()?;
+            x[vi] = if assign[a] == assign[b] { 0.0 } else { 1.0 };
+        }
+    }
+    if p.is_feasible(&x, 1e-5) {
+        Some((sim.makespan, x))
+    } else {
+        None
+    }
+}
+
+/// Extract a standalone DFG for the op subset (preserving order of `ops`).
+fn segment_dfg(dfg: &Dfg, ops: &[usize]) -> Dfg {
+    let mut local = vec![usize::MAX; dfg.n_ops()];
+    let mut g = Dfg::new(&format!("{}/seg", dfg.name));
+    for (li, &op) in ops.iter().enumerate() {
+        local[op] = li;
+        let o = &dfg.ops[op];
+        g.add_op(&o.name, o.flops, o.out_bytes, o.mem_bytes);
+    }
+    for e in &dfg.edges {
+        if local[e.src] != usize::MAX && local[e.dst] != usize::MAX {
+            g.add_edge_bytes(local[e.src], local[e.dst], e.bytes);
+        }
+    }
+    g
+}
+
+/// HLFET list-scheduling heuristic with communication awareness: assign
+/// each ready op to the device minimising its completion time.
+fn heuristic_segment(dfg: &Dfg, hw: &HwGraph, times: &[f64], ops: &[usize],
+                     devices: &[usize], pinned: &[(usize, usize)])
+                     -> Result<(Vec<usize>, f64)> {
+    let sub = segment_dfg(dfg, ops);
+    let seg_times: Vec<f64> = ops.iter().map(|&o| times[o]).collect();
+    let n = sub.n_ops();
+    let preds = sub.predecessors();
+    let succs = sub.successors();
+    let order = sub.topo_order()?;
+    // Priorities: downstream critical path.
+    let mut prio = vec![0.0f64; n];
+    for &v in order.iter().rev() {
+        let down = succs[v].iter().map(|&s| prio[s]).fold(0.0f64, f64::max);
+        prio[v] = seg_times[v] + down;
+    }
+    let mut pin_map = vec![usize::MAX; n];
+    for &(op, dev) in pinned {
+        if let Some(li) = ops.iter().position(|&o| o == op) {
+            pin_map[li] = dev;
+        }
+    }
+    let mut dev_free = vec![0.0f64; hw.nodes.len()];
+    let mut finish = vec![0.0f64; n];
+    let mut assign = vec![devices[0]; n];
+    let mut done = vec![false; n];
+    let mut n_done = 0;
+    while n_done < n {
+        // Ready set.
+        let mut ready: Vec<usize> = (0..n)
+            .filter(|&v| !done[v] && preds[v].iter().all(|&q| done[q]))
+            .collect();
+        ready.sort_by(|&a, &b| prio[b].partial_cmp(&prio[a]).unwrap());
+        let v = ready[0];
+        // Choose device minimising completion.
+        let mut best = (f64::INFINITY, devices[0]);
+        let cands: Vec<usize> = if pin_map[v] != usize::MAX {
+            vec![pin_map[v]]
+        } else {
+            devices.to_vec()
+        };
+        for &d in &cands {
+            let mut data_ready = 0.0f64;
+            for &q in &preds[v] {
+                let e_bytes = sub
+                    .edges
+                    .iter()
+                    .find(|e| e.src == q && e.dst == v)
+                    .map(|e| e.bytes)
+                    .unwrap_or(0.0);
+                let arrive = if assign[q] == d {
+                    finish[q]
+                } else {
+                    finish[q] + edge_delay(hw, assign[q], d, e_bytes)
+                };
+                data_ready = data_ready.max(arrive);
+            }
+            let start = data_ready.max(dev_free[d]);
+            let end = start + seg_times[v];
+            if end < best.0 {
+                best = (end, d);
+            }
+        }
+        assign[v] = best.1;
+        finish[v] = best.0;
+        dev_free[best.1] = best.0;
+        done[v] = true;
+        n_done += 1;
+    }
+    let makespan = finish.iter().fold(0.0f64, |a, &b| a.max(b));
+    Ok((assign, makespan))
+}
+
+/// DLPlacer main entry: place `dfg` on the devices of `hw` with per-op
+/// times `times` (Δ(k)).
+pub fn place(dfg: &Dfg, hw: &HwGraph, times: &[f64], opts: &PlacerOptions)
+             -> Result<Placement> {
+    let devices: Vec<usize> = hw
+        .devices()
+        .into_iter()
+        .take(opts.max_devices)
+        .collect();
+    if devices.is_empty() {
+        bail!("no compute devices");
+    }
+    let (order, syncs) = sync_points(dfg)?;
+
+    if !opts.decompose || syncs.len() <= 2 {
+        let ops: Vec<usize> = order.clone();
+        let (assign, time, optimal) = solve_segment(
+            dfg, hw, times, &ops, &devices, &[], opts)?;
+        let mut full = vec![devices[0]; dfg.n_ops()];
+        for (li, &op) in ops.iter().enumerate() {
+            full[op] = assign[li];
+        }
+        // Guard: if B&B exhausted its budget with a weaker incumbent, the
+        // whole-graph heuristic may still win — return the best candidate
+        // (only if it also satisfies the memory constraint, which the
+        // list scheduler does not enforce).
+        let heur = place_heuristic_on(dfg, hw, times, &devices)?;
+        if heur.predicted_time < time
+            && validate_placement(dfg, hw, &heur.assignment).is_ok()
+        {
+            return Ok(Placement { optimal: false, ..heur });
+        }
+        return Ok(Placement {
+            assignment: full,
+            predicted_time: time,
+            optimal,
+        });
+    }
+
+    // Segments: positions [sync_j ..= sync_{j+1}], boundaries shared and
+    // pinned to device 0 (concats/sync ops are negligible compute).  The
+    // final segment runs to the last vertex even if it is not a sync.
+    let mut cut_positions: Vec<usize> = syncs.clone();
+    let last = order.len() - 1;
+    if *cut_positions.last().unwrap() != last {
+        cut_positions.push(last);
+    }
+    let mut full = vec![devices[0]; dfg.n_ops()];
+    let mut total = 0.0;
+    let mut all_optimal = true;
+    let mut double_counted = 0.0;
+    for w in cut_positions.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        if a == b {
+            continue;
+        }
+        let ops: Vec<usize> = (a..=b).map(|i| order[i]).collect();
+        let mut pins = vec![(order[a], devices[0])];
+        if syncs.contains(&b) {
+            pins.push((order[b], devices[0]));
+        }
+        let (assign, time, optimal) =
+            solve_segment(dfg, hw, times, &ops, &devices, &pins, opts)?;
+        for (li, &op) in ops.iter().enumerate() {
+            full[op] = assign[li];
+        }
+        total += time;
+        all_optimal &= optimal;
+        if a != cut_positions[0] {
+            double_counted += times[order[a]];
+        }
+    }
+    total -= double_counted;
+    // The decomposition pins sync vertices to device 0, which is exact for
+    // negligible-compute sync ops (concats) but can lose on graphs with
+    // heavy sync vertices.  Fall back to the whole-graph heuristic when it
+    // predicts better AND satisfies memory (the production placer returns
+    // the best feasible candidate).
+    let heur = place_heuristic_on(dfg, hw, times, &devices)?;
+    if heur.predicted_time < total
+        && validate_placement(dfg, hw, &heur.assignment).is_ok()
+    {
+        return Ok(Placement { optimal: false, ..heur });
+    }
+    Ok(Placement {
+        assignment: full,
+        predicted_time: total,
+        optimal: all_optimal,
+    })
+}
+
+/// Heuristic-only placement (the "expert/manual" baseline of §5).
+pub fn place_heuristic(dfg: &Dfg, hw: &HwGraph, times: &[f64],
+                       max_devices: usize) -> Result<Placement> {
+    let devices: Vec<usize> =
+        hw.devices().into_iter().take(max_devices).collect();
+    place_heuristic_on(dfg, hw, times, &devices)
+}
+
+fn place_heuristic_on(dfg: &Dfg, hw: &HwGraph, times: &[f64],
+                      devices: &[usize]) -> Result<Placement> {
+    let ops: Vec<usize> = dfg.topo_order()?;
+    let (assign, time) =
+        heuristic_segment(dfg, hw, times, &ops, devices, &[])?;
+    let mut full = vec![devices[0]; dfg.n_ops()];
+    for (li, &op) in ops.iter().enumerate() {
+        full[op] = assign[li];
+    }
+    Ok(Placement { assignment: full, predicted_time: time, optimal: false })
+}
+
+/// Check a placement satisfies Eq. 7 (total) and Eq. 13 (memory).
+pub fn validate_placement(dfg: &Dfg, hw: &HwGraph, assignment: &[usize])
+                          -> Result<()> {
+    if assignment.len() != dfg.n_ops() {
+        bail!("assignment length mismatch");
+    }
+    let mut mem = vec![0.0f64; hw.nodes.len()];
+    for (op, &d) in assignment.iter().enumerate() {
+        if d >= hw.nodes.len() || !hw.nodes[d].is_compute {
+            bail!("op {op} on non-compute node {d}");
+        }
+        mem[d] += dfg.ops[op].mem_bytes;
+    }
+    for (d, &m) in mem.iter().enumerate() {
+        if hw.nodes[d].is_compute && m > hw.nodes[d].mem_capacity {
+            bail!("device {d} over memory: {m} > {}",
+                  hw.nodes[d].mem_capacity);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::dgx1;
+
+    /// entry -> {b1 (slow), b2 (slow)} -> exit: optimal 2-device placement
+    /// overlaps b1/b2.
+    fn fork() -> (Dfg, Vec<f64>) {
+        let mut g = Dfg::new("fork");
+        let a = g.add_op("a", 1.0, 1e6, 1.0);
+        let b = g.add_op("b", 1.0, 1e6, 1.0);
+        let c = g.add_op("c", 1.0, 1e6, 1.0);
+        let d = g.add_op("d", 1.0, 1e6, 1.0);
+        g.add_edge(a, b);
+        g.add_edge(a, c);
+        g.add_edge(b, d);
+        g.add_edge(c, d);
+        (g, vec![0.1, 1.0, 1.0, 0.1])
+    }
+
+    #[test]
+    fn ilp_overlaps_fork() {
+        let (g, t) = fork();
+        let hw = dgx1(2);
+        let p = place(&g, &hw, &t, &PlacerOptions::default()).unwrap();
+        validate_placement(&g, &hw, &p.assignment).unwrap();
+        // serial = 2.2; with overlap ≈ 1.2 + ε.
+        assert!(p.predicted_time < 1.4, "predicted {}", p.predicted_time);
+        assert_ne!(p.assignment[1], p.assignment[2],
+                   "branches must go to different devices");
+    }
+
+    #[test]
+    fn ilp_keeps_chain_on_one_device() {
+        let mut g = Dfg::new("chain");
+        let mut prev = g.add_op("op0", 1.0, 100e6, 1.0); // expensive comm
+        for i in 1..4 {
+            let cur = g.add_op(&format!("op{i}"), 1.0, 100e6, 1.0);
+            g.add_edge(prev, cur);
+            prev = cur;
+        }
+        let t = vec![0.01; 4];
+        let hw = dgx1(2);
+        let p = place(&g, &hw, &t, &PlacerOptions::default()).unwrap();
+        let first = p.assignment[0];
+        assert!(p.assignment.iter().all(|&d| d == first),
+                "chain with heavy edges must not be cut: {:?}", p.assignment);
+    }
+
+    #[test]
+    fn heuristic_feasible_and_close() {
+        let (g, t) = fork();
+        let hw = dgx1(2);
+        let h = place_heuristic(&g, &hw, &t, 2).unwrap();
+        validate_placement(&g, &hw, &h.assignment).unwrap();
+        let ilp = place(&g, &hw, &t, &PlacerOptions::default()).unwrap();
+        assert!(ilp.predicted_time <= h.predicted_time + 1e-9,
+                "ILP {} must not lose to heuristic {}",
+                ilp.predicted_time, h.predicted_time);
+    }
+
+    #[test]
+    fn memory_constraint_forces_split() {
+        let mut g = Dfg::new("mem");
+        let a = g.add_op("a", 1.0, 1.0, 9e9);
+        let b = g.add_op("b", 1.0, 1.0, 9e9);
+        g.add_edge(a, b);
+        let hw = dgx1(2); // 16 GB per device
+        let p = place(&g, &hw, &[1.0, 1.0],
+                      &PlacerOptions { decompose: false,
+                                       ..Default::default() }).unwrap();
+        validate_placement(&g, &hw, &p.assignment).unwrap();
+        assert_ne!(p.assignment[0], p.assignment[1],
+                   "memory must force a split");
+    }
+
+    #[test]
+    fn sync_point_decomposition_matches_monolithic() {
+        // Two fork blocks joined by a concat: decomposition must give the
+        // same makespan as the monolithic ILP.
+        let mut g = Dfg::new("blocks");
+        let a = g.add_op("in", 1.0, 1e3, 1.0);
+        let b1 = g.add_op("b1", 1.0, 1e3, 1.0);
+        let b2 = g.add_op("b2", 1.0, 1e3, 1.0);
+        let cat = g.add_op("cat", 1.0, 1e3, 1.0);
+        let c1 = g.add_op("c1", 1.0, 1e3, 1.0);
+        let c2 = g.add_op("c2", 1.0, 1e3, 1.0);
+        let out = g.add_op("out", 1.0, 1e3, 1.0);
+        g.add_edge(a, b1);
+        g.add_edge(a, b2);
+        g.add_edge(b1, cat);
+        g.add_edge(b2, cat);
+        g.add_edge(cat, c1);
+        g.add_edge(cat, c2);
+        g.add_edge(c1, out);
+        g.add_edge(c2, out);
+        let t = vec![0.01, 0.5, 0.5, 0.01, 0.5, 0.5, 0.01];
+        let hw = dgx1(2);
+        let mono = place(&g, &hw, &t,
+                         &PlacerOptions { decompose: false,
+                                          ..Default::default() }).unwrap();
+        let deco = place(&g, &hw, &t, &PlacerOptions::default()).unwrap();
+        assert!((mono.predicted_time - deco.predicted_time).abs() < 0.02,
+                "mono {} vs decomposed {}", mono.predicted_time,
+                deco.predicted_time);
+    }
+
+    #[test]
+    fn single_device_serialises() {
+        let (g, t) = fork();
+        let hw = dgx1(1);
+        let p = place(&g, &hw, &t, &PlacerOptions::default()).unwrap();
+        assert!((p.predicted_time - 2.2).abs() < 1e-6,
+                "serial time {}", p.predicted_time);
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        let (g, _) = fork();
+        let hw = dgx1(2);
+        assert!(validate_placement(&g, &hw, &[0, 0, 9, 0]).is_err());
+        assert!(validate_placement(&g, &hw, &[0, 0]).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal property-testing harness (proptest unavailable offline).
+//!
+//! `run_cases(n, seed, |g| ...)` executes `n` generated cases; on failure
+//! the panic message includes the case seed so it can be replayed with
+//! `replay(seed, ...)`.  Generators are methods on [`Gen`].
+
+use crate::util::rng::Rng;
+
+/// Per-case generator handle.
+pub struct Gen {
+    pub rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal() as f32 * scale).collect()
+    }
+
+    pub fn vec_f64(&mut self, len: usize, scale: f64) -> Vec<f64> {
+        (0..len).map(|_| self.rng.normal() * scale).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Run `n` property cases derived from `seed`.  Panics (with the failing
+/// case seed) on the first failure.
+pub fn run_cases<F: FnMut(&mut Gen)>(n: usize, seed: u64, mut body: F) {
+    for case in 0..n {
+        let case_seed = seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut g = Gen { rng: Rng::new(case_seed), case_seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || body(&mut g),
+        ));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed on case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its seed.
+pub fn replay<F: FnMut(&mut Gen)>(case_seed: u64, mut body: F) {
+    let mut g = Gen { rng: Rng::new(case_seed), case_seed };
+    body(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        run_cases(50, 1, |_| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        run_cases(100, 2, |g| {
+            let x = g.usize_in(3, 9);
+            assert!((3..=9).contains(&x));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+            let len = g.usize_in(0, 10);
+            let v = g.vec_f32(len, 1.0);
+            assert!(v.len() <= 10);
+        });
+    }
+
+    #[test]
+    fn failure_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            run_cases(10, 3, |g| {
+                let x = g.usize_in(0, 100);
+                assert!(x < 101); // never fails
+                if g.case_seed % 2 == 1 || true {
+                    // Force a failure on case 0 deterministically:
+                }
+                panic!("boom");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("replay seed"), "msg: {msg}");
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let mut first = None;
+        run_cases(1, 7, |g| first = Some(g.rng.next_u64()));
+        let seed = 7u64.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut again = None;
+        replay(seed, |g| again = Some(g.rng.next_u64()));
+        assert_eq!(first, again);
+    }
+}

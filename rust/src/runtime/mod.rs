@@ -1,0 +1,500 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) and executes them.
+//!
+//! This is the only module that touches the `xla` crate.  The flow follows
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  HLO **text** is the interchange format
+//! (jax ≥ 0.5 emits 64-bit instruction-id protos that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids).
+//!
+//! One [`Engine`] per process owns the PJRT client and the compiled
+//! executables (compiled once, executed many times — python never runs on
+//! the training path).  [`Meta`] mirrors `artifacts/meta.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor element type used by the artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// Shape+dtype signature entry of an artifact.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(j.get("dtype")?.as_str()?)?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One artifact's signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Indices of the logical inputs that survived XLA dead-code
+    /// elimination; only these are fed to the executable.
+    pub kept_inputs: Vec<usize>,
+}
+
+/// Named parameter spec (order defines the flat parameter list).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Model-family metadata from meta.json.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub param_specs: Vec<ParamSpec>,
+    pub batch: usize,
+    pub microbatch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    /// Number of params owned by pipeline stage 0 (transformer only).
+    pub stage0_params: usize,
+    pub init_params_file: String,
+    pub n_params_total: usize,
+}
+
+/// Parsed meta.json.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub transformer: ModelMeta,
+    pub lstm: Option<ModelMeta>,
+}
+
+fn parse_model(j: &Json) -> Result<ModelMeta> {
+    let cfg = j.get("config")?;
+    let specs = j
+        .get("param_specs")?
+        .as_arr()?
+        .iter()
+        .map(|s| {
+            Ok(ParamSpec {
+                name: s.get("name")?.as_str()?.to_string(),
+                shape: s
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelMeta {
+        param_specs: specs,
+        batch: j.get("batch")?.as_usize()?,
+        microbatch: j
+            .opt("microbatch")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(0),
+        seq_len: cfg.get("seq_len")?.as_usize()?,
+        vocab: cfg.get("vocab")?.as_usize()?,
+        d_model: cfg
+            .opt("d_model")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(0),
+        stage0_params: j
+            .opt("stage0_params")
+            .map(|v| v.as_usize())
+            .transpose()?
+            .unwrap_or(0),
+        init_params_file: j.get("init_params_file")?.as_str()?.to_string(),
+        n_params_total: j.get("n_params_total")?.as_usize()?,
+    })
+}
+
+impl Meta {
+    /// Load and validate `<dir>/meta.json`.
+    pub fn load(dir: &Path) -> Result<Meta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                {
+                    let inputs = a
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                    let kept_inputs = match a.opt("kept_inputs") {
+                        Some(k) => k
+                            .as_arr()?
+                            .iter()
+                            .map(|v| v.as_usize())
+                            .collect::<Result<Vec<_>>>()?,
+                        None => (0..inputs.len()).collect(),
+                    };
+                    ArtifactMeta {
+                        file: a.get("file")?.as_str()?.to_string(),
+                        inputs,
+                        outputs: a
+                            .get("outputs")?
+                            .as_arr()?
+                            .iter()
+                            .map(TensorSpec::from_json)
+                            .collect::<Result<Vec<_>>>()?,
+                        kept_inputs,
+                    }
+                },
+            );
+        }
+        let transformer = parse_model(j.get("transformer")?)?;
+        let lstm = match j.opt("lstm") {
+            Some(l) => Some(parse_model(l)?),
+            None => None,
+        };
+        Ok(Meta { dir: dir.to_path_buf(), artifacts, transformer, lstm })
+    }
+
+    /// Read a flat f32 init-params file into per-spec literals.
+    pub fn load_init_params(&self, model: &ModelMeta)
+                            -> Result<Vec<xla::Literal>> {
+        let path = self.dir.join(&model.init_params_file);
+        let raw = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        if raw.len() % 4 != 0 {
+            bail!("init params file not f32-aligned");
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let total: usize = model.param_specs.iter().map(|s| s.numel()).sum();
+        if floats.len() != total {
+            bail!("init params length {} != specs total {}", floats.len(),
+                  total);
+        }
+        let mut out = Vec::with_capacity(model.param_specs.len());
+        let mut off = 0;
+        for spec in &model.param_specs {
+            let n = spec.numel();
+            let lit = xla::Literal::vec1(&floats[off..off + n]);
+            let dims: Vec<i64> =
+                spec.shape.iter().map(|&d| d as i64).collect();
+            out.push(lit.reshape(&dims).map_err(|e| anyhow!("{e}"))?);
+            off += n;
+        }
+        Ok(out)
+    }
+}
+
+/// Compiled-executable cache over a PJRT CPU client.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub meta: Meta,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU engine and eagerly compile the given artifact names
+    /// (or all artifacts if `names` is empty).
+    pub fn load(artifacts_dir: &Path, names: &[&str]) -> Result<Engine> {
+        let meta = Meta::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let mut eng = Engine { client, meta, executables: BTreeMap::new() };
+        let to_compile: Vec<String> = if names.is_empty() {
+            eng.meta.artifacts.keys().cloned().collect()
+        } else {
+            names.iter().map(|s| s.to_string()).collect()
+        };
+        for name in to_compile {
+            eng.compile(&name)?;
+        }
+        Ok(eng)
+    }
+
+    /// Compile one artifact (no-op if cached).
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let am = self
+            .meta
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.meta.dir.join(&am.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_compiled(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute an artifact with literal inputs; returns the flattened
+    /// output tuple as literals.
+    pub fn exec(&self, name: &str, inputs: &[xla::Literal])
+                -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.exec_ref(name, &refs)
+    }
+
+    /// Execute with *borrowed* inputs — the hot-path variant: callers keep
+    /// long-lived tensors (parameters) and lend them per step instead of
+    /// deep-copying (§Perf L3: removed the full-params clone per exec).
+    pub fn exec_ref(&self, name: &str, inputs: &[&xla::Literal])
+                    -> Result<Vec<xla::Literal>> {
+        let am = self
+            .meta
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if inputs.len() != am.inputs.len() {
+            bail!("artifact '{name}' expects {} inputs, got {}",
+                  am.inputs.len(), inputs.len());
+        }
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not compiled"))?;
+        // Feed only the inputs XLA kept (see ArtifactMeta::kept_inputs).
+        let result = if am.kept_inputs.len() == inputs.len() {
+            exe.execute::<&xla::Literal>(inputs)
+        } else {
+            let kept: Vec<&xla::Literal> =
+                am.kept_inputs.iter().map(|&i| inputs[i]).collect();
+            exe.execute::<&xla::Literal>(&kept)
+        }
+        .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let replica0 = result
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no replica output"))?;
+        let mut outs = Vec::new();
+        for buf in replica0 {
+            let lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch output of {name}: {e}"))?;
+            // AOT lowering uses return_tuple=True: a single tuple literal.
+            let shape = lit.shape().map_err(|e| anyhow!("{e}"))?;
+            match shape {
+                xla::Shape::Tuple(_) => {
+                    let mut l = lit;
+                    outs.extend(
+                        l.decompose_tuple().map_err(|e| anyhow!("{e}"))?);
+                }
+                _ => outs.push(lit),
+            }
+        }
+        if outs.len() != am.outputs.len() {
+            bail!("artifact '{name}': expected {} outputs, got {}",
+                  am.outputs.len(), outs.len());
+        }
+        Ok(outs)
+    }
+
+    // --- host-visible tensor helpers ---------------------------------------
+
+    /// Build an i32 literal of the given shape from a host vector.
+    pub fn i32_tensor(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape/product mismatch: {shape:?} vs {}", data.len());
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Build an f32 literal of the given shape.
+    pub fn f32_tensor(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape/product mismatch: {shape:?} vs {}", data.len());
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("{e}"))
+    }
+
+    /// f32 scalar literal.
+    pub fn f32_scalar(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// Extract an f32 vector from a literal.
+    pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Extract the scalar f32 (e.g. loss outputs).
+    pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+        lit.get_first_element::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Rebuild a literal with the same shape as `like` from raw f32 data —
+    /// the all-reduce write-back path.
+    pub fn f32_like(like: &xla::Literal, data: &[f32])
+                    -> Result<xla::Literal> {
+        let shape = like.array_shape().map_err(|e| anyhow!("{e}"))?;
+        let dims = shape.dims().to_vec();
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Deep-copy a literal (xla::Literal has no Clone; round-trips through
+    /// host memory).
+    pub fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+        let shape = l.array_shape().map_err(|e| anyhow!("{e}"))?;
+        let dims = shape.dims().to_vec();
+        match l.ty().map_err(|e| anyhow!("{e}"))? {
+            xla::ElementType::F32 => {
+                let v = l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+                xla::Literal::vec1(&v)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("{e}"))
+            }
+            xla::ElementType::S32 => {
+                let v = l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+                xla::Literal::vec1(&v)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("{e}"))
+            }
+            t => bail!("clone_literal: unsupported element type {t:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("float64").is_err());
+    }
+
+    #[test]
+    fn tensor_spec_numel() {
+        let t = TensorSpec { shape: vec![2, 3, 4], dtype: DType::F32 };
+        assert_eq!(t.numel(), 24);
+        let s = TensorSpec { shape: vec![], dtype: DType::F32 };
+        assert_eq!(s.numel(), 1);
+    }
+
+    #[test]
+    fn meta_parse_minimal() {
+        let dir = std::env::temp_dir().join("hybridpar_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.json"), r#"{
+          "artifacts": {
+            "f": {"file": "f.hlo.txt",
+                   "inputs": [{"shape": [2, 2], "dtype": "float32"}],
+                   "outputs": [{"shape": [], "dtype": "float32"}]}
+          },
+          "transformer": {
+            "config": {"vocab": 512, "d_model": 128, "seq_len": 64},
+            "batch": 8, "microbatch": 4,
+            "n_params_total": 10,
+            "stage0_params": 1,
+            "param_specs": [{"name": "w", "shape": [2, 5]}],
+            "init_params_file": "init_params.bin"
+          }
+        }"#).unwrap();
+        let m = Meta::load(&dir).unwrap();
+        assert_eq!(m.artifacts["f"].inputs[0].shape, vec![2, 2]);
+        assert_eq!(m.transformer.batch, 8);
+        assert_eq!(m.transformer.param_specs[0].numel(), 10);
+        assert!(m.lstm.is_none());
+    }
+
+    #[test]
+    fn init_params_loader_validates_length() {
+        let dir = std::env::temp_dir().join("hybridpar_meta_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.json"), r#"{
+          "artifacts": {},
+          "transformer": {
+            "config": {"vocab": 1, "d_model": 1, "seq_len": 1},
+            "batch": 1, "microbatch": 1, "n_params_total": 4,
+            "stage0_params": 0,
+            "param_specs": [{"name": "w", "shape": [4]}],
+            "init_params_file": "p.bin"
+          }
+        }"#).unwrap();
+        std::fs::write(dir.join("p.bin"), [0u8; 12]).unwrap();
+        let m = Meta::load(&dir).unwrap();
+        assert!(m.load_init_params(&m.transformer).is_err());
+        std::fs::write(dir.join("p.bin"),
+                       [1f32, 2., 3., 4.].iter()
+                           .flat_map(|f| f.to_le_bytes())
+                           .collect::<Vec<_>>())
+            .unwrap();
+        let lits = m.load_init_params(&m.transformer).unwrap();
+        assert_eq!(lits.len(), 1);
+        assert_eq!(lits[0].to_vec::<f32>().unwrap(), vec![1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn tensor_builders_validate() {
+        assert!(Engine::i32_tensor(&[1, 2, 3], &[2, 2]).is_err());
+        let t = Engine::f32_tensor(&[1., 2., 3., 4.], &[2, 2]).unwrap();
+        assert_eq!(t.to_vec::<f32>().unwrap().len(), 4);
+    }
+}

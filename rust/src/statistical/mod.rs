@@ -1,0 +1,245 @@
+//! Statistical-efficiency models: epochs-to-converge E(B) vs global batch
+//! size (paper §3.1, Fig. 4).
+//!
+//! The paper measures E_N by training each network to a fixed quality
+//! target at emulated global batch sizes (delayed gradient updates, §4.2).
+//! Here E(B) comes from two sources:
+//!
+//! 1. **Calibrated curves** ([`EpochModel::calibrated`]) digitised from the
+//!    paper's Fig. 4 for Inception-V3 / GNMT / BigLSTM — these drive the
+//!    Fig. 4/5 reproductions so the projection math is exercised against
+//!    the paper's own statistical-efficiency data;
+//! 2. **Measured curves** ([`EpochModel::from_points`]) produced by the
+//!    coordinator's real convergence runs on the small transformer
+//!    (`examples/batch_size_sweep.rs`), demonstrating the same mechanism
+//!    end-to-end on this testbed.
+//!
+//! Between calibration points, E(B) is interpolated geometrically
+//! (log-log linear), matching the power-law-like growth past the critical
+//! batch size that the paper and Shallue et al. (2018) report.
+
+use anyhow::{bail, Result};
+
+/// Epochs-to-converge as a function of global batch size.
+#[derive(Clone, Debug)]
+pub struct EpochModel {
+    pub name: String,
+    /// (global_batch_size, epochs) calibration points, sorted by batch.
+    pub points: Vec<(f64, f64)>,
+    /// Batch size beyond which training failed to converge (paper: BigLSTM
+    /// "beyond 32-way DP, training did not converge within a meaningful
+    /// time limit").
+    pub diverges_beyond: Option<f64>,
+}
+
+impl EpochModel {
+    /// Build from measured (batch, epochs) points.
+    pub fn from_points(name: &str, mut points: Vec<(f64, f64)>)
+                       -> Result<Self> {
+        if points.is_empty() {
+            bail!("no calibration points");
+        }
+        points.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        Ok(EpochModel {
+            name: name.to_string(),
+            points,
+            diverges_beyond: None,
+        })
+    }
+
+    pub fn with_divergence(mut self, beyond: f64) -> Self {
+        self.diverges_beyond = Some(beyond);
+        self
+    }
+
+    /// Epochs to converge at global batch size `b` (log-log interpolation,
+    /// clamped at the ends).
+    pub fn epochs(&self, b: f64) -> Option<f64> {
+        if let Some(limit) = self.diverges_beyond {
+            if b > limit {
+                return None;
+            }
+        }
+        let pts = &self.points;
+        if b <= pts[0].0 {
+            return Some(pts[0].1);
+        }
+        if b >= pts[pts.len() - 1].0 {
+            return Some(pts[pts.len() - 1].1);
+        }
+        for w in pts.windows(2) {
+            let ((b0, e0), (b1, e1)) = (w[0], w[1]);
+            if b >= b0 && b <= b1 {
+                let t = (b.ln() - b0.ln()) / (b1.ln() - b0.ln());
+                return Some((e0.ln() + t * (e1.ln() - e0.ln())).exp());
+            }
+        }
+        unreachable!()
+    }
+
+    /// E_1 / E_N — the statistical-efficiency ratio in Eq. 3 (computed at
+    /// the model's smallest calibrated batch as the N=1 anchor).
+    pub fn efficiency_ratio(&self, b: f64) -> Option<f64> {
+        let e1 = self.points[0].1;
+        self.epochs(b).map(|en| e1 / en)
+    }
+
+    // --- paper-calibrated curves (Fig. 4) --------------------------------
+    // x-axis: #GPUs with the paper's per-GPU mini-batch; we store global
+    // batch sizes directly.
+
+    /// Inception-V3: mini-batch 64/GPU; "epochs increase sharply from four
+    /// to seven beyond batch 2048 (32 GPUs), 23 epochs at 16384 (256)".
+    pub fn inception_v3() -> Self {
+        EpochModel {
+            name: "inception-v3".into(),
+            points: vec![
+                (64.0, 4.0),     // 1 GPU
+                (256.0, 4.0),    // 4
+                (1024.0, 4.0),   // 16
+                (2048.0, 4.0),   // 32
+                (4096.0, 7.0),   // 64
+                (8192.0, 12.0),  // 128
+                (16384.0, 23.0), // 256
+            ],
+            diverges_beyond: None,
+        }
+    }
+
+    /// GNMT: mini-batch 128/GPU; tuned hyper-parameters keep E flat to 64
+    /// GPUs ("epoch count decreases slightly from two to four GPUs"), then
+    /// grows, "dramatically beyond 128".
+    pub fn gnmt() -> Self {
+        EpochModel {
+            name: "gnmt".into(),
+            points: vec![
+                (128.0, 5.0),    // 1 GPU
+                (256.0, 5.0),    // 2
+                (512.0, 4.8),    // 4 (slight decrease, tuned LR)
+                (2048.0, 4.8),   // 16
+                (8192.0, 5.0),   // 64
+                (16384.0, 6.0),  // 128
+                (32768.0, 11.2), // 256 (dramatic slowdown)
+            ],
+            diverges_beyond: None,
+        }
+    }
+
+    /// BigLSTM: mini-batch 64/GPU; "beyond 16 GPUs epochs increase rapidly;
+    /// 3.2x the epochs at 32-way vs 16-way; beyond 32-way did not
+    /// converge".
+    pub fn biglstm() -> Self {
+        EpochModel {
+            name: "biglstm".into(),
+            points: vec![
+                (64.0, 5.0),    // 1 GPU
+                (256.0, 5.0),   // 4
+                (512.0, 5.2),   // 8
+                (1024.0, 6.0),  // 16
+                (2048.0, 19.2), // 32 (3.2x of 16-way)
+            ],
+            diverges_beyond: Some(2048.0),
+        }
+    }
+
+    /// The hypothetical example of Fig. 3: mild epoch growth making DP
+    /// saturate past 32 devices.
+    pub fn fig3_example() -> Self {
+        EpochModel {
+            name: "fig3-example".into(),
+            points: vec![
+                (1.0, 10.0),
+                (32.0, 10.0),
+                (64.0, 14.0),
+                (128.0, 22.0),
+                (256.0, 40.0),
+            ],
+            diverges_beyond: None,
+        }
+    }
+}
+
+/// Delayed-gradient-update emulation math (paper §4.2): emulating a
+/// `target_ways`-way DP system on `physical` devices requires
+/// `target_ways / physical` sequential mini-batches per device per step.
+pub fn delayed_update_factor(target_ways: usize, physical: usize)
+                             -> Result<usize> {
+    if physical == 0 || target_ways == 0 {
+        bail!("zero device count");
+    }
+    if target_ways % physical != 0 {
+        bail!("target {target_ways} not a multiple of physical {physical}");
+    }
+    Ok(target_ways / physical)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolation_exact_at_points() {
+        let m = EpochModel::inception_v3();
+        for &(b, e) in &m.points {
+            assert!((m.epochs(b).unwrap() - e).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn interpolation_monotone_between() {
+        let m = EpochModel::inception_v3();
+        let e = m.epochs(6000.0).unwrap();
+        assert!(e > 7.0 && e < 12.0, "e={e}");
+    }
+
+    #[test]
+    fn clamps_outside_range() {
+        let m = EpochModel::gnmt();
+        assert_eq!(m.epochs(1.0).unwrap(), 5.0);
+        assert_eq!(m.epochs(1e9).unwrap(), 11.2);
+    }
+
+    #[test]
+    fn biglstm_divergence() {
+        let m = EpochModel::biglstm();
+        assert!(m.epochs(2048.0).is_some());
+        assert!(m.epochs(4096.0).is_none());
+    }
+
+    #[test]
+    fn efficiency_ratio_at_scale_below_one() {
+        let m = EpochModel::inception_v3();
+        assert!((m.efficiency_ratio(64.0).unwrap() - 1.0).abs() < 1e-9);
+        let r = m.efficiency_ratio(16384.0).unwrap();
+        assert!((r - 4.0 / 23.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_points_sorts() {
+        let m = EpochModel::from_points("x", vec![(100.0, 8.0), (10.0, 4.0)])
+            .unwrap();
+        assert_eq!(m.points[0].0, 10.0);
+        assert!(m.epochs(30.0).unwrap() > 4.0);
+    }
+
+    #[test]
+    fn empty_points_rejected() {
+        assert!(EpochModel::from_points("x", vec![]).is_err());
+    }
+
+    #[test]
+    fn delayed_update() {
+        assert_eq!(delayed_update_factor(16, 4).unwrap(), 4);
+        assert_eq!(delayed_update_factor(4, 4).unwrap(), 1);
+        assert!(delayed_update_factor(6, 4).is_err());
+        assert!(delayed_update_factor(0, 4).is_err());
+    }
+
+    #[test]
+    fn loglog_interpolation_is_geometric() {
+        // Points (10,1) and (1000,100): at b=100 expect 10.
+        let m = EpochModel::from_points(
+            "geo", vec![(10.0, 1.0), (1000.0, 100.0)]).unwrap();
+        assert!((m.epochs(100.0).unwrap() - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,123 @@
+//! Tiny CLI argument parser (clap unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I,
+                                                 flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(stripped.to_string());
+                    } else {
+                        out.options.insert(stripped.to_string(),
+                                           it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process args after the subcommand position.
+    pub fn from_env(skip: usize, flag_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(skip), flag_names)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(argv(&["train", "--steps", "100",
+                                   "--lr=0.5", "--verbose", "pos2"]),
+                            &["verbose"]);
+        assert_eq!(a.positional, vec!["train", "pos2"]);
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.5);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = Args::parse(argv(&["--dry-run", "--n", "4"]), &[]);
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(argv(&["--x"]), &[]);
+        assert!(a.has_flag("x"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(&[]), &[]);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert_eq!(a.get_or("m", "d"), "d");
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(argv(&["--n", "xyz"]), &[]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

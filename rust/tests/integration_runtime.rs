@@ -1,0 +1,193 @@
+//! Integration: load real AOT artifacts, execute them via PJRT, and check
+//! the numerics the coordinator depends on.
+//!
+//! Requires `make artifacts` (skips gracefully if absent so unit CI can run
+//! without the python toolchain).
+
+use std::path::PathBuf;
+
+use hybridpar::runtime::{Engine, Meta};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn clone_lit(l: &xla::Literal) -> xla::Literal {
+    Engine::clone_literal(l).unwrap()
+}
+
+fn token_batch(meta: &Meta, batch: usize, seed: u64)
+               -> (xla::Literal, xla::Literal) {
+    let seq = meta.transformer.seq_len;
+    let vocab = meta.transformer.vocab as i64;
+    let mut rng = hybridpar::util::rng::Rng::new(seed);
+    let tok: Vec<i32> =
+        (0..batch * seq).map(|_| rng.range(0, vocab - 1) as i32).collect();
+    let tgt: Vec<i32> =
+        (0..batch * seq).map(|_| rng.range(0, vocab - 1) as i32).collect();
+    (
+        Engine::i32_tensor(&tok, &[batch, seq]).unwrap(),
+        Engine::i32_tensor(&tgt, &[batch, seq]).unwrap(),
+    )
+}
+
+#[test]
+fn loss_eval_near_log_vocab() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eng = Engine::load(&dir, &["loss_eval"]).unwrap();
+    let params = eng.meta.load_init_params(&eng.meta.transformer).unwrap();
+    let (tok, tgt) = token_batch(&eng.meta, eng.meta.transformer.batch, 1);
+    let mut inputs = params;
+    inputs.push(tok);
+    inputs.push(tgt);
+    let out = eng.exec("loss_eval", &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    let loss = Engine::scalar_f32(&out[0]).unwrap();
+    let expect = (eng.meta.transformer.vocab as f32).ln();
+    assert!((loss - expect).abs() < 1.5,
+            "init loss {loss} should be near ln(V) = {expect}");
+}
+
+#[test]
+fn grad_step_then_apply_matches_train_step() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eng =
+        Engine::load(&dir, &["grad_step", "apply_update", "train_step"])
+            .unwrap();
+    let tm = &eng.meta.transformer;
+    let n = tm.param_specs.len();
+    let params = eng.meta.load_init_params(tm).unwrap();
+    let (tok, tgt) = token_batch(&eng.meta, tm.batch, 2);
+    let lr = 0.1f32;
+
+    // Path A: grad_step -> apply_update.
+    let mut inputs: Vec<xla::Literal> =
+        params.iter().map(clone_lit).collect();
+    inputs.push(clone_lit(&tok));
+    inputs.push(clone_lit(&tgt));
+    let outs = eng.exec("grad_step", &inputs).unwrap();
+    assert_eq!(outs.len(), n + 1);
+    let loss_a = Engine::scalar_f32(&outs[n]).unwrap();
+    let mut upd_in: Vec<xla::Literal> =
+        params.iter().map(clone_lit).collect();
+    upd_in.extend(outs[..n].iter().map(clone_lit));
+    upd_in.push(Engine::f32_scalar(lr));
+    let updated = eng.exec("apply_update", &upd_in).unwrap();
+    assert_eq!(updated.len(), n);
+
+    // Path B: fused train_step.
+    let mut fused_in: Vec<xla::Literal> =
+        params.iter().map(clone_lit).collect();
+    fused_in.push(clone_lit(&tok));
+    fused_in.push(clone_lit(&tgt));
+    fused_in.push(Engine::f32_scalar(lr));
+    let fused = eng.exec("train_step", &fused_in).unwrap();
+    let loss_b = Engine::scalar_f32(&fused[n]).unwrap();
+
+    assert!((loss_a - loss_b).abs() < 1e-5, "losses {loss_a} vs {loss_b}");
+    for (i, (a, b)) in updated.iter().zip(&fused[..n]).enumerate() {
+        let va = Engine::to_f32(a).unwrap();
+        let vb = Engine::to_f32(b).unwrap();
+        for (x, y) in va.iter().zip(&vb) {
+            assert!((x - y).abs() < 1e-5, "param {i} mismatch: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn pipeline_stages_produce_finite_grads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eng = Engine::load(
+        &dir, &["stage0_fwd", "stage1_grad", "stage0_grad"]).unwrap();
+    let tm = &eng.meta.transformer;
+    let n0 = tm.stage0_params;
+    let n = tm.param_specs.len();
+    let params = eng.meta.load_init_params(tm).unwrap();
+    let micro = tm.microbatch;
+    let (tok, tgt) = token_batch(&eng.meta, micro, 3);
+
+    // stage0 fwd -> activations.
+    let mut s0_in: Vec<xla::Literal> =
+        params[..n0].iter().map(clone_lit).collect();
+    s0_in.push(clone_lit(&tok));
+    let acts = eng.exec("stage0_fwd", &s0_in).unwrap();
+    assert_eq!(acts.len(), 1);
+
+    // stage1 grad -> (*g_p1, g_acts, loss).
+    let mut s1_in: Vec<xla::Literal> =
+        params[n0..].iter().map(clone_lit).collect();
+    s1_in.push(clone_lit(&acts[0]));
+    s1_in.push(clone_lit(&tgt));
+    let s1_out = eng.exec("stage1_grad", &s1_in).unwrap();
+    assert_eq!(s1_out.len(), (n - n0) + 2);
+    let loss = Engine::scalar_f32(s1_out.last().unwrap()).unwrap();
+    let expect = (tm.vocab as f32).ln();
+    assert!((loss - expect).abs() < 1.5, "pipeline loss {loss}");
+
+    // stage0 grad with upstream g_acts -> g_p0.
+    let g_acts = &s1_out[s1_out.len() - 2];
+    let mut s0g_in: Vec<xla::Literal> =
+        params[..n0].iter().map(clone_lit).collect();
+    s0g_in.push(clone_lit(&tok));
+    s0g_in.push(clone_lit(g_acts));
+    let g_p0 = eng.exec("stage0_grad", &s0g_in).unwrap();
+    assert_eq!(g_p0.len(), n0);
+    for (i, g) in g_p0.iter().enumerate() {
+        let v = Engine::to_f32(g).unwrap();
+        assert!(v.iter().all(|x| x.is_finite()), "g_p0[{i}] not finite");
+    }
+    // Grad shapes must mirror param shapes.
+    for (g, spec) in g_p0.iter().zip(&tm.param_specs[..n0]) {
+        let dims: Vec<usize> = g
+            .array_shape()
+            .unwrap()
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        assert_eq!(&dims, &spec.shape);
+    }
+}
+
+#[test]
+fn lstm_train_step_descends() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eng = Engine::load(&dir, &["lstm_train_step"]).unwrap();
+    let Some(lm) = eng.meta.lstm.clone() else {
+        eprintln!("skipping: artifacts built with --skip-lstm");
+        return;
+    };
+    let n = lm.param_specs.len();
+    let mut params = eng.meta.load_init_params(&lm).unwrap();
+    let mut stream = hybridpar::data::TokenStream::new(lm.vocab, 8, 11);
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let (tok, tgt) = stream.next_batch(lm.batch, lm.seq_len);
+        let mut inputs: Vec<xla::Literal> =
+            params.iter().map(clone_lit).collect();
+        inputs
+            .push(Engine::i32_tensor(&tok, &[lm.batch, lm.seq_len]).unwrap());
+        inputs
+            .push(Engine::i32_tensor(&tgt, &[lm.batch, lm.seq_len]).unwrap());
+        inputs.push(Engine::f32_scalar(0.5));
+        let outs = eng.exec("lstm_train_step", &inputs).unwrap();
+        losses.push(Engine::scalar_f32(&outs[n]).unwrap());
+        params = outs.into_iter().take(n).collect();
+    }
+    assert!(losses.last().unwrap() < losses.first().unwrap(),
+            "losses {losses:?} should descend");
+}
+
+#[test]
+fn exec_rejects_wrong_arity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let eng = Engine::load(&dir, &["loss_eval"]).unwrap();
+    assert!(eng.exec("loss_eval", &[]).is_err());
+    assert!(eng.exec("nonexistent", &[]).is_err());
+}

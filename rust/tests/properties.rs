@@ -1,0 +1,308 @@
+//! Property-based tests over the pure-rust substrates (in-repo `prop`
+//! harness — proptest is unavailable offline).  Each property runs dozens
+//! of generated cases; failures print a replayable case seed.
+
+use hybridpar::cluster::{dgx1, multi_node};
+use hybridpar::collective::ring_allreduce;
+use hybridpar::dfg::Dfg;
+use hybridpar::milp::{solve_lp, solve_milp, BnbConfig, LpOutcome,
+                      MilpOutcome, Problem};
+use hybridpar::parallel::{eq6_consistent, NetworkModel, ScalingEfficiency};
+use hybridpar::pipeline;
+use hybridpar::placer;
+use hybridpar::prop::{run_cases, Gen};
+use hybridpar::sim::{simulate, SimConfig};
+use hybridpar::statistical::EpochModel;
+use hybridpar::util::json::Json;
+
+/// Random DAG with edges only forward in index order.
+fn random_dag(g: &mut Gen, max_ops: usize) -> (Dfg, Vec<f64>) {
+    let n = g.usize_in(2, max_ops);
+    let mut dfg = Dfg::new("prop");
+    let mut times = Vec::new();
+    for i in 0..n {
+        dfg.add_op(&format!("op{i}"), 1.0, g.f64_in(1e3, 1e7), 1e6);
+        times.push(g.f64_in(0.001, 1.0));
+    }
+    for b in 1..n {
+        // Each op gets >= 1 parent: keeps the graph connected.
+        let a = g.usize_in(0, b - 1);
+        dfg.add_edge(a, b);
+        if g.bool() && b >= 2 {
+            let a2 = g.usize_in(0, b - 1);
+            if a2 != a {
+                dfg.add_edge(a2, b);
+            }
+        }
+    }
+    (dfg, times)
+}
+
+// ==========================================================================
+
+#[test]
+fn prop_ring_allreduce_equals_sum() {
+    run_cases(40, 0xA11, |g| {
+        let n = g.usize_in(2, 8);
+        let len = g.usize_in(1, 400);
+        let hw = multi_node(2, 4);
+        let devs: Vec<usize> =
+            hw.devices().into_iter().cycle().take(n).collect();
+        let mut bufs: Vec<Vec<f32>> =
+            (0..n).map(|_| g.vec_f32(len, 2.0)).collect();
+        let mut want = vec![0.0f64; len];
+        for b in &bufs {
+            for (i, &v) in b.iter().enumerate() {
+                want[i] += v as f64;
+            }
+        }
+        let r = ring_allreduce(&mut bufs, &hw, &devs).unwrap();
+        assert!(r.sim_time >= 0.0);
+        for b in &bufs {
+            for (i, &v) in b.iter().enumerate() {
+                let w = want[i];
+                assert!((v as f64 - w).abs() < 1e-3 * w.abs().max(1.0),
+                        "idx {i}: {v} vs {w}");
+            }
+        }
+        // All ranks bit-identical.
+        for b in &bufs[1..] {
+            assert_eq!(b, &bufs[0]);
+        }
+    });
+}
+
+#[test]
+fn prop_simplex_solution_is_feasible_and_not_worse_than_vertices() {
+    run_cases(60, 0x51f, |g| {
+        // Random bounded maximisation: feasible by construction (0 in box).
+        let nv = g.usize_in(1, 5);
+        let mut p = Problem::maximize();
+        for i in 0..nv {
+            let hi = g.f64_in(0.5, 10.0);
+            let obj = g.f64_in(-3.0, 5.0);
+            p.add_var(&format!("x{i}"), 0.0, hi, obj);
+        }
+        for _ in 0..g.usize_in(0, 4) {
+            let coeffs: Vec<(usize, f64)> =
+                (0..nv).map(|j| (j, g.f64_in(0.0, 2.0))).collect();
+            p.add_le(&coeffs, g.f64_in(0.5, 12.0));
+        }
+        match solve_lp(&p).unwrap() {
+            LpOutcome::Optimal { obj, x } => {
+                assert!(p.is_feasible(&x, 1e-5), "infeasible LP solution");
+                // Optimal must be >= objective at origin (=0, feasible).
+                assert!(obj >= -1e-7, "obj {obj} worse than origin");
+            }
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_bnb_integer_solution_feasible_and_bounded_by_lp() {
+    run_cases(40, 0xB4B, |g| {
+        let nv = g.usize_in(1, 6);
+        let mut p = Problem::maximize();
+        for i in 0..nv {
+            p.add_binary(&format!("b{i}"), g.f64_in(0.1, 9.0));
+        }
+        let coeffs: Vec<(usize, f64)> =
+            (0..nv).map(|j| (j, g.f64_in(0.2, 3.0))).collect();
+        p.add_le(&coeffs, g.f64_in(0.5, 6.0));
+        let lp = match solve_lp(&p).unwrap() {
+            LpOutcome::Optimal { obj, .. } => obj,
+            other => panic!("{other:?}"),
+        };
+        match solve_milp(&p, BnbConfig::default(), None).unwrap() {
+            MilpOutcome::Optimal { obj, x } => {
+                assert!(p.is_feasible(&x, 1e-6));
+                assert!(obj <= lp + 1e-6,
+                        "MILP {obj} beats LP relaxation {lp}");
+            }
+            MilpOutcome::Infeasible => {} // possible when rhs < min coeff
+            other => panic!("{other:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_sim_makespan_bounds() {
+    run_cases(40, 0x5EED, |g| {
+        let (dfg, times) = random_dag(g, 12);
+        let hw = dgx1(g.usize_in(1, 4));
+        let devs = hw.devices();
+        let placement: Vec<usize> = (0..dfg.n_ops())
+            .map(|_| devs[g.usize_in(0, devs.len() - 1)])
+            .collect();
+        let r = simulate(&dfg, &hw, &placement, &times,
+                         SimConfig::ideal()).unwrap();
+        let cp = dfg.critical_path(&times).unwrap();
+        let serial: f64 = times.iter().sum();
+        // Makespan can exceed serial when communication is on the critical
+        // path, but never beats the critical path.
+        assert!(r.makespan >= cp - 1e-9,
+                "makespan {} below critical path {cp}", r.makespan);
+        // With everything on one device there is no comm: equals serial.
+        let single = vec![devs[0]; dfg.n_ops()];
+        let r1 = simulate(&dfg, &hw, &single, &times,
+                          SimConfig::ideal()).unwrap();
+        assert!((r1.makespan - serial).abs() < 1e-9);
+        // Schedule legality.
+        for e in &dfg.edges {
+            assert!(r.op_start[e.dst] >= r.op_finish[e.src] - 1e-9);
+        }
+        // Contention simulation stays schedule-legal and critical-path
+        // bounded.  (It is NOT always slower than the ideal sim: delayed
+        // transfers can reorder the greedy dispatch into a better
+        // schedule — the classic Graham scheduling anomaly.)
+        let rc = simulate(&dfg, &hw, &placement, &times,
+                          SimConfig::default()).unwrap();
+        assert!(rc.makespan >= cp - 1e-9);
+        for e in &dfg.edges {
+            assert!(rc.op_start[e.dst] >= rc.op_finish[e.src] - 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_placer_output_always_valid_and_beats_single_device() {
+    run_cases(15, 0x9EAC, |g| {
+        let (dfg, times) = random_dag(g, 9);
+        let hw = dgx1(2);
+        let opts = placer::PlacerOptions::default();
+        let p = placer::place(&dfg, &hw, &times, &opts).unwrap();
+        placer::validate_placement(&dfg, &hw, &p.assignment).unwrap();
+        let serial: f64 = times.iter().sum();
+        // The ILP can always fall back to one device: never worse than
+        // serial (+ tolerance).
+        assert!(p.predicted_time <= serial + 1e-6,
+                "ILP {} worse than serial {serial}", p.predicted_time);
+        // And never better than the critical path.
+        let cp = dfg.critical_path(&times).unwrap();
+        assert!(p.predicted_time >= cp - 1e-6,
+                "ILP {} beats critical path {cp}", p.predicted_time);
+        // Heuristic is also valid and no better than ILP (up to the
+        // decomposition's boundary pinning tolerance).
+        let h = placer::place_heuristic(&dfg, &hw, &times, 2).unwrap();
+        placer::validate_placement(&dfg, &hw, &h.assignment).unwrap();
+        assert!(p.predicted_time <= h.predicted_time * 1.05 + 1e-9,
+                "ILP {} much worse than heuristic {}", p.predicted_time,
+                h.predicted_time);
+    });
+}
+
+#[test]
+fn prop_partition_chain_is_optimal_contiguous() {
+    run_cases(40, 0xC41, |g| {
+        // Brute-force check on small chains.
+        let n = g.usize_in(2, 8);
+        let mut dfg = Dfg::new("chain");
+        let mut times = Vec::new();
+        let mut prev = None;
+        for i in 0..n {
+            let op = dfg.add_op(&format!("o{i}"), 1.0, 1e3, 1.0);
+            times.push(g.f64_in(0.01, 1.0));
+            if let Some(p) = prev {
+                dfg.add_edge(p, op);
+            }
+            prev = Some(op);
+        }
+        let stages = g.usize_in(1, n.min(4));
+        let part = pipeline::partition_chain(&dfg, &times, stages).unwrap();
+        let got = part.stage_times.iter().cloned().fold(0.0, f64::max);
+        // Brute force all contiguous partitions.
+        fn best(times: &[f64], stages: usize) -> f64 {
+            if stages == 1 {
+                return times.iter().sum();
+            }
+            let mut b = f64::INFINITY;
+            for cut in 1..times.len() - stages + 2 {
+                let head: f64 = times[..cut].iter().sum();
+                let rest = best(&times[cut..], stages - 1);
+                b = b.min(head.max(rest));
+            }
+            b
+        }
+        let want = best(&times, stages);
+        assert!((got - want).abs() < 1e-9,
+                "DP partition {got} vs brute force {want}");
+    });
+}
+
+#[test]
+fn prop_eq6_crossover_consistency() {
+    run_cases(60, 0xE96, |g| {
+        // Random epoch curves (monotone non-decreasing past b0) and random
+        // MP speedups must satisfy Eq. 6 <=> hybrid-beats-DP.
+        let mut pts = Vec::new();
+        let mut b = 32.0;
+        let mut e = g.f64_in(2.0, 10.0);
+        for _ in 0..g.usize_in(3, 6) {
+            pts.push((b, e));
+            b *= 2.0_f64.powi(g.usize_in(1, 3) as i32);
+            e *= g.f64_in(1.0, 2.5);
+        }
+        let net = NetworkModel {
+            name: "prop".into(),
+            epochs: EpochModel::from_points("prop", pts).unwrap(),
+            mini_batch: 32,
+            se: ScalingEfficiency::Perfect,
+            mp_speedups: vec![(2, g.f64_in(1.0, 2.0))],
+        };
+        for n in [1usize, 2, 4, 8, 16, 32, 64] {
+            assert!(eq6_consistent(&net, n, 2).unwrap(),
+                    "Eq.6 inconsistent at n={n}");
+        }
+    });
+}
+
+#[test]
+fn prop_epoch_model_monotone_interpolation() {
+    run_cases(50, 0xE70C, |g| {
+        let mut pts = Vec::new();
+        let mut b = g.f64_in(1.0, 64.0);
+        let mut e = g.f64_in(1.0, 10.0);
+        for _ in 0..g.usize_in(2, 6) {
+            pts.push((b, e));
+            b *= g.f64_in(1.5, 4.0);
+            e *= g.f64_in(1.0, 3.0); // non-decreasing
+        }
+        let m = EpochModel::from_points("prop", pts.clone()).unwrap();
+        // Interpolated values between consecutive points stay within them.
+        for w in pts.windows(2) {
+            let mid = (w[0].0 * w[1].0).sqrt();
+            let e_mid = m.epochs(mid).unwrap();
+            assert!(e_mid >= w[0].1 - 1e-9 && e_mid <= w[1].1 + 1e-9,
+                    "interpolation escapes bracket");
+        }
+    });
+}
+
+#[test]
+fn prop_json_round_trip() {
+    run_cases(60, 0x150a, |g| {
+        fn gen_json(g: &mut Gen, depth: usize) -> Json {
+            match if depth == 0 { 0 } else { g.usize_in(0, 5) } {
+                0 => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+                1 => Json::Bool(g.bool()),
+                2 => Json::Null,
+                3 => Json::Str(format!("s{}-\"q\"\n", g.usize_in(0, 999))),
+                4 => Json::Arr((0..g.usize_in(0, 4))
+                    .map(|_| gen_json(g, depth - 1))
+                    .collect()),
+                _ => {
+                    let mut m = std::collections::BTreeMap::new();
+                    for i in 0..g.usize_in(0, 4) {
+                        m.insert(format!("k{i}"), gen_json(g, depth - 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let v = gen_json(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v, "round trip failed for {text}");
+    });
+}
