@@ -1,6 +1,8 @@
-//! Fig. 7 reproduction: DLPlacer's 2-GPU placement for Inception-V3.
+//! Fig. 7 reproduction: DLPlacer's 2-GPU placement for Inception-V3,
+//! obtained through the planner's cost-model API.
 //!
-//! Runs the ILP placer on the analytic Inception-V3 DFG, prints the
+//! Resolves the model and topology from the planner registries, asks the
+//! analytical [`CostModel`] for the M-way placed estimate, prints the
 //! per-device operation assignment (the textual form of the paper's
 //! colored graph), writes the colored DOT file, and cross-checks the
 //! ILP-predicted step time against the discrete-event "silicon" simulator
@@ -10,55 +12,54 @@
 
 use std::path::PathBuf;
 
-use hybridpar::cluster;
-use hybridpar::models;
 use hybridpar::placer;
+use hybridpar::planner::{AnalyticalCost, CostModel, MpMechanism, Planner};
 use hybridpar::sim;
 use hybridpar::util::cli::Args;
 use hybridpar::util::fmt_secs;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(1, &[]);
-    let nd = args.get_usize("devices", 2)?;
-    let prof = models::inception_v3(32);
-    let hw = cluster::dgx1(nd.clamp(1, 4));
-    let times = prof.dfg.op_times(7e12, 15e-6);
+    let nd = args.get_usize("devices", 2)?.clamp(2, 4);
+    let planner = Planner::new();
+    let prof = planner.models().build("inception-v3", None)?;
+    let hw = planner.topologies().build("dgx1", nd)?;
+    let cost = AnalyticalCost::default();
+    let times = prof.dfg.op_times(cost.flops_per_sec,
+                                  cost.launch_overhead_s);
     let serial: f64 = times.iter().sum();
 
     println!("Inception-V3: {} ops, serial step {} (7 TFLOP/s sustained)",
              prof.dfg.n_ops(), fmt_secs(serial));
 
     let t0 = std::time::Instant::now();
-    let ilp = placer::place(&prof.dfg, &hw, &times,
-                            &placer::PlacerOptions {
-                                max_devices: nd,
-                                ..Default::default()
-                            })?;
+    let est = cost.mp_step_time(&prof, &hw, nd)?;
     let solve_t = t0.elapsed();
-    placer::validate_placement(&prof.dfg, &hw, &ilp.assignment)?;
+    anyhow::ensure!(est.mechanism == MpMechanism::Placed,
+                    "branchy graph must be placed, got {:?}", est.mechanism);
+    let assignment = est.placement.clone().unwrap();
+    placer::validate_placement(&prof.dfg, &hw, &assignment)?;
 
     let heur = placer::place_heuristic(&prof.dfg, &hw, &times, nd)?;
-    let silicon = sim::simulate(&prof.dfg, &hw, &ilp.assignment, &times,
+    let silicon = sim::simulate(&prof.dfg, &hw, &assignment, &times,
                                 sim::SimConfig::default())?;
 
     println!("\nDLPlacer solve time: {:?} (paper: 11-18 min on 18-core \
               Xeon for the TF op-level graph)", solve_t);
-    println!("ILP predicted step : {}  (speedup {:.3}x, optimal={})",
-             fmt_secs(ilp.predicted_time), serial / ilp.predicted_time,
-             ilp.optimal);
+    println!("ILP predicted step : {}  (speedup {:.3}x)",
+             fmt_secs(est.step_time_s), serial / est.step_time_s);
     println!("heuristic (manual) : {}  (speedup {:.3}x)",
              fmt_secs(heur.predicted_time), serial / heur.predicted_time);
     println!("silicon (DES) step : {}  (speedup {:.3}x)",
              fmt_secs(silicon.makespan), serial / silicon.makespan);
-    let gap = (silicon.makespan - ilp.predicted_time).abs()
+    let gap = (silicon.makespan - est.step_time_s).abs()
         / silicon.makespan
         * 100.0;
     println!("prediction gap     : {gap:.1}% (paper: within 6%)");
 
     println!("\nplacement (Fig. 7 textual form):");
     for d in hw.devices().into_iter().take(nd) {
-        let ops: Vec<&str> = ilp
-            .assignment
+        let ops: Vec<&str> = assignment
             .iter()
             .enumerate()
             .filter(|&(_, &a)| a == d)
@@ -73,7 +74,7 @@ fn main() -> anyhow::Result<()> {
     let out = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("out/inception_placement.dot");
     std::fs::create_dir_all(out.parent().unwrap())?;
-    std::fs::write(&out, prof.dfg.to_dot(Some(&ilp.assignment)))?;
+    std::fs::write(&out, prof.dfg.to_dot(Some(&assignment)))?;
     println!("\nwrote {} (render with graphviz)", out.display());
     anyhow::ensure!(gap < 15.0, "prediction gap too large");
     println!("placer_inception OK");

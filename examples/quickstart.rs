@@ -1,41 +1,25 @@
-//! Quickstart: load the AOT artifacts, train the transformer LM for a few
-//! steps on one simulated device, and print the loss curve.
+//! Quickstart: ask the planner which parallelization strategy to run.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
-use std::path::PathBuf;
-
-use hybridpar::cluster;
-use hybridpar::coordinator::{Coordinator, Strategy, TrainConfig};
-use hybridpar::data::Corpus;
+use hybridpar::planner::{PlanRequest, Planner};
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let coord = Coordinator::new(&artifacts, cluster::dgx1(1))?;
-    let mut corpus = Corpus::new(coord.engine.meta.transformer.vocab,
-                                 1_000_000, 42);
+    let planner = Planner::new(); // built-in models/topologies, Eq. 1-6 costs
+    let plan = planner
+        .plan(&PlanRequest::new("inception-v3", "dgx1").devices(8))?;
 
-    let cfg = TrainConfig {
-        strategy: Strategy::Single,
-        lr: 0.2,
-        steps: 30,
-        log_every: 5,
-        ..Default::default()
-    };
-    println!("training transformer LM ({} params) for {} steps...",
-             coord.engine.meta.transformer.n_params_total, cfg.steps);
-    let report = coord.train(&mut corpus, &cfg)?;
-    println!("\nloss curve (every 5 steps):");
-    for r in report.curve.records.iter().step_by(5) {
-        println!("  step {:>3}  loss {:.4}", r.step, r.loss);
+    println!("{}", plan.summary());
+    println!("speedup curve (devices: DP-only vs best hybrid):");
+    for p in &plan.curve {
+        println!("  {:>4}: {:>8} {:>8}",
+                 p.devices,
+                 p.dp.map(|v| format!("{v:.2}")).unwrap_or("-".into()),
+                 p.hybrid.map(|v| format!("{v:.2}")).unwrap_or("-".into()));
     }
-    println!("\nfinal loss: {:.4} (started near ln(vocab) = {:.2})",
-             report.final_loss,
-             (coord.engine.meta.transformer.vocab as f32).ln());
-    println!("mean step wall: {:.1} ms", report.mean_step_wall_s * 1e3);
-    anyhow::ensure!(report.final_loss
-                    < (coord.engine.meta.transformer.vocab as f32).ln(),
-                    "loss should decrease from the uniform baseline");
+    println!("\nplan as JSON:\n{}", plan.to_json());
+
+    anyhow::ensure!(plan.predicted_speedup > 1.0, "plan must beat 1 GPU");
     println!("quickstart OK");
     Ok(())
 }

@@ -1,90 +1,67 @@
-//! Strategy advisor: the paper's §3.4 decision procedure as a tool.
+//! Strategy advisor: the paper's §3.4 decision procedure as a tool —
+//! now one [`Planner`] query per network.
 //!
-//! For each evaluation network it derives SU^2 from the actual machinery
-//! (DLPlacer for Inception's branchy DFG, the pipeline scheduler for the
-//! RNN chains), then sweeps device counts and reports which strategy —
+//! For each evaluation network the planner derives SU^2 from the actual
+//! machinery (DLPlacer for Inception's branchy DFG, the pipeline scheduler
+//! for the RNN chains), sweeps device counts and reports which strategy —
 //! DP-only or hybrid — minimises projected training time, including the
 //! Eq. 6 crossover point.
 //!
 //!     cargo run --release --example strategy_advisor [-- --real-se]
 
-use hybridpar::cluster;
-use hybridpar::models::{self, ModelProfile};
-use hybridpar::parallel::{NetworkModel, ScalingEfficiency};
-use hybridpar::pipeline;
-use hybridpar::placer;
+use hybridpar::planner::{AlphaBetaCost, AnalyticalCost, CostModel,
+                         PlanRequest, Planner};
 use hybridpar::util::cli::Args;
-
-fn su2_for(prof: &ModelProfile, times: &[f64]) -> anyhow::Result<f64> {
-    if prof.name.starts_with("inception") {
-        let hw = cluster::dgx1_mem(2, cluster::V100_32G_MEM);
-        let p = placer::place(&prof.dfg, &hw, times,
-                              &placer::PlacerOptions::default())?;
-        Ok(times.iter().sum::<f64>() / p.predicted_time)
-    } else {
-        let cfg = pipeline::PipeConfig {
-            mini_batch: prof.mini_batch,
-            saturation_batch: prof.pipe_saturation,
-            ..Default::default()
-        };
-        Ok(pipeline::pipeline_speedup(&prof.dfg, times, 2, 16, cfg)?.speedup)
-    }
-}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(1, &["real-se"]);
     let real_se = args.has_flag("real-se");
-    for prof in [models::inception_v3(32), models::gnmt(128),
-                 models::biglstm(64)] {
-        let times = prof.dfg.op_times(7e12, 15e-6);
-        let step: f64 = times.iter().sum();
-        let su2 = su2_for(&prof, &times)?;
-        let se = if real_se {
-            ScalingEfficiency::RingAllReduce {
-                step_compute_s: step,
-                grad_bytes: prof.grad_bytes,
-                alpha: 5e-6,
-                beta_bw: 12e9,
-            }
-        } else {
-            ScalingEfficiency::Perfect
-        };
-        let net = NetworkModel {
-            name: prof.name.clone(),
-            epochs: prof.epochs.clone(),
-            mini_batch: prof.mini_batch,
-            se,
-            mp_speedups: vec![(2, su2)],
-        };
-        println!("\n================ {} ================", net.name);
-        println!("MP strategy: {}  SU^2 = {:.3}  (SE model: {})",
-                 prof.mp_strategy, su2,
+    let cost: Box<dyn CostModel> = if real_se {
+        Box::new(AlphaBetaCost::default())
+    } else {
+        Box::new(AnalyticalCost::default())
+    };
+    let planner = Planner::with_cost(cost);
+
+    for model in ["inception-v3", "gnmt", "biglstm"] {
+        let plan = planner.plan(
+            &PlanRequest::new(model, "dgx1").devices(256).curve_to(256))?;
+        let su2 = plan
+            .scorecard
+            .iter()
+            .find(|c| c.mp_degree == 2)
+            .map(|c| c.su_m)
+            .unwrap_or(1.0);
+        println!("\n================ {} ================", plan.model);
+        println!("mechanism: {}  SU^2 = {:.3}  (SE model: {})",
+                 plan.mechanism, su2,
                  if real_se { "ring α-β" } else { "perfect (paper §4.3)" });
         println!("{:>8} {:>10} {:>12} {:>16}", "devices", "DP-only",
                  "hybrid M=2", "recommendation");
-        let mut n = 2usize;
-        while n <= 256 {
-            let dp = net.su_dp(n);
-            let hy = net.su_hybrid(n, 2);
-            let rec = match (dp, hy) {
-                (Some(d), Some(h)) if h > d => format!("HYBRID (+{:.1}%)",
-                                                       (h / d - 1.0) * 100.0),
+        for p in plan.curve.iter().filter(|p| p.devices >= 2) {
+            let rec = match (p.dp, p.hybrid) {
+                (Some(d), Some(h)) if h > d => {
+                    format!("HYBRID (+{:.1}%)", (h / d - 1.0) * 100.0)
+                }
                 (Some(_), _) => "DP-only".to_string(),
                 (None, Some(_)) => "HYBRID (DP diverges)".to_string(),
                 (None, None) => "neither converges".to_string(),
             };
             println!("{:>8} {:>10} {:>12} {:>16}",
-                     n,
-                     dp.map(|v| format!("{v:.2}"))
+                     p.devices,
+                     p.dp.map(|v| format!("{v:.2}"))
                          .unwrap_or("diverged".into()),
-                     hy.map(|v| format!("{v:.2}")).unwrap_or("-".into()),
+                     p.hybrid.map(|v| format!("{v:.2}"))
+                         .unwrap_or("-".into()),
                      rec);
-            n *= 2;
         }
-        match net.crossover_point(2, 1024) {
+        match plan.crossover_devices {
             Some(x) => println!("Eq. 6 crossover: {x} devices"),
-            None => println!("no crossover up to 1024 devices"),
+            None => println!("no crossover up to 256 devices"),
         }
+        println!("planner's pick for a 256-GPU budget: {:?} \
+                  ({} devices used, {:.2}x vs 1 GPU)",
+                 plan.strategy, plan.devices_used, plan.predicted_speedup);
     }
     println!("\nstrategy_advisor OK");
     Ok(())

@@ -1,90 +1,74 @@
 //! Fig. 5 reproduction: projected speedup of hybrid MP-DP vs DP-only for
-//! Inception-V3 (5a), GNMT (5b) and BigLSTM (5c).
+//! Inception-V3 (5a), GNMT (5b) and BigLSTM (5c) — driven entirely through
+//! the unified [`Planner`] API.
 //!
 //! Headline numbers from the paper: the hybrid strategy beats what DP
 //! alone can achieve at scale by **≥26.5%** (Inception, 256 GPUs), **8%**
 //! (GNMT, 256 GPUs) and **22%** (BigLSTM, vs best DP at 16 GPUs).
 //!
 //! SU² values come from the same machinery as Table 1 (DLPlacer /
-//! pipeline); SE_N = 1 per the paper's conservative §4.3 assumption.
+//! pipeline) via the planner's analytical cost model; SE_N = 1 per the
+//! paper's conservative §4.3 assumption.
 
 use hybridpar::bench::{f2, Table};
-use hybridpar::cluster;
-use hybridpar::models::{self, ModelProfile};
-use hybridpar::parallel::{NetworkModel, ScalingEfficiency};
-use hybridpar::pipeline;
-use hybridpar::placer;
-
-fn su2(prof: &ModelProfile, times: &[f64]) -> f64 {
-    if prof.name.starts_with("inception") {
-        let hw = cluster::dgx1_mem(2, cluster::V100_32G_MEM);
-        let p = placer::place(&prof.dfg, &hw, times,
-                              &placer::PlacerOptions::default()).unwrap();
-        times.iter().sum::<f64>() / p.predicted_time
-    } else {
-        let cfg = pipeline::PipeConfig {
-            mini_batch: prof.mini_batch,
-            saturation_batch: prof.pipe_saturation,
-            ..Default::default()
-        };
-        pipeline::pipeline_speedup(&prof.dfg, times, 2, 16, cfg)
-            .unwrap()
-            .speedup
-    }
-}
+use hybridpar::planner::{PlanRequest, Planner};
 
 fn main() {
+    let planner = Planner::new(); // analytical costs: SE_N = 1
     // Mini-batches match the paper's §4.2 epoch-count methodology
     // (Inception 64/GPU, GNMT 128, BigLSTM 64) so the E(B) curves line up.
-    let profiles = [models::inception_v3(64), models::gnmt(128),
-                    models::biglstm(64)];
+    let queries = [("inception-v3", 64usize), ("gnmt", 128),
+                   ("biglstm", 64)];
     let mut headlines = Vec::new();
 
-    for prof in &profiles {
-        let times = prof.dfg.op_times(7e12, 15e-6);
-        let su_2 = su2(prof, &times);
-        let net = NetworkModel {
-            name: prof.name.clone(),
-            epochs: prof.epochs.clone(),
-            mini_batch: prof.mini_batch,
-            se: ScalingEfficiency::Perfect,
-            mp_speedups: vec![(2, su_2)],
-        };
+    for (model, batch) in queries {
+        let plan = planner
+            .plan(&PlanRequest::new(model, "dgx1")
+                .devices(256)
+                .batch(batch)
+                .curve_to(256))
+            .unwrap();
+        let su_2 = plan
+            .scorecard
+            .iter()
+            .find(|c| c.mp_degree == 2)
+            .map(|c| c.su_m)
+            .unwrap();
         let mut table =
             Table::new(&["devices", "DP-only", "hybrid M=2", "hybrid/DP"]);
         let mut best_dp: f64 = 0.0;
         let mut best_hybrid: f64 = 0.0;
-        let mut n = 2usize;
-        while n <= 256 {
-            let dp = net.su_dp(n);
-            let hy = net.su_hybrid(n, 2);
-            if let Some(d) = dp {
+        for p in plan.curve.iter().filter(|p| p.devices >= 2) {
+            if let Some(d) = p.dp {
                 best_dp = best_dp.max(d);
             }
-            if let Some(h) = hy {
+            if let Some(h) = p.hybrid {
                 best_hybrid = best_hybrid.max(h);
             }
-            let ratio = match (hy, dp) {
+            let ratio = match (p.hybrid, p.dp) {
                 (Some(h), Some(d)) => Some(h / d),
                 _ => None,
             };
             table.row(&[
-                n.to_string(),
-                dp.map(f2).unwrap_or("diverged".into()),
-                hy.map(f2).unwrap_or("-".into()),
+                p.devices.to_string(),
+                p.dp.map(f2).unwrap_or("diverged".into()),
+                p.hybrid.map(f2).unwrap_or("-".into()),
                 ratio.map(f2).unwrap_or("-".into()),
             ]);
-            n *= 2;
         }
-        table.print(&format!("Fig. 5 — {} (SU^2 = {:.3})", net.name, su_2));
+        table.print(&format!("Fig. 5 — {} (SU^2 = {:.3})", plan.model,
+                             su_2));
 
         // Headline, as the paper frames it: the best the hybrid achieves
         // at scale vs the best DP alone can achieve at ANY scale
         // ("compared to what DP alone can achieve at scale").
         let gain = (best_hybrid / best_dp - 1.0) * 100.0;
         println!("  best hybrid = {best_hybrid:.2}, best DP-only = \
-{best_dp:.2} => hybrid gain {gain:.1}%\n");
-        headlines.push((net.name.clone(), gain));
+{best_dp:.2} => hybrid gain {gain:.1}%");
+        println!("  planner pick at 256-GPU budget: {:?} \
+                  ({} devices used)\n",
+                 plan.strategy, plan.devices_used);
+        headlines.push((plan.model.clone(), gain));
     }
 
     // Paper headline shape: Inception ≥ 26.5%, GNMT ≥ 8%, BigLSTM ≥ 22%

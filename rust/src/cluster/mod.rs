@@ -13,6 +13,9 @@ use anyhow::{bail, Result};
 pub enum LinkKind {
     /// NVLink 2.0 per-direction (DGX-1 era): 25 GB/s, ~1.3 µs.
     NvLink,
+    /// GPU ↔ NVSwitch fabric port (DGX-2 era): all six NVLink 2.0 bricks
+    /// ganged through the switch, 150 GB/s per direction, ~1 µs.
+    NvSwitch,
     /// PCIe 3.0 x16: 12 GB/s effective, ~2 µs.
     Pcie,
     /// 100 Gb InfiniBand inter-node: 12 GB/s, ~2.5 µs.
@@ -25,6 +28,7 @@ impl LinkKind {
     pub fn bandwidth(self) -> f64 {
         match self {
             LinkKind::NvLink => 25e9,
+            LinkKind::NvSwitch => 150e9,
             LinkKind::Pcie => 12e9,
             LinkKind::Infiniband => 12e9,
             LinkKind::Custom => 10e9,
@@ -34,6 +38,7 @@ impl LinkKind {
     pub fn latency(self) -> f64 {
         match self {
             LinkKind::NvLink => 1.3e-6,
+            LinkKind::NvSwitch => 1.0e-6,
             LinkKind::Pcie => 2.0e-6,
             LinkKind::Infiniband => 2.5e-6,
             LinkKind::Custom => 2.0e-6,
@@ -251,6 +256,25 @@ pub fn dgx1_mem(n_gpus: usize, mem: f64) -> HwGraph {
     g
 }
 
+/// DGX-2-style single node: up to 16 V100-32GB GPUs, every GPU attached to
+/// a central NVSwitch fabric at full NVLink aggregate bandwidth — uniform
+/// 2-hop any-to-any connectivity, no cube-mesh asymmetry.  A scenario the
+/// paper did not evaluate: the flat fabric removes the bisection bottleneck
+/// that penalises >4-way MP groups on the DGX-1.
+pub fn dgx2(n_gpus: usize) -> HwGraph {
+    let n = n_gpus.clamp(1, 16);
+    let mut g = HwGraph::new(&format!("dgx2-{}gpu", n));
+    let ids: Vec<usize> = (0..n)
+        .map(|i| g.add_compute(&format!("gpu{}", i), V100_FLOPS,
+                               V100_32G_MEM))
+        .collect();
+    let switch = g.add_router("nvswitch");
+    for &gpu in &ids {
+        g.add_link(gpu, switch, LinkKind::NvSwitch);
+    }
+    g
+}
+
 /// Multi-node cluster: `nodes` DGX boxes of `gpus_per_node`, joined through
 /// per-node NICs and a single IB switch (the slower inter-node fabric the
 /// paper cites as the SE_N killer at scale).
@@ -304,6 +328,41 @@ mod tests {
         // Cross-quad non-paired GPUs need 2 hops.
         let (_, path) = g.route(0, 5, 1e6).unwrap();
         assert!(path.len() >= 2);
+    }
+
+    #[test]
+    fn dgx2_uniform_two_hop_fabric() {
+        let g = dgx2(16);
+        assert_eq!(g.n_devices(), 16);
+        assert_eq!(g.links.len(), 16, "one fabric port per GPU");
+        // Any-to-any: exactly 2 hops, identical cost for every pair.
+        let t01 = g.transfer_time(0, 1, 64e6);
+        for i in 0..16usize {
+            for j in 0..16usize {
+                if i != j {
+                    let t = g.transfer_time(i, j, 64e6);
+                    assert!((t - t01).abs() < 1e-12,
+                            "fabric must be uniform: {t} vs {t01}");
+                    let (_, path) = g.route(i, j, 64e6).unwrap();
+                    assert_eq!(path.len(), 2);
+                }
+            }
+        }
+        // Faster than the DGX-1 NVLink mesh for large transfers.
+        let d1 = dgx1(8);
+        assert!(t01 < d1.transfer_time(0, 1, 64e6));
+        // Ring all-reduce bottleneck is the fabric port, not a mesh link.
+        let bw = g.ring_bottleneck_bw(&g.devices());
+        assert!((bw - LinkKind::NvSwitch.bandwidth()).abs() < 1.0);
+    }
+
+    #[test]
+    fn dgx2_clamps_device_count() {
+        assert_eq!(dgx2(64).n_devices(), 16);
+        assert_eq!(dgx2(0).n_devices(), 1);
+        // 32 GB parts, as on the real machine.
+        let g = dgx2(2);
+        assert!((g.nodes[0].mem_capacity - V100_32G_MEM).abs() < 1.0);
     }
 
     #[test]

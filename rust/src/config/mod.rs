@@ -174,8 +174,38 @@ impl Toml {
     }
 }
 
+/// `[planner]` section: a strategy-search query the `plan` subcommand can
+/// run without CLI arguments.  Objective/cost stay strings here so the
+/// config layer does not depend on [`crate::planner`]; `plan` resolves
+/// them via `Objective::parse` / `cost_by_name`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlannerConfig {
+    pub model: String,
+    pub topology: String,
+    pub devices: usize,
+    /// Per-device mini-batch override (None = registry default).
+    pub batch: Option<usize>,
+    /// "time-to-converge" | "step-time".
+    pub objective: String,
+    /// "analytical" | "alpha-beta" | "simulator".
+    pub cost_model: String,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            model: "inception-v3".into(),
+            topology: "dgx1".into(),
+            devices: 8,
+            batch: None,
+            objective: "time-to-converge".into(),
+            cost_model: "analytical".into(),
+        }
+    }
+}
+
 /// Top-level run configuration (config file `[run]`, `[cluster]`,
-/// `[train]` sections).
+/// `[train]`, `[planner]` sections).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub artifacts_dir: String,
@@ -187,6 +217,8 @@ pub struct RunConfig {
     pub corpus_vocab: usize,
     pub epoch_tokens: u64,
     pub out_csv: Option<String>,
+    /// Present iff the config has a `[planner]` section.
+    pub planner: Option<PlannerConfig>,
 }
 
 impl Default for RunConfig {
@@ -200,6 +232,7 @@ impl Default for RunConfig {
             corpus_vocab: 512,
             epoch_tokens: 1_000_000,
             out_csv: None,
+            planner: None,
         }
     }
 }
@@ -229,6 +262,14 @@ impl RunConfig {
                 dp_workers: t.usize_or("train.dp_workers", 2),
                 microbatches: t.usize_or("train.microbatches", 2),
             },
+            "async" => Strategy::AsyncPs {
+                workers: t.usize_or("train.workers", 2),
+                staleness: t.usize_or("train.staleness", 2),
+            },
+            "local-sgd" => Strategy::LocalSgd {
+                workers: t.usize_or("train.workers", 2),
+                sync_every: t.usize_or("train.sync_every", 4),
+            },
             other => bail!("unknown strategy '{other}'"),
         };
         c.train.lr = t.f64_or("train.lr", 0.2) as f32;
@@ -237,6 +278,28 @@ impl RunConfig {
         c.train.log_every = t.usize_or("train.log_every", 10);
         if let Some(v) = t.get("train.target_loss") {
             c.train.target_loss = Some(v.as_f64()? as f32);
+        }
+        if t.values.keys().any(|k| k.starts_with("planner.")) {
+            let d = PlannerConfig::default();
+            let batch = match t.get("planner.batch") {
+                None => None,
+                Some(v) => {
+                    let b = v.as_i64()?;
+                    if b <= 0 {
+                        bail!("planner.batch must be a positive integer, \
+                               got {b}");
+                    }
+                    Some(b as usize)
+                }
+            };
+            c.planner = Some(PlannerConfig {
+                model: t.str_or("planner.model", &d.model),
+                topology: t.str_or("planner.topology", &d.topology),
+                devices: t.usize_or("planner.devices", d.devices),
+                batch,
+                objective: t.str_or("planner.objective", &d.objective),
+                cost_model: t.str_or("planner.cost", &d.cost_model),
+            });
         }
         Ok(c)
     }
@@ -307,6 +370,61 @@ sizes = [1, 2, 3]
     fn bad_strategy_rejected() {
         let t = Toml::parse("[train]\nstrategy = \"magic\"\n").unwrap();
         assert!(RunConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn alt_strategies_parse() {
+        let t = Toml::parse(
+            "[train]\nstrategy = \"async\"\nworkers = 3\nstaleness = 4\n")
+            .unwrap();
+        let c = RunConfig::from_toml(&t).unwrap();
+        assert_eq!(c.train.strategy,
+                   Strategy::AsyncPs { workers: 3, staleness: 4 });
+        let t = Toml::parse(
+            "[train]\nstrategy = \"local-sgd\"\nworkers = 4\n\
+             sync_every = 8\n")
+            .unwrap();
+        let c = RunConfig::from_toml(&t).unwrap();
+        assert_eq!(c.train.strategy,
+                   Strategy::LocalSgd { workers: 4, sync_every: 8 });
+    }
+
+    #[test]
+    fn planner_section_parses() {
+        let t = Toml::parse(
+            "[planner]\nmodel = \"gnmt\"\ntopology = \"dgx2\"\n\
+             devices = 16\nbatch = 64\nobjective = \"step-time\"\n\
+             cost = \"simulator\"\n")
+            .unwrap();
+        let c = RunConfig::from_toml(&t).unwrap();
+        let p = c.planner.unwrap();
+        assert_eq!(p.model, "gnmt");
+        assert_eq!(p.topology, "dgx2");
+        assert_eq!(p.devices, 16);
+        assert_eq!(p.batch, Some(64));
+        assert_eq!(p.objective, "step-time");
+        assert_eq!(p.cost_model, "simulator");
+    }
+
+    #[test]
+    fn planner_section_absent_by_default() {
+        let t = Toml::parse(DOC).unwrap();
+        assert!(RunConfig::from_toml(&t).unwrap().planner.is_none());
+        // A bare [planner] header with one key gets defaults for the rest.
+        let t = Toml::parse("[planner]\nmodel = \"biglstm\"\n").unwrap();
+        let p = RunConfig::from_toml(&t).unwrap().planner.unwrap();
+        assert_eq!(p.model, "biglstm");
+        assert_eq!(p.topology, "dgx1");
+        assert_eq!(p.cost_model, "analytical");
+    }
+
+    #[test]
+    fn planner_batch_rejects_nonpositive_and_nonint() {
+        for doc in ["[planner]\nbatch = -1\n", "[planner]\nbatch = 0\n",
+                    "[planner]\nbatch = \"64\"\n"] {
+            let t = Toml::parse(doc).unwrap();
+            assert!(RunConfig::from_toml(&t).is_err(), "{doc}");
+        }
     }
 
     #[test]

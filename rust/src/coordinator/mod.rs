@@ -16,7 +16,11 @@
 //!   k·N-way DP);
 //! * [`Strategy::Hybrid`]    — N DP workers, each a 2-stage pipeline
 //!   (`stage0_fwd` → `stage1_grad` → `stage0_grad`) over micro-batches,
-//!   then the same DP all-reduce across workers.
+//!   then the same DP all-reduce across workers;
+//! * [`Strategy::AsyncPs`]   — asynchronous parameter-server SGD with
+//!   bounded staleness (paper §7.3, implemented in [`alt`]);
+//! * [`Strategy::LocalSgd`]  — local SGD with periodic model averaging
+//!   (paper §7.3, implemented in [`alt`]).
 
 pub mod alt;
 
@@ -43,6 +47,12 @@ pub enum Strategy {
     /// `dp_workers`-way DP of 2-way pipeline-MP workers with
     /// `microbatches` micro-batches per mini-batch.
     Hybrid { dp_workers: usize, microbatches: usize },
+    /// Asynchronous parameter-server SGD (§7.3): `workers` push gradients
+    /// computed against snapshots up to `staleness` updates old.
+    AsyncPs { workers: usize, staleness: usize },
+    /// Local SGD with periodic model averaging (Crossbow-style, §7.3):
+    /// `workers` train independently, averaging every `sync_every` steps.
+    LocalSgd { workers: usize, sync_every: usize },
 }
 
 impl Strategy {
@@ -52,6 +62,8 @@ impl Strategy {
             Strategy::Single => 1,
             Strategy::DataParallel { workers, .. } => *workers,
             Strategy::Hybrid { dp_workers, .. } => dp_workers * 2,
+            Strategy::AsyncPs { workers, .. } => *workers,
+            Strategy::LocalSgd { workers, .. } => *workers,
         }
     }
 
@@ -66,6 +78,14 @@ impl Strategy {
             Strategy::Hybrid { dp_workers, microbatches } => {
                 microbatch * microbatches * dp_workers
             }
+            // Each async update applies a single worker's mini-batch
+            // gradient — the statistical batch size stays one mini-batch
+            // (the whole point of the paper's §7.3 critique).
+            Strategy::AsyncPs { .. } => engine_batch,
+            // Between averaging points each replica advances on its own
+            // mini-batch; one averaging round aggregates `workers`
+            // trajectories, so the effective batch is workers × batch.
+            Strategy::LocalSgd { workers, .. } => engine_batch * workers,
         }
     }
 }
@@ -140,6 +160,12 @@ impl Coordinator {
             }
             Strategy::Hybrid { dp_workers, microbatches } => {
                 self.train_hybrid(corpus, cfg, dp_workers, microbatches)
+            }
+            Strategy::AsyncPs { workers, staleness } => {
+                self.train_async_ps(corpus, cfg, workers, staleness)
+            }
+            Strategy::LocalSgd { workers, sync_every } => {
+                self.train_local_sgd(corpus, cfg, workers, sync_every)
             }
         }
     }
@@ -471,6 +497,10 @@ mod tests {
         assert_eq!(
             Strategy::Hybrid { dp_workers: 3, microbatches: 2 }.devices(),
             6);
+        assert_eq!(
+            Strategy::AsyncPs { workers: 4, staleness: 2 }.devices(), 4);
+        assert_eq!(
+            Strategy::LocalSgd { workers: 4, sync_every: 8 }.devices(), 4);
     }
 
     #[test]
@@ -479,6 +509,12 @@ mod tests {
         assert_eq!(dp.global_batch(8, 4), 128); // 8 * 4 * 4
         let hy = Strategy::Hybrid { dp_workers: 4, microbatches: 2 };
         assert_eq!(hy.global_batch(8, 4), 32); // 4 micro * 2 * 4 workers
+        // Async applies one mini-batch per update; local SGD aggregates
+        // `workers` independent trajectories per averaging round.
+        let ap = Strategy::AsyncPs { workers: 4, staleness: 2 };
+        assert_eq!(ap.global_batch(8, 4), 8);
+        let ls = Strategy::LocalSgd { workers: 4, sync_every: 8 };
+        assert_eq!(ls.global_batch(8, 4), 32);
     }
 
     #[test]

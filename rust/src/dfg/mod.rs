@@ -136,10 +136,6 @@ impl Dfg {
         let order = self.topo_order()?;
         let pred = self.predecessors();
         let mut finish = vec![0.0f64; self.ops.len()];
-        for &v in order.iter().rev() {
-            // order from topo_order is not reversed; recompute forward below
-            let _ = v;
-        }
         for &v in &order {
             let start = pred[v]
                 .iter()

@@ -21,6 +21,36 @@
 //! JAX/Pallas artifacts through the PJRT C API ([`runtime`]), exchanging
 //! gradients with an actual chunked ring all-reduce ([`collective`]) across
 //! simulated devices — python never runs on the training path.
+//!
+//! ## Planner API
+//!
+//! The decision procedure itself — "given this network and this device
+//! budget, which strategy minimises end-to-end training time?" — is exposed
+//! as one typed entry point, [`planner`]:
+//!
+//! ```no_run
+//! use hybridpar::planner::{PlanRequest, Planner};
+//!
+//! let planner = Planner::new(); // built-in registries, Eq. 1–6 costs
+//! let plan = planner
+//!     .plan(&PlanRequest::new("inception-v3", "dgx1").devices(8))
+//!     .unwrap();
+//! println!("run {:?} — {:.2}x projected over 1 GPU",
+//!          plan.strategy, plan.predicted_speedup);
+//! println!("{}", plan.to_json()); // full scorecard + speedup curve
+//! ```
+//!
+//! * Models and topologies resolve by name through
+//!   [`planner::ModelRegistry`] / [`planner::TopologyRegistry`] (the
+//!   paper's three networks plus the transformer LM; DGX-1, a 16-GPU
+//!   NVSwitch DGX-2, and IB multi-node).
+//! * Predictions are pluggable via [`planner::CostModel`]: the analytical
+//!   Eq. 1–6 model, the α-β ring model, or the discrete-event simulator —
+//!   swap one for another to cross-check a plan.
+//! * The returned [`planner::Plan`] carries the chosen
+//!   [`coordinator::Strategy`], predicted step time, epochs-to-converge,
+//!   the end-to-end speedup curve, the placement / pipeline partition, and
+//!   a per-candidate scorecard, all JSON-serialisable via [`util::json`].
 
 pub mod util;
 pub mod dfg;
@@ -38,6 +68,7 @@ pub mod config;
 pub mod metrics;
 pub mod runtime;
 pub mod coordinator;
+pub mod planner;
 pub mod bench;
 pub mod prop;
 

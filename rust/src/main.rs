@@ -1,6 +1,7 @@
 //! `hybridpar` — leader entrypoint / CLI.
 //!
 //! Subcommands:
+//!   plan       query the unified planner for the best strategy
 //!   train      train the transformer LM under a parallelization strategy
 //!   place      run DLPlacer on an analytic model DFG
 //!   analyze    print the Eq. 1-6 strategy projection for a network
@@ -16,13 +17,13 @@ use anyhow::{bail, Result};
 
 use hybridpar::cluster;
 use hybridpar::collective;
-use hybridpar::config::{RunConfig, Toml};
+use hybridpar::config::{PlannerConfig, RunConfig, Toml};
 use hybridpar::coordinator::{Coordinator, Strategy};
 use hybridpar::data::Corpus;
-use hybridpar::models;
 use hybridpar::parallel::{NetworkModel, ScalingEfficiency};
-use hybridpar::pipeline;
 use hybridpar::placer;
+use hybridpar::planner::{cost_by_name, AnalyticalCost, CostModel,
+                         ModelRegistry, Objective, PlanRequest, Planner};
 use hybridpar::runtime::Meta;
 use hybridpar::util::cli::Args;
 use hybridpar::util::fmt_secs;
@@ -33,6 +34,11 @@ hybridpar — hybrid DP+MP training framework (Pal et al. 2019 reproduction)
 USAGE: hybridpar <COMMAND> [OPTIONS]
 
 COMMANDS:
+  plan       --model NAME --topo dgx1|dgx2|multinode --devices N
+             [--batch B] [--objective time-to-converge|step-time]
+             [--cost analytical|alpha-beta|simulator] [--mp-degrees 2,4]
+             [--max-curve N] [--config cfg.toml] [--out-json path]
+             (emits the typed Plan as JSON on stdout)
   train      --config cfg.toml | --strategy single|dp|hybrid|async|local-sgd
              --workers N --steps N --lr F --dp-workers N --microbatches N
              [--delayed-factor K] [--staleness K] [--sync-every K]
@@ -55,6 +61,7 @@ fn run() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_default();
     let args = Args::from_env(2, &["heuristic", "real-se", "verbose"]);
     match cmd.as_str() {
+        "plan" => cmd_plan(&args),
         "train" => cmd_train(&args),
         "place" => cmd_place(&args),
         "analyze" => cmd_analyze(&args),
@@ -65,6 +72,59 @@ fn run() -> Result<()> {
             Ok(())
         }
     }
+}
+
+// --------------------------------------------------------------------------
+
+/// `plan`: one typed query against the unified planner.  Prints the JSON
+/// [`hybridpar::planner::Plan`] on stdout (human summary on stderr).
+fn cmd_plan(args: &Args) -> Result<()> {
+    // Defaults come from the optional `[planner]` config section.
+    let base = match args.get("config") {
+        Some(path) => {
+            RunConfig::from_toml(&Toml::load(&PathBuf::from(path))?)?
+                .planner
+                .unwrap_or_default()
+        }
+        None => PlannerConfig::default(),
+    };
+    let model = args.get_or("model", &base.model);
+    let topo_default = args.get_or("topology", &base.topology);
+    let topo = args.get_or("topo", &topo_default);
+    let devices = args.get_usize("devices", base.devices)?;
+    let batch = match args.get("batch") {
+        Some(b) => Some(b.parse::<usize>()?),
+        None => base.batch,
+    };
+    let objective =
+        Objective::parse(&args.get_or("objective", &base.objective))?;
+    let cost = cost_by_name(&args.get_or("cost", &base.cost_model))?;
+
+    let mut req = PlanRequest::new(&model, &topo)
+        .devices(devices)
+        .objective(objective)
+        .curve_to(args.get_usize("max-curve", 256)?);
+    if let Some(b) = batch {
+        req = req.batch(b);
+    }
+    if let Some(ms) = args.get("mp-degrees") {
+        let degrees: Vec<usize> = ms
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<std::result::Result<_, _>>()?;
+        req = req.mp_degrees(&degrees);
+    }
+
+    let planner = Planner::with_cost(cost);
+    let plan = planner.plan(&req)?;
+    eprint!("{}", plan.summary());
+    let json = plan.to_json().to_string();
+    println!("{json}");
+    if let Some(path) = args.get("out-json") {
+        std::fs::write(path, &json)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
 }
 
 // --------------------------------------------------------------------------
@@ -86,7 +146,14 @@ fn cmd_train(args: &Args) -> Result<()> {
                 dp_workers: args.get_usize("dp-workers", 2)?,
                 microbatches: args.get_usize("microbatches", 2)?,
             },
-            "async" | "local-sgd" => Strategy::Single, // dispatched below
+            "async" => Strategy::AsyncPs {
+                workers: args.get_usize("workers", 2)?,
+                staleness: args.get_usize("staleness", 2)?,
+            },
+            "local-sgd" => Strategy::LocalSgd {
+                workers: args.get_usize("workers", 2)?,
+                sync_every: args.get_usize("sync-every", 4)?,
+            },
             other => bail!("unknown strategy {other}"),
         };
     }
@@ -107,18 +174,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let coord = Coordinator::new(&artifacts, hw)?;
     let mut corpus = Corpus::new(cfg.corpus_vocab, cfg.epoch_tokens,
                                  cfg.train.seed);
-    // §7.3 alternative algorithms ride on dedicated entry points.
-    let report = match args.get("strategy") {
-        Some("async") => coord.train_async_ps(
-            &mut corpus, &cfg.train,
-            args.get_usize("workers", 2)?,
-            args.get_usize("staleness", 2)?)?,
-        Some("local-sgd") => coord.train_local_sgd(
-            &mut corpus, &cfg.train,
-            args.get_usize("workers", 2)?,
-            args.get_usize("sync-every", 4)?)?,
-        _ => coord.train(&mut corpus, &cfg.train)?,
-    };
+    // All strategies — §7.3 alternatives included — dispatch uniformly.
+    let report = coord.train(&mut corpus, &cfg.train)?;
     println!(
         "steps={} final_loss={:.4} epochs_used={:.3} \
          step_wall={} step_sim={} reached_target={}",
@@ -135,20 +192,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 // --------------------------------------------------------------------------
 
-fn model_profile(name: &str) -> Result<models::ModelProfile> {
-    Ok(match name {
-        "inception" | "inception-v3" => models::inception_v3(32),
-        "gnmt" => models::gnmt(128),
-        "biglstm" => models::biglstm(64),
-        "transformer" => {
-            models::transformer_lm(4, 128.0, 512.0, 512.0, 64.0, 8)
-        }
-        other => bail!("unknown model '{other}'"),
-    })
-}
-
 fn cmd_place(args: &Args) -> Result<()> {
-    let prof = model_profile(&args.get_or("model", "inception"))?;
+    let registry = ModelRegistry::builtin();
+    let prof = registry.build(&args.get_or("model", "inception"), None)?;
     let nd = args.get_usize("devices", 2)?;
     let hw = cluster::dgx1_mem(nd.max(1).min(8), cluster::V100_32G_MEM);
     let times = prof.dfg.op_times(7e12, 15e-6);
@@ -193,25 +239,17 @@ fn cmd_place(args: &Args) -> Result<()> {
 
 fn cmd_analyze(args: &Args) -> Result<()> {
     let name = args.get_or("model", "inception");
-    let prof = model_profile(&name)?;
+    let prof = ModelRegistry::builtin().build(&name, None)?;
     let max_dev = args.get_usize("max-devices", 256)?;
-    let times = prof.dfg.op_times(7e12, 15e-6);
+    let cost = AnalyticalCost::default();
+    let times = prof.dfg.op_times(cost.flops_per_sec,
+                                  cost.launch_overhead_s);
     let step_compute: f64 = times.iter().sum();
 
-    // MP speedup source: DLPlacer for branchy graphs, pipeline for chains.
-    let su2 = if name.starts_with("inception") {
-        let hw = cluster::dgx1_mem(2, cluster::V100_32G_MEM);
-        let p = placer::place(&prof.dfg, &hw, &times,
-                              &placer::PlacerOptions::default())?;
-        step_compute / p.predicted_time
-    } else {
-        let cfg = pipeline::PipeConfig {
-            mini_batch: prof.mini_batch,
-            saturation_batch: prof.pipe_saturation,
-            ..Default::default()
-        };
-        pipeline::pipeline_speedup(&prof.dfg, &times, 2, 16, cfg)?.speedup
-    };
+    // MP speedup source: DLPlacer for branchy graphs, pipeline for chains
+    // — the structural choice lives in the planner's analytical cost model.
+    let hw = cluster::dgx1_mem(2, cluster::V100_32G_MEM);
+    let su2 = step_compute / cost.mp_step_time(&prof, &hw, 2)?.step_time_s;
 
     let se = if args.has_flag("real-se") {
         ScalingEfficiency::RingAllReduce {

@@ -1,0 +1,848 @@
+//! Unified planner: one typed entry point for strategy search across the
+//! model × topology × strategy space.
+//!
+//! The paper's core deliverable is a *decision procedure* — given a network
+//! and a device budget, pick the DP/MP/hybrid configuration that minimises
+//! end-to-end training time (Eq. 1: `C = T × S × E`).  Before this module,
+//! that procedure lived as a dozen free functions that every entry point
+//! re-wired by hand.  The planner is the façade:
+//!
+//! ```no_run
+//! use hybridpar::planner::{PlanRequest, Planner};
+//!
+//! let planner = Planner::new();
+//! let plan = planner
+//!     .plan(&PlanRequest::new("inception-v3", "dgx1").devices(8))
+//!     .unwrap();
+//! println!("{:?} — projected speedup {:.1}x", plan.strategy,
+//!          plan.predicted_speedup);
+//! println!("{}", plan.to_json()); // serialisable scorecard + curve
+//! ```
+//!
+//! * [`PlanRequest`] — builder for the query (model, topology, device
+//!   budget, objective, candidate MP degrees, batch override);
+//! * [`Planner`] — holds a [`ModelRegistry`], a [`TopologyRegistry`] and a
+//!   pluggable [`CostModel`]; [`Planner::plan`] runs the search;
+//! * [`Plan`] — the typed answer: chosen [`Strategy`], predicted step
+//!   time, epochs-to-converge, end-to-end speedup curve, placement /
+//!   pipeline partition, per-candidate scorecard; round-trips through
+//!   [`crate::util::json`].
+
+pub mod cost;
+pub mod registry;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+pub use cost::{cost_by_name, AlphaBetaCost, AnalyticalCost, CostModel,
+               MpEstimate, MpMechanism, SimulatorCost};
+pub use registry::{ModelEntry, ModelRegistry, TopologyEntry,
+                   TopologyRegistry};
+
+use crate::coordinator::Strategy;
+use crate::parallel::NetworkModel;
+use crate::util::json::Json;
+
+/// What the planner optimises.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Minimise projected time-to-converge (Eq. 1) — the paper's metric.
+    TimeToConverge,
+    /// Maximise per-step throughput, ignoring statistical efficiency.
+    StepTime,
+}
+
+impl Objective {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Objective::TimeToConverge => "time-to-converge",
+            Objective::StepTime => "step-time",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "time-to-converge" | "ttc" | "converge" => {
+                Objective::TimeToConverge
+            }
+            "step-time" | "step" | "throughput" => Objective::StepTime,
+            other => bail!("unknown objective '{other}' \
+                            (known: time-to-converge, step-time)"),
+        })
+    }
+}
+
+/// A planner query, built fluently.
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    pub model: String,
+    pub topology: String,
+    /// Device budget N (projections beyond the physical topology are
+    /// allowed, as in the paper's 256-GPU sweeps from an 8-GPU box).
+    pub devices: usize,
+    /// Per-device mini-batch override (None = the registry default).
+    pub batch: Option<usize>,
+    pub objective: Objective,
+    /// Candidate model-parallel widths M (> 1); DP-only (M = 1) is always
+    /// considered.  Degrees other than 2 are analysed (scorecard + curve)
+    /// but the chosen strategy is restricted to the runtime-executable
+    /// M ∈ {1, 2} — the coordinator's hybrid is a 2-stage pipeline.
+    pub mp_degrees: Vec<usize>,
+    /// Upper bound of the speedup-curve sweep (powers of two).
+    pub curve_max_devices: usize,
+}
+
+impl PlanRequest {
+    pub fn new(model: &str, topology: &str) -> Self {
+        PlanRequest {
+            model: model.to_string(),
+            topology: topology.to_string(),
+            devices: 8,
+            batch: None,
+            objective: Objective::TimeToConverge,
+            mp_degrees: vec![2],
+            curve_max_devices: 256,
+        }
+    }
+
+    pub fn devices(mut self, n: usize) -> Self {
+        self.devices = n;
+        self
+    }
+
+    pub fn batch(mut self, b: usize) -> Self {
+        self.batch = Some(b);
+        self
+    }
+
+    pub fn objective(mut self, o: Objective) -> Self {
+        self.objective = o;
+        self
+    }
+
+    pub fn mp_degrees(mut self, ms: &[usize]) -> Self {
+        self.mp_degrees = ms.to_vec();
+        self
+    }
+
+    pub fn curve_to(mut self, n: usize) -> Self {
+        self.curve_max_devices = n;
+        self
+    }
+}
+
+/// One strategy candidate's score at the requested device budget.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CandidateScore {
+    /// M (1 = DP-only).
+    pub mp_degree: usize,
+    /// SU^M — the M-way model-parallel step speedup of one worker.
+    pub su_m: f64,
+    /// N_dp = devices / M (0 when M does not divide the budget).
+    pub dp_workers: usize,
+    /// Emulated global batch N_dp × mini_batch.
+    pub global_batch: usize,
+    /// E(B) at that global batch (None = diverges).
+    pub epochs: Option<f64>,
+    /// Predicted per-step wall time including DP communication.
+    pub step_time_s: Option<f64>,
+    /// End-to-end speedup vs 1 device (Eq. 3/5; None = infeasible).
+    pub speedup: Option<f64>,
+    pub feasible: bool,
+    pub note: String,
+}
+
+/// One point of the end-to-end speedup curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CurvePoint {
+    pub devices: usize,
+    /// DP-only speedup (None = E(B) diverges).
+    pub dp: Option<f64>,
+    /// Best hybrid speedup over the candidate M > 1 degrees.
+    pub hybrid: Option<f64>,
+}
+
+/// The planner's typed answer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub model: String,
+    pub topology: String,
+    pub device_budget: usize,
+    /// Devices the chosen strategy actually uses (≤ budget: when every
+    /// strategy diverges at the full budget the planner backs off, as the
+    /// paper does for BigLSTM).
+    pub devices_used: usize,
+    pub mini_batch: usize,
+    pub global_batch: usize,
+    pub cost_model: String,
+    pub objective: Objective,
+    /// The chosen runtime strategy.
+    pub strategy: Strategy,
+    /// M of the chosen strategy (1 = DP-only).
+    pub mp_degree: usize,
+    pub dp_workers: usize,
+    /// "none" | "placed" | "pipelined".
+    pub mechanism: String,
+    pub microbatches: Option<usize>,
+    /// Predicted per-step wall time of the chosen strategy (seconds).
+    pub predicted_step_s: f64,
+    /// Predicted epochs-to-converge at the chosen global batch.
+    pub predicted_epochs: Option<f64>,
+    /// Predicted end-to-end speedup vs 1 device (under
+    /// [`Objective::StepTime`], the step-rate speedup instead).
+    pub predicted_speedup: f64,
+    /// Eq. 6 tipping point: device count where the first hybrid degree
+    /// overtakes DP-only.
+    pub crossover_devices: Option<usize>,
+    /// Op → device assignment when the chosen MP mechanism is "placed".
+    pub placement: Option<Vec<usize>>,
+    /// Stage bounds when the chosen MP mechanism is "pipelined".
+    pub pipeline_bounds: Option<Vec<usize>>,
+    pub scorecard: Vec<CandidateScore>,
+    pub curve: Vec<CurvePoint>,
+}
+
+/// The planner: registries + a pluggable cost model.
+pub struct Planner {
+    models: ModelRegistry,
+    topologies: TopologyRegistry,
+    cost: Box<dyn CostModel>,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Planner::new()
+    }
+}
+
+impl Planner {
+    /// Built-in registries, analytical (Eq. 1–6) cost model.
+    pub fn new() -> Self {
+        Planner::with_cost(Box::new(AnalyticalCost::default()))
+    }
+
+    /// Built-in registries, caller-chosen cost model.
+    pub fn with_cost(cost: Box<dyn CostModel>) -> Self {
+        Planner {
+            models: ModelRegistry::builtin(),
+            topologies: TopologyRegistry::builtin(),
+            cost,
+        }
+    }
+
+    /// Fully custom construction.
+    pub fn with_parts(models: ModelRegistry, topologies: TopologyRegistry,
+                      cost: Box<dyn CostModel>) -> Self {
+        Planner { models, topologies, cost }
+    }
+
+    pub fn models(&self) -> &ModelRegistry {
+        &self.models
+    }
+
+    pub fn models_mut(&mut self) -> &mut ModelRegistry {
+        &mut self.models
+    }
+
+    pub fn topologies(&self) -> &TopologyRegistry {
+        &self.topologies
+    }
+
+    pub fn topologies_mut(&mut self) -> &mut TopologyRegistry {
+        &mut self.topologies
+    }
+
+    pub fn cost(&self) -> &dyn CostModel {
+        self.cost.as_ref()
+    }
+
+    /// Run the strategy search.
+    pub fn plan(&self, req: &PlanRequest) -> Result<Plan> {
+        if req.devices == 0 {
+            bail!("device budget must be >= 1");
+        }
+        let prof = self.models.build(&req.model, req.batch)?;
+        let hw = self.topologies.build(&req.topology, req.devices)?;
+
+        // Candidate MP degrees: {1} ∪ requested (deduplicated, > 1).
+        let mut degrees: Vec<usize> = req
+            .mp_degrees
+            .iter()
+            .copied()
+            .filter(|&m| m > 1)
+            .collect();
+        degrees.sort_unstable();
+        degrees.dedup();
+
+        // Per-degree worker estimates from the cost model.
+        let serial = self.cost.mp_step_time(&prof, &hw, 1)?.step_time_s;
+        let mut estimates: BTreeMap<usize, MpEstimate> = BTreeMap::new();
+        let mut mp_speedups: Vec<(usize, f64)> = Vec::new();
+        for &m in &degrees {
+            let est = self.cost.mp_step_time(&prof, &hw, m)?;
+            mp_speedups.push((m, serial / est.step_time_s));
+            estimates.insert(m, est);
+        }
+        let se = self.cost.scaling(&prof, &hw, serial, req.devices);
+        let net = NetworkModel {
+            name: prof.name.clone(),
+            epochs: prof.epochs.clone(),
+            mini_batch: prof.mini_batch,
+            se,
+            mp_speedups,
+        };
+
+        let all_ms: Vec<usize> =
+            std::iter::once(1).chain(degrees.iter().copied()).collect();
+
+        // Runtime-executable MP widths: [`Strategy::Hybrid`] is the
+        // coordinator's 2-stage pipeline, so only M ∈ {1, 2} maps onto a
+        // runnable strategy.  Wider requested degrees still appear in the
+        // scorecard and speedup curve for analysis, but the *chosen*
+        // strategy is restricted to what the runtime can execute.
+        let exec_net = NetworkModel {
+            mp_speedups: net
+                .mp_speedups
+                .iter()
+                .copied()
+                .filter(|&(m, _)| m == 2)
+                .collect(),
+            ..net.clone()
+        };
+        let exec_ms: Vec<usize> = std::iter::once(1)
+            .chain(exec_net.mp_speedups.iter().map(|&(m, _)| m))
+            .collect();
+
+        // --- selection ---------------------------------------------------
+        let (chosen_m, devices_used, chosen_score) = match req.objective {
+            Objective::TimeToConverge => {
+                match exec_net.best_strategy(req.devices) {
+                    Some((m, su)) => (m, req.devices, su),
+                    None => self
+                        .back_off(&exec_net, req.devices)
+                        .ok_or_else(|| anyhow!(
+                            "no strategy converges for '{}' at any device \
+                             count <= {}", prof.name, req.devices))?,
+                }
+            }
+            Objective::StepTime => {
+                // Step-rate score: SU^M × N_dp × SE(N_dp), no E(B) term.
+                let mut best: Option<(usize, usize, f64)> = None;
+                for &m in &exec_ms {
+                    if req.devices % m != 0 {
+                        continue;
+                    }
+                    let n_dp = req.devices / m;
+                    let su_m = net.su_m(m).unwrap_or(1.0);
+                    let score = su_m * n_dp as f64 * net.se.at(n_dp);
+                    if best.map_or(true, |(_, _, b)| score > b) {
+                        best = Some((m, req.devices, score));
+                    }
+                }
+                best.ok_or_else(|| anyhow!("no feasible strategy"))?
+            }
+        };
+        let n_dp = devices_used / chosen_m.max(1);
+        let global_batch = n_dp * prof.mini_batch;
+        let chosen_su_m = net.su_m(chosen_m).unwrap_or(1.0);
+        let step_worker = serial / chosen_su_m;
+        let predicted_step_s = step_worker / net.se.at(n_dp).max(1e-12);
+        let predicted_epochs = net.epochs.epochs(global_batch as f64);
+
+        let chosen_est = estimates.get(&chosen_m);
+        let mechanism = chosen_est
+            .map(|e| e.mechanism)
+            .unwrap_or(MpMechanism::None);
+        let strategy = if devices_used == 1 {
+            Strategy::Single
+        } else if chosen_m <= 1 {
+            Strategy::DataParallel { workers: devices_used,
+                                     delayed_factor: 1 }
+        } else {
+            Strategy::Hybrid {
+                dp_workers: n_dp,
+                // Pipelined estimates carry their searched micro-batch
+                // count; placed (DLPlacer) estimates don't, and a 1-micro-
+                // batch runtime pipeline is degenerate — default to 2.
+                microbatches: chosen_est
+                    .and_then(|e| e.microbatches)
+                    .unwrap_or(2),
+            }
+        };
+
+        // --- scorecard ---------------------------------------------------
+        let mut scorecard = Vec::new();
+        for &m in &all_ms {
+            let su_m = net.su_m(m).unwrap_or(1.0);
+            let divides = req.devices % m == 0;
+            let nd = if divides { req.devices / m } else { 0 };
+            let b = nd * prof.mini_batch;
+            let epochs =
+                if divides { net.epochs.epochs(b as f64) } else { None };
+            let speedup = if !divides {
+                None
+            } else if m == 1 {
+                net.su_dp(req.devices)
+            } else {
+                net.su_hybrid(req.devices, m)
+            };
+            let step_time_s = if divides {
+                Some((serial / su_m) / net.se.at(nd).max(1e-12))
+            } else {
+                None
+            };
+            let note = if !divides {
+                format!("M={m} does not divide the {}-device budget",
+                        req.devices)
+            } else if epochs.is_none() {
+                format!("E(B) diverges at global batch {b}")
+            } else {
+                String::new()
+            };
+            scorecard.push(CandidateScore {
+                mp_degree: m,
+                su_m,
+                dp_workers: nd,
+                global_batch: b,
+                epochs,
+                step_time_s,
+                speedup,
+                feasible: speedup.is_some(),
+                note,
+            });
+        }
+
+        // --- end-to-end speedup curve ------------------------------------
+        let mut curve = Vec::new();
+        let mut n = 1usize;
+        while n <= req.curve_max_devices {
+            let hybrid = degrees
+                .iter()
+                .filter_map(|&m| net.su_hybrid(n, m))
+                .fold(None::<f64>, |acc, v| {
+                    Some(acc.map_or(v, |a| a.max(v)))
+                });
+            curve.push(CurvePoint { devices: n, dp: net.su_dp(n), hybrid });
+            n *= 2;
+        }
+        let crossover_devices = degrees
+            .first()
+            .and_then(|&m| net.crossover_point(m, req.curve_max_devices));
+
+        Ok(Plan {
+            model: prof.name.clone(),
+            topology: req.topology.clone(),
+            device_budget: req.devices,
+            devices_used,
+            mini_batch: prof.mini_batch,
+            global_batch,
+            cost_model: self.cost.name().to_string(),
+            objective: req.objective,
+            strategy,
+            mp_degree: chosen_m,
+            dp_workers: n_dp,
+            mechanism: mechanism.as_str().to_string(),
+            microbatches: chosen_est.and_then(|e| e.microbatches),
+            predicted_step_s,
+            predicted_epochs,
+            predicted_speedup: chosen_score,
+            crossover_devices,
+            placement: chosen_est.and_then(|e| e.placement.clone()),
+            pipeline_bounds: chosen_est
+                .and_then(|e| e.pipeline_bounds.clone()),
+            scorecard,
+            curve,
+        })
+    }
+
+    /// When every strategy diverges at the full budget, halve the device
+    /// count until something converges (the paper's BigLSTM regime, where
+    /// the best configuration uses fewer devices than are available).
+    fn back_off(&self, net: &NetworkModel, budget: usize)
+                -> Option<(usize, usize, f64)> {
+        let mut n = budget / 2;
+        while n >= 1 {
+            if let Some((m, su)) = net.best_strategy(n) {
+                return Some((m, n, su));
+            }
+            n /= 2;
+        }
+        None
+    }
+}
+
+// ==========================================================================
+// JSON (de)serialisation via util::json
+// ==========================================================================
+
+fn jnum(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn junum(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+fn jonum(x: Option<f64>) -> Json {
+    x.map(Json::Num).unwrap_or(Json::Null)
+}
+
+fn jounum(x: Option<usize>) -> Json {
+    x.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null)
+}
+
+fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn opt_f64(j: &Json, key: &str) -> Result<Option<f64>> {
+    match j.opt(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(v.as_f64()?)),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>> {
+    Ok(opt_f64(j, key)?.map(|v| v as usize))
+}
+
+fn opt_usize_arr(j: &Json, key: &str) -> Result<Option<Vec<usize>>> {
+    match j.opt(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(
+            v.as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+        )),
+    }
+}
+
+/// Serialise a [`Strategy`] to a tagged JSON object.
+pub fn strategy_to_json(s: &Strategy) -> Json {
+    match *s {
+        Strategy::Single => jobj(vec![("kind", Json::Str("single".into()))]),
+        Strategy::DataParallel { workers, delayed_factor } => jobj(vec![
+            ("kind", Json::Str("data-parallel".into())),
+            ("workers", junum(workers)),
+            ("delayed_factor", junum(delayed_factor)),
+        ]),
+        Strategy::Hybrid { dp_workers, microbatches } => jobj(vec![
+            ("kind", Json::Str("hybrid".into())),
+            ("dp_workers", junum(dp_workers)),
+            ("microbatches", junum(microbatches)),
+        ]),
+        Strategy::AsyncPs { workers, staleness } => jobj(vec![
+            ("kind", Json::Str("async-ps".into())),
+            ("workers", junum(workers)),
+            ("staleness", junum(staleness)),
+        ]),
+        Strategy::LocalSgd { workers, sync_every } => jobj(vec![
+            ("kind", Json::Str("local-sgd".into())),
+            ("workers", junum(workers)),
+            ("sync_every", junum(sync_every)),
+        ]),
+    }
+}
+
+/// Parse a [`Strategy`] from its tagged JSON object.
+pub fn strategy_from_json(j: &Json) -> Result<Strategy> {
+    let kind = j.get("kind")?.as_str()?;
+    Ok(match kind {
+        "single" => Strategy::Single,
+        "data-parallel" => Strategy::DataParallel {
+            workers: j.get("workers")?.as_usize()?,
+            delayed_factor: j.get("delayed_factor")?.as_usize()?,
+        },
+        "hybrid" => Strategy::Hybrid {
+            dp_workers: j.get("dp_workers")?.as_usize()?,
+            microbatches: j.get("microbatches")?.as_usize()?,
+        },
+        "async-ps" => Strategy::AsyncPs {
+            workers: j.get("workers")?.as_usize()?,
+            staleness: j.get("staleness")?.as_usize()?,
+        },
+        "local-sgd" => Strategy::LocalSgd {
+            workers: j.get("workers")?.as_usize()?,
+            sync_every: j.get("sync_every")?.as_usize()?,
+        },
+        other => bail!("unknown strategy kind '{other}'"),
+    })
+}
+
+impl CandidateScore {
+    fn to_json(&self) -> Json {
+        jobj(vec![
+            ("mp_degree", junum(self.mp_degree)),
+            ("su_m", jnum(self.su_m)),
+            ("dp_workers", junum(self.dp_workers)),
+            ("global_batch", junum(self.global_batch)),
+            ("epochs", jonum(self.epochs)),
+            ("step_time_s", jonum(self.step_time_s)),
+            ("speedup", jonum(self.speedup)),
+            ("feasible", Json::Bool(self.feasible)),
+            ("note", Json::Str(self.note.clone())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(CandidateScore {
+            mp_degree: j.get("mp_degree")?.as_usize()?,
+            su_m: j.get("su_m")?.as_f64()?,
+            dp_workers: j.get("dp_workers")?.as_usize()?,
+            global_batch: j.get("global_batch")?.as_usize()?,
+            epochs: opt_f64(j, "epochs")?,
+            step_time_s: opt_f64(j, "step_time_s")?,
+            speedup: opt_f64(j, "speedup")?,
+            feasible: matches!(j.get("feasible")?, Json::Bool(true)),
+            note: j.get("note")?.as_str()?.to_string(),
+        })
+    }
+}
+
+impl CurvePoint {
+    fn to_json(&self) -> Json {
+        jobj(vec![
+            ("devices", junum(self.devices)),
+            ("dp", jonum(self.dp)),
+            ("hybrid", jonum(self.hybrid)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(CurvePoint {
+            devices: j.get("devices")?.as_usize()?,
+            dp: opt_f64(j, "dp")?,
+            hybrid: opt_f64(j, "hybrid")?,
+        })
+    }
+}
+
+impl Plan {
+    /// Serialise the full plan (scorecard and curve included).
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("topology", Json::Str(self.topology.clone())),
+            ("device_budget", junum(self.device_budget)),
+            ("devices_used", junum(self.devices_used)),
+            ("mini_batch", junum(self.mini_batch)),
+            ("global_batch", junum(self.global_batch)),
+            ("cost_model", Json::Str(self.cost_model.clone())),
+            ("objective", Json::Str(self.objective.as_str().into())),
+            ("strategy", strategy_to_json(&self.strategy)),
+            ("mp_degree", junum(self.mp_degree)),
+            ("dp_workers", junum(self.dp_workers)),
+            ("mechanism", Json::Str(self.mechanism.clone())),
+            ("microbatches", jounum(self.microbatches)),
+            ("predicted_step_s", jnum(self.predicted_step_s)),
+            ("predicted_epochs", jonum(self.predicted_epochs)),
+            ("predicted_speedup", jnum(self.predicted_speedup)),
+            ("crossover_devices",
+             self.crossover_devices
+                 .map(|v| Json::Num(v as f64))
+                 .unwrap_or(Json::Null)),
+            ("placement",
+             self.placement
+                 .as_ref()
+                 .map(|p| Json::Arr(
+                     p.iter().map(|&d| Json::Num(d as f64)).collect()))
+                 .unwrap_or(Json::Null)),
+            ("pipeline_bounds",
+             self.pipeline_bounds
+                 .as_ref()
+                 .map(|p| Json::Arr(
+                     p.iter().map(|&d| Json::Num(d as f64)).collect()))
+                 .unwrap_or(Json::Null)),
+            ("scorecard",
+             Json::Arr(self.scorecard.iter().map(|c| c.to_json()).collect())),
+            ("curve",
+             Json::Arr(self.curve.iter().map(|c| c.to_json()).collect())),
+        ])
+    }
+
+    /// Reconstruct a plan from [`Plan::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Plan {
+            model: j.get("model")?.as_str()?.to_string(),
+            topology: j.get("topology")?.as_str()?.to_string(),
+            device_budget: j.get("device_budget")?.as_usize()?,
+            devices_used: j.get("devices_used")?.as_usize()?,
+            mini_batch: j.get("mini_batch")?.as_usize()?,
+            global_batch: j.get("global_batch")?.as_usize()?,
+            cost_model: j.get("cost_model")?.as_str()?.to_string(),
+            objective: Objective::parse(j.get("objective")?.as_str()?)?,
+            strategy: strategy_from_json(j.get("strategy")?)?,
+            mp_degree: j.get("mp_degree")?.as_usize()?,
+            dp_workers: j.get("dp_workers")?.as_usize()?,
+            mechanism: j.get("mechanism")?.as_str()?.to_string(),
+            microbatches: opt_usize(j, "microbatches")?,
+            predicted_step_s: j.get("predicted_step_s")?.as_f64()?,
+            predicted_epochs: opt_f64(j, "predicted_epochs")?,
+            predicted_speedup: j.get("predicted_speedup")?.as_f64()?,
+            crossover_devices: opt_usize(j, "crossover_devices")?,
+            placement: opt_usize_arr(j, "placement")?,
+            pipeline_bounds: opt_usize_arr(j, "pipeline_bounds")?,
+            scorecard: j
+                .get("scorecard")?
+                .as_arr()?
+                .iter()
+                .map(CandidateScore::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            curve: j
+                .get("curve")?
+                .as_arr()?
+                .iter()
+                .map(CurvePoint::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    /// Human-readable multi-line summary for CLIs and examples.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "plan: {} on {} (budget {} devices, objective {}, cost {})\n",
+            self.model, self.topology, self.device_budget,
+            self.objective.as_str(), self.cost_model));
+        s.push_str(&format!(
+            "  chosen: {:?} — M={} x N_dp={} ({} devices used, \
+             mechanism {})\n",
+            self.strategy, self.mp_degree, self.dp_workers,
+            self.devices_used, self.mechanism));
+        s.push_str(&format!(
+            "  predicted: step {:.3} ms, epochs {}, end-to-end speedup \
+             {:.2}x vs 1 device\n",
+            self.predicted_step_s * 1e3,
+            self.predicted_epochs
+                .map(|e| format!("{e:.1}"))
+                .unwrap_or_else(|| "-".into()),
+            self.predicted_speedup));
+        match self.crossover_devices {
+            Some(x) => s.push_str(&format!(
+                "  Eq. 6 crossover: hybrid overtakes DP-only at {x} \
+                 devices\n")),
+            None => s.push_str("  Eq. 6 crossover: none in sweep range\n"),
+        }
+        for c in &self.scorecard {
+            s.push_str(&format!(
+                "  candidate M={}: SU^M {:.3}, speedup {}{}\n",
+                c.mp_degree, c.su_m,
+                c.speedup
+                    .map(|v| format!("{v:.2}x"))
+                    .unwrap_or_else(|| "-".into()),
+                if c.note.is_empty() {
+                    String::new()
+                } else {
+                    format!(" ({})", c.note)
+                }));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dp_only_wins_at_small_scale() {
+        let planner = Planner::new();
+        let plan = planner
+            .plan(&PlanRequest::new("inception-v3", "dgx1").devices(8))
+            .unwrap();
+        assert_eq!(plan.mp_degree, 1, "DP-only at 8 devices");
+        assert_eq!(plan.strategy,
+                   Strategy::DataParallel { workers: 8, delayed_factor: 1 });
+        assert!((plan.predicted_speedup - 8.0).abs() < 1e-6,
+                "flat E(B) region: SU = N, got {}", plan.predicted_speedup);
+        assert_eq!(plan.devices_used, 8);
+        assert_eq!(plan.global_batch, 8 * 32);
+    }
+
+    #[test]
+    fn hybrid_wins_at_scale_for_gnmt() {
+        let planner = Planner::new();
+        let plan = planner
+            .plan(&PlanRequest::new("gnmt", "dgx1").devices(256))
+            .unwrap();
+        assert_eq!(plan.mp_degree, 2, "paper: hybrid wins at 256 GPUs");
+        assert!(matches!(plan.strategy,
+                         Strategy::Hybrid { dp_workers: 128, .. }));
+        assert_eq!(plan.mechanism, "pipelined");
+        assert!(plan.pipeline_bounds.is_some());
+        assert!(plan.crossover_devices.is_some());
+    }
+
+    #[test]
+    fn biglstm_backs_off_when_everything_diverges() {
+        let planner = Planner::new();
+        let plan = planner
+            .plan(&PlanRequest::new("biglstm", "dgx1").devices(256))
+            .unwrap();
+        assert!(plan.devices_used < 256,
+                "must back off below the divergence ceiling");
+        assert!(plan.predicted_epochs.is_some());
+    }
+
+    #[test]
+    fn single_device_budget() {
+        let planner = Planner::new();
+        let plan = planner
+            .plan(&PlanRequest::new("gnmt", "dgx1").devices(1))
+            .unwrap();
+        assert_eq!(plan.strategy, Strategy::Single);
+        assert_eq!(plan.mp_degree, 1);
+    }
+
+    #[test]
+    fn step_time_objective_ignores_epochs() {
+        let planner = Planner::new();
+        // BigLSTM at 64 devices: DP diverges statistically, but pure
+        // throughput doesn't care.
+        let plan = planner
+            .plan(&PlanRequest::new("biglstm", "dgx1")
+                .devices(64)
+                .objective(Objective::StepTime))
+            .unwrap();
+        assert_eq!(plan.devices_used, 64);
+        assert_eq!(plan.objective, Objective::StepTime);
+    }
+
+    #[test]
+    fn unknown_names_error() {
+        let planner = Planner::new();
+        assert!(planner
+            .plan(&PlanRequest::new("alexnet", "dgx1"))
+            .is_err());
+        assert!(planner
+            .plan(&PlanRequest::new("gnmt", "ringworld"))
+            .is_err());
+    }
+
+    #[test]
+    fn strategy_json_round_trip() {
+        for s in [
+            Strategy::Single,
+            Strategy::DataParallel { workers: 8, delayed_factor: 2 },
+            Strategy::Hybrid { dp_workers: 4, microbatches: 8 },
+            Strategy::AsyncPs { workers: 3, staleness: 2 },
+            Strategy::LocalSgd { workers: 4, sync_every: 16 },
+        ] {
+            let j = strategy_to_json(&s);
+            let text = j.to_string();
+            let back =
+                strategy_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(s, back);
+        }
+    }
+
+    #[test]
+    fn objective_parse_round_trip() {
+        for o in [Objective::TimeToConverge, Objective::StepTime] {
+            assert_eq!(Objective::parse(o.as_str()).unwrap(), o);
+        }
+        assert!(Objective::parse("fastest").is_err());
+    }
+}

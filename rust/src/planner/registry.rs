@@ -1,0 +1,267 @@
+//! Model and topology registries: the planner's name → builder catalogs.
+//!
+//! Before the planner existed, every entry point (`main.rs`, each example,
+//! each bench) re-wired the same string-match literals — `"inception" =>
+//! models::inception_v3(32)` and friends — with the per-model default batch
+//! sizes duplicated at every call site.  The registries centralise that
+//! knowledge: one place owns the catalog of networks (with the paper's
+//! per-GPU mini-batches as defaults) and one place owns the topology
+//! builders, and callers resolve by name or alias.
+//!
+//! Both registries are extensible at runtime so downstream users can add
+//! their own networks/clusters without forking the crate.
+
+use anyhow::{bail, Result};
+
+use crate::cluster::{self, HwGraph};
+use crate::models::{self, ModelProfile};
+
+/// One registered network: canonical name, accepted aliases, the paper's
+/// default per-GPU mini-batch, and a builder parameterised by mini-batch.
+#[derive(Clone)]
+pub struct ModelEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// Default per-device mini-batch (the size `main.rs` and the examples
+    /// used to hard-code at every call site).
+    pub default_batch: usize,
+    pub build: fn(usize) -> ModelProfile,
+}
+
+/// Catalog of networks the planner can reason about.
+#[derive(Clone, Default)]
+pub struct ModelRegistry {
+    entries: Vec<ModelEntry>,
+}
+
+fn build_transformer(b: usize) -> ModelProfile {
+    // Mirrors the AOT-compiled python/compile/model.py configuration used
+    // by `main.rs` (4 layers, d_model 128, d_ff 512, vocab 512, seq 64).
+    models::transformer_lm(4, 128.0, 512.0, 512.0, 64.0, b)
+}
+
+impl ModelRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        ModelRegistry::default()
+    }
+
+    /// The built-in catalog: the paper's three evaluation networks with
+    /// their §4 per-GPU mini-batches, plus this repo's transformer LM.
+    pub fn builtin() -> Self {
+        let mut r = ModelRegistry::new();
+        r.register(ModelEntry {
+            name: "inception-v3",
+            aliases: &["inception", "inceptionv3"],
+            default_batch: 32,
+            build: models::inception_v3,
+        });
+        r.register(ModelEntry {
+            name: "gnmt",
+            aliases: &[],
+            default_batch: 128,
+            build: models::gnmt,
+        });
+        r.register(ModelEntry {
+            name: "biglstm",
+            aliases: &["big-lstm"],
+            default_batch: 64,
+            build: models::biglstm,
+        });
+        r.register(ModelEntry {
+            name: "transformer-lm",
+            aliases: &["transformer"],
+            default_batch: 8,
+            build: build_transformer,
+        });
+        r
+    }
+
+    /// Add (or shadow) an entry.  Later registrations win on name clashes.
+    pub fn register(&mut self, entry: ModelEntry) {
+        self.entries.push(entry);
+    }
+
+    /// Canonical names, registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    fn find(&self, name: &str) -> Option<&ModelEntry> {
+        // Reverse scan so later registrations shadow earlier ones.
+        self.entries
+            .iter()
+            .rev()
+            .find(|e| e.name == name || e.aliases.contains(&name))
+    }
+
+    /// Default mini-batch for a registered model.
+    pub fn default_batch(&self, name: &str) -> Result<usize> {
+        match self.find(name) {
+            Some(e) => Ok(e.default_batch),
+            None => bail!("unknown model '{name}' (known: {})",
+                          self.names().join(", ")),
+        }
+    }
+
+    /// Build a profile by name/alias, with an optional mini-batch override.
+    pub fn build(&self, name: &str, batch: Option<usize>)
+                 -> Result<ModelProfile> {
+        match self.find(name) {
+            Some(e) => Ok((e.build)(batch.unwrap_or(e.default_batch))),
+            None => bail!("unknown model '{name}' (known: {})",
+                          self.names().join(", ")),
+        }
+    }
+}
+
+/// One registered topology: builder parameterised by device budget.
+#[derive(Clone)]
+pub struct TopologyEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// Largest device count the physical system offers; requests beyond it
+    /// are projections (the paper projects to 256 GPUs from an 8-GPU box).
+    pub max_devices: usize,
+    pub build: fn(usize) -> HwGraph,
+}
+
+/// Catalog of hardware topologies.
+#[derive(Clone, Default)]
+pub struct TopologyRegistry {
+    entries: Vec<TopologyEntry>,
+}
+
+fn build_dgx1(n: usize) -> HwGraph {
+    // 32 GB V100s so BigLSTM fits (the paper's §4.1 system).
+    cluster::dgx1_mem(n.clamp(1, 8), cluster::V100_32G_MEM)
+}
+
+fn build_dgx2(n: usize) -> HwGraph {
+    cluster::dgx2(n.clamp(1, 16))
+}
+
+fn build_multinode(n: usize) -> HwGraph {
+    cluster::multi_node(n.div_ceil(4).max(1), 4)
+}
+
+impl TopologyRegistry {
+    pub fn new() -> Self {
+        TopologyRegistry::default()
+    }
+
+    /// Built-in catalog: the paper's DGX-1 testbed, a 16-GPU NVSwitch
+    /// DGX-2-style system (a scenario the paper did not evaluate), and the
+    /// IB-switched multi-node scale-out its projections assume.
+    pub fn builtin() -> Self {
+        let mut r = TopologyRegistry::new();
+        r.register(TopologyEntry {
+            name: "dgx1",
+            aliases: &["dgx-1"],
+            max_devices: 8,
+            build: build_dgx1,
+        });
+        r.register(TopologyEntry {
+            name: "dgx2",
+            aliases: &["dgx-2", "nvswitch"],
+            max_devices: 16,
+            build: build_dgx2,
+        });
+        r.register(TopologyEntry {
+            name: "multinode",
+            aliases: &["multi-node", "cluster"],
+            max_devices: usize::MAX,
+            build: build_multinode,
+        });
+        r
+    }
+
+    pub fn register(&mut self, entry: TopologyEntry) {
+        self.entries.push(entry);
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    fn find(&self, name: &str) -> Option<&TopologyEntry> {
+        self.entries
+            .iter()
+            .rev()
+            .find(|e| e.name == name || e.aliases.contains(&name))
+    }
+
+    /// Build a hardware graph sized for `devices` (clamped to the
+    /// topology's physical maximum — the planner treats larger requests as
+    /// scale-out projections).
+    pub fn build(&self, name: &str, devices: usize) -> Result<HwGraph> {
+        match self.find(name) {
+            Some(e) => Ok((e.build)(devices)),
+            None => bail!("unknown topology '{name}' (known: {})",
+                          self.names().join(", ")),
+        }
+    }
+
+    /// Physical device ceiling of a topology.
+    pub fn max_devices(&self, name: &str) -> Result<usize> {
+        match self.find(name) {
+            Some(e) => Ok(e.max_devices),
+            None => bail!("unknown topology '{name}' (known: {})",
+                          self.names().join(", ")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_aliases_resolve() {
+        let r = ModelRegistry::builtin();
+        for name in ["inception", "inception-v3", "inceptionv3"] {
+            let p = r.build(name, None).unwrap();
+            assert_eq!(p.name, "inception-v3");
+            assert_eq!(p.mini_batch, 32, "default batch deduplicated");
+        }
+        assert_eq!(r.build("gnmt", None).unwrap().mini_batch, 128);
+        assert_eq!(r.build("biglstm", None).unwrap().mini_batch, 64);
+        assert_eq!(r.build("transformer", None).unwrap().name,
+                   "transformer-lm");
+    }
+
+    #[test]
+    fn batch_override_wins() {
+        let r = ModelRegistry::builtin();
+        assert_eq!(r.build("inception", Some(64)).unwrap().mini_batch, 64);
+    }
+
+    #[test]
+    fn unknown_model_lists_catalog() {
+        let r = ModelRegistry::builtin();
+        let err = r.build("alexnet", None).unwrap_err().to_string();
+        assert!(err.contains("inception-v3"), "{err}");
+    }
+
+    #[test]
+    fn later_registration_shadows() {
+        let mut r = ModelRegistry::builtin();
+        r.register(ModelEntry {
+            name: "inception-v3",
+            aliases: &[],
+            default_batch: 99,
+            build: models::inception_v3,
+        });
+        assert_eq!(r.build("inception-v3", None).unwrap().mini_batch, 99);
+    }
+
+    #[test]
+    fn topologies_resolve_and_clamp() {
+        let r = TopologyRegistry::builtin();
+        assert_eq!(r.build("dgx1", 256).unwrap().n_devices(), 8);
+        assert_eq!(r.build("dgx2", 16).unwrap().n_devices(), 16);
+        assert!(r.build("multinode", 8).unwrap().n_devices() >= 8);
+        assert!(r.build("ringworld", 4).is_err());
+        assert_eq!(r.max_devices("dgx2").unwrap(), 16);
+    }
+}

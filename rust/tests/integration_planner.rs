@@ -1,0 +1,158 @@
+//! Integration: the unified planner against the machinery it wraps.
+//!
+//! * `Plan` JSON round-trips through `util::json`;
+//! * the planner's chosen strategy reproduces `parallel::best_strategy`
+//!   on the paper's three evaluation networks;
+//! * the analytical and simulator cost models agree within tolerance on
+//!   DGX-1 (the Fig. 8 prediction-accuracy claim, via the trait).
+
+use hybridpar::parallel::{NetworkModel, ScalingEfficiency};
+use hybridpar::planner::{AnalyticalCost, CostModel, Objective, PlanRequest,
+                         Plan, Planner, SimulatorCost};
+use hybridpar::util::json::Json;
+
+/// Rebuild the Eq. 1-6 projection from a plan's own scorecard, so the
+/// comparison uses the identical SU^M inputs.
+fn net_from_plan(plan: &Plan) -> NetworkModel {
+    let models = hybridpar::planner::ModelRegistry::builtin();
+    let prof = models.build(&plan.model, Some(plan.mini_batch)).unwrap();
+    let mp_speedups: Vec<(usize, f64)> = plan
+        .scorecard
+        .iter()
+        .filter(|c| c.mp_degree > 1)
+        .map(|c| (c.mp_degree, c.su_m))
+        .collect();
+    NetworkModel {
+        name: prof.name.clone(),
+        epochs: prof.epochs.clone(),
+        mini_batch: prof.mini_batch,
+        se: ScalingEfficiency::Perfect,
+        mp_speedups,
+    }
+}
+
+#[test]
+fn plan_json_round_trips() {
+    let planner = Planner::new();
+    for (model, devices) in
+        [("inception-v3", 8usize), ("gnmt", 256), ("biglstm", 64)]
+    {
+        let plan = planner
+            .plan(&PlanRequest::new(model, "dgx1").devices(devices))
+            .unwrap();
+        let text = plan.to_json().to_string();
+        let back = Plan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(plan, back, "round-trip mismatch for {model}");
+        // And the serialised form is a self-describing object.
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), plan.model);
+        assert!(j.get("scorecard").unwrap().as_arr().unwrap().len() >= 2);
+        assert!(!j.get("curve").unwrap().as_arr().unwrap().is_empty());
+    }
+}
+
+#[test]
+fn planner_reproduces_best_strategy_on_paper_networks() {
+    let planner = Planner::new();
+    for model in ["inception-v3", "gnmt", "biglstm"] {
+        for devices in [8usize, 64, 256] {
+            let plan = match planner
+                .plan(&PlanRequest::new(model, "dgx1").devices(devices))
+            {
+                Ok(p) => p,
+                Err(e) => panic!("{model}@{devices}: {e}"),
+            };
+            let net = net_from_plan(&plan);
+            match net.best_strategy(devices) {
+                Some((m, su)) => {
+                    assert_eq!(plan.mp_degree, m,
+                               "{model}@{devices}: planner chose M={}, \
+                                best_strategy says M={m}", plan.mp_degree);
+                    assert!((plan.predicted_speedup - su).abs()
+                            < 1e-6 * su.max(1.0),
+                            "{model}@{devices}: speedup {} vs {su}",
+                            plan.predicted_speedup);
+                    assert_eq!(plan.devices_used, devices);
+                }
+                None => {
+                    // Everything diverges at this count: the planner must
+                    // have backed off to a smaller feasible budget.
+                    assert!(plan.devices_used < devices,
+                            "{model}@{devices}: no feasible strategy yet \
+                             planner used {}", plan.devices_used);
+                    assert!(net.best_strategy(plan.devices_used).is_some());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn analytical_and_simulator_costs_agree_on_dgx1() {
+    // Fig. 8: the ILP's predicted step time tracks "silicon" (here the
+    // discrete-event simulator) within a few percent on the DGX-1.
+    let planner = Planner::new();
+    let prof = planner.models().build("inception-v3", None).unwrap();
+    let hw = planner.topologies().build("dgx1", 2).unwrap();
+    let analytical = AnalyticalCost::default();
+    let simulator = SimulatorCost::default();
+    for m in [1usize, 2] {
+        let a = analytical.mp_step_time(&prof, &hw, m).unwrap();
+        let s = simulator.mp_step_time(&prof, &hw, m).unwrap();
+        let gap = (a.step_time_s - s.step_time_s).abs() / s.step_time_s;
+        assert!(gap < 0.15,
+                "M={m}: analytical {} vs simulator {} (gap {:.1}%)",
+                a.step_time_s, s.step_time_s, gap * 100.0);
+    }
+}
+
+#[test]
+fn plan_carries_mechanism_artifacts() {
+    let planner = Planner::new();
+    // GNMT at scale: pipelined hybrid with stage bounds.
+    let gnmt = planner
+        .plan(&PlanRequest::new("gnmt", "dgx1").devices(256))
+        .unwrap();
+    assert_eq!(gnmt.mechanism, "pipelined");
+    let bounds = gnmt.pipeline_bounds.as_ref().unwrap();
+    assert!(bounds.len() >= 3, "2 stages => 3 bounds");
+    assert!(gnmt.microbatches.unwrap() >= 2);
+    assert!(gnmt.placement.is_none());
+}
+
+#[test]
+fn dgx2_extends_the_paper_scenarios() {
+    // The 16-GPU NVSwitch box is a topology the paper never measured:
+    // the planner must still produce a plan for every registered model,
+    // including the transformer LM.
+    let planner = Planner::new();
+    for model in ["inception-v3", "gnmt", "biglstm", "transformer-lm"] {
+        let plan = planner
+            .plan(&PlanRequest::new(model, "dgx2").devices(16))
+            .unwrap();
+        assert_eq!(plan.topology, "dgx2");
+        assert!(plan.devices_used >= 1 && plan.devices_used <= 16);
+        assert!(plan.predicted_speedup >= 1.0,
+                "{model}: {}", plan.predicted_speedup);
+    }
+}
+
+#[test]
+fn objectives_can_disagree() {
+    // BigLSTM at 64 devices: time-to-converge backs off or picks hybrid
+    // (DP diverges statistically), while raw step-time throughput happily
+    // takes all 64 as DP.
+    let planner = Planner::new();
+    let ttc = planner
+        .plan(&PlanRequest::new("biglstm", "dgx1").devices(64))
+        .unwrap();
+    let step = planner
+        .plan(&PlanRequest::new("biglstm", "dgx1")
+            .devices(64)
+            .objective(Objective::StepTime))
+        .unwrap();
+    assert_eq!(step.mp_degree, 1, "throughput ignores E(B)");
+    assert_eq!(step.devices_used, 64);
+    assert!(ttc.mp_degree > 1 || ttc.devices_used < 64,
+            "convergence-aware plan must avoid 64-way DP");
+}

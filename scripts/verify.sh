@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build + tests, plus formatting and lint gates.
+#
+#   scripts/verify.sh [--fast]   # --fast skips fmt/clippy
+#
+# The rust workspace manifest may live at the repo root or under rust/
+# depending on the build harness; probe both.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify: cargo not found on PATH — rust toolchain required" >&2
+    exit 1
+fi
+
+manifest_dir=""
+for d in . rust; do
+    if [ -f "$d/Cargo.toml" ]; then
+        manifest_dir="$d"
+        break
+    fi
+done
+if [ -z "$manifest_dir" ]; then
+    echo "verify: no Cargo.toml found at repo root or rust/" >&2
+    exit 1
+fi
+
+cd "$manifest_dir"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [ "${1:-}" != "--fast" ]; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+
+    echo "== cargo clippy --all-targets -- -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+fi
+
+echo "verify OK"
