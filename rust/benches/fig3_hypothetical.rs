@@ -1,5 +1,6 @@
 //! Fig. 3 reproduction: the paper's hypothetical scenario — DP-only vs
-//! hybrid speedup curves with SU² = 1.45 and SU⁴ = 1.65.
+//! hybrid speedup curves with SU² = 1.45 and SU⁴ = 1.65 — with the device
+//! grid evaluated in parallel on the sweep engine's [`parallel_map`].
 //!
 //! Expected shape (paper §3.4): DP-only scales well to 32 devices then
 //! saturates; 32-way DP × 2-way MP beats 64-way DP; the 4-way-MP hybrid
@@ -8,6 +9,7 @@
 
 use hybridpar::bench::{f2, Table};
 use hybridpar::parallel::{NetworkModel, ScalingEfficiency};
+use hybridpar::planner::sweep::parallel_map;
 use hybridpar::statistical::EpochModel;
 
 fn main() {
@@ -19,18 +21,22 @@ fn main() {
         mp_speedups: vec![(2, 1.45), (4, 1.65)],
     };
 
+    // The figure's device grid, one scenario per power of two, evaluated
+    // across all cores.  parallel_map's deterministic ordering keeps the
+    // table rows in grid order no matter the thread count.
+    let counts: Vec<usize> =
+        std::iter::successors(Some(1usize),
+                              |&n| (n < 256).then_some(n * 2))
+            .collect();
+    let rows = parallel_map(0, &counts, |_, &n| {
+        (n, net.su_dp(n), net.su_hybrid(n, 2), net.su_hybrid(n, 4))
+    });
+
     let mut table = Table::new(&["devices", "DP-only", "hybrid M=2",
                                  "hybrid M=4"]);
-    let mut n = 1usize;
-    while n <= 256 {
-        let cell = |v: Option<f64>| v.map(f2).unwrap_or_else(|| "-".into());
-        table.row(&[
-            n.to_string(),
-            cell(net.su_dp(n)),
-            cell(net.su_hybrid(n, 2)),
-            cell(net.su_hybrid(n, 4)),
-        ]);
-        n *= 2;
+    let cell = |v: Option<f64>| v.map(f2).unwrap_or_else(|| "-".into());
+    for (n, dp, h2, h4) in &rows {
+        table.row(&[n.to_string(), cell(*dp), cell(*h2), cell(*h4)]);
     }
     table.print("Fig. 3 — hypothetical DP vs hybrid speedup");
 

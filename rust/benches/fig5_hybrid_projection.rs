@@ -1,33 +1,45 @@
 //! Fig. 5 reproduction: projected speedup of hybrid MP-DP vs DP-only for
-//! Inception-V3 (5a), GNMT (5b) and BigLSTM (5c) — driven entirely through
-//! the unified [`Planner`] API.
+//! Inception-V3 (5a), GNMT (5b) and BigLSTM (5c) — the whole grid runs as
+//! one parallel [`run_sweep`] call instead of three serial planner queries.
 //!
 //! Headline numbers from the paper: the hybrid strategy beats what DP
 //! alone can achieve at scale by **≥26.5%** (Inception, 256 GPUs), **8%**
 //! (GNMT, 256 GPUs) and **22%** (BigLSTM, vs best DP at 16 GPUs).
 //!
 //! SU² values come from the same machinery as Table 1 (DLPlacer /
-//! pipeline) via the planner's analytical cost model; SE_N = 1 per the
-//! paper's conservative §4.3 assumption.
+//! pipeline, now with explicit pipelined candidates competing too) via the
+//! planner's analytical cost model; SE_N = 1 per the paper's conservative
+//! §4.3 assumption.  The batch axis is `BatchSpec::Paper` — the §4.2
+//! epoch-methodology mini-batches (64/128/64) — so the E(B) curves line up.
 
 use hybridpar::bench::{f2, Table};
-use hybridpar::planner::{PlanRequest, Planner};
+use hybridpar::planner::sweep::{run_sweep, BatchSpec, StrategyFamily,
+                                SweepSpec};
+use hybridpar::planner::Objective;
 
 fn main() {
-    let planner = Planner::new(); // analytical costs: SE_N = 1
-    // Mini-batches match the paper's §4.2 epoch-count methodology
-    // (Inception 64/GPU, GNMT 128, BigLSTM 64) so the E(B) curves line up.
-    let queries = [("inception-v3", 64usize), ("gnmt", 128),
-                   ("biglstm", 64)];
+    let spec = SweepSpec {
+        models: vec!["inception-v3".into(), "gnmt".into(),
+                     "biglstm".into()],
+        topologies: vec!["dgx1".into()],
+        devices: vec![256],
+        batches: vec![BatchSpec::Paper],
+        families: vec![StrategyFamily::Hybrid],
+        mp_degrees: vec![2],
+        objective: Objective::TimeToConverge,
+        cost_model: "analytical".into(), // SE_N = 1
+        curve_max_devices: 256,
+        threads: 0, // one worker per core: the three figures in parallel
+    };
+    let sweep = run_sweep(&spec).expect("fig5 grid must evaluate");
     let mut headlines = Vec::new();
 
-    for (model, batch) in queries {
-        let plan = planner
-            .plan(&PlanRequest::new(model, "dgx1")
-                .devices(256)
-                .batch(batch)
-                .curve_to(256))
-            .unwrap();
+    for result in &sweep.results {
+        let plan = result
+            .plan
+            .as_ref()
+            .unwrap_or_else(|| panic!("{}: {:?}", result.scenario.model,
+                                      result.error));
         let su_2 = plan
             .scorecard
             .iter()

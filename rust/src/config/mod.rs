@@ -172,6 +172,45 @@ impl Toml {
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(|v| v.as_bool().ok()).unwrap_or(default)
     }
+
+    /// String list: `key = ["a", "b"]`.  A scalar string value is read as
+    /// a one-element list; a missing key yields `default`.
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(TomlValue::Array(items)) => items
+                .iter()
+                .filter_map(|v| v.as_str().ok())
+                .map(|s| s.to_string())
+                .collect(),
+            Some(v) => match v.as_str() {
+                Ok(s) => vec![s.to_string()],
+                Err(_) => default.iter().map(|s| s.to_string()).collect(),
+            },
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Integer list: `key = [8, 64]`.  A scalar integer is read as a
+    /// one-element list; a missing key yields `default`.  Mistyped or
+    /// negative elements are dropped (the scalar `*_or` accessors are
+    /// equally lenient) — a list that loses *all* its elements comes back
+    /// empty, which downstream axis validation rejects loudly rather than
+    /// letting `-4` wrap around to a 19-digit device count.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            Some(TomlValue::Array(items)) => items
+                .iter()
+                .filter_map(|v| v.as_i64().ok())
+                .filter(|&i| i >= 0)
+                .map(|i| i as usize)
+                .collect(),
+            Some(v) => match v.as_i64() {
+                Ok(i) if i >= 0 => vec![i as usize],
+                _ => default.to_vec(),
+            },
+            None => default.to_vec(),
+        }
+    }
 }
 
 /// `[planner]` section: a strategy-search query the `plan` subcommand can
@@ -204,8 +243,48 @@ impl Default for PlannerConfig {
     }
 }
 
+/// `[sweep]` section: the scenario grid the `sweep` subcommand evaluates
+/// without CLI arguments.  Axis values stay strings here (families, batch
+/// specs, objective, cost model) so the config layer does not depend on
+/// [`crate::planner`]; `sweep` resolves them via the planner's parsers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepConfig {
+    pub models: Vec<String>,
+    pub topologies: Vec<String>,
+    pub devices: Vec<usize>,
+    /// "default" | "paper" | an integer, per axis entry.
+    pub batches: Vec<String>,
+    /// "dp" | "hybrid" | "pipelined", per axis entry.
+    pub families: Vec<String>,
+    pub mp_degrees: Vec<usize>,
+    pub objective: String,
+    pub cost_model: String,
+    /// Worker threads (0 = one per available core).
+    pub threads: usize,
+    pub curve_max_devices: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            models: vec!["inception-v3".into(), "gnmt".into(),
+                         "biglstm".into()],
+            topologies: vec!["dgx1".into()],
+            devices: vec![8, 64, 256],
+            batches: vec!["default".into()],
+            families: vec!["dp".into(), "hybrid".into(),
+                           "pipelined".into()],
+            mp_degrees: vec![2],
+            objective: "time-to-converge".into(),
+            cost_model: "analytical".into(),
+            threads: 0,
+            curve_max_devices: 256,
+        }
+    }
+}
+
 /// Top-level run configuration (config file `[run]`, `[cluster]`,
-/// `[train]`, `[planner]` sections).
+/// `[train]`, `[planner]`, `[sweep]` sections).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub artifacts_dir: String,
@@ -219,6 +298,8 @@ pub struct RunConfig {
     pub out_csv: Option<String>,
     /// Present iff the config has a `[planner]` section.
     pub planner: Option<PlannerConfig>,
+    /// Present iff the config has a `[sweep]` section.
+    pub sweep: Option<SweepConfig>,
 }
 
 impl Default for RunConfig {
@@ -233,6 +314,7 @@ impl Default for RunConfig {
             epoch_tokens: 1_000_000,
             out_csv: None,
             planner: None,
+            sweep: None,
         }
     }
 }
@@ -261,6 +343,11 @@ impl RunConfig {
             "hybrid" => Strategy::Hybrid {
                 dp_workers: t.usize_or("train.dp_workers", 2),
                 microbatches: t.usize_or("train.microbatches", 2),
+            },
+            "pipelined" => Strategy::PipelinedHybrid {
+                stages: t.usize_or("train.stages", 2),
+                microbatches: t.usize_or("train.microbatches", 2),
+                replicas: t.usize_or("train.replicas", 2),
             },
             "async" => Strategy::AsyncPs {
                 workers: t.usize_or("train.workers", 2),
@@ -299,6 +386,28 @@ impl RunConfig {
                 batch,
                 objective: t.str_or("planner.objective", &d.objective),
                 cost_model: t.str_or("planner.cost", &d.cost_model),
+            });
+        }
+        if t.values.keys().any(|k| k.starts_with("sweep.")) {
+            let d = SweepConfig::default();
+            let dstr = |xs: &[String]| -> Vec<&str> {
+                xs.iter().map(|s| s.as_str()).collect()
+            };
+            c.sweep = Some(SweepConfig {
+                models: t.str_list_or("sweep.models", &dstr(&d.models)),
+                topologies: t
+                    .str_list_or("sweep.topologies", &dstr(&d.topologies)),
+                devices: t.usize_list_or("sweep.devices", &d.devices),
+                batches: t.str_list_or("sweep.batches", &dstr(&d.batches)),
+                families: t
+                    .str_list_or("sweep.families", &dstr(&d.families)),
+                mp_degrees: t
+                    .usize_list_or("sweep.mp_degrees", &d.mp_degrees),
+                objective: t.str_or("sweep.objective", &d.objective),
+                cost_model: t.str_or("sweep.cost", &d.cost_model),
+                threads: t.usize_or("sweep.threads", d.threads),
+                curve_max_devices: t.usize_or("sweep.curve_max_devices",
+                                              d.curve_max_devices),
             });
         }
         Ok(c)
@@ -404,6 +513,75 @@ sizes = [1, 2, 3]
         assert_eq!(p.batch, Some(64));
         assert_eq!(p.objective, "step-time");
         assert_eq!(p.cost_model, "simulator");
+    }
+
+    #[test]
+    fn pipelined_strategy_parses() {
+        let t = Toml::parse(
+            "[train]\nstrategy = \"pipelined\"\nstages = 2\n\
+             microbatches = 4\nreplicas = 3\n")
+            .unwrap();
+        let c = RunConfig::from_toml(&t).unwrap();
+        assert_eq!(c.train.strategy,
+                   Strategy::PipelinedHybrid { stages: 2, microbatches: 4,
+                                               replicas: 3 });
+    }
+
+    #[test]
+    fn sweep_section_parses() {
+        let t = Toml::parse(
+            "[sweep]\nmodels = [\"gnmt\", \"biglstm\"]\n\
+             topologies = [\"dgx1\", \"dgx2\"]\ndevices = [8, 64]\n\
+             batches = [\"paper\"]\nfamilies = [\"dp\", \"pipelined\"]\n\
+             mp_degrees = [2, 4]\nthreads = 4\ncost = \"simulator\"\n")
+            .unwrap();
+        let s = RunConfig::from_toml(&t).unwrap().sweep.unwrap();
+        assert_eq!(s.models, vec!["gnmt", "biglstm"]);
+        assert_eq!(s.topologies, vec!["dgx1", "dgx2"]);
+        assert_eq!(s.devices, vec![8, 64]);
+        assert_eq!(s.batches, vec!["paper"]);
+        assert_eq!(s.families, vec!["dp", "pipelined"]);
+        assert_eq!(s.mp_degrees, vec![2, 4]);
+        assert_eq!(s.threads, 4);
+        assert_eq!(s.cost_model, "simulator");
+        // Unset keys default.
+        assert_eq!(s.objective, "time-to-converge");
+        assert_eq!(s.curve_max_devices, 256);
+    }
+
+    #[test]
+    fn sweep_section_absent_by_default() {
+        let t = Toml::parse(DOC).unwrap();
+        assert!(RunConfig::from_toml(&t).unwrap().sweep.is_none());
+        // A scalar in list position is read as a one-element list.
+        let t = Toml::parse("[sweep]\nmodels = \"gnmt\"\ndevices = 16\n")
+            .unwrap();
+        let s = RunConfig::from_toml(&t).unwrap().sweep.unwrap();
+        assert_eq!(s.models, vec!["gnmt"]);
+        assert_eq!(s.devices, vec![16]);
+        assert_eq!(s.families.len(), 3, "family axis defaults to all");
+    }
+
+    #[test]
+    fn list_helpers_default_and_coerce() {
+        let t = Toml::parse("xs = [1, 2, 3]\nys = \"solo\"\n").unwrap();
+        assert_eq!(t.usize_list_or("xs", &[9]), vec![1, 2, 3]);
+        assert_eq!(t.usize_list_or("missing", &[9]), vec![9]);
+        assert_eq!(t.str_list_or("ys", &["d"]), vec!["solo"]);
+        assert_eq!(t.str_list_or("missing", &["d"]), vec!["d"]);
+    }
+
+    #[test]
+    fn negative_integers_never_wrap_to_huge_usizes() {
+        let t = Toml::parse("xs = [-4, 8]\nlone = -4\n").unwrap();
+        // Bad elements drop; good ones survive.
+        assert_eq!(t.usize_list_or("xs", &[9]), vec![8]);
+        // An all-bad list comes back empty so axis validation can reject
+        // it, rather than silently substituting the default.
+        let t2 = Toml::parse("xs = [-4]\n").unwrap();
+        assert!(t2.usize_list_or("xs", &[9]).is_empty());
+        // A bad scalar falls back to the default.
+        assert_eq!(t.usize_list_or("lone", &[9]), vec![9]);
     }
 
     #[test]

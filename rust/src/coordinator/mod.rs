@@ -17,6 +17,9 @@
 //! * [`Strategy::Hybrid`]    — N DP workers, each a 2-stage pipeline
 //!   (`stage0_fwd` → `stage1_grad` → `stage0_grad`) over micro-batches,
 //!   then the same DP all-reduce across workers;
+//! * [`Strategy::PipelinedHybrid`] — the planner's general S-stage GPipe
+//!   hybrid; `stages == 2` executes through the same artifact pipeline as
+//!   `Hybrid`, deeper pipelines are planner/sweep projections;
 //! * [`Strategy::AsyncPs`]   — asynchronous parameter-server SGD with
 //!   bounded staleness (paper §7.3, implemented in [`alt`]);
 //! * [`Strategy::LocalSgd`]  — local SGD with periodic model averaging
@@ -47,6 +50,12 @@ pub enum Strategy {
     /// `dp_workers`-way DP of 2-way pipeline-MP workers with
     /// `microbatches` micro-batches per mini-batch.
     Hybrid { dp_workers: usize, microbatches: usize },
+    /// `replicas`-way DP of `stages`-stage GPipe pipeline workers, each
+    /// mini-batch split into `microbatches` micro-batches — the planner's
+    /// general pipelined hybrid (PaSE-style deep pipelines included).  The
+    /// runtime executes the 2-stage instance (the AOT artifacts provide a
+    /// 2-stage pipeline); deeper pipelines are planner/sweep projections.
+    PipelinedHybrid { stages: usize, microbatches: usize, replicas: usize },
     /// Asynchronous parameter-server SGD (§7.3): `workers` push gradients
     /// computed against snapshots up to `staleness` updates old.
     AsyncPs { workers: usize, staleness: usize },
@@ -56,12 +65,28 @@ pub enum Strategy {
 }
 
 impl Strategy {
+    /// Stable kind tag, shared by every serialised surface (the planner's
+    /// JSON `strategy.kind` and the sweep CSV's `strategy` column).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Strategy::Single => "single",
+            Strategy::DataParallel { .. } => "data-parallel",
+            Strategy::Hybrid { .. } => "hybrid",
+            Strategy::PipelinedHybrid { .. } => "pipelined-hybrid",
+            Strategy::AsyncPs { .. } => "async-ps",
+            Strategy::LocalSgd { .. } => "local-sgd",
+        }
+    }
+
     /// Number of simulated devices consumed.
     pub fn devices(&self) -> usize {
         match self {
             Strategy::Single => 1,
             Strategy::DataParallel { workers, .. } => *workers,
             Strategy::Hybrid { dp_workers, .. } => dp_workers * 2,
+            Strategy::PipelinedHybrid { stages, replicas, .. } => {
+                stages * replicas
+            }
             Strategy::AsyncPs { workers, .. } => *workers,
             Strategy::LocalSgd { workers, .. } => *workers,
         }
@@ -77,6 +102,11 @@ impl Strategy {
             }
             Strategy::Hybrid { dp_workers, microbatches } => {
                 microbatch * microbatches * dp_workers
+            }
+            // Same statistics as `Hybrid`: each replica consumes
+            // `microbatches` micro-batches per step regardless of depth.
+            Strategy::PipelinedHybrid { microbatches, replicas, .. } => {
+                microbatch * microbatches * replicas
             }
             // Each async update applies a single worker's mini-batch
             // gradient — the statistical batch size stays one mini-batch
@@ -160,6 +190,14 @@ impl Coordinator {
             }
             Strategy::Hybrid { dp_workers, microbatches } => {
                 self.train_hybrid(corpus, cfg, dp_workers, microbatches)
+            }
+            Strategy::PipelinedHybrid { stages, microbatches, replicas } => {
+                if stages != 2 {
+                    bail!("runtime artifacts implement a 2-stage pipeline; \
+                           a {stages}-stage PipelinedHybrid is a \
+                           planner/sweep projection only");
+                }
+                self.train_hybrid(corpus, cfg, replicas, microbatches)
             }
             Strategy::AsyncPs { workers, staleness } => {
                 self.train_async_ps(corpus, cfg, workers, staleness)
@@ -498,6 +536,11 @@ mod tests {
             Strategy::Hybrid { dp_workers: 3, microbatches: 2 }.devices(),
             6);
         assert_eq!(
+            Strategy::PipelinedHybrid { stages: 4, microbatches: 8,
+                                        replicas: 3 }
+                .devices(),
+            12);
+        assert_eq!(
             Strategy::AsyncPs { workers: 4, staleness: 2 }.devices(), 4);
         assert_eq!(
             Strategy::LocalSgd { workers: 4, sync_every: 8 }.devices(), 4);
@@ -509,6 +552,11 @@ mod tests {
         assert_eq!(dp.global_batch(8, 4), 128); // 8 * 4 * 4
         let hy = Strategy::Hybrid { dp_workers: 4, microbatches: 2 };
         assert_eq!(hy.global_batch(8, 4), 32); // 4 micro * 2 * 4 workers
+        // Depth does not change the statistics: stages absent from the
+        // batch math, replicas × microbatches present.
+        let ph = Strategy::PipelinedHybrid { stages: 4, microbatches: 2,
+                                             replicas: 4 };
+        assert_eq!(ph.global_batch(8, 4), 32);
         // Async applies one mini-batch per update; local SGD aggregates
         // `workers` independent trajectories per averaging round.
         let ap = Strategy::AsyncPs { workers: 4, staleness: 2 };

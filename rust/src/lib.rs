@@ -46,11 +46,39 @@
 //!   NVSwitch DGX-2, and IB multi-node).
 //! * Predictions are pluggable via [`planner::CostModel`]: the analytical
 //!   Eq. 1–6 model, the α-β ring model, or the discrete-event simulator —
-//!   swap one for another to cross-check a plan.
+//!   swap one for another to cross-check a plan.  Every model scores both
+//!   MP mechanisms per degree: the Table 1 structural default *and* an
+//!   explicit GPipe pipeline, so
+//!   [`coordinator::Strategy::PipelinedHybrid`] candidates (the pipelined
+//!   ConvNet hybrids of PaSE / the Oracle paper) compete in every search.
 //! * The returned [`planner::Plan`] carries the chosen
 //!   [`coordinator::Strategy`], predicted step time, epochs-to-converge,
 //!   the end-to-end speedup curve, the placement / pipeline partition, and
 //!   a per-candidate scorecard, all JSON-serialisable via [`util::json`].
+//!
+//! ## Scenario sweeps
+//!
+//! Grid evaluation — every `(model × topology × device budget ×
+//! global batch × strategy family)` combination — goes through the
+//! work-sharing parallel engine in [`planner::sweep`] (CLI: the `sweep`
+//! subcommand; see `docs/sweep.md`).  Scheduling is dynamic but output
+//! ordering is canonical: `threads = N` produces byte-identical JSON/CSV
+//! to `threads = 1`.
+//!
+//! ```
+//! use hybridpar::planner::sweep::{run_sweep, StrategyFamily, SweepSpec};
+//!
+//! let result = run_sweep(&SweepSpec {
+//!     models: vec!["gnmt".into(), "biglstm".into()],
+//!     devices: vec![8],
+//!     families: vec![StrategyFamily::DpOnly],
+//!     curve_max_devices: 8,
+//!     threads: 2,
+//!     ..Default::default()
+//! })
+//! .unwrap();
+//! assert_eq!(result.len(), 2); // canonical (model-major) order
+//! ```
 
 pub mod util;
 pub mod dfg;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   plan       query the unified planner for the best strategy
+//!   sweep      evaluate a scenario grid in parallel (JSON/CSV out)
 //!   train      train the transformer LM under a parallelization strategy
 //!   place      run DLPlacer on an analytic model DFG
 //!   analyze    print the Eq. 1-6 strategy projection for a network
@@ -17,11 +18,13 @@ use anyhow::{bail, Result};
 
 use hybridpar::cluster;
 use hybridpar::collective;
-use hybridpar::config::{PlannerConfig, RunConfig, Toml};
+use hybridpar::config::{PlannerConfig, RunConfig, SweepConfig, Toml};
 use hybridpar::coordinator::{Coordinator, Strategy};
 use hybridpar::data::Corpus;
 use hybridpar::parallel::{NetworkModel, ScalingEfficiency};
 use hybridpar::placer;
+use hybridpar::planner::sweep::{effective_threads, run_sweep, BatchSpec,
+                                StrategyFamily, SweepSpec};
 use hybridpar::planner::{cost_by_name, AnalyticalCost, CostModel,
                          ModelRegistry, Objective, PlanRequest, Planner};
 use hybridpar::runtime::Meta;
@@ -37,12 +40,20 @@ COMMANDS:
   plan       --model NAME --topo dgx1|dgx2|multinode --devices N
              [--batch B] [--objective time-to-converge|step-time]
              [--cost analytical|alpha-beta|simulator] [--mp-degrees 2,4]
-             [--max-curve N] [--config cfg.toml] [--out-json path]
+             [--pipeline-only] [--max-curve N] [--config cfg.toml]
+             [--out-json path]
              (emits the typed Plan as JSON on stdout)
-  train      --config cfg.toml | --strategy single|dp|hybrid|async|local-sgd
+  sweep      --models a,b --topos dgx1,dgx2 --devices 8,64,256
+             [--batches default|paper|N,...] [--families dp,hybrid,pipelined]
+             [--mp-degrees 2,4] [--threads N] [--objective ...] [--cost ...]
+             [--max-curve N] [--config cfg.toml] [--out-json p] [--out-csv p]
+             (parallel grid evaluation; JSON on stdout, deterministic
+              ordering — --threads N output is byte-identical to --threads 1)
+  train      --config cfg.toml |
+             --strategy single|dp|hybrid|pipelined|async|local-sgd
              --workers N --steps N --lr F --dp-workers N --microbatches N
-             [--delayed-factor K] [--staleness K] [--sync-every K]
-             [--target-loss F] [--out-csv path]
+             [--stages K --replicas N] [--delayed-factor K] [--staleness K]
+             [--sync-every K] [--target-loss F] [--out-csv path]
   place      --model inception|gnmt|biglstm|transformer --devices N
              [--heuristic] [--dot out.dot]
   analyze    --model inception|gnmt|biglstm [--max-devices N] [--real-se]
@@ -59,9 +70,11 @@ fn main() {
 
 fn run() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_default();
-    let args = Args::from_env(2, &["heuristic", "real-se", "verbose"]);
+    let args = Args::from_env(2, &["heuristic", "real-se", "verbose",
+                                   "pipeline-only"]);
     match cmd.as_str() {
         "plan" => cmd_plan(&args),
+        "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
         "place" => cmd_place(&args),
         "analyze" => cmd_analyze(&args),
@@ -103,6 +116,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let mut req = PlanRequest::new(&model, &topo)
         .devices(devices)
         .objective(objective)
+        .pipeline_only(args.has_flag("pipeline-only"))
         .curve_to(args.get_usize("max-curve", 256)?);
     if let Some(b) = batch {
         req = req.batch(b);
@@ -129,6 +143,113 @@ fn cmd_plan(args: &Args) -> Result<()> {
 
 // --------------------------------------------------------------------------
 
+/// `sweep`: evaluate a `(model × topology × devices × batch × family)`
+/// grid through the work-sharing parallel sweep engine.  Emits the full
+/// [`hybridpar::planner::sweep::SweepResult`] as JSON on stdout (summary
+/// on stderr); `--out-json` / `--out-csv` also write files.  Output
+/// ordering is canonical, so `--threads N` is byte-identical to
+/// `--threads 1` — only faster.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    // Defaults come from the optional `[sweep]` config section.
+    let base = match args.get("config") {
+        Some(path) => {
+            RunConfig::from_toml(&Toml::load(&PathBuf::from(path))?)?
+                .sweep
+                .unwrap_or_default()
+        }
+        None => SweepConfig::default(),
+    };
+    let csv_list = |s: &str| -> Vec<String> {
+        s.split(',')
+            .map(|x| x.trim().to_string())
+            .filter(|x| !x.is_empty())
+            .collect()
+    };
+    let usize_list = |s: &str| -> Result<Vec<usize>> {
+        csv_list(s)
+            .iter()
+            .map(|x| x.parse::<usize>().map_err(|e| anyhow::anyhow!("{e}")))
+            .collect()
+    };
+    let models = args.get("models").map(csv_list).unwrap_or(base.models);
+    let topos = args
+        .get("topos")
+        .or_else(|| args.get("topologies"))
+        .map(csv_list)
+        .unwrap_or(base.topologies);
+    let devices = match args.get("devices") {
+        Some(s) => usize_list(s)?,
+        None => base.devices,
+    };
+    let batches = args.get("batches").map(csv_list).unwrap_or(base.batches);
+    let families =
+        args.get("families").map(csv_list).unwrap_or(base.families);
+    let mp_degrees = match args.get("mp-degrees") {
+        Some(s) => usize_list(s)?,
+        None => base.mp_degrees,
+    };
+
+    let spec = SweepSpec {
+        models,
+        topologies: topos,
+        devices,
+        batches: batches
+            .iter()
+            .map(|s| BatchSpec::parse(s))
+            .collect::<Result<_>>()?,
+        families: families
+            .iter()
+            .map(|s| StrategyFamily::parse(s))
+            .collect::<Result<_>>()?,
+        mp_degrees,
+        objective: Objective::parse(
+            &args.get_or("objective", &base.objective))?,
+        cost_model: args.get_or("cost", &base.cost_model),
+        curve_max_devices: args
+            .get_usize("max-curve", base.curve_max_devices)?,
+        threads: args.get_usize("threads", base.threads)?,
+    };
+
+    let n = spec.scenarios().len();
+    let workers = effective_threads(spec.threads, n);
+    let t0 = std::time::Instant::now();
+    let result = run_sweep(&spec)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let ok = result.results.iter().filter(|r| r.plan.is_some()).count();
+    eprintln!("sweep: {n} scenarios on {workers} threads in {} \
+               ({ok} planned, {} errored)",
+              fmt_secs(wall), n - ok);
+    for r in &result.results {
+        let sc = &r.scenario;
+        match (&r.plan, &r.error) {
+            (Some(p), _) => eprintln!(
+                "  {:<14} {:<9} {:>4} dev  batch {:<7} {:<9} -> M={} {} \
+                 ({:.2}x, {} devices used)",
+                sc.model, sc.topology, sc.devices, sc.batch.label(),
+                sc.family.as_str(), p.mp_degree, p.mechanism,
+                p.predicted_speedup, p.devices_used),
+            (None, err) => eprintln!(
+                "  {:<14} {:<9} {:>4} dev  batch {:<7} {:<9} -> error: {}",
+                sc.model, sc.topology, sc.devices, sc.batch.label(),
+                sc.family.as_str(),
+                err.as_deref().unwrap_or("unknown")),
+        }
+    }
+    let json = result.to_json().to_string();
+    println!("{json}");
+    if let Some(path) = args.get("out-json") {
+        std::fs::write(path, &json)?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = args.get("out-csv") {
+        std::fs::write(path, result.to_csv())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------------------
+
 fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::from_toml(&Toml::load(&PathBuf::from(path))?)?,
@@ -145,6 +266,11 @@ fn cmd_train(args: &Args) -> Result<()> {
             "hybrid" => Strategy::Hybrid {
                 dp_workers: args.get_usize("dp-workers", 2)?,
                 microbatches: args.get_usize("microbatches", 2)?,
+            },
+            "pipelined" => Strategy::PipelinedHybrid {
+                stages: args.get_usize("stages", 2)?,
+                microbatches: args.get_usize("microbatches", 2)?,
+                replicas: args.get_usize("replicas", 2)?,
             },
             "async" => Strategy::AsyncPs {
                 workers: args.get_usize("workers", 2)?,

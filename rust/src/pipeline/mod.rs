@@ -5,11 +5,16 @@
 //! micro-batches, and overlap stages on different devices.  This module
 //!
 //! * partitions a chain DFG into balanced stages ([`partition_chain`]),
+//!   and — for the planner's `PipelinedHybrid` candidates — any DAG along
+//!   its topological linearisation ([`partition_stages`]),
 //! * computes the GPipe schedule time analytically ([`gpipe_time`]) —
 //!   fill/drain bubble included — with per-microbatch kernel overhead (the
 //!   paper's observed pipeline-speedup killer for fused RNN kernels, §4.4),
-//! * searches the best micro-batch count ([`best_microbatches`]), and
-//! * converts it into the per-step MP speedup SU^M used in Eq. 5.
+//! * searches the best micro-batch count ([`best_microbatches`]),
+//! * converts it into the per-step MP speedup SU^M used in Eq. 5, and
+//! * unrolls the schedule into an executable stage×micro-batch DFG
+//!   ([`pipeline_dfg`]) so the discrete-event simulator ([`crate::sim`])
+//!   can *execute* the overlapped schedule instead of guessing at it.
 
 use anyhow::{bail, Result};
 
@@ -34,20 +39,40 @@ impl Partition {
 
 /// Balanced contiguous partition of a chain DFG into `n_stages`, minimising
 /// the max stage time (DP over prefix sums — optimal for contiguous
-/// partitions).  Requires a pure chain (each op one successor).
+/// partitions).  Requires a pure chain (each op one successor); use
+/// [`partition_stages`] for arbitrary DAGs.
 pub fn partition_chain(dfg: &Dfg, times: &[f64], n_stages: usize)
                        -> Result<Partition> {
     let order = dfg.topo_order()?;
     let n = order.len();
-    if n_stages == 0 || n_stages > n {
-        bail!("bad stage count {n_stages} for {n} ops");
-    }
     // Verify chain-ness in topo order.
     let succ = dfg.successors();
     for (i, &v) in order.iter().enumerate() {
         if i + 1 < n && !(succ[v].len() == 1 && succ[v][0] == order[i + 1]) {
             bail!("DFG '{}' is not a chain at op {}", dfg.name, v);
         }
+    }
+    partition_stages(dfg, times, n_stages)
+}
+
+/// Balanced contiguous partition of `dfg`'s topological linearisation into
+/// `n_stages`, minimising the max stage time (DP over prefix sums — optimal
+/// among contiguous partitions of that linearisation).
+///
+/// For a pure chain the linearisation *is* the chain, so this equals
+/// [`partition_chain`].  For branchy DAGs it is the pipeline-parallel
+/// relaxation behind the planner's `PipelinedHybrid` candidates (the
+/// PaSE-style pipelined ConvNet hybrids): every edge runs forward in topo
+/// order, so each stage depends only on earlier stages and the GPipe
+/// schedule stays valid.  `cut_bytes[i]` aggregates *every* edge crossing
+/// boundary `i`; an edge that skips stages is charged at each boundary it
+/// crosses, modelling the traffic of a linear device chain.
+pub fn partition_stages(dfg: &Dfg, times: &[f64], n_stages: usize)
+                        -> Result<Partition> {
+    let order = dfg.topo_order()?;
+    let n = order.len();
+    if n_stages == 0 || n_stages > n {
+        bail!("bad stage count {n_stages} for {n} ops");
     }
     let t: Vec<f64> = order.iter().map(|&v| times[v]).collect();
     let prefix: Vec<f64> = std::iter::once(0.0)
@@ -84,9 +109,20 @@ pub fn partition_chain(dfg: &Dfg, times: &[f64], n_stages: usize)
         .windows(2)
         .map(|w| prefix[w[1]] - prefix[w[0]])
         .collect();
+    // Topo position of each op, for the boundary-crossing test.
+    let mut pos = vec![0usize; dfg.n_ops()];
+    for (p, &v) in order.iter().enumerate() {
+        pos[v] = p;
+    }
     let cut_bytes: Vec<f64> = bounds[1..bounds.len() - 1]
         .iter()
-        .map(|&bi| dfg.ops[order[bi - 1]].out_bytes)
+        .map(|&bi| {
+            dfg.edges
+                .iter()
+                .filter(|e| pos[e.src] < bi && pos[e.dst] >= bi)
+                .map(|e| e.bytes)
+                .sum()
+        })
         .collect();
     Ok(Partition { bounds, stage_times, cut_bytes })
 }
@@ -169,6 +205,50 @@ pub fn gpipe_time(p: &Partition, m: usize, cfg: PipeConfig) -> f64 {
 /// Single-device step time for the same work (no pipeline, no overhead).
 pub fn serial_time(p: &Partition) -> f64 {
     p.stage_times.iter().sum()
+}
+
+/// Unroll a partition's GPipe schedule into an *executable* DFG: one op
+/// per (stage, micro-batch) cell, adjacent-stage data edges carrying
+/// `cut_bytes / m`, and zero-byte same-stage ordering edges enforcing the
+/// in-order micro-batch schedule.  Returns the graph, the per-op times
+/// (stage compute split `m` ways, micro-batch inflation and kernel
+/// overhead included — the same Δ terms [`gpipe_time`] uses), and each
+/// op's stage index.  Mapping stage → device gives a placement that
+/// [`crate::sim::simulate`] can execute, which is how GPipe micro-batch
+/// overlap is made visible to the discrete-event cost model: on a balanced
+/// partition with ideal links the simulated makespan equals the analytic
+/// `(m + S - 1) × bottleneck` bound exactly.
+pub fn pipeline_dfg(p: &Partition, m: usize, cfg: &PipeConfig)
+                    -> (Dfg, Vec<f64>, Vec<usize>) {
+    assert!(m >= 1);
+    let s = p.n_stages();
+    let inflate = microbatch_inflation(cfg, m);
+    let mut g = Dfg::new("pipeline-unrolled");
+    let mut times = Vec::with_capacity(s * m);
+    let mut stage_of = Vec::with_capacity(s * m);
+    for micro in 0..m {
+        for st in 0..s {
+            // Op id = micro * s + st (micro-batch-major insertion order).
+            let out_b = if st + 1 < s {
+                p.cut_bytes[st] / m as f64
+            } else {
+                0.0
+            };
+            let id = g.add_op(&format!("s{st}u{micro}"), 0.0, out_b, 0.0);
+            times.push(p.stage_times[st] * inflate / m as f64
+                       + cfg.kernel_overhead_s);
+            stage_of.push(st);
+            if st > 0 {
+                // Activations flow to the next stage, split m ways.
+                g.add_edge_bytes(id - 1, id, p.cut_bytes[st - 1] / m as f64);
+            }
+            if micro > 0 {
+                // In-order micro-batch schedule on each stage's device.
+                g.add_edge_bytes(id - s, id, 0.0);
+            }
+        }
+    }
+    (g, times, stage_of)
 }
 
 /// Best micro-batch count in [1, max_m]: returns (m, step_time, speedup).
@@ -338,5 +418,87 @@ mod tests {
         let p = partition_chain(&g, &t, 2).unwrap();
         assert_eq!(p.cut_bytes.len(), 1);
         assert!((p.cut_bytes[0] - 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn partition_stages_equals_chain_partition_on_chains() {
+        let (g, t) = chain(&[1.0, 3.0, 2.0, 1.0, 1.0]);
+        for stages in [1usize, 2, 3] {
+            let a = partition_chain(&g, &t, stages).unwrap();
+            let b = partition_stages(&g, &t, stages).unwrap();
+            assert_eq!(a.bounds, b.bounds);
+            assert_eq!(a.stage_times, b.stage_times);
+            assert_eq!(a.cut_bytes, b.cut_bytes);
+        }
+    }
+
+    #[test]
+    fn partition_stages_linearises_branchy_graphs() {
+        // Diamond a -> {b, c} -> d: partition_chain rejects it,
+        // partition_stages pipelines its topo linearisation and charges
+        // every boundary-crossing edge into cut_bytes.
+        let mut g = Dfg::new("d");
+        let a = g.add_op("a", 1.0, 4e6, 1.0);
+        let b = g.add_op("b", 1.0, 4e6, 1.0);
+        let c = g.add_op("c", 1.0, 4e6, 1.0);
+        let d = g.add_op("d", 1.0, 4e6, 1.0);
+        g.add_edge(a, b);
+        g.add_edge(a, c);
+        g.add_edge(b, d);
+        g.add_edge(c, d);
+        let times = [1.0, 2.0, 2.0, 1.0];
+        assert!(partition_chain(&g, &times, 2).is_err());
+        let p = partition_stages(&g, &times, 2).unwrap();
+        assert_eq!(p.n_stages(), 2);
+        let max = p.stage_times.iter().cloned().fold(0.0, f64::max);
+        assert!((max - 3.0).abs() < 1e-9, "balanced split, got {max}");
+        // The 2|2 split cuts exactly two of the four edges (a->first-half
+        // op's sibling and the sibling->d edge), 4 MB each.
+        assert_eq!(p.cut_bytes.len(), 1);
+        assert!((p.cut_bytes[0] - 8e6).abs() < 1.0, "{}", p.cut_bytes[0]);
+    }
+
+    #[test]
+    fn pipeline_dfg_matches_gpipe_time_under_ideal_links() {
+        use crate::cluster::dgx1;
+        use crate::sim::{simulate, SimConfig};
+        let (g, t) = chain(&[1.0, 1.0, 1.0, 1.0]);
+        let p = partition_chain(&g, &t, 2).unwrap();
+        let cfg = PipeConfig {
+            kernel_overhead_s: 0.0,
+            link_bandwidth: 1e18,
+            link_latency: 0.0,
+            mini_batch: 0,
+            saturation_batch: 0.0,
+        };
+        let hw = dgx1(2);
+        let devs = hw.devices();
+        for m in [1usize, 2, 4, 8] {
+            let (pdfg, ptimes, stage_of) = pipeline_dfg(&p, m, &cfg);
+            assert_eq!(pdfg.n_ops(), 2 * m);
+            let placement: Vec<usize> =
+                stage_of.iter().map(|&s| devs[s]).collect();
+            let r = simulate(&pdfg, &hw, &placement, &ptimes,
+                             SimConfig::ideal())
+                .unwrap();
+            let analytic = gpipe_time(&p, m, cfg);
+            // Identical up to the (tiny) NVLink transfer of the 1 MB / m
+            // boundary activations the analytic xfer term also carries.
+            assert!((r.makespan - analytic).abs() < 1e-3,
+                    "m={m}: sim {} vs analytic {analytic}", r.makespan);
+        }
+    }
+
+    #[test]
+    fn pipeline_dfg_schedule_is_legal_and_ordered() {
+        let (g, t) = chain(&[0.5, 1.0, 0.25, 0.25]);
+        let p = partition_chain(&g, &t, 2).unwrap();
+        let cfg = PipeConfig::default();
+        let (pdfg, ptimes, stage_of) = pipeline_dfg(&p, 4, &cfg);
+        assert_eq!(ptimes.len(), 8);
+        assert_eq!(stage_of, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+        // Ordering edges + data edges: (m-1)*s + (s-1)*m = 3*2 + 1*4.
+        assert_eq!(pdfg.edges.len(), 10);
+        assert!(pdfg.topo_order().is_ok());
     }
 }

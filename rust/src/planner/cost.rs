@@ -14,6 +14,13 @@
 //! BigLSTM, the transformer LM) are pipelined.  The choice is made
 //! structurally — a graph with any multi-successor vertex is "branchy" —
 //! not by matching model names.
+//!
+//! In addition to that structural default, every model exposes an
+//! *explicit* GPipe estimate via [`CostModel::pipelined_mp_step_time`]:
+//! branchy graphs are pipelined along their topological linearisation, so
+//! the planner can weigh `PipelinedHybrid` candidates (the pipelined
+//! ConvNet hybrids PaSE and the Oracle paper show winning at high device
+//! counts) against the placed ones instead of never seeing them.
 
 use anyhow::Result;
 
@@ -73,15 +80,34 @@ impl MpEstimate {
 }
 
 /// A pluggable predictor of strategy performance on a concrete topology.
-pub trait CostModel {
+///
+/// `Send + Sync` is part of the contract so one model can be shared across
+/// the worker threads of [`crate::planner::sweep`]; every implementation
+/// here is plain data (or interior-mutexed, for the sweep's memo cache).
+pub trait CostModel: Send + Sync {
     /// Short identifier ("analytical", "alpha-beta", "simulator").
     fn name(&self) -> &'static str;
 
     /// Per-step time of one worker executing `prof` under `m`-way model
-    /// parallelism on (the first `m` devices of) `hw`.  `m == 1` is the
+    /// parallelism on (the first `m` devices of) `hw`, using the paper's
+    /// Table 1 structural mechanism choice — DLPlacer partition for
+    /// branchy graphs, GPipe pipeline for chains.  `m == 1` is the
     /// single-device baseline.
     fn mp_step_time(&self, prof: &ModelProfile, hw: &HwGraph, m: usize)
                     -> Result<MpEstimate>;
+
+    /// Per-step time of one worker executing `prof` as a `stages`-stage
+    /// GPipe pipeline over (the first `stages` devices of) `hw`,
+    /// *regardless* of graph shape: branchy graphs are pipelined along
+    /// their topological linearisation
+    /// ([`crate::pipeline::partition_stages`]).  This is the estimate
+    /// behind the planner's
+    /// [`crate::coordinator::Strategy::PipelinedHybrid`] candidates — the
+    /// class of pipelined ConvNet hybrids (PaSE, the Oracle paper) that a
+    /// placement-only search misses.  `stages == 1` is the single-device
+    /// baseline.
+    fn pipelined_mp_step_time(&self, prof: &ModelProfile, hw: &HwGraph,
+                              stages: usize) -> Result<MpEstimate>;
 
     /// SE_N source for data parallelism over `hw`, given the per-worker
     /// compute time `step_compute_s` and the requested DP device budget
@@ -133,6 +159,16 @@ fn stage_link(hw: &HwGraph) -> (f64, f64) {
 
 /// The paper's analytical framework: DLPlacer / pipeline analytics for
 /// SU^M, perfect scaling efficiency (§4.3's conservative assumption).
+///
+/// **Validity domain** — closed-form Eq. 1–6 projections.  SE_N = 1 means
+/// DP communication is free, so DP-side predictions are *upper* bounds
+/// (the paper argues this minimises the projected hybrid benefit).  MP
+/// predictions assume fully-overlapped stage transfers and DLPlacer's
+/// idealised communication (paper §6 assumptions); against the
+/// discrete-event simulator they agree within ~15% on DGX-1-class
+/// topologies (the Fig. 8 tolerance, enforced by
+/// `tests/integration_planner.rs`).  Projections beyond the physical box
+/// are exact under the model, not measurements.
 #[derive(Clone, Debug)]
 pub struct AnalyticalCost {
     /// Sustained device throughput used to derive Δ(k) from FLOPs.
@@ -156,6 +192,40 @@ impl Default for AnalyticalCost {
 }
 
 impl AnalyticalCost {
+    /// Pipeline timing knobs for `prof` running on `hw`'s stage link.
+    fn pipe_cfg(&self, prof: &ModelProfile, hw: &HwGraph) -> PipeConfig {
+        let (bw, lat) = stage_link(hw);
+        PipeConfig {
+            mini_batch: prof.mini_batch,
+            saturation_batch: prof.pipe_saturation,
+            link_bandwidth: bw,
+            link_latency: lat,
+            ..Default::default()
+        }
+    }
+
+    /// Overlap-aware GPipe estimate: partition (any DAG, topo-linearised),
+    /// search the micro-batch count, report the analytic schedule time.
+    fn pipelined_estimate(&self, prof: &ModelProfile, hw: &HwGraph,
+                          stages: usize) -> Result<MpEstimate> {
+        let times = prof.dfg.op_times(self.flops_per_sec,
+                                      self.launch_overhead_s);
+        if stages <= 1 {
+            return Ok(MpEstimate::serial(times.iter().sum()));
+        }
+        let cfg = self.pipe_cfg(prof, hw);
+        let p = pipeline::partition_stages(&prof.dfg, &times, stages)?;
+        let (m, t, _su) =
+            pipeline::best_microbatches(&p, self.max_microbatches, cfg);
+        Ok(MpEstimate {
+            step_time_s: t,
+            mechanism: MpMechanism::Pipelined,
+            placement: None,
+            pipeline_bounds: Some(p.bounds),
+            microbatches: Some(m),
+        })
+    }
+
     fn estimate(&self, prof: &ModelProfile, hw: &HwGraph, m: usize)
                 -> Result<MpEstimate> {
         let times = prof.dfg.op_times(self.flops_per_sec,
@@ -165,23 +235,7 @@ impl AnalyticalCost {
             return Ok(MpEstimate::serial(serial));
         }
         if is_chain(prof) {
-            let (bw, lat) = stage_link(hw);
-            let cfg = PipeConfig {
-                mini_batch: prof.mini_batch,
-                saturation_batch: prof.pipe_saturation,
-                link_bandwidth: bw,
-                link_latency: lat,
-                ..Default::default()
-            };
-            let r = pipeline::pipeline_speedup(
-                &prof.dfg, &times, m, self.max_microbatches, cfg)?;
-            Ok(MpEstimate {
-                step_time_s: r.step_time,
-                mechanism: MpMechanism::Pipelined,
-                placement: None,
-                pipeline_bounds: Some(r.partition.bounds.clone()),
-                microbatches: Some(r.microbatches),
-            })
+            self.pipelined_estimate(prof, hw, m)
         } else {
             let opts = PlacerOptions {
                 max_devices: m,
@@ -207,6 +261,11 @@ impl CostModel for AnalyticalCost {
     fn mp_step_time(&self, prof: &ModelProfile, hw: &HwGraph, m: usize)
                     -> Result<MpEstimate> {
         self.estimate(prof, hw, m)
+    }
+
+    fn pipelined_mp_step_time(&self, prof: &ModelProfile, hw: &HwGraph,
+                              stages: usize) -> Result<MpEstimate> {
+        self.pipelined_estimate(prof, hw, stages)
     }
 
     fn scaling(&self, _prof: &ModelProfile, _hw: &HwGraph,
@@ -236,6 +295,13 @@ fn ring_beta_bw(hw: &HwGraph, devices: usize) -> f64 {
 
 /// Same MP analytics as [`AnalyticalCost`], but SE_N comes from the α-β
 /// ring all-reduce cost over the topology's actual bottleneck bandwidth.
+///
+/// **Validity domain** — inherits the analytical MP model (same
+/// tolerances); the SE_N term assumes a bandwidth-optimal chunked ring
+/// all-reduce, exact for rings that fit the physical box and conservative
+/// (InfiniBand bottleneck) once a projection spills across nodes.  It does
+/// not model overlap of gradient exchange with backprop, so SE_N is a
+/// lower bound for frameworks that overlap.
 #[derive(Clone, Debug)]
 pub struct AlphaBetaCost {
     pub inner: AnalyticalCost,
@@ -259,6 +325,11 @@ impl CostModel for AlphaBetaCost {
         self.inner.estimate(prof, hw, m)
     }
 
+    fn pipelined_mp_step_time(&self, prof: &ModelProfile, hw: &HwGraph,
+                              stages: usize) -> Result<MpEstimate> {
+        self.inner.pipelined_estimate(prof, hw, stages)
+    }
+
     fn scaling(&self, prof: &ModelProfile, hw: &HwGraph,
                step_compute_s: f64, devices: usize) -> ScalingEfficiency {
         ScalingEfficiency::RingAllReduce {
@@ -274,14 +345,26 @@ impl CostModel for AlphaBetaCost {
 // Discrete-event simulator ("silicon")
 // ==========================================================================
 
-/// Predicts MP step time by *executing* the placed DFG on the
-/// discrete-event simulator — link contention and per-transfer software
-/// overhead included (the effects the ILP ignores, Fig. 8).
+/// Predicts MP step time by *executing* the DFG on the discrete-event
+/// simulator — link contention and per-transfer software overhead included
+/// (the effects the ILP ignores, Fig. 8).
 ///
-/// Chains are placed (not pipelined): the simulator models one
-/// non-interleaved step, so GPipe micro-batch overlap is invisible to it.
-/// Use it to cross-check placed (branchy) graphs against the analytical
-/// prediction.
+/// Branchy graphs are placed (DLPlacer) and simulated as one step.  Chains
+/// — and any graph queried through [`CostModel::pipelined_mp_step_time`] —
+/// are unrolled into their stage × micro-batch GPipe schedule
+/// ([`crate::pipeline::pipeline_dfg`]) and *that* graph is simulated, so
+/// micro-batch overlap is fully visible to the discrete-event model and
+/// the analytic [`crate::pipeline::gpipe_time`] bound can be cross-checked
+/// against an executed schedule.
+///
+/// **Validity domain** — the most detailed model here: serialised link
+/// contention and per-transfer software overhead, but still simulation,
+/// not silicon.  On a balanced partition with ideal links the pipelined
+/// makespan equals the analytic `(m + S - 1) × bottleneck` bound exactly;
+/// with the default contention/overhead knobs it tracks the analytical
+/// model within ~15% (placed, Fig. 8 tolerance) / ~20% (pipelined) on
+/// DGX-class topologies.  Requires the topology to physically hold the
+/// requested stages/devices — it will not extrapolate past the box.
 #[derive(Clone, Debug)]
 pub struct SimulatorCost {
     /// Supplies Δ(k) derivation, placer options and the α-β SE model.
@@ -310,6 +393,11 @@ impl CostModel for SimulatorCost {
         if m <= 1 {
             return Ok(MpEstimate::serial(times.iter().sum()));
         }
+        if is_chain(prof) {
+            // Chains pipeline (Table 1); the unrolled GPipe DAG makes
+            // micro-batch overlap visible to the discrete-event model.
+            return self.pipelined_mp_step_time(prof, hw, m);
+        }
         let opts = PlacerOptions { max_devices: m, ..a.placer.clone() };
         let p = placer::place(&prof.dfg, hw, &times, &opts)?;
         let r = sim::simulate(&prof.dfg, hw, &p.assignment, &times,
@@ -320,6 +408,38 @@ impl CostModel for SimulatorCost {
             placement: Some(p.assignment),
             pipeline_bounds: None,
             microbatches: None,
+        })
+    }
+
+    fn pipelined_mp_step_time(&self, prof: &ModelProfile, hw: &HwGraph,
+                              stages: usize) -> Result<MpEstimate> {
+        let a = &self.inner.inner;
+        let times = prof.dfg.op_times(a.flops_per_sec, a.launch_overhead_s);
+        if stages <= 1 {
+            return Ok(MpEstimate::serial(times.iter().sum()));
+        }
+        let devs = hw.devices();
+        if devs.len() < stages {
+            anyhow::bail!(
+                "a {stages}-stage pipeline needs {stages} devices, \
+                 '{}' has {}", hw.name, devs.len());
+        }
+        let cfg = a.pipe_cfg(prof, hw);
+        let p = pipeline::partition_stages(&prof.dfg, &times, stages)?;
+        // Micro-batch count from the analytic search; the *time* from
+        // executing the unrolled schedule under contention + overhead.
+        let (m, _analytic, _su) =
+            pipeline::best_microbatches(&p, a.max_microbatches, cfg);
+        let (pdfg, ptimes, stage_of) = pipeline::pipeline_dfg(&p, m, &cfg);
+        let placement: Vec<usize> =
+            stage_of.iter().map(|&st| devs[st]).collect();
+        let r = sim::simulate(&pdfg, hw, &placement, &ptimes, self.sim)?;
+        Ok(MpEstimate {
+            step_time_s: r.makespan,
+            mechanism: MpMechanism::Pipelined,
+            placement: None,
+            pipeline_bounds: Some(p.bounds),
+            microbatches: Some(m),
         })
     }
 
@@ -392,6 +512,65 @@ mod tests {
         assert_eq!(cost_by_name("ring").unwrap().name(), "alpha-beta");
         assert_eq!(cost_by_name("sim").unwrap().name(), "simulator");
         assert!(cost_by_name("oracle").is_err());
+    }
+
+    #[test]
+    fn simulator_pipelines_chains_with_visible_overlap() {
+        // The fixed comment of record: GPipe micro-batch overlap used to be
+        // invisible to the discrete-event model (chains were placed); the
+        // unrolled schedule now executes for real and must beat serial.
+        let s = SimulatorCost::default();
+        let prof = models::gnmt(128);
+        let hw = cluster::dgx1_mem(2, cluster::V100_32G_MEM);
+        let serial = s.mp_step_time(&prof, &hw, 1).unwrap().step_time_s;
+        let est = s.mp_step_time(&prof, &hw, 2).unwrap();
+        assert_eq!(est.mechanism, MpMechanism::Pipelined);
+        assert!(est.microbatches.unwrap() >= 2);
+        assert!(est.pipeline_bounds.is_some());
+        assert!(est.step_time_s < serial,
+                "overlap must show: {} vs serial {serial}",
+                est.step_time_s);
+    }
+
+    #[test]
+    fn simulator_tracks_analytic_gpipe_bound() {
+        let a = AnalyticalCost::default();
+        let s = SimulatorCost::default();
+        let prof = models::gnmt(128);
+        let hw = cluster::dgx1_mem(2, cluster::V100_32G_MEM);
+        let ae = a.pipelined_mp_step_time(&prof, &hw, 2).unwrap();
+        let se = s.pipelined_mp_step_time(&prof, &hw, 2).unwrap();
+        assert_eq!(ae.microbatches, se.microbatches);
+        assert_eq!(ae.pipeline_bounds, se.pipeline_bounds);
+        let gap = (ae.step_time_s - se.step_time_s).abs() / se.step_time_s;
+        assert!(gap < 0.20,
+                "analytic {} vs simulated {} (gap {:.1}%)",
+                ae.step_time_s, se.step_time_s, gap * 100.0);
+    }
+
+    #[test]
+    fn branchy_graphs_get_explicit_pipelined_estimates() {
+        // Inception is placed by default, but the explicit pipelined
+        // estimate must exist (topo linearisation) for PipelinedHybrid
+        // candidates — and stay a *valid* pipeline (bounds monotone).
+        let c = AnalyticalCost::default();
+        let prof = models::inception_v3(32);
+        let hw = cluster::dgx1_mem(2, cluster::V100_32G_MEM);
+        let est = c.pipelined_mp_step_time(&prof, &hw, 2).unwrap();
+        assert_eq!(est.mechanism, MpMechanism::Pipelined);
+        let bounds = est.pipeline_bounds.unwrap();
+        assert_eq!(bounds.len(), 3);
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+        let serial = c.mp_step_time(&prof, &hw, 1).unwrap().step_time_s;
+        assert!(est.step_time_s < serial, "pipelining must help inception");
+    }
+
+    #[test]
+    fn simulator_rejects_pipelines_deeper_than_the_box() {
+        let s = SimulatorCost::default();
+        let prof = models::gnmt(128);
+        let hw = cluster::dgx1(2);
+        assert!(s.pipelined_mp_step_time(&prof, &hw, 4).is_err());
     }
 
     #[test]

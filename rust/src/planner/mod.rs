@@ -27,9 +27,20 @@
 //!   time, epochs-to-converge, end-to-end speedup curve, placement /
 //!   pipeline partition, per-candidate scorecard; round-trips through
 //!   [`crate::util::json`].
+//!
+//! The candidate space covers both of the paper's MP mechanisms *per
+//! degree*: the Table 1 structural default (DLPlacer placement for branchy
+//! graphs, GPipe pipeline for chains) and an explicit
+//! [`Strategy::PipelinedHybrid`] pipeline for every graph — so the
+//! pipelined ConvNet hybrids a placement-only search never sees compete on
+//! equal footing.  For grid evaluation over many
+//! `(model × topology × batch × strategy-family)` scenarios, use the
+//! work-sharing parallel [`sweep`] engine instead of calling
+//! [`Planner::plan`] in a loop.
 
 pub mod cost;
 pub mod registry;
+pub mod sweep;
 
 use std::collections::BTreeMap;
 
@@ -87,8 +98,15 @@ pub struct PlanRequest {
     /// Candidate model-parallel widths M (> 1); DP-only (M = 1) is always
     /// considered.  Degrees other than 2 are analysed (scorecard + curve)
     /// but the chosen strategy is restricted to the runtime-executable
-    /// M ∈ {1, 2} — the coordinator's hybrid is a 2-stage pipeline.
+    /// M ∈ {1, 2} — the coordinator executes 2-stage pipelines.  A degree
+    /// that is infeasible on the topology (more stages than ops or
+    /// physical devices) drops out of the search rather than failing it.
     pub mp_degrees: Vec<usize>,
+    /// Restrict M > 1 candidates to the pipelined mechanism (skip the
+    /// structural DLPlacer default).  This is the sweep engine's
+    /// "pipelined" strategy family; the default `false` scores both
+    /// mechanisms per degree and keeps the better one.
+    pub pipeline_only: bool,
     /// Upper bound of the speedup-curve sweep (powers of two).
     pub curve_max_devices: usize,
 }
@@ -102,6 +120,7 @@ impl PlanRequest {
             batch: None,
             objective: Objective::TimeToConverge,
             mp_degrees: vec![2],
+            pipeline_only: false,
             curve_max_devices: 256,
         }
     }
@@ -126,6 +145,11 @@ impl PlanRequest {
         self
     }
 
+    pub fn pipeline_only(mut self, only: bool) -> Self {
+        self.pipeline_only = only;
+        self
+    }
+
     pub fn curve_to(mut self, n: usize) -> Self {
         self.curve_max_devices = n;
         self
@@ -133,11 +157,17 @@ impl PlanRequest {
 }
 
 /// One strategy candidate's score at the requested device budget.
+///
+/// A degree M > 1 can appear twice: once under its structural-default
+/// mechanism and once as an explicit pipeline.  Rows are ordered best
+/// first per degree, so `find(|c| c.mp_degree == m)` returns the candidate
+/// that drives Eq. 5.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CandidateScore {
     /// M (1 = DP-only).
     pub mp_degree: usize,
-    /// SU^M — the M-way model-parallel step speedup of one worker.
+    /// SU^M — the M-way model-parallel step speedup of one worker under
+    /// this row's mechanism.
     pub su_m: f64,
     /// N_dp = devices / M (0 when M does not divide the budget).
     pub dp_workers: usize,
@@ -150,6 +180,16 @@ pub struct CandidateScore {
     /// End-to-end speedup vs 1 device (Eq. 3/5; None = infeasible).
     pub speedup: Option<f64>,
     pub feasible: bool,
+    /// "none" | "placed" | "pipelined".
+    pub mechanism: String,
+    /// Searched micro-batch count when pipelined.
+    pub microbatches: Option<usize>,
+    /// The strategy shape of this candidate at the requested budget
+    /// ([`Strategy::PipelinedHybrid`] for pipelined rows).  Only
+    /// meaningful when `feasible`: infeasible rows (M does not divide the
+    /// budget) carry `dp_workers`/`replicas` of 0, which
+    /// [`crate::coordinator::Coordinator::train`] rejects with an error.
+    pub strategy: Strategy,
     pub note: String,
 }
 
@@ -257,7 +297,23 @@ impl Planner {
         self.cost.as_ref()
     }
 
-    /// Run the strategy search.
+    /// Run the strategy search: score DP-only (Eq. 3) against every
+    /// requested hybrid degree (Eq. 5) — placed and pipelined mechanisms
+    /// both — under the Eq. 1 time-to-converge objective, and return the
+    /// typed [`Plan`].
+    ///
+    /// ```
+    /// use hybridpar::planner::{PlanRequest, Planner};
+    ///
+    /// let planner = Planner::new(); // Eq. 1–6 analytical cost model
+    /// let plan = planner
+    ///     .plan(&PlanRequest::new("gnmt", "dgx1").devices(8))
+    ///     .unwrap();
+    /// assert_eq!(plan.mp_degree, 1, "DP-only wins at small scale (Eq. 6)");
+    /// // Every M > 1 candidate was still scored — GNMT's chain DFG makes
+    /// // them PipelinedHybrid candidates in the scorecard.
+    /// assert!(plan.scorecard.iter().any(|c| c.mechanism == "pipelined"));
+    /// ```
     pub fn plan(&self, req: &PlanRequest) -> Result<Plan> {
         if req.devices == 0 {
             bail!("device budget must be >= 1");
@@ -275,15 +331,57 @@ impl Planner {
         degrees.sort_unstable();
         degrees.dedup();
 
-        // Per-degree worker estimates from the cost model.
+        // Per-degree worker estimates from the cost model.  Each M > 1 is
+        // scored under its Table 1 structural default (placed / pipelined)
+        // AND as an explicit GPipe pipeline over the topo linearisation;
+        // the faster one drives Eq. 5 and the runner-up stays in the
+        // scorecard.  `pipeline_only` requests skip the structural default.
         let serial = self.cost.mp_step_time(&prof, &hw, 1)?.step_time_s;
         let mut estimates: BTreeMap<usize, MpEstimate> = BTreeMap::new();
+        let mut alt_estimates: BTreeMap<usize, MpEstimate> = BTreeMap::new();
         let mut mp_speedups: Vec<(usize, f64)> = Vec::new();
+        // A degree whose estimation is infeasible on this topology (more
+        // stages than ops or physical devices) drops out of the search
+        // instead of failing the plan — M > 1 candidates are analysis
+        // material, and the M = 1 baseline above still surfaces real cost
+        // model failures.
         for &m in &degrees {
-            let est = self.cost.mp_step_time(&prof, &hw, m)?;
-            mp_speedups.push((m, serial / est.step_time_s));
-            estimates.insert(m, est);
+            let default = if req.pipeline_only {
+                None
+            } else {
+                self.cost.mp_step_time(&prof, &hw, m).ok()
+            };
+            let (best, alt) = match default {
+                // The structural default *is* the pipeline: one candidate.
+                Some(d) if d.mechanism == MpMechanism::Pipelined => {
+                    (d, None)
+                }
+                Some(d) => {
+                    match self.cost.pipelined_mp_step_time(&prof, &hw, m) {
+                        Ok(p) if p.step_time_s < d.step_time_s => {
+                            (p, Some(d))
+                        }
+                        Ok(p) => (d, Some(p)),
+                        Err(_) => (d, None),
+                    }
+                }
+                // pipeline_only, or the structural default itself was
+                // infeasible: the explicit pipeline is the only candidate.
+                None => {
+                    match self.cost.pipelined_mp_step_time(&prof, &hw, m) {
+                        Ok(p) => (p, None),
+                        Err(_) => continue,
+                    }
+                }
+            };
+            mp_speedups.push((m, serial / best.step_time_s));
+            estimates.insert(m, best);
+            if let Some(a) = alt {
+                alt_estimates.insert(m, a);
+            }
         }
+        // Degrees that survived estimation (pipeline-only may drop some).
+        let degrees: Vec<usize> = estimates.keys().copied().collect();
         let se = self.cost.scaling(&prof, &hw, serial, req.devices);
         let net = NetworkModel {
             name: prof.name.clone(),
@@ -293,14 +391,12 @@ impl Planner {
             mp_speedups,
         };
 
-        let all_ms: Vec<usize> =
-            std::iter::once(1).chain(degrees.iter().copied()).collect();
-
-        // Runtime-executable MP widths: [`Strategy::Hybrid`] is the
-        // coordinator's 2-stage pipeline, so only M ∈ {1, 2} maps onto a
-        // runnable strategy.  Wider requested degrees still appear in the
-        // scorecard and speedup curve for analysis, but the *chosen*
-        // strategy is restricted to what the runtime can execute.
+        // Runtime-executable MP widths: the coordinator executes 2-stage
+        // pipelines ([`Strategy::Hybrid`] / [`Strategy::PipelinedHybrid`]
+        // with `stages == 2`), so only M ∈ {1, 2} maps onto a runnable
+        // strategy.  Wider requested degrees still appear in the scorecard
+        // and speedup curve for analysis, but the *chosen* strategy is
+        // restricted to what the runtime can execute.
         let exec_net = NetworkModel {
             mp_speedups: net
                 .mp_speedups
@@ -360,21 +456,28 @@ impl Planner {
             Strategy::DataParallel { workers: devices_used,
                                      delayed_factor: 1 }
         } else {
-            Strategy::Hybrid {
-                dp_workers: n_dp,
-                // Pipelined estimates carry their searched micro-batch
-                // count; placed (DLPlacer) estimates don't, and a 1-micro-
-                // batch runtime pipeline is degenerate — default to 2.
-                microbatches: chosen_est
-                    .and_then(|e| e.microbatches)
-                    .unwrap_or(2),
+            // Pipelined estimates carry their searched micro-batch count;
+            // placed (DLPlacer) estimates don't, and a 1-micro-batch
+            // runtime pipeline is degenerate — default to 2.
+            let microbatches =
+                chosen_est.and_then(|e| e.microbatches).unwrap_or(2);
+            if mechanism == MpMechanism::Pipelined {
+                Strategy::PipelinedHybrid {
+                    stages: chosen_m,
+                    microbatches,
+                    replicas: n_dp,
+                }
+            } else {
+                Strategy::Hybrid { dp_workers: n_dp, microbatches }
             }
         };
 
         // --- scorecard ---------------------------------------------------
+        // One row per (degree, mechanism): best mechanism first per degree
+        // (it is the one Eq. 5 used), the runner-up after it for analysis.
         let mut scorecard = Vec::new();
-        for &m in &all_ms {
-            let su_m = net.su_m(m).unwrap_or(1.0);
+        let mut push_row = |m: usize, su_row: f64,
+                            est: Option<&MpEstimate>| {
             let divides = req.devices % m == 0;
             let nd = if divides { req.devices / m } else { 0 };
             let b = nd * prof.mini_batch;
@@ -385,12 +488,36 @@ impl Planner {
             } else if m == 1 {
                 net.su_dp(req.devices)
             } else {
-                net.su_hybrid(req.devices, m)
+                // Eq. 5 with this row's own SU^M (the runner-up mechanism
+                // scores lower than `net.su_hybrid` by construction).
+                net.epochs
+                    .efficiency_ratio(b as f64)
+                    .map(|r| su_row * net.se.at(nd) * nd as f64 * r)
             };
             let step_time_s = if divides {
-                Some((serial / su_m) / net.se.at(nd).max(1e-12))
+                Some((serial / su_row) / net.se.at(nd).max(1e-12))
             } else {
                 None
+            };
+            let row_mechanism =
+                est.map(|e| e.mechanism).unwrap_or(MpMechanism::None);
+            let microbatches = est.and_then(|e| e.microbatches);
+            let strategy = if m == 1 {
+                if req.devices == 1 {
+                    Strategy::Single
+                } else {
+                    Strategy::DataParallel { workers: req.devices,
+                                             delayed_factor: 1 }
+                }
+            } else if row_mechanism == MpMechanism::Pipelined {
+                Strategy::PipelinedHybrid {
+                    stages: m,
+                    microbatches: microbatches.unwrap_or(2),
+                    replicas: nd,
+                }
+            } else {
+                Strategy::Hybrid { dp_workers: nd,
+                                   microbatches: microbatches.unwrap_or(2) }
             };
             let note = if !divides {
                 format!("M={m} does not divide the {}-device budget",
@@ -402,15 +529,25 @@ impl Planner {
             };
             scorecard.push(CandidateScore {
                 mp_degree: m,
-                su_m,
+                su_m: su_row,
                 dp_workers: nd,
                 global_batch: b,
                 epochs,
                 step_time_s,
                 speedup,
                 feasible: speedup.is_some(),
+                mechanism: row_mechanism.as_str().to_string(),
+                microbatches,
+                strategy,
                 note,
             });
+        };
+        push_row(1, 1.0, None);
+        for (&m, best) in &estimates {
+            push_row(m, serial / best.step_time_s, Some(best));
+            if let Some(alt) = alt_estimates.get(&m) {
+                push_row(m, serial / alt.step_time_s, Some(alt));
+            }
         }
 
         // --- end-to-end speedup curve ------------------------------------
@@ -492,7 +629,7 @@ fn jounum(x: Option<usize>) -> Json {
     x.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null)
 }
 
-fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+pub(crate) fn jobj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
@@ -519,27 +656,37 @@ fn opt_usize_arr(j: &Json, key: &str) -> Result<Option<Vec<usize>>> {
     }
 }
 
-/// Serialise a [`Strategy`] to a tagged JSON object.
+/// Serialise a [`Strategy`] to a tagged JSON object (the tag is
+/// [`Strategy::kind`], shared with the sweep CSV).
 pub fn strategy_to_json(s: &Strategy) -> Json {
+    let kind = Json::Str(s.kind().into());
     match *s {
-        Strategy::Single => jobj(vec![("kind", Json::Str("single".into()))]),
+        Strategy::Single => jobj(vec![("kind", kind)]),
         Strategy::DataParallel { workers, delayed_factor } => jobj(vec![
-            ("kind", Json::Str("data-parallel".into())),
+            ("kind", kind),
             ("workers", junum(workers)),
             ("delayed_factor", junum(delayed_factor)),
         ]),
         Strategy::Hybrid { dp_workers, microbatches } => jobj(vec![
-            ("kind", Json::Str("hybrid".into())),
+            ("kind", kind),
             ("dp_workers", junum(dp_workers)),
             ("microbatches", junum(microbatches)),
         ]),
+        Strategy::PipelinedHybrid { stages, microbatches, replicas } => {
+            jobj(vec![
+                ("kind", kind),
+                ("stages", junum(stages)),
+                ("microbatches", junum(microbatches)),
+                ("replicas", junum(replicas)),
+            ])
+        }
         Strategy::AsyncPs { workers, staleness } => jobj(vec![
-            ("kind", Json::Str("async-ps".into())),
+            ("kind", kind),
             ("workers", junum(workers)),
             ("staleness", junum(staleness)),
         ]),
         Strategy::LocalSgd { workers, sync_every } => jobj(vec![
-            ("kind", Json::Str("local-sgd".into())),
+            ("kind", kind),
             ("workers", junum(workers)),
             ("sync_every", junum(sync_every)),
         ]),
@@ -558,6 +705,11 @@ pub fn strategy_from_json(j: &Json) -> Result<Strategy> {
         "hybrid" => Strategy::Hybrid {
             dp_workers: j.get("dp_workers")?.as_usize()?,
             microbatches: j.get("microbatches")?.as_usize()?,
+        },
+        "pipelined-hybrid" => Strategy::PipelinedHybrid {
+            stages: j.get("stages")?.as_usize()?,
+            microbatches: j.get("microbatches")?.as_usize()?,
+            replicas: j.get("replicas")?.as_usize()?,
         },
         "async-ps" => Strategy::AsyncPs {
             workers: j.get("workers")?.as_usize()?,
@@ -582,6 +734,9 @@ impl CandidateScore {
             ("step_time_s", jonum(self.step_time_s)),
             ("speedup", jonum(self.speedup)),
             ("feasible", Json::Bool(self.feasible)),
+            ("mechanism", Json::Str(self.mechanism.clone())),
+            ("microbatches", jounum(self.microbatches)),
+            ("strategy", strategy_to_json(&self.strategy)),
             ("note", Json::Str(self.note.clone())),
         ])
     }
@@ -596,6 +751,9 @@ impl CandidateScore {
             step_time_s: opt_f64(j, "step_time_s")?,
             speedup: opt_f64(j, "speedup")?,
             feasible: matches!(j.get("feasible")?, Json::Bool(true)),
+            mechanism: j.get("mechanism")?.as_str()?.to_string(),
+            microbatches: opt_usize(j, "microbatches")?,
+            strategy: strategy_from_json(j.get("strategy")?)?,
             note: j.get("note")?.as_str()?.to_string(),
         })
     }
@@ -769,10 +927,102 @@ mod tests {
             .unwrap();
         assert_eq!(plan.mp_degree, 2, "paper: hybrid wins at 256 GPUs");
         assert!(matches!(plan.strategy,
-                         Strategy::Hybrid { dp_workers: 128, .. }));
+                         Strategy::PipelinedHybrid { stages: 2,
+                                                     replicas: 128, .. }),
+                "chain MP is the runtime-executable 2-stage pipeline: {:?}",
+                plan.strategy);
         assert_eq!(plan.mechanism, "pipelined");
         assert!(plan.pipeline_bounds.is_some());
         assert!(plan.crossover_devices.is_some());
+    }
+
+    #[test]
+    fn scorecard_considers_pipelined_hybrids_for_every_paper_network() {
+        // The acceptance bar of the pipelined-search change: branchy
+        // Inception included, every paper network's plan weighs at least
+        // one PipelinedHybrid candidate.
+        let planner = Planner::new();
+        for model in ["inception-v3", "gnmt", "biglstm"] {
+            let plan = planner
+                .plan(&PlanRequest::new(model, "dgx1").devices(8))
+                .unwrap();
+            let pipelined: Vec<&CandidateScore> = plan
+                .scorecard
+                .iter()
+                .filter(|c| matches!(c.strategy,
+                                     Strategy::PipelinedHybrid { .. }))
+                .collect();
+            assert!(!pipelined.is_empty(),
+                    "{model}: no PipelinedHybrid candidate in scorecard");
+            for c in pipelined {
+                assert_eq!(c.mechanism, "pipelined");
+                assert!(c.microbatches.unwrap_or(0) >= 1);
+                assert!(c.su_m > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_only_requests_skip_the_placer() {
+        let planner = Planner::new();
+        let plan = planner
+            .plan(&PlanRequest::new("inception-v3", "dgx1")
+                .devices(8)
+                .pipeline_only(true))
+            .unwrap();
+        for c in plan.scorecard.iter().filter(|c| c.mp_degree > 1) {
+            assert_eq!(c.mechanism, "pipelined",
+                       "pipeline_only must not place: {c:?}");
+        }
+    }
+
+    #[test]
+    fn infeasible_degrees_drop_out_instead_of_failing() {
+        // GNMT has 11 ops: a 64-stage pipeline cannot exist.  Any search
+        // mode must keep the valid M=2 candidate and drop M=64, not error
+        // out — including the simulator, which refuses pipelines deeper
+        // than the physical box.
+        for (pipeline_only, cost) in [
+            (true, None),
+            (false, None),
+            (false, Some(cost_by_name("simulator").unwrap())),
+        ] {
+            let planner = match cost {
+                Some(c) => Planner::with_cost(c),
+                None => Planner::new(),
+            };
+            let plan = planner
+                .plan(&PlanRequest::new("gnmt", "dgx1")
+                    .devices(8)
+                    .mp_degrees(&[2, 64])
+                    .pipeline_only(pipeline_only))
+                .unwrap();
+            assert!(plan.scorecard.iter().any(|c| c.mp_degree == 2),
+                    "pipeline_only={pipeline_only}");
+            assert!(plan.scorecard.iter().all(|c| c.mp_degree != 64),
+                    "pipeline_only={pipeline_only}");
+        }
+    }
+
+    #[test]
+    fn best_mechanism_leads_each_degree_in_the_scorecard() {
+        // When both mechanisms are scored for a degree, the first row is
+        // the one Eq. 5 used — i.e. the lower per-worker step time / the
+        // higher SU^M.
+        let planner = Planner::new();
+        let plan = planner
+            .plan(&PlanRequest::new("inception-v3", "dgx1").devices(8))
+            .unwrap();
+        let rows: Vec<&CandidateScore> = plan
+            .scorecard
+            .iter()
+            .filter(|c| c.mp_degree == 2)
+            .collect();
+        assert_eq!(rows.len(), 2,
+                   "branchy graph: placed + pipelined rows expected");
+        assert!(rows[0].su_m >= rows[1].su_m,
+                "best-first ordering violated: {} < {}",
+                rows[0].su_m, rows[1].su_m);
     }
 
     #[test]
@@ -827,6 +1077,8 @@ mod tests {
             Strategy::Single,
             Strategy::DataParallel { workers: 8, delayed_factor: 2 },
             Strategy::Hybrid { dp_workers: 4, microbatches: 8 },
+            Strategy::PipelinedHybrid { stages: 4, microbatches: 8,
+                                        replicas: 16 },
             Strategy::AsyncPs { workers: 3, staleness: 2 },
             Strategy::LocalSgd { workers: 4, sync_every: 16 },
         ] {

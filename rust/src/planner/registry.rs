@@ -10,6 +10,11 @@
 //!
 //! Both registries are extensible at runtime so downstream users can add
 //! their own networks/clusters without forking the crate.
+//!
+//! The registries are also the name resolution layer for the sweep
+//! engine: every `models` / `topologies` axis entry of a
+//! [`crate::planner::sweep::SweepSpec`] resolves here, so an unknown name
+//! surfaces as a per-scenario error listing the catalog.
 
 use anyhow::{bail, Result};
 
@@ -93,6 +98,13 @@ impl ModelRegistry {
             .iter()
             .rev()
             .find(|e| e.name == name || e.aliases.contains(&name))
+    }
+
+    /// Canonical name for `name` (resolving aliases), if registered.
+    /// Lets callers key per-model tables off one spelling instead of
+    /// re-implementing alias matching (see `sweep::BatchSpec::Paper`).
+    pub fn canonical_name(&self, name: &str) -> Option<&'static str> {
+        self.find(name).map(|e| e.name)
     }
 
     /// Default mini-batch for a registered model.
@@ -228,6 +240,15 @@ mod tests {
         assert_eq!(r.build("biglstm", None).unwrap().mini_batch, 64);
         assert_eq!(r.build("transformer", None).unwrap().name,
                    "transformer-lm");
+    }
+
+    #[test]
+    fn canonical_name_resolves_aliases() {
+        let r = ModelRegistry::builtin();
+        assert_eq!(r.canonical_name("inception"), Some("inception-v3"));
+        assert_eq!(r.canonical_name("inception-v3"), Some("inception-v3"));
+        assert_eq!(r.canonical_name("big-lstm"), Some("biglstm"));
+        assert_eq!(r.canonical_name("alexnet"), None);
     }
 
     #[test]

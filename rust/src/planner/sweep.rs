@@ -1,0 +1,729 @@
+//! Parallel scenario sweep engine: evaluate a
+//! `(model × topology × device-budget × global-batch × strategy-family)`
+//! grid of planner queries across worker threads.
+//!
+//! The ROADMAP's scenario-diversity goal does not fit one
+//! [`Planner::plan`] call at a time: the fig3/fig5 grids alone are dozens
+//! of `(model, topology, batch)` points, and every point re-derives the
+//! same SU^M (Eq. 5) inputs.  This module adds
+//!
+//! * [`parallel_map`] — a work-sharing `std::thread` pool (scoped threads +
+//!   an atomic work index + a channel) with **deterministic ordering**:
+//!   results land by input index, so `threads = N` produces byte-identical
+//!   output to `threads = 1`;
+//! * a memoising [`CostModel`] wrapper, so per-candidate cost evaluations
+//!   (one DLPlacer ILP or GPipe search per `(model, batch, topology, M)`)
+//!   run once per grid, not once per scenario;
+//! * [`SweepSpec`] / [`run_sweep`] — the typed grid description and its
+//!   evaluator, returning a [`SweepResult`] that serialises to JSON
+//!   ([`SweepResult::to_json`]) and CSV ([`SweepResult::to_csv`]).
+//!
+//! Exposed on the CLI as the `sweep` subcommand and configurable through
+//! the `[sweep]` section of a run config.
+//!
+//! ```
+//! use hybridpar::planner::sweep::{run_sweep, StrategyFamily, SweepSpec};
+//!
+//! let spec = SweepSpec {
+//!     models: vec!["gnmt".into()],
+//!     devices: vec![8],
+//!     families: vec![StrategyFamily::DpOnly],
+//!     curve_max_devices: 8,
+//!     threads: 1,
+//!     ..Default::default()
+//! };
+//! let result = run_sweep(&spec).unwrap();
+//! assert_eq!(result.len(), 1);
+//! assert_eq!(result.results[0].plan.as_ref().unwrap().mp_degree, 1);
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::cost::{cost_by_name, CostModel, MpEstimate};
+use crate::cluster::HwGraph;
+use crate::models::ModelProfile;
+use crate::parallel::ScalingEfficiency;
+use crate::util::json::Json;
+
+use super::{jobj, Objective, Plan, PlanRequest, Planner};
+
+// ==========================================================================
+// Work-sharing parallel evaluator
+// ==========================================================================
+
+/// Number of workers actually used for `requested` threads over `items`
+/// work items (0 = one per available core, always clamped to the item
+/// count and at least 1).
+pub fn effective_threads(requested: usize, items: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let t = if requested == 0 { hw } else { requested };
+    t.clamp(1, items.max(1))
+}
+
+/// Evaluate `f(i, &items[i])` for every item on a pool of scoped worker
+/// threads and return the results **in input order** — the scheduling is
+/// dynamic (workers pull the next index from a shared atomic counter, so a
+/// slow scenario does not idle the other workers), but the output is
+/// independent of thread count and interleaving.  `threads == 0` uses one
+/// worker per available core; `threads == 1` degenerates to a plain serial
+/// map with no thread machinery at all.
+pub fn parallel_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n_workers = effective_threads(threads, items.len());
+    if n_workers <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let mut slots: Vec<Option<R>> = Vec::new();
+    slots.resize_with(items.len(), || None);
+    std::thread::scope(|scope| {
+        for _ in 0..n_workers {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                if tx.send((i, r)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, r) in rx.iter() {
+            slots[i] = Some(r);
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("sweep worker exited before finishing its items"))
+        .collect()
+}
+
+// ==========================================================================
+// Memoising cost model
+// ==========================================================================
+
+/// Cache key for one per-candidate cost evaluation: the profile identity
+/// (name + mini-batch), the hardware identity (name + device count), the
+/// mechanism family (structural default vs explicit pipeline) and M.
+type MemoKey = (String, usize, String, usize, bool, usize);
+
+/// A memoised evaluation outcome (errors stringified so the cell clones).
+type StoredEstimate = std::result::Result<MpEstimate, String>;
+
+/// Transparent memoising wrapper: identical `(model, batch, topology, M)`
+/// candidate evaluations — the expensive DLPlacer ILPs and GPipe
+/// micro-batch searches — are computed once per sweep and shared across
+/// scenarios and worker threads.  Each key owns a [`OnceLock`] cell, so
+/// concurrent workers missing on the same key block on one computation
+/// instead of duplicating it; the map lock itself is only held for the
+/// cheap entry lookup.  Results are bit-identical to the inner model's
+/// (the inner evaluation is deterministic), so memoisation cannot perturb
+/// sweep output.
+struct MemoCost {
+    inner: Arc<dyn CostModel>,
+    cache: Mutex<HashMap<MemoKey, Arc<OnceLock<StoredEstimate>>>>,
+}
+
+impl MemoCost {
+    fn new(inner: Arc<dyn CostModel>) -> Self {
+        MemoCost { inner, cache: Mutex::new(HashMap::new()) }
+    }
+
+    fn cached<F>(&self, pipelined: bool, prof: &ModelProfile, hw: &HwGraph,
+                 m: usize, compute: F) -> Result<MpEstimate>
+    where
+        F: FnOnce() -> Result<MpEstimate>,
+    {
+        let key = (prof.name.clone(), prof.mini_batch, hw.name.clone(),
+                   hw.n_devices(), pipelined, m);
+        let cell = self
+            .cache
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| Arc::new(OnceLock::new()))
+            .clone();
+        cell.get_or_init(|| match compute() {
+            Ok(v) => Ok(v),
+            Err(e) => Err(format!("{e:#}")),
+        })
+        .clone()
+        .map_err(|e| anyhow!(e))
+    }
+}
+
+impl CostModel for MemoCost {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn mp_step_time(&self, prof: &ModelProfile, hw: &HwGraph, m: usize)
+                    -> Result<MpEstimate> {
+        self.cached(false, prof, hw, m,
+                    || self.inner.mp_step_time(prof, hw, m))
+    }
+
+    fn pipelined_mp_step_time(&self, prof: &ModelProfile, hw: &HwGraph,
+                              stages: usize) -> Result<MpEstimate> {
+        self.cached(true, prof, hw, stages,
+                    || self.inner.pipelined_mp_step_time(prof, hw, stages))
+    }
+
+    fn scaling(&self, prof: &ModelProfile, hw: &HwGraph,
+               step_compute_s: f64, devices: usize) -> ScalingEfficiency {
+        self.inner.scaling(prof, hw, step_compute_s, devices)
+    }
+}
+
+// ==========================================================================
+// Grid description
+// ==========================================================================
+
+/// One axis value of the global-batch dimension.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BatchSpec {
+    /// The registry's per-model default mini-batch.
+    Default,
+    /// A fixed per-device mini-batch for every model.
+    Fixed(usize),
+    /// The paper's §4.2 epoch-count-methodology mini-batches (Inception-V3
+    /// 64, GNMT 128, BigLSTM 64); other models fall back to their registry
+    /// default.  This is the fig5 grid's batch axis.
+    Paper,
+}
+
+impl BatchSpec {
+    /// Parse an axis entry: `"default"`, `"paper"`, or an integer.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "default" => BatchSpec::Default,
+            "paper" => BatchSpec::Paper,
+            n => BatchSpec::Fixed(n.parse::<usize>().map_err(|_| {
+                anyhow!("bad batch spec '{n}' \
+                         (expected 'default', 'paper' or an integer)")
+            })?),
+        })
+    }
+
+    /// The per-device mini-batch override for `model` (None = registry
+    /// default).  `model` is the *canonical* registry name — callers
+    /// resolve aliases via
+    /// [`ModelRegistry::canonical_name`](super::ModelRegistry::canonical_name)
+    /// first (as [`run_sweep`] does), so the paper table is keyed off one
+    /// spelling instead of mirroring the registry's alias lists.
+    pub fn resolve(&self, model: &str) -> Option<usize> {
+        match self {
+            BatchSpec::Default => None,
+            BatchSpec::Fixed(b) => Some(*b),
+            BatchSpec::Paper => match model {
+                "inception-v3" => Some(64),
+                "gnmt" => Some(128),
+                "biglstm" => Some(64),
+                _ => None,
+            },
+        }
+    }
+
+    /// Stable axis label for JSON/CSV output.
+    pub fn label(&self) -> String {
+        match self {
+            BatchSpec::Default => "default".into(),
+            BatchSpec::Fixed(b) => b.to_string(),
+            BatchSpec::Paper => "paper".into(),
+        }
+    }
+}
+
+/// The strategy-family axis: which slice of the candidate space a scenario
+/// searches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyFamily {
+    /// DP-only (M = 1): no model-parallel candidates at all.
+    DpOnly,
+    /// The full hybrid search: structural-default mechanisms (Table 1)
+    /// *and* explicit pipelines per degree, best one wins.
+    Hybrid,
+    /// Pipelined hybrids only — every M > 1 candidate is a GPipe pipeline,
+    /// the DLPlacer mechanism is skipped.
+    Pipelined,
+}
+
+impl StrategyFamily {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StrategyFamily::DpOnly => "dp",
+            StrategyFamily::Hybrid => "hybrid",
+            StrategyFamily::Pipelined => "pipelined",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "dp" | "dp-only" | "data-parallel" => StrategyFamily::DpOnly,
+            "hybrid" | "all" => StrategyFamily::Hybrid,
+            "pipelined" | "pipeline" => StrategyFamily::Pipelined,
+            other => bail!("unknown strategy family '{other}' \
+                            (known: dp, hybrid, pipelined)"),
+        })
+    }
+}
+
+/// The sweep grid: the cartesian product of every axis, evaluated under
+/// one objective and one cost model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepSpec {
+    pub models: Vec<String>,
+    pub topologies: Vec<String>,
+    /// Device budgets N (projections past the physical box allowed).
+    pub devices: Vec<usize>,
+    pub batches: Vec<BatchSpec>,
+    pub families: Vec<StrategyFamily>,
+    /// Candidate MP degrees for the hybrid/pipelined families.
+    pub mp_degrees: Vec<usize>,
+    pub objective: Objective,
+    /// Resolved per worker via [`cost_by_name`].
+    pub cost_model: String,
+    pub curve_max_devices: usize,
+    /// Worker threads (0 = one per available core).
+    pub threads: usize,
+}
+
+impl Default for SweepSpec {
+    /// The paper's evaluation grid: three networks on the DGX-1 at the
+    /// Fig. 5 budgets, all three strategy families.
+    fn default() -> Self {
+        SweepSpec {
+            models: vec!["inception-v3".into(), "gnmt".into(),
+                         "biglstm".into()],
+            topologies: vec!["dgx1".into()],
+            devices: vec![8, 64, 256],
+            batches: vec![BatchSpec::Default],
+            families: vec![StrategyFamily::DpOnly, StrategyFamily::Hybrid,
+                           StrategyFamily::Pipelined],
+            mp_degrees: vec![2],
+            objective: Objective::TimeToConverge,
+            cost_model: "analytical".into(),
+            curve_max_devices: 256,
+            threads: 0,
+        }
+    }
+}
+
+/// One grid point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub model: String,
+    pub topology: String,
+    pub devices: usize,
+    pub batch: BatchSpec,
+    pub family: StrategyFamily,
+}
+
+impl SweepSpec {
+    /// Enumerate the grid in its canonical (model-major) order — the order
+    /// results are reported in, independent of thread count.
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        let mut out = Vec::new();
+        for model in &self.models {
+            for topology in &self.topologies {
+                for &devices in &self.devices {
+                    for batch in &self.batches {
+                        for &family in &self.families {
+                            out.push(Scenario {
+                                model: model.clone(),
+                                topology: topology.clone(),
+                                devices,
+                                batch: batch.clone(),
+                                family,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (axis, empty) in [
+            ("models", self.models.is_empty()),
+            ("topologies", self.topologies.is_empty()),
+            ("devices", self.devices.is_empty()),
+            ("batches", self.batches.is_empty()),
+            ("families", self.families.is_empty()),
+        ] {
+            if empty {
+                bail!("sweep axis '{axis}' is empty");
+            }
+        }
+        Ok(())
+    }
+}
+
+// ==========================================================================
+// Evaluation
+// ==========================================================================
+
+/// One evaluated grid point: the scenario plus either its [`Plan`] or the
+/// planner's error (an infeasible point is a result, not a sweep failure).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioResult {
+    pub scenario: Scenario,
+    pub plan: Option<Plan>,
+    pub error: Option<String>,
+}
+
+/// The evaluated grid, in canonical scenario order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepResult {
+    pub results: Vec<ScenarioResult>,
+}
+
+fn plan_request(planner: &Planner, spec: &SweepSpec, sc: &Scenario)
+                -> PlanRequest {
+    let mut req = PlanRequest::new(&sc.model, &sc.topology)
+        .devices(sc.devices)
+        .objective(spec.objective)
+        .curve_to(spec.curve_max_devices);
+    match sc.family {
+        StrategyFamily::DpOnly => req = req.mp_degrees(&[]),
+        StrategyFamily::Hybrid => req = req.mp_degrees(&spec.mp_degrees),
+        StrategyFamily::Pipelined => {
+            req = req.mp_degrees(&spec.mp_degrees).pipeline_only(true);
+        }
+    }
+    // Batch tables are keyed off canonical model names; aliases resolve
+    // through the registry (unknown models keep their spelling and fail
+    // in the planner with the catalog listing).
+    let canonical = planner
+        .models()
+        .canonical_name(&sc.model)
+        .unwrap_or(&sc.model);
+    if let Some(b) = sc.batch.resolve(canonical) {
+        req = req.batch(b);
+    }
+    req
+}
+
+/// Evaluate the grid.  Scenario errors (unknown model, infeasible point)
+/// are captured per result; only a malformed spec fails the sweep itself.
+pub fn run_sweep(spec: &SweepSpec) -> Result<SweepResult> {
+    spec.validate()?;
+    let cost: Arc<dyn CostModel> = Arc::from(cost_by_name(&spec.cost_model)?);
+    let planner = Planner::with_cost(Box::new(MemoCost::new(cost)));
+    let scenarios = spec.scenarios();
+    let results = parallel_map(spec.threads, &scenarios, |_, sc| {
+        match planner.plan(&plan_request(&planner, spec, sc)) {
+            Ok(plan) => (Some(plan), None),
+            Err(e) => (None, Some(format!("{e:#}"))),
+        }
+    });
+    Ok(SweepResult {
+        results: scenarios
+            .into_iter()
+            .zip(results)
+            .map(|(scenario, (plan, error))| ScenarioResult {
+                scenario,
+                plan,
+                error,
+            })
+            .collect(),
+    })
+}
+
+// ==========================================================================
+// Serialisation
+// ==========================================================================
+
+impl ScenarioResult {
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("model", Json::Str(self.scenario.model.clone())),
+            ("topology", Json::Str(self.scenario.topology.clone())),
+            ("devices", Json::Num(self.scenario.devices as f64)),
+            ("batch", Json::Str(self.scenario.batch.label())),
+            ("family",
+             Json::Str(self.scenario.family.as_str().to_string())),
+            ("plan",
+             self.plan.as_ref().map(|p| p.to_json()).unwrap_or(Json::Null)),
+            ("error",
+             self.error
+                 .as_ref()
+                 .map(|e| Json::Str(e.clone()))
+                 .unwrap_or(Json::Null)),
+        ])
+    }
+}
+
+/// Quote a CSV field (always quoted: stable and comma/quote-safe).
+fn csv_field(s: &str) -> String {
+    format!("\"{}\"", s.replace('"', "\"\""))
+}
+
+impl SweepResult {
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+
+    /// Deterministic JSON document (scenario order; object keys sorted by
+    /// the underlying `BTreeMap`).  `--threads N` output is byte-identical
+    /// to `--threads 1`.
+    pub fn to_json(&self) -> Json {
+        jobj(vec![(
+            "scenarios",
+            Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+        )])
+    }
+
+    /// Flat CSV: one row per scenario with the headline plan fields.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "model,topology,devices,batch,family,status,strategy,\
+             mp_degree,mechanism,devices_used,dp_workers,microbatches,\
+             global_batch,step_time_s,epochs,speedup,error\n");
+        for r in &self.results {
+            let sc = &r.scenario;
+            let mut cells: Vec<String> = vec![
+                sc.model.clone(),
+                sc.topology.clone(),
+                sc.devices.to_string(),
+                sc.batch.label(),
+                sc.family.as_str().to_string(),
+            ];
+            match (&r.plan, &r.error) {
+                (Some(p), _) => {
+                    cells.extend([
+                        "ok".to_string(),
+                        p.strategy.kind().to_string(),
+                        p.mp_degree.to_string(),
+                        p.mechanism.clone(),
+                        p.devices_used.to_string(),
+                        p.dp_workers.to_string(),
+                        p.microbatches
+                            .map(|m| m.to_string())
+                            .unwrap_or_default(),
+                        p.global_batch.to_string(),
+                        format!("{}", p.predicted_step_s),
+                        p.predicted_epochs
+                            .map(|e| format!("{e}"))
+                            .unwrap_or_default(),
+                        format!("{}", p.predicted_speedup),
+                        String::new(),
+                    ]);
+                }
+                (None, err) => {
+                    cells.extend([
+                        "error".to_string(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        err.clone().unwrap_or_default(),
+                    ]);
+                }
+            }
+            let row: Vec<String> =
+                cells.iter().map(|c| csv_field(c)).collect();
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..97).collect();
+        for threads in [1usize, 2, 5, 0] {
+            let out = parallel_map(threads, &items, |i, &x| {
+                assert_eq!(i, x);
+                x * x
+            });
+            let want: Vec<usize> = items.iter().map(|&x| x * x).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn effective_threads_clamps() {
+        assert_eq!(effective_threads(4, 2), 2);
+        assert_eq!(effective_threads(1, 100), 1);
+        assert!(effective_threads(0, 100) >= 1);
+        assert_eq!(effective_threads(7, 0), 1);
+    }
+
+    #[test]
+    fn batch_specs_parse_and_resolve() {
+        assert_eq!(BatchSpec::parse("default").unwrap(), BatchSpec::Default);
+        assert_eq!(BatchSpec::parse("paper").unwrap(), BatchSpec::Paper);
+        assert_eq!(BatchSpec::parse("64").unwrap(), BatchSpec::Fixed(64));
+        assert!(BatchSpec::parse("huge").is_err());
+        assert_eq!(BatchSpec::Paper.resolve("gnmt"), Some(128));
+        assert_eq!(BatchSpec::Paper.resolve("inception-v3"), Some(64));
+        assert_eq!(BatchSpec::Paper.resolve("biglstm"), Some(64));
+        assert_eq!(BatchSpec::Paper.resolve("transformer-lm"), None);
+        assert_eq!(BatchSpec::Default.resolve("gnmt"), None);
+        assert_eq!(BatchSpec::Fixed(32).resolve("gnmt"), Some(32));
+        assert_eq!(BatchSpec::Fixed(32).label(), "32");
+    }
+
+    #[test]
+    fn families_parse() {
+        assert_eq!(StrategyFamily::parse("dp").unwrap(),
+                   StrategyFamily::DpOnly);
+        assert_eq!(StrategyFamily::parse("hybrid").unwrap(),
+                   StrategyFamily::Hybrid);
+        assert_eq!(StrategyFamily::parse("pipelined").unwrap(),
+                   StrategyFamily::Pipelined);
+        assert!(StrategyFamily::parse("magic").is_err());
+        for f in [StrategyFamily::DpOnly, StrategyFamily::Hybrid,
+                  StrategyFamily::Pipelined] {
+            assert_eq!(StrategyFamily::parse(f.as_str()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn scenario_order_is_model_major() {
+        let spec = SweepSpec {
+            models: vec!["a".into(), "b".into()],
+            topologies: vec!["t".into()],
+            devices: vec![1, 2],
+            batches: vec![BatchSpec::Default],
+            families: vec![StrategyFamily::DpOnly],
+            ..Default::default()
+        };
+        let sc = spec.scenarios();
+        assert_eq!(sc.len(), 4);
+        assert_eq!((sc[0].model.as_str(), sc[0].devices), ("a", 1));
+        assert_eq!((sc[1].model.as_str(), sc[1].devices), ("a", 2));
+        assert_eq!((sc[2].model.as_str(), sc[2].devices), ("b", 1));
+        assert_eq!((sc[3].model.as_str(), sc[3].devices), ("b", 2));
+    }
+
+    #[test]
+    fn empty_axes_rejected() {
+        let spec = SweepSpec { devices: vec![], ..Default::default() };
+        assert!(run_sweep(&spec).is_err());
+    }
+
+    #[test]
+    fn errors_are_per_scenario() {
+        let spec = SweepSpec {
+            models: vec!["gnmt".into(), "alexnet".into()],
+            devices: vec![8],
+            families: vec![StrategyFamily::DpOnly],
+            curve_max_devices: 8,
+            threads: 1,
+            ..Default::default()
+        };
+        let r = run_sweep(&spec).unwrap();
+        assert_eq!(r.len(), 2);
+        assert!(r.results[0].plan.is_some());
+        assert!(r.results[0].error.is_none());
+        assert!(r.results[1].plan.is_none());
+        assert!(r.results[1].error.as_ref().unwrap().contains("alexnet"));
+        // The CSV keeps the failed row with a status marker.
+        let csv = r.to_csv();
+        assert!(csv.contains("\"ok\""));
+        assert!(csv.contains("\"error\""));
+    }
+
+    #[test]
+    fn paper_batches_resolve_through_registry_aliases() {
+        // "inception" is a registry alias: the paper batch table is keyed
+        // off canonical names, so the alias must still get batch 64.
+        let spec = SweepSpec {
+            models: vec!["inception".into()],
+            devices: vec![8],
+            batches: vec![BatchSpec::Paper],
+            families: vec![StrategyFamily::DpOnly],
+            curve_max_devices: 8,
+            threads: 1,
+            ..Default::default()
+        };
+        let r = run_sweep(&spec).unwrap();
+        assert_eq!(r.results[0].plan.as_ref().unwrap().mini_batch, 64);
+    }
+
+    #[test]
+    fn families_restrict_the_search() {
+        let base = SweepSpec {
+            models: vec!["gnmt".into()],
+            devices: vec![256],
+            curve_max_devices: 256,
+            threads: 1,
+            ..Default::default()
+        };
+        let dp = run_sweep(&SweepSpec {
+            families: vec![StrategyFamily::DpOnly],
+            ..base.clone()
+        })
+        .unwrap();
+        let plan = dp.results[0].plan.as_ref().unwrap();
+        assert_eq!(plan.mp_degree, 1, "DP-only family must not go hybrid");
+        assert!(plan.scorecard.iter().all(|c| c.mp_degree == 1));
+
+        let pipe = run_sweep(&SweepSpec {
+            families: vec![StrategyFamily::Pipelined],
+            ..base
+        })
+        .unwrap();
+        let plan = pipe.results[0].plan.as_ref().unwrap();
+        assert_eq!(plan.mp_degree, 2, "paper: pipelined hybrid at 256");
+        assert_eq!(plan.mechanism, "pipelined");
+    }
+
+    #[test]
+    fn memoisation_is_transparent() {
+        // A sweep over repeated budgets on the same (clamped) topology and
+        // one plain planner run must agree exactly.
+        let spec = SweepSpec {
+            models: vec!["gnmt".into()],
+            devices: vec![64, 64, 256],
+            families: vec![StrategyFamily::Hybrid],
+            curve_max_devices: 256,
+            threads: 1,
+            ..Default::default()
+        };
+        let r = run_sweep(&spec).unwrap();
+        assert_eq!(r.results[0].plan, r.results[1].plan,
+                   "identical scenarios must produce identical plans");
+        let direct = Planner::new()
+            .plan(&PlanRequest::new("gnmt", "dgx1").devices(256))
+            .unwrap();
+        let swept = r.results[2].plan.as_ref().unwrap();
+        assert_eq!(swept.strategy, direct.strategy);
+        assert!((swept.predicted_speedup - direct.predicted_speedup).abs()
+                < 1e-12);
+    }
+}

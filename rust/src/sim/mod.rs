@@ -14,6 +14,13 @@
 //!
 //! With both knobs set to zero the simulator converges to the ILP's
 //! idealised model, which the property tests exploit.
+//!
+//! The simulator is schedule-agnostic: it executes whatever DAG it is
+//! handed.  GPipe pipelines become visible to it through
+//! [`crate::pipeline::pipeline_dfg`], which unrolls a stage partition into
+//! its stage × micro-batch schedule — `SimulatorCost` places that unrolled
+//! graph stage-per-device and measures the overlapped makespan, instead of
+//! simulating one non-interleaved step and missing the overlap entirely.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;

@@ -107,6 +107,35 @@ fn analytical_and_simulator_costs_agree_on_dgx1() {
 }
 
 #[test]
+fn every_paper_network_weighs_a_pipelined_hybrid() {
+    // Acceptance bar of the pipelined-search change: `plan` for each
+    // paper network on dgx1 considers at least one PipelinedHybrid
+    // candidate in its scorecard — including branchy Inception, whose
+    // structural default is DLPlacer placement.
+    use hybridpar::coordinator::Strategy;
+    let planner = Planner::new();
+    for model in ["inception-v3", "gnmt", "biglstm"] {
+        for devices in [8usize, 256] {
+            let plan = planner
+                .plan(&PlanRequest::new(model, "dgx1").devices(devices))
+                .unwrap();
+            assert!(plan.scorecard.iter().any(|c| matches!(
+                        c.strategy, Strategy::PipelinedHybrid { .. })),
+                    "{model}@{devices}: no PipelinedHybrid candidate");
+        }
+    }
+    // And at scale the chain networks *choose* it.
+    let plan = planner
+        .plan(&PlanRequest::new("gnmt", "dgx1").devices(256))
+        .unwrap();
+    assert!(matches!(plan.strategy,
+                     Strategy::PipelinedHybrid { stages: 2,
+                                                 replicas: 128, .. }),
+            "gnmt@256 must run as a 2-stage pipelined hybrid: {:?}",
+            plan.strategy);
+}
+
+#[test]
 fn plan_carries_mechanism_artifacts() {
     let planner = Planner::new();
     // GNMT at scale: pipelined hybrid with stage bounds.

@@ -1,0 +1,133 @@
+//! Integration: the parallel scenario sweep engine.
+//!
+//! * determinism — the same grid on 1 thread and N threads produces
+//!   byte-identical JSON and CSV (the acceptance bar for `sweep
+//!   --threads N`);
+//! * grid semantics — canonical ordering, per-scenario error capture,
+//!   family restrictions honoured end to end;
+//! * the sweep agrees with direct `Planner::plan` calls (memoisation and
+//!   threading are transparent).
+
+use hybridpar::coordinator::Strategy;
+use hybridpar::planner::sweep::{run_sweep, BatchSpec, StrategyFamily,
+                                SweepSpec};
+use hybridpar::planner::{PlanRequest, Planner};
+
+fn small_grid() -> SweepSpec {
+    SweepSpec {
+        models: vec!["gnmt".into(), "biglstm".into()],
+        topologies: vec!["dgx1".into()],
+        devices: vec![8, 64],
+        batches: vec![BatchSpec::Default],
+        families: vec![StrategyFamily::DpOnly, StrategyFamily::Pipelined],
+        mp_degrees: vec![2],
+        curve_max_devices: 64,
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn sweep_output_is_byte_identical_across_thread_counts() {
+    let mut spec = small_grid();
+    let serial = run_sweep(&spec).unwrap();
+    let json_1 = serial.to_json().to_string();
+    let csv_1 = serial.to_csv();
+    for threads in [2usize, 4, 0] {
+        spec.threads = threads;
+        let parallel = run_sweep(&spec).unwrap();
+        assert_eq!(parallel.to_json().to_string(), json_1,
+                   "JSON diverged at threads={threads}");
+        assert_eq!(parallel.to_csv(), csv_1,
+                   "CSV diverged at threads={threads}");
+    }
+}
+
+#[test]
+fn sweep_covers_the_grid_in_canonical_order() {
+    let spec = small_grid();
+    let r = run_sweep(&spec).unwrap();
+    // 2 models × 1 topology × 2 budgets × 1 batch × 2 families.
+    assert_eq!(r.len(), 8);
+    let first = &r.results[0].scenario;
+    assert_eq!(first.model, "gnmt");
+    assert_eq!(first.devices, 8);
+    assert_eq!(first.family, StrategyFamily::DpOnly);
+    let last = &r.results[7].scenario;
+    assert_eq!(last.model, "biglstm");
+    assert_eq!(last.devices, 64);
+    assert_eq!(last.family, StrategyFamily::Pipelined);
+    // Every scenario of this grid plans successfully.
+    for sr in &r.results {
+        assert!(sr.plan.is_some(), "{:?}: {:?}", sr.scenario, sr.error);
+    }
+}
+
+#[test]
+fn sweep_matches_direct_planner_calls() {
+    let spec = small_grid();
+    let r = run_sweep(&spec).unwrap();
+    let planner = Planner::new();
+    for sr in &r.results {
+        let sc = &sr.scenario;
+        let mut req = PlanRequest::new(&sc.model, &sc.topology)
+            .devices(sc.devices)
+            .curve_to(64);
+        req = match sc.family {
+            StrategyFamily::DpOnly => req.mp_degrees(&[]),
+            StrategyFamily::Hybrid => req.mp_degrees(&[2]),
+            StrategyFamily::Pipelined => {
+                req.mp_degrees(&[2]).pipeline_only(true)
+            }
+        };
+        let direct = planner.plan(&req).unwrap();
+        let swept = sr.plan.as_ref().unwrap();
+        assert_eq!(swept, &direct,
+                   "sweep and direct plan diverge for {sc:?}");
+    }
+}
+
+#[test]
+fn pipelined_family_goes_hybrid_at_scale() {
+    // BigLSTM at 64 devices: DP diverges statistically, the pipelined
+    // family must fall over to a PipelinedHybrid (or back off) — and its
+    // candidates must all be pipelines even for branchy inception.
+    let spec = SweepSpec {
+        models: vec!["biglstm".into(), "inception-v3".into()],
+        devices: vec![64],
+        families: vec![StrategyFamily::Pipelined],
+        curve_max_devices: 64,
+        threads: 1,
+        ..Default::default()
+    };
+    let r = run_sweep(&spec).unwrap();
+    let biglstm = r.results[0].plan.as_ref().unwrap();
+    assert!(biglstm.mp_degree > 1 || biglstm.devices_used < 64,
+            "convergence-aware pipelined family must avoid 64-way DP");
+    if biglstm.mp_degree > 1 {
+        assert!(matches!(biglstm.strategy,
+                         Strategy::PipelinedHybrid { stages: 2, .. }));
+    }
+    let inception = r.results[1].plan.as_ref().unwrap();
+    for c in inception.scorecard.iter().filter(|c| c.mp_degree > 1) {
+        assert_eq!(c.mechanism, "pipelined",
+                   "pipelined family must never place: {c:?}");
+    }
+}
+
+#[test]
+fn paper_batch_axis_reaches_the_planner() {
+    let spec = SweepSpec {
+        models: vec!["gnmt".into()],
+        devices: vec![8],
+        batches: vec![BatchSpec::Paper, BatchSpec::Fixed(32)],
+        families: vec![StrategyFamily::DpOnly],
+        curve_max_devices: 8,
+        threads: 1,
+        ..Default::default()
+    };
+    let r = run_sweep(&spec).unwrap();
+    assert_eq!(r.results[0].plan.as_ref().unwrap().mini_batch, 128,
+               "paper batch for GNMT is 128");
+    assert_eq!(r.results[1].plan.as_ref().unwrap().mini_batch, 32);
+}

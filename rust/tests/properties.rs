@@ -231,6 +231,98 @@ fn prop_partition_chain_is_optimal_contiguous() {
 }
 
 #[test]
+fn prop_gpipe_time_le_serial_time() {
+    // The pipelining guarantees, over random chains, partitions and valid
+    // PipeConfigs:
+    //   (a) no micro-batch count beats the bottleneck bound serial/S
+    //       (so the GPipe speedup never exceeds the stage count);
+    //   (b) the searched optimum never loses to the unpipelined schedule;
+    //   (c) with overhead-free links/kernels, enough micro-batches drive
+    //       gpipe_time ≤ serial_time — pipelining pays for itself once the
+    //       fill/drain bubble amortises.
+    run_cases(60, 0x61FE, |g| {
+        let n = g.usize_in(2, 10);
+        let mut dfg = Dfg::new("chain");
+        let mut times = Vec::new();
+        let mut prev = None;
+        for i in 0..n {
+            let op = dfg.add_op(&format!("o{i}"), 1.0,
+                                g.f64_in(1e3, 1e7), 1.0);
+            times.push(g.f64_in(0.01, 1.0));
+            if let Some(p) = prev {
+                dfg.add_edge(p, op);
+            }
+            prev = Some(op);
+        }
+        let stages = g.usize_in(2, n.min(4));
+        let p = pipeline::partition_chain(&dfg, &times, stages).unwrap();
+        let serial = pipeline::serial_time(&p);
+
+        // A random but valid config: non-negative overheads and latency,
+        // positive bandwidth.
+        let cfg = pipeline::PipeConfig {
+            kernel_overhead_s: g.f64_in(0.0, 1e-3),
+            link_bandwidth: g.f64_in(1e9, 1e12),
+            link_latency: g.f64_in(0.0, 1e-5),
+            mini_batch: g.usize_in(1, 256),
+            saturation_batch: g.f64_in(0.0, 32.0),
+        };
+        for m in [1usize, 2, 3, 5, 8, 16] {
+            let t = pipeline::gpipe_time(&p, m, cfg);
+            assert!(t >= serial / stages as f64 - 1e-12,
+                    "m={m}: {t} beats the bottleneck bound");
+        }
+        let (_, t_best, su) = pipeline::best_microbatches(&p, 16, cfg);
+        assert!(t_best <= pipeline::gpipe_time(&p, 1, cfg) + 1e-12,
+                "the search must not lose to m=1");
+        assert!(su <= stages as f64 + 1e-9,
+                "speedup {su} exceeds the {stages}-stage bound");
+
+        // (c): overhead-free regime.  The m that pays off the bubble is
+        // ceil((S-1)·max / (serial-max)); search up to it.
+        let free = pipeline::PipeConfig {
+            kernel_overhead_s: 0.0,
+            link_bandwidth: f64::INFINITY, // exact: bytes / inf == 0
+            link_latency: 0.0,
+            mini_batch: 0,
+            saturation_batch: 0.0,
+        };
+        let maxs = p.stage_times.iter().cloned().fold(0.0, f64::max);
+        if serial - maxs > 1e-9 {
+            let need = ((stages - 1) as f64 * maxs / (serial - maxs))
+                .ceil() as usize;
+            let (_, t_free, _) =
+                pipeline::best_microbatches(&p, need.max(1), free);
+            assert!(t_free <= serial * (1.0 + 1e-9),
+                    "gpipe_time {t_free} > serial_time {serial} \
+                     with {need} micro-batches available");
+        }
+    });
+}
+
+#[test]
+fn prop_partition_stages_valid_on_dags() {
+    // The generalised partitioner: any DAG, contiguous topo slices, valid
+    // bounds, non-negative boundary traffic, and stage times that sum to
+    // the serial time.
+    run_cases(40, 0x57A6, |g| {
+        let (dfg, times) = random_dag(g, 12);
+        let n = dfg.n_ops();
+        let stages = g.usize_in(1, n.min(5));
+        let p = pipeline::partition_stages(&dfg, &times, stages).unwrap();
+        assert_eq!(p.n_stages(), stages);
+        assert_eq!(p.bounds.len(), stages + 1);
+        assert_eq!(p.bounds[0], 0);
+        assert_eq!(p.bounds[stages], n);
+        assert!(p.bounds.windows(2).all(|w| w[0] < w[1]));
+        assert!(p.cut_bytes.iter().all(|&b| b >= 0.0));
+        let serial: f64 = times.iter().sum();
+        let total: f64 = p.stage_times.iter().sum();
+        assert!((total - serial).abs() < 1e-9 * serial.max(1.0));
+    });
+}
+
+#[test]
 fn prop_eq6_crossover_consistency() {
     run_cases(60, 0xE96, |g| {
         // Random epoch curves (monotone non-decreasing past b0) and random

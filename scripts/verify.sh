@@ -40,6 +40,9 @@ if [ "${1:-}" != "--fast" ]; then
 
     echo "== cargo clippy --all-targets -- -D warnings =="
     cargo clippy --all-targets -- -D warnings
+
+    echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 fi
 
 echo "verify OK"
