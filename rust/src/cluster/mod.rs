@@ -80,6 +80,12 @@ pub const V100_FLOPS: f64 = 14e12;
 pub const V100_MEM: f64 = 16e9;
 /// V100-32GB (the paper's BigLSTM system).
 pub const V100_32G_MEM: f64 = 32e9;
+/// A100-80GB-class device (post-paper hardware the memory-feasibility
+/// scenarios compare against).
+pub const A100_FLOPS: f64 = 19.5e12;
+pub const A100_80G_MEM: f64 = 80e9;
+/// A100 NVLink 3 through NVSwitch: 300 GB/s per direction.
+pub const A100_FABRIC_BW: f64 = 300e9;
 
 impl HwGraph {
     pub fn new(name: &str) -> Self {
@@ -201,6 +207,27 @@ impl HwGraph {
         self.route(from, to, bytes).map(|(t, _)| t).unwrap_or(f64::INFINITY)
     }
 
+    /// Smallest per-device memory capacity Mem(n) over the compute nodes
+    /// — the bound every per-device footprint must fit under (infinite
+    /// when the graph has no compute nodes).
+    pub fn min_device_mem(&self) -> f64 {
+        self.nodes
+            .iter()
+            .filter(|n| n.is_compute)
+            .map(|n| n.mem_capacity)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Override every compute node's memory capacity — the planner's
+    /// `device_mem_gb` knob ("what if these GPUs were 16 GB parts?").
+    pub fn set_device_mem(&mut self, bytes: f64) {
+        for n in &mut self.nodes {
+            if n.is_compute {
+                n.mem_capacity = bytes;
+            }
+        }
+    }
+
     /// Minimum link bandwidth along the ring of the given devices —
     /// the bottleneck term in ring all-reduce cost.
     pub fn ring_bottleneck_bw(&self, ring: &[usize]) -> f64 {
@@ -271,6 +298,25 @@ pub fn dgx2(n_gpus: usize) -> HwGraph {
     let switch = g.add_router("nvswitch");
     for &gpu in &ids {
         g.add_link(gpu, switch, LinkKind::NvSwitch);
+    }
+    g
+}
+
+/// DGX-A100-style box: up to 8 A100-80GB GPUs on an NVLink 3 / NVSwitch
+/// fabric (300 GB/s per direction per GPU).  Post-paper hardware: paired
+/// with the 16 GB V100 in a sweep's `device_mem_gb` axis it expresses the
+/// "fits on A100, infeasible on V100" scenario family.
+pub fn dgx_a100(n_gpus: usize) -> HwGraph {
+    let n = n_gpus.clamp(1, 8);
+    let mut g = HwGraph::new(&format!("dgx-a100-{}gpu", n));
+    let ids: Vec<usize> = (0..n)
+        .map(|i| g.add_compute(&format!("gpu{}", i), A100_FLOPS,
+                               A100_80G_MEM))
+        .collect();
+    let switch = g.add_router("nvswitch");
+    for &gpu in &ids {
+        g.add_link_custom(gpu, switch, A100_FABRIC_BW,
+                          LinkKind::NvSwitch.latency());
     }
     g
 }
@@ -363,6 +409,35 @@ mod tests {
         // 32 GB parts, as on the real machine.
         let g = dgx2(2);
         assert!((g.nodes[0].mem_capacity - V100_32G_MEM).abs() < 1.0);
+    }
+
+    #[test]
+    fn dgx_a100_faster_fabric_and_bigger_memory() {
+        let g = dgx_a100(8);
+        assert_eq!(g.n_devices(), 8);
+        assert!((g.min_device_mem() - A100_80G_MEM).abs() < 1.0);
+        // NVLink 3 fabric beats the DGX-2 NVSwitch for large transfers.
+        let d2 = dgx2(8);
+        assert!(g.transfer_time(0, 1, 256e6)
+                    < d2.transfer_time(0, 1, 256e6));
+        assert_eq!(dgx_a100(64).n_devices(), 8, "clamped to the box");
+    }
+
+    #[test]
+    fn device_mem_surfaces_and_overrides() {
+        let mut g = dgx1(4); // 16 GB parts
+        assert!((g.min_device_mem() - V100_MEM).abs() < 1.0);
+        g.set_device_mem(80e9);
+        assert!((g.min_device_mem() - 80e9).abs() < 1.0);
+        for d in g.devices() {
+            assert!((g.nodes[d].mem_capacity - 80e9).abs() < 1.0);
+        }
+        // Routers untouched; empty graphs report an infinite bound.
+        let mut h = HwGraph::new("r");
+        h.add_router("sw");
+        h.set_device_mem(1.0);
+        assert_eq!(h.nodes[0].mem_capacity, 0.0);
+        assert!(h.min_device_mem().is_infinite());
     }
 
     #[test]

@@ -190,6 +190,32 @@ impl Toml {
         }
     }
 
+    /// Mixed string/number list, stringified: `key = ["default", 16]`
+    /// becomes `["default", "16"]`.  Used for axes whose entries are
+    /// keywords *or* numbers (the sweep's `device_mem_gb`).  A scalar is
+    /// read as a one-element list; a missing key yields `default`.
+    pub fn stringly_list_or(&self, key: &str, default: &[&str])
+                            -> Vec<String> {
+        fn stringify(v: &TomlValue) -> Option<String> {
+            match v {
+                TomlValue::Str(s) => Some(s.clone()),
+                TomlValue::Int(i) => Some(i.to_string()),
+                TomlValue::Float(f) => Some(f.to_string()),
+                _ => None,
+            }
+        }
+        match self.get(key) {
+            Some(TomlValue::Array(items)) => {
+                items.iter().filter_map(stringify).collect()
+            }
+            Some(v) => match stringify(v) {
+                Some(s) => vec![s],
+                None => default.iter().map(|s| s.to_string()).collect(),
+            },
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
     /// Integer list: `key = [8, 64]`.  A scalar integer is read as a
     /// one-element list; a missing key yields `default`.  Mistyped or
     /// negative elements are dropped (the scalar `*_or` accessors are
@@ -243,6 +269,36 @@ impl Default for PlannerConfig {
     }
 }
 
+/// `[memory]` section: the footprint-accounting knobs of the planner's
+/// feasibility layer.  Values stay plain here (optimizer as a string) so
+/// the config layer does not depend on [`crate::memory`]; `plan`/`sweep`
+/// resolve them via `Optimizer::parse`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemoryConfig {
+    /// "sgd" | "momentum" | "adam".
+    pub optimizer: String,
+    /// Gradient-checkpointing recompute (footprint ↓, step time ↑).
+    pub recompute: bool,
+    /// Backward-stash multiplier on per-op activation bytes.
+    pub act_factor: f64,
+    /// Fixed per-device reserve (GB): context, workspaces.
+    pub reserved_gb: f64,
+    /// Per-device capacity override for `plan` (GB; None = topology).
+    pub device_mem_gb: Option<f64>,
+}
+
+impl Default for MemoryConfig {
+    fn default() -> Self {
+        MemoryConfig {
+            optimizer: "adam".into(),
+            recompute: false,
+            act_factor: 2.0,
+            reserved_gb: 0.75,
+            device_mem_gb: None,
+        }
+    }
+}
+
 /// `[sweep]` section: the scenario grid the `sweep` subcommand evaluates
 /// without CLI arguments.  Axis values stay strings here (families, batch
 /// specs, objective, cost model) so the config layer does not depend on
@@ -252,6 +308,9 @@ pub struct SweepConfig {
     pub models: Vec<String>,
     pub topologies: Vec<String>,
     pub devices: Vec<usize>,
+    /// "default" | a GB figure, per axis entry (the per-device memory
+    /// axis).
+    pub device_mem_gb: Vec<String>,
     /// "default" | "paper" | an integer, per axis entry.
     pub batches: Vec<String>,
     /// "dp" | "hybrid" | "pipelined", per axis entry.
@@ -271,6 +330,7 @@ impl Default for SweepConfig {
                          "biglstm".into()],
             topologies: vec!["dgx1".into()],
             devices: vec![8, 64, 256],
+            device_mem_gb: vec!["default".into()],
             batches: vec!["default".into()],
             families: vec!["dp".into(), "hybrid".into(),
                            "pipelined".into()],
@@ -300,6 +360,8 @@ pub struct RunConfig {
     pub planner: Option<PlannerConfig>,
     /// Present iff the config has a `[sweep]` section.
     pub sweep: Option<SweepConfig>,
+    /// Present iff the config has a `[memory]` section.
+    pub memory: Option<MemoryConfig>,
 }
 
 impl Default for RunConfig {
@@ -315,6 +377,7 @@ impl Default for RunConfig {
             out_csv: None,
             planner: None,
             sweep: None,
+            memory: None,
         }
     }
 }
@@ -398,6 +461,8 @@ impl RunConfig {
                 topologies: t
                     .str_list_or("sweep.topologies", &dstr(&d.topologies)),
                 devices: t.usize_list_or("sweep.devices", &d.devices),
+                device_mem_gb: t.stringly_list_or(
+                    "sweep.device_mem_gb", &dstr(&d.device_mem_gb)),
                 batches: t.str_list_or("sweep.batches", &dstr(&d.batches)),
                 families: t
                     .str_list_or("sweep.families", &dstr(&d.families)),
@@ -408,6 +473,38 @@ impl RunConfig {
                 threads: t.usize_or("sweep.threads", d.threads),
                 curve_max_devices: t.usize_or("sweep.curve_max_devices",
                                               d.curve_max_devices),
+            });
+        }
+        if t.values.keys().any(|k| k.starts_with("memory.")) {
+            let d = MemoryConfig::default();
+            let device_mem_gb = match t.get("memory.device_mem_gb") {
+                None => None,
+                Some(v) => {
+                    let gb = v.as_f64()?;
+                    if !gb.is_finite() || gb <= 0.0 {
+                        bail!("memory.device_mem_gb must be positive, \
+                               got {gb}");
+                    }
+                    Some(gb)
+                }
+            };
+            let act_factor = t.f64_or("memory.act_factor", d.act_factor);
+            if !act_factor.is_finite() || act_factor <= 0.0 {
+                bail!("memory.act_factor must be positive, got \
+                       {act_factor}");
+            }
+            let reserved_gb = t.f64_or("memory.reserved_gb",
+                                       d.reserved_gb);
+            if !reserved_gb.is_finite() || reserved_gb < 0.0 {
+                bail!("memory.reserved_gb must be non-negative, got \
+                       {reserved_gb}");
+            }
+            c.memory = Some(MemoryConfig {
+                optimizer: t.str_or("memory.optimizer", &d.optimizer),
+                recompute: t.bool_or("memory.recompute", d.recompute),
+                act_factor,
+                reserved_gb,
+                device_mem_gb,
             });
         }
         Ok(c)
@@ -547,6 +644,48 @@ sizes = [1, 2, 3]
         // Unset keys default.
         assert_eq!(s.objective, "time-to-converge");
         assert_eq!(s.curve_max_devices, 256);
+    }
+
+    #[test]
+    fn memory_section_parses() {
+        let t = Toml::parse(
+            "[memory]\noptimizer = \"momentum\"\nrecompute = true\n\
+             act_factor = 1.5\nreserved_gb = 1.0\ndevice_mem_gb = 16\n")
+            .unwrap();
+        let m = RunConfig::from_toml(&t).unwrap().memory.unwrap();
+        assert_eq!(m.optimizer, "momentum");
+        assert!(m.recompute);
+        assert_eq!(m.act_factor, 1.5);
+        assert_eq!(m.reserved_gb, 1.0);
+        assert_eq!(m.device_mem_gb, Some(16.0));
+        // Absent by default; partial sections get defaults for the rest.
+        let t = Toml::parse(DOC).unwrap();
+        assert!(RunConfig::from_toml(&t).unwrap().memory.is_none());
+        let t = Toml::parse("[memory]\nrecompute = true\n").unwrap();
+        let m = RunConfig::from_toml(&t).unwrap().memory.unwrap();
+        assert_eq!(m.optimizer, "adam");
+        assert_eq!(m.device_mem_gb, None);
+        // Out-of-range knobs are rejected loudly.
+        for doc in ["[memory]\ndevice_mem_gb = -1\n",
+                    "[memory]\nact_factor = -2\n",
+                    "[memory]\nact_factor = 0\n",
+                    "[memory]\nreserved_gb = -0.5\n"] {
+            let t = Toml::parse(doc).unwrap();
+            assert!(RunConfig::from_toml(&t).is_err(), "{doc}");
+        }
+    }
+
+    #[test]
+    fn sweep_device_mem_axis_parses_mixed_entries() {
+        let t = Toml::parse(
+            "[sweep]\ndevice_mem_gb = [\"default\", 16, 80]\n")
+            .unwrap();
+        let s = RunConfig::from_toml(&t).unwrap().sweep.unwrap();
+        assert_eq!(s.device_mem_gb, vec!["default", "16", "80"]);
+        // Missing key keeps the topology-default singleton axis.
+        let t = Toml::parse("[sweep]\ndevices = [8]\n").unwrap();
+        let s = RunConfig::from_toml(&t).unwrap().sweep.unwrap();
+        assert_eq!(s.device_mem_gb, vec!["default"]);
     }
 
     #[test]

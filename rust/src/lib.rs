@@ -55,6 +55,19 @@
 //!   [`coordinator::Strategy`], predicted step time, epochs-to-converge,
 //!   the end-to-end speedup curve, the placement / pipeline partition, and
 //!   a per-candidate scorecard, all JSON-serialisable via [`util::json`].
+//! * Every candidate is checked against a per-device footprint model
+//!   ([`memory`]): weights + gradients + optimizer state + activations
+//!   (GPipe micro-batch stashing included).  Candidates that estimate
+//!   but overflow `Mem(n)` are marked
+//!   [`memory::Feasibility::Infeasible`] in the scorecard instead of
+//!   being scored — the strategy class the paper could not express:
+//!   hybrids chosen because DP *cannot fit*, not just because they are
+//!   faster.  (A degree whose *estimation* fails outright — deeper than
+//!   the topology, or no stage split under the raw Eq. 13 cap — drops
+//!   out of the search entirely, as topology-infeasible degrees always
+//!   have.)  `PlanRequest::device_mem_gb` overrides the topology's
+//!   capacity ("what if these were 16 GB parts?"), and
+//!   gradient-checkpointing recompute trades footprint for step time.
 //!
 //! ## Scenario sweeps
 //!
@@ -88,6 +101,7 @@ pub mod milp;
 pub mod collective;
 pub mod statistical;
 pub mod models;
+pub mod memory;
 pub mod placer;
 pub mod pipeline;
 pub mod parallel;

@@ -18,13 +18,15 @@ use anyhow::{bail, Result};
 
 use hybridpar::cluster;
 use hybridpar::collective;
-use hybridpar::config::{PlannerConfig, RunConfig, SweepConfig, Toml};
+use hybridpar::config::{MemoryConfig, RunConfig, SweepConfig, Toml};
 use hybridpar::coordinator::{Coordinator, Strategy};
 use hybridpar::data::Corpus;
+use hybridpar::memory::{MemoryModel, Optimizer};
 use hybridpar::parallel::{NetworkModel, ScalingEfficiency};
 use hybridpar::placer;
-use hybridpar::planner::sweep::{effective_threads, run_sweep, BatchSpec,
-                                StrategyFamily, SweepSpec};
+use hybridpar::planner::sweep::{effective_threads, parse_mem_gb,
+                                run_sweep, BatchSpec, StrategyFamily,
+                                SweepSpec};
 use hybridpar::planner::{cost_by_name, AnalyticalCost, CostModel,
                          ModelRegistry, Objective, PlanRequest, Planner};
 use hybridpar::runtime::Meta;
@@ -37,16 +39,21 @@ hybridpar — hybrid DP+MP training framework (Pal et al. 2019 reproduction)
 USAGE: hybridpar <COMMAND> [OPTIONS]
 
 COMMANDS:
-  plan       --model NAME --topo dgx1|dgx2|multinode --devices N
+  plan       --model NAME --topo dgx1|dgx2|dgx-a100|multinode --devices N
              [--batch B] [--objective time-to-converge|step-time]
              [--cost analytical|alpha-beta|simulator] [--mp-degrees 2,4]
-             [--pipeline-only] [--max-curve N] [--config cfg.toml]
-             [--out-json path]
-             (emits the typed Plan as JSON on stdout)
+             [--pipeline-only] [--max-curve N]
+             [--device-mem-gb G] [--optimizer sgd|momentum|adam]
+             [--recompute] [--act-factor F] [--reserved-gb G]
+             [--config cfg.toml] [--out-json path]
+             (emits the typed Plan as JSON on stdout; memory-infeasible
+              candidates appear in the scorecard as infeasible rows)
   sweep      --models a,b --topos dgx1,dgx2 --devices 8,64,256
+             [--device-mem-gb default|G,...]
              [--batches default|paper|N,...] [--families dp,hybrid,pipelined]
              [--mp-degrees 2,4] [--threads N] [--objective ...] [--cost ...]
-             [--max-curve N] [--config cfg.toml] [--out-json p] [--out-csv p]
+             [--optimizer ...] [--recompute] [--max-curve N]
+             [--config cfg.toml] [--out-json p] [--out-csv p]
              (parallel grid evaluation; JSON on stdout, deterministic
               ordering — --threads N output is byte-identical to --threads 1)
   train      --config cfg.toml |
@@ -71,7 +78,7 @@ fn main() {
 fn run() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_default();
     let args = Args::from_env(2, &["heuristic", "real-se", "verbose",
-                                   "pipeline-only"]);
+                                   "pipeline-only", "recompute"]);
     match cmd.as_str() {
         "plan" => cmd_plan(&args),
         "sweep" => cmd_sweep(&args),
@@ -89,18 +96,44 @@ fn run() -> Result<()> {
 
 // --------------------------------------------------------------------------
 
+/// Resolve the footprint-accounting model from the `[memory]` config
+/// section plus CLI overrides (`--optimizer`, `--recompute`,
+/// `--act-factor`, `--reserved-gb`), shared by `plan` and `sweep`.
+fn memory_model_from(args: &Args, base: &MemoryConfig)
+                     -> Result<MemoryModel> {
+    let act_factor = args.get_f64("act-factor", base.act_factor)?;
+    if !act_factor.is_finite() || act_factor <= 0.0 {
+        bail!("--act-factor must be a positive finite number, got \
+               {act_factor}");
+    }
+    let reserved_gb = args.get_f64("reserved-gb", base.reserved_gb)?;
+    if !reserved_gb.is_finite() || reserved_gb < 0.0 {
+        bail!("--reserved-gb must be a non-negative finite number, got \
+               {reserved_gb}");
+    }
+    Ok(MemoryModel {
+        optimizer: Optimizer::parse(
+            &args.get_or("optimizer", &base.optimizer))?,
+        recompute: args.has_flag("recompute") || base.recompute,
+        act_factor,
+        reserved_bytes: reserved_gb * 1e9,
+        ..MemoryModel::default()
+    })
+}
+
 /// `plan`: one typed query against the unified planner.  Prints the JSON
 /// [`hybridpar::planner::Plan`] on stdout (human summary on stderr).
 fn cmd_plan(args: &Args) -> Result<()> {
-    // Defaults come from the optional `[planner]` config section.
-    let base = match args.get("config") {
+    // Defaults come from the optional `[planner]` / `[memory]` config
+    // sections.
+    let cfg = match args.get("config") {
         Some(path) => {
             RunConfig::from_toml(&Toml::load(&PathBuf::from(path))?)?
-                .planner
-                .unwrap_or_default()
         }
-        None => PlannerConfig::default(),
+        None => RunConfig::default(),
     };
+    let base = cfg.planner.unwrap_or_default();
+    let mem_base = cfg.memory.unwrap_or_default();
     let model = args.get_or("model", &base.model);
     let topo_default = args.get_or("topology", &base.topology);
     let topo = args.get_or("topo", &topo_default);
@@ -112,12 +145,21 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let objective =
         Objective::parse(&args.get_or("objective", &base.objective))?;
     let cost = cost_by_name(&args.get_or("cost", &base.cost_model))?;
+    let mem_model = memory_model_from(args, &mem_base)?;
+    let device_mem_gb = match args.get("device-mem-gb") {
+        Some(s) => parse_mem_gb(s)?,
+        None => mem_base.device_mem_gb,
+    };
 
     let mut req = PlanRequest::new(&model, &topo)
         .devices(devices)
         .objective(objective)
         .pipeline_only(args.has_flag("pipeline-only"))
+        .memory(mem_model)
         .curve_to(args.get_usize("max-curve", 256)?);
+    if let Some(gb) = device_mem_gb {
+        req = req.device_mem_gb(gb);
+    }
     if let Some(b) = batch {
         req = req.batch(b);
     }
@@ -150,15 +192,16 @@ fn cmd_plan(args: &Args) -> Result<()> {
 /// ordering is canonical, so `--threads N` is byte-identical to
 /// `--threads 1` — only faster.
 fn cmd_sweep(args: &Args) -> Result<()> {
-    // Defaults come from the optional `[sweep]` config section.
-    let base = match args.get("config") {
+    // Defaults come from the optional `[sweep]` / `[memory]` config
+    // sections.
+    let cfg = match args.get("config") {
         Some(path) => {
             RunConfig::from_toml(&Toml::load(&PathBuf::from(path))?)?
-                .sweep
-                .unwrap_or_default()
         }
-        None => SweepConfig::default(),
+        None => RunConfig::default(),
     };
+    let base: SweepConfig = cfg.sweep.unwrap_or_default();
+    let mem_base = cfg.memory.unwrap_or_default();
     let csv_list = |s: &str| -> Vec<String> {
         s.split(',')
             .map(|x| x.trim().to_string())
@@ -188,11 +231,19 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         Some(s) => usize_list(s)?,
         None => base.mp_degrees,
     };
+    let mem_axis = args
+        .get("device-mem-gb")
+        .map(csv_list)
+        .unwrap_or(base.device_mem_gb);
 
     let spec = SweepSpec {
         models,
         topologies: topos,
         devices,
+        device_mem_gb: mem_axis
+            .iter()
+            .map(|s| parse_mem_gb(s))
+            .collect::<Result<_>>()?,
         batches: batches
             .iter()
             .map(|s| BatchSpec::parse(s))
@@ -205,6 +256,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         objective: Objective::parse(
             &args.get_or("objective", &base.objective))?,
         cost_model: args.get_or("cost", &base.cost_model),
+        memory: memory_model_from(args, &mem_base)?,
         curve_max_devices: args
             .get_usize("max-curve", base.curve_max_devices)?,
         threads: args.get_usize("threads", base.threads)?,
@@ -221,16 +273,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
               fmt_secs(wall), n - ok);
     for r in &result.results {
         let sc = &r.scenario;
+        let mem = hybridpar::planner::sweep::mem_gb_label(sc.device_mem_gb);
         match (&r.plan, &r.error) {
             (Some(p), _) => eprintln!(
-                "  {:<14} {:<9} {:>4} dev  batch {:<7} {:<9} -> M={} {} \
-                 ({:.2}x, {} devices used)",
-                sc.model, sc.topology, sc.devices, sc.batch.label(),
+                "  {:<14} {:<9} {:>4} dev  mem {:<7} batch {:<7} {:<9} \
+                 -> M={} {} ({:.2}x, {} devices used)",
+                sc.model, sc.topology, sc.devices, mem, sc.batch.label(),
                 sc.family.as_str(), p.mp_degree, p.mechanism,
                 p.predicted_speedup, p.devices_used),
             (None, err) => eprintln!(
-                "  {:<14} {:<9} {:>4} dev  batch {:<7} {:<9} -> error: {}",
-                sc.model, sc.topology, sc.devices, sc.batch.label(),
+                "  {:<14} {:<9} {:>4} dev  mem {:<7} batch {:<7} {:<9} \
+                 -> error: {}",
+                sc.model, sc.topology, sc.devices, mem, sc.batch.label(),
                 sc.family.as_str(),
                 err.as_deref().unwrap_or("unknown")),
         }

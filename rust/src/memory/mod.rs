@@ -1,0 +1,507 @@
+//! Per-device memory footprint model — the feasibility layer the paper's
+//! projections assume away.
+//!
+//! The hybrid-vs-DP curves of §4 implicitly assume every candidate fits on
+//! the device, but the reason model parallelism exists at all is that
+//! weights, gradients, optimizer state and activations overflow a single
+//! GPU (the paper's BigLSTM needed the 32 GB V100, §4.1).  PaSE (Elango
+//! 2024) and the hybrid-ConvNet Oracle (Kahira et al. 2021) both show that
+//! memory feasibility is what actually prunes the strategy space at scale.
+//!
+//! This module models the resident footprint of one worker:
+//!
+//! * **weights** W — per-op parameter bytes (from the DFG's M(k) minus the
+//!   activation share);
+//! * **gradients** — one more W (f32 accumulation);
+//! * **optimizer state** — `W × multiplier` ([`Optimizer::Sgd`] 0,
+//!   [`Optimizer::Momentum`] 1, [`Optimizer::Adam`] 2);
+//! * **activations** — per-op output bytes (already scaled by the
+//!   profile's mini-batch) times [`MemoryModel::act_factor`], the stash of
+//!   backward-pass intermediates kept alive beyond the raw outputs;
+//! * **GPipe stashing** — a pipeline stage holds activations for every
+//!   in-flight micro-batch (all `m` of them under the GPipe schedule), so
+//!   the stash is the *full mini-batch* stage activation plus the stage
+//!   input boundary;
+//! * **recompute** ([`MemoryModel::recompute`]) — gradient checkpointing:
+//!   only checkpoints (raw op outputs / stage boundaries) stay resident
+//!   and intermediates are recomputed during backward, trading footprint
+//!   for one extra forward pass
+//!   ([`MemoryModel::time_factor`] ≈ 4/3 of the fwd+bwd step).
+//!
+//! Estimators mirror the planner's three candidate layouts:
+//! [`single_device`] (DP replicas and the M = 1 baseline), [`placed`]
+//! (DLPlacer assignments) and [`pipelined`] (GPipe stage partitions).  The
+//! planner compares the peak-device total against the topology's
+//! `Mem(n)` ([`crate::cluster::HwNode::mem_capacity`]) and marks
+//! candidates [`Feasibility::Infeasible`] instead of scoring them.
+
+use anyhow::{bail, Result};
+
+use crate::dfg::Op;
+use crate::models::ModelProfile;
+use crate::util::json::Json;
+
+/// Optimizer family — sets the per-parameter state multiplier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Optimizer {
+    /// Plain SGD: no state beyond weights + gradients.
+    Sgd,
+    /// SGD with momentum: one extra weight-sized buffer.
+    Momentum,
+    /// Adam/AdamW: first + second moment, two extra buffers.
+    Adam,
+}
+
+impl Optimizer {
+    /// Extra weight-sized state buffers this optimizer keeps resident.
+    pub fn state_multiplier(self) -> f64 {
+        match self {
+            Optimizer::Sgd => 0.0,
+            Optimizer::Momentum => 1.0,
+            Optimizer::Adam => 2.0,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Optimizer::Sgd => "sgd",
+            Optimizer::Momentum => "momentum",
+            Optimizer::Adam => "adam",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sgd" => Optimizer::Sgd,
+            "momentum" | "sgd-momentum" => Optimizer::Momentum,
+            "adam" | "adamw" => Optimizer::Adam,
+            other => bail!("unknown optimizer '{other}' \
+                            (known: sgd, momentum, adam)"),
+        })
+    }
+}
+
+/// The accounting knobs of the footprint model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemoryModel {
+    pub optimizer: Optimizer,
+    /// Gradient checkpointing: keep only checkpoints resident and
+    /// recompute intermediates during backward (costs
+    /// [`MemoryModel::time_factor`] extra step time).
+    pub recompute: bool,
+    /// Backward-pass stash per op ≈ `act_factor ×` its output bytes (the
+    /// intermediates kept alive beyond the raw output; 1.0 = outputs
+    /// only).  Recompute drops the stash back to the raw outputs.
+    pub act_factor: f64,
+    /// Fixed per-device reserve: CUDA context, cuDNN workspaces,
+    /// allocator fragmentation.
+    pub reserved_bytes: f64,
+    /// Step-time inflation of recompute, as a fraction of the fwd+bwd
+    /// step.  One extra forward ≈ 1/3 of a 3×-forward training step.
+    pub recompute_overhead: f64,
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        MemoryModel {
+            optimizer: Optimizer::Adam,
+            recompute: false,
+            act_factor: 2.0,
+            reserved_bytes: 0.75e9,
+            recompute_overhead: 1.0 / 3.0,
+        }
+    }
+}
+
+impl MemoryModel {
+    /// Multiplier on the per-worker step time (1.0 unless recompute).
+    pub fn time_factor(&self) -> f64 {
+        if self.recompute {
+            1.0 + self.recompute_overhead
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Peak per-device footprint of one worker, by component.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemoryEstimate {
+    /// Parameter bytes resident on the peak device.
+    pub weight_bytes: f64,
+    /// Gradient accumulation buffers (= weights, f32).
+    pub grad_bytes: f64,
+    /// Optimizer state (`weights × multiplier`).
+    pub optimizer_bytes: f64,
+    /// Activation working set + backward/pipeline stash.
+    pub activation_bytes: f64,
+    /// Fixed per-device reserve.
+    pub reserved_bytes: f64,
+    /// Peak per-device total — what feasibility compares against Mem(n).
+    pub total_bytes: f64,
+    /// Whether this estimate assumed gradient checkpointing.
+    pub recompute: bool,
+}
+
+impl MemoryEstimate {
+    fn from_parts(model: &MemoryModel, weights: f64, activations: f64)
+                  -> Self {
+        let grads = weights;
+        let opt = weights * model.optimizer.state_multiplier();
+        let total = weights + grads + opt + activations
+            + model.reserved_bytes;
+        MemoryEstimate {
+            weight_bytes: weights,
+            grad_bytes: grads,
+            optimizer_bytes: opt,
+            activation_bytes: activations,
+            reserved_bytes: model.reserved_bytes,
+            total_bytes: total,
+            recompute: model.recompute,
+        }
+    }
+
+    /// Does the peak device fit in `available_bytes` of device memory?
+    pub fn fits(&self, available_bytes: f64) -> bool {
+        self.total_bytes <= available_bytes
+    }
+
+    pub fn to_json(&self) -> Json {
+        crate::planner::jobj(vec![
+            ("weight_bytes", Json::Num(self.weight_bytes)),
+            ("grad_bytes", Json::Num(self.grad_bytes)),
+            ("optimizer_bytes", Json::Num(self.optimizer_bytes)),
+            ("activation_bytes", Json::Num(self.activation_bytes)),
+            ("reserved_bytes", Json::Num(self.reserved_bytes)),
+            ("total_bytes", Json::Num(self.total_bytes)),
+            ("recompute", Json::Bool(self.recompute)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(MemoryEstimate {
+            weight_bytes: j.get("weight_bytes")?.as_f64()?,
+            grad_bytes: j.get("grad_bytes")?.as_f64()?,
+            optimizer_bytes: j.get("optimizer_bytes")?.as_f64()?,
+            activation_bytes: j.get("activation_bytes")?.as_f64()?,
+            reserved_bytes: j.get("reserved_bytes")?.as_f64()?,
+            total_bytes: j.get("total_bytes")?.as_f64()?,
+            recompute: matches!(j.get("recompute")?, Json::Bool(true)),
+        })
+    }
+}
+
+/// Whether a candidate fits the device, and by how much it misses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Feasibility {
+    Feasible,
+    /// Peak device needs `required_bytes` but only `available_bytes` of
+    /// Mem(n) exist.
+    Infeasible { required_bytes: f64, available_bytes: f64 },
+}
+
+impl Feasibility {
+    /// Classify an estimate against a capacity.
+    pub fn check(est: &MemoryEstimate, available_bytes: f64) -> Self {
+        if est.fits(available_bytes) {
+            Feasibility::Feasible
+        } else {
+            Feasibility::Infeasible {
+                required_bytes: est.total_bytes,
+                available_bytes,
+            }
+        }
+    }
+
+    pub fn is_feasible(&self) -> bool {
+        matches!(self, Feasibility::Feasible)
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            Feasibility::Feasible => crate::planner::jobj(vec![
+                ("kind", Json::Str("feasible".into())),
+            ]),
+            Feasibility::Infeasible { required_bytes, available_bytes } => {
+                crate::planner::jobj(vec![
+                    ("kind", Json::Str("infeasible".into())),
+                    ("required_bytes", Json::Num(required_bytes)),
+                    ("available_bytes", Json::Num(available_bytes)),
+                ])
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(match j.get("kind")?.as_str()? {
+            "feasible" => Feasibility::Feasible,
+            "infeasible" => Feasibility::Infeasible {
+                required_bytes: j.get("required_bytes")?.as_f64()?,
+                available_bytes: j.get("available_bytes")?.as_f64()?,
+            },
+            other => bail!("unknown feasibility kind '{other}'"),
+        })
+    }
+}
+
+/// Parameter bytes of an op: the resident M(k) minus its activation
+/// output share (the DFG builders fold both into `mem_bytes`).
+pub fn op_weight_bytes(op: &Op) -> f64 {
+    (op.mem_bytes - op.out_bytes).max(0.0)
+}
+
+/// Activation output bytes of an op (already mini-batch-scaled by the
+/// profile builder).
+pub fn op_activation_bytes(op: &Op) -> f64 {
+    op.out_bytes
+}
+
+/// Activation residency of a set of ops outside a pipeline: raw outputs ×
+/// the backward-stash factor, or outputs only under recompute.
+fn act_resident(model: &MemoryModel, raw_out: f64) -> f64 {
+    if model.recompute {
+        raw_out
+    } else {
+        raw_out * model.act_factor
+    }
+}
+
+/// Footprint of the whole model resident on one device — the M = 1
+/// baseline, and every replica of an N-way DP worker (per-device
+/// mini-batch is constant as DP scales, so DP feasibility is independent
+/// of N).
+pub fn single_device(prof: &ModelProfile, model: &MemoryModel)
+                     -> MemoryEstimate {
+    let weights: f64 = prof.dfg.ops.iter().map(op_weight_bytes).sum();
+    let raw_out: f64 = prof.dfg.ops.iter().map(op_activation_bytes).sum();
+    MemoryEstimate::from_parts(model, weights, act_resident(model, raw_out))
+}
+
+/// Footprint of a DLPlacer placement: per-device weight/activation sums
+/// over the op → device `assignment`, peak device reported.
+pub fn placed(prof: &ModelProfile, model: &MemoryModel,
+              assignment: &[usize]) -> MemoryEstimate {
+    let n_dev = assignment.iter().copied().max().map_or(1, |d| d + 1);
+    let mut w = vec![0.0f64; n_dev];
+    let mut a = vec![0.0f64; n_dev];
+    for (op, &d) in assignment.iter().enumerate().take(prof.dfg.n_ops()) {
+        w[d] += op_weight_bytes(&prof.dfg.ops[op]);
+        a[d] += op_activation_bytes(&prof.dfg.ops[op]);
+    }
+    (0..n_dev)
+        .map(|d| {
+            MemoryEstimate::from_parts(model, w[d],
+                                       act_resident(model, a[d]))
+        })
+        .max_by(|x, y| x.total_bytes.partial_cmp(&y.total_bytes).unwrap())
+        .unwrap_or_else(|| MemoryEstimate::from_parts(model, 0.0, 0.0))
+}
+
+/// Footprint of a GPipe pipeline: stages are contiguous topo-order slices
+/// `bounds[s]..bounds[s+1]`.  Each stage stashes activations for every
+/// in-flight micro-batch — all `m` under the GPipe schedule, i.e. the
+/// full mini-batch stage activation plus the stage input boundary.  With
+/// recompute, only the boundary checkpoints stay stashed and a single
+/// micro-batch's working set is resident at a time.
+pub fn pipelined(prof: &ModelProfile, model: &MemoryModel,
+                 bounds: &[usize], microbatches: usize)
+                 -> Result<MemoryEstimate> {
+    if bounds.len() < 2 {
+        bail!("pipeline bounds need at least one stage: {bounds:?}");
+    }
+    let order = prof.dfg.topo_order()?;
+    if *bounds.last().unwrap() != order.len() {
+        bail!("pipeline bounds {bounds:?} do not cover {} ops",
+              order.len());
+    }
+    let m = microbatches.max(1) as f64;
+    let mut pos = vec![0usize; prof.dfg.n_ops()];
+    for (p, &v) in order.iter().enumerate() {
+        pos[v] = p;
+    }
+    let mut peak: Option<MemoryEstimate> = None;
+    for s in 0..bounds.len() - 1 {
+        let ops = &order[bounds[s]..bounds[s + 1]];
+        let w: f64 =
+            ops.iter().map(|&o| op_weight_bytes(&prof.dfg.ops[o])).sum();
+        let raw_out: f64 = ops
+            .iter()
+            .map(|&o| op_activation_bytes(&prof.dfg.ops[o]))
+            .sum();
+        // Input boundary bytes stashed per micro-batch; × m in flight.
+        let cut_in: f64 = if s == 0 {
+            0.0
+        } else {
+            let b = bounds[s];
+            prof.dfg
+                .edges
+                .iter()
+                .filter(|e| pos[e.src] < b && pos[e.dst] >= b)
+                .map(|e| e.bytes)
+                .sum()
+        };
+        let act = if model.recompute {
+            // Checkpoints (boundary, all m micro-batches) + one
+            // micro-batch's working intermediates.
+            cut_in + raw_out * model.act_factor / m
+        } else {
+            // GPipe stash: every micro-batch's activations stay alive
+            // until its backward — the full mini-batch worth.
+            cut_in + raw_out * model.act_factor
+        };
+        let est = MemoryEstimate::from_parts(model, w, act);
+        if peak.map_or(true, |p| est.total_bytes > p.total_bytes) {
+            peak = Some(est);
+        }
+    }
+    Ok(peak.expect("at least one stage"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn optimizer_parse_round_trip() {
+        for o in [Optimizer::Sgd, Optimizer::Momentum, Optimizer::Adam] {
+            assert_eq!(Optimizer::parse(o.as_str()).unwrap(), o);
+        }
+        assert_eq!(Optimizer::parse("adamw").unwrap(), Optimizer::Adam);
+        assert!(Optimizer::parse("lion").is_err());
+    }
+
+    #[test]
+    fn optimizer_state_ordering() {
+        // sgd ⊂ momentum ⊂ adam on the same model.
+        let prof = models::gnmt(128);
+        let mut totals = Vec::new();
+        for opt in [Optimizer::Sgd, Optimizer::Momentum, Optimizer::Adam] {
+            let m = MemoryModel { optimizer: opt, ..Default::default() };
+            totals.push(single_device(&prof, &m).total_bytes);
+        }
+        assert!(totals[0] < totals[1] && totals[1] < totals[2],
+                "state multipliers must order totals: {totals:?}");
+        // Adam adds exactly 2× the weights over SGD.
+        let w = single_device(&prof, &MemoryModel::default()).weight_bytes;
+        assert!((totals[2] - totals[0] - 2.0 * w).abs() < 1.0);
+    }
+
+    #[test]
+    fn activations_scale_with_batch() {
+        let m = MemoryModel::default();
+        let small = single_device(&models::gnmt(32), &m);
+        let large = single_device(&models::gnmt(256), &m);
+        assert!(large.activation_bytes > 7.0 * small.activation_bytes,
+                "activations must scale ~linearly with batch: {} vs {}",
+                large.activation_bytes, small.activation_bytes);
+        assert!((large.weight_bytes - small.weight_bytes).abs()
+                    < 1e-6 * small.weight_bytes,
+                "weights must not scale with batch");
+    }
+
+    #[test]
+    fn recompute_trades_memory_for_time() {
+        let full = MemoryModel::default();
+        let rc = MemoryModel { recompute: true, ..Default::default() };
+        let prof = models::inception_v3(64);
+        let f = single_device(&prof, &full);
+        let r = single_device(&prof, &rc);
+        assert!(r.activation_bytes < f.activation_bytes);
+        assert!(r.total_bytes < f.total_bytes);
+        assert!(r.recompute && !f.recompute);
+        assert!((full.time_factor() - 1.0).abs() < 1e-12);
+        assert!(rc.time_factor() > 1.30 && rc.time_factor() < 1.37,
+                "one extra forward ≈ 4/3: {}", rc.time_factor());
+    }
+
+    #[test]
+    fn biglstm_needs_more_than_16gb_under_adam() {
+        // The paper's §4.1 motivation: BigLSTM needed the 32 GB V100.
+        let prof = models::biglstm(64);
+        let est = single_device(&prof, &MemoryModel::default());
+        assert!(est.total_bytes > 16e9,
+                "BigLSTM + Adam must overflow a 16 GB part: {:.1} GB",
+                est.total_bytes / 1e9);
+        assert!(est.total_bytes < 32e9,
+                "…but fit the 32 GB V100: {:.1} GB",
+                est.total_bytes / 1e9);
+        assert!(!est.fits(16e9));
+        assert!(est.fits(32e9) && est.fits(80e9));
+    }
+
+    #[test]
+    fn pipeline_stages_shrink_the_peak() {
+        // Splitting BigLSTM across 2 stages must reduce peak weights (the
+        // 3.25 GB softmax projection no longer shares a device with the
+        // LSTM stacks).
+        let prof = models::biglstm(64);
+        let m = MemoryModel::default();
+        let whole = single_device(&prof, &m);
+        let n = prof.dfg.n_ops();
+        // Balanced-ish manual split: first half / second half.
+        let est = pipelined(&prof, &m, &[0, n / 2, n], 4).unwrap();
+        assert!(est.weight_bytes < whole.weight_bytes);
+        assert!(est.total_bytes < whole.total_bytes);
+        assert!(est.fits(16e9),
+                "2-stage BigLSTM must fit 16 GB: {:.1} GB",
+                est.total_bytes / 1e9);
+    }
+
+    #[test]
+    fn pipelined_recompute_reduces_stash() {
+        let prof = models::inception_v3(64);
+        let full = MemoryModel::default();
+        let rc = MemoryModel { recompute: true, ..Default::default() };
+        let n = prof.dfg.n_ops();
+        let bounds = [0, n / 2, n];
+        let f = pipelined(&prof, &full, &bounds, 8).unwrap();
+        let r = pipelined(&prof, &rc, &bounds, 8).unwrap();
+        assert!(r.activation_bytes < f.activation_bytes,
+                "recompute must shrink the GPipe stash: {} vs {}",
+                r.activation_bytes, f.activation_bytes);
+    }
+
+    #[test]
+    fn placed_peaks_on_the_heavy_device() {
+        let prof = models::gnmt(128);
+        let m = MemoryModel::default();
+        let n = prof.dfg.n_ops();
+        // Everything on device 0 ≡ single device.
+        let all0 = placed(&prof, &m, &vec![0; n]);
+        let single = single_device(&prof, &m);
+        assert!((all0.total_bytes - single.total_bytes).abs() < 1.0);
+        // An even split strictly reduces the peak.
+        let alt: Vec<usize> = (0..n).map(|i| i % 2).collect();
+        let split = placed(&prof, &m, &alt);
+        assert!(split.total_bytes < single.total_bytes);
+    }
+
+    #[test]
+    fn bad_pipeline_bounds_rejected() {
+        let prof = models::gnmt(128);
+        let m = MemoryModel::default();
+        assert!(pipelined(&prof, &m, &[0], 2).is_err());
+        assert!(pipelined(&prof, &m, &[0, 3], 2).is_err(), "short cover");
+    }
+
+    #[test]
+    fn feasibility_check_and_json() {
+        let prof = models::biglstm(64);
+        let est = single_device(&prof, &MemoryModel::default());
+        let ok = Feasibility::check(&est, 80e9);
+        let bad = Feasibility::check(&est, 16e9);
+        assert!(ok.is_feasible());
+        assert!(!bad.is_feasible());
+        for f in [ok, bad] {
+            let j = f.to_json().to_string();
+            let back = Feasibility::from_json(
+                &Json::parse(&j).unwrap()).unwrap();
+            assert_eq!(f, back);
+        }
+        let j = est.to_json().to_string();
+        let back =
+            MemoryEstimate::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(est, back);
+    }
+}

@@ -69,10 +69,32 @@ pub fn partition_chain(dfg: &Dfg, times: &[f64], n_stages: usize)
 /// crosses, modelling the traffic of a linear device chain.
 pub fn partition_stages(dfg: &Dfg, times: &[f64], n_stages: usize)
                         -> Result<Partition> {
+    partition_stages_capped(dfg, times, n_stages, &[], f64::INFINITY)
+}
+
+/// [`partition_stages`] with a **memory-balanced objective**: minimise the
+/// max stage time *subject to* every stage's resident bytes
+/// (`Σ op_mem[k]` over its ops) staying under `mem_cap` — the per-device
+/// Mem(n) bound of paper Eq. 13, applied to pipeline stages.  When the
+/// unconstrained optimum would overload a device, the DP shifts the cut to
+/// the best split that fits (possibly a worse compute bottleneck — the
+/// footprint/speed trade the memory-feasibility layer makes explicit),
+/// and errors only when *no* contiguous `n_stages`-way split fits.
+///
+/// An infinite `mem_cap` (or an empty `op_mem`) disables the constraint
+/// and recovers [`partition_stages`] exactly.
+pub fn partition_stages_capped(dfg: &Dfg, times: &[f64], n_stages: usize,
+                               op_mem: &[f64], mem_cap: f64)
+                               -> Result<Partition> {
     let order = dfg.topo_order()?;
     let n = order.len();
     if n_stages == 0 || n_stages > n {
         bail!("bad stage count {n_stages} for {n} ops");
+    }
+    let capped = mem_cap.is_finite() && !op_mem.is_empty();
+    if capped && op_mem.len() != dfg.n_ops() {
+        bail!("op_mem has {} entries for {} ops", op_mem.len(),
+              dfg.n_ops());
     }
     let t: Vec<f64> = order.iter().map(|&v| times[v]).collect();
     let prefix: Vec<f64> = std::iter::once(0.0)
@@ -81,7 +103,19 @@ pub fn partition_stages(dfg: &Dfg, times: &[f64], n_stages: usize)
             Some(*acc)
         }))
         .collect();
-    // dp[s][i] = min over j of max(dp[s-1][j], sum t[j..i]).
+    // Memory prefix over the same linearisation (only when constrained).
+    let mem_prefix: Vec<f64> = if capped {
+        std::iter::once(0.0)
+            .chain(order.iter().scan(0.0, |acc, &v| {
+                *acc += op_mem[v];
+                Some(*acc)
+            }))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    // dp[s][i] = min over j of max(dp[s-1][j], sum t[j..i]), restricted to
+    // segments j..i whose memory fits the cap.
     let inf = f64::INFINITY;
     let mut dp = vec![vec![inf; n + 1]; n_stages + 1];
     let mut cut = vec![vec![0usize; n + 1]; n_stages + 1];
@@ -89,6 +123,9 @@ pub fn partition_stages(dfg: &Dfg, times: &[f64], n_stages: usize)
     for s in 1..=n_stages {
         for i in s..=n {
             for j in (s - 1)..i {
+                if capped && mem_prefix[i] - mem_prefix[j] > mem_cap {
+                    continue;
+                }
                 let seg = prefix[i] - prefix[j];
                 let v = dp[s - 1][j].max(seg);
                 if v < dp[s][i] {
@@ -97,6 +134,10 @@ pub fn partition_stages(dfg: &Dfg, times: &[f64], n_stages: usize)
                 }
             }
         }
+    }
+    if dp[n_stages][n].is_infinite() {
+        bail!("no {n_stages}-stage partition of '{}' fits {:.2} GB per \
+               stage", dfg.name, mem_cap / 1e9);
     }
     let mut bounds = vec![n];
     let mut i = n;
@@ -456,6 +497,56 @@ mod tests {
         // op's sibling and the sibling->d edge), 4 MB each.
         assert_eq!(p.cut_bytes.len(), 1);
         assert!((p.cut_bytes[0] - 8e6).abs() < 1.0, "{}", p.cut_bytes[0]);
+    }
+
+    #[test]
+    fn uncapped_partition_equals_partition_stages() {
+        let (g, t) = chain(&[1.0, 3.0, 2.0, 1.0, 1.0]);
+        let mems = vec![1e9; 5];
+        for stages in [1usize, 2, 3] {
+            let a = partition_stages(&g, &t, stages).unwrap();
+            let b = partition_stages_capped(&g, &t, stages, &mems,
+                                            f64::INFINITY)
+                .unwrap();
+            let c = partition_stages_capped(&g, &t, stages, &[], 1.0)
+                .unwrap();
+            assert_eq!(a.bounds, b.bounds);
+            assert_eq!(a.bounds, c.bounds, "empty op_mem disables the cap");
+        }
+    }
+
+    #[test]
+    fn memory_cap_moves_the_cut() {
+        // Compute-optimal 2-way split of [1,1,1,1] is 2|2, but op 0+1
+        // together blow a 1.5 GB cap: the DP must shift to 1|3 even
+        // though the bottleneck worsens from 2.0 to 3.0.
+        let (g, t) = chain(&[1.0, 1.0, 1.0, 1.0]);
+        let mems = vec![1e9, 1e9, 0.2e9, 0.2e9];
+        let free = partition_stages_capped(&g, &t, 2, &mems, f64::INFINITY)
+            .unwrap();
+        assert_eq!(free.bounds, vec![0, 2, 4]);
+        let capped =
+            partition_stages_capped(&g, &t, 2, &mems, 1.5e9).unwrap();
+        assert_eq!(capped.bounds, vec![0, 1, 4],
+                   "cap must force the lighter first stage");
+        let max = capped.stage_times.iter().cloned().fold(0.0, f64::max);
+        assert!((max - 3.0).abs() < 1e-9,
+                "trades compute balance for footprint");
+        // Per-stage memory respects the cap.
+        assert!(mems[..1].iter().sum::<f64>() <= 1.5e9);
+        assert!(mems[1..].iter().sum::<f64>() <= 1.5e9);
+    }
+
+    #[test]
+    fn impossible_memory_cap_errors() {
+        let (g, t) = chain(&[1.0, 1.0]);
+        let mems = vec![2e9, 2e9];
+        assert!(partition_stages_capped(&g, &t, 2, &mems, 1e9).is_err());
+        assert!(partition_stages_capped(&g, &t, 1, &mems, 3e9).is_err(),
+                "single stage cannot fit 4 GB in 3 GB");
+        assert!(partition_stages_capped(&g, &t, 2, &mems[..1], 1e9)
+                    .is_err(),
+                "op_mem length mismatch must be loud");
     }
 
     #[test]

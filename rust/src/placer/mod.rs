@@ -360,6 +360,14 @@ fn segment_dfg(dfg: &Dfg, ops: &[usize]) -> Dfg {
 
 /// HLFET list-scheduling heuristic with communication awareness: assign
 /// each ready op to the device minimising its completion time.
+///
+/// Memory-balanced objective: devices whose Eq. 13 capacity the op would
+/// overflow are dropped from the candidate set while any fitting device
+/// remains, so the heuristic (and the "expert manual placement" baseline
+/// it stands in for) respects per-device footprints instead of piling
+/// weights onto the fastest-finishing GPU.  When *no* device fits, the
+/// full set is kept (the placement is validated downstream and reported
+/// infeasible there, with the overflow amount).
 fn heuristic_segment(dfg: &Dfg, hw: &HwGraph, times: &[f64], ops: &[usize],
                      devices: &[usize], pinned: &[(usize, usize)])
                      -> Result<(Vec<usize>, f64)> {
@@ -382,6 +390,7 @@ fn heuristic_segment(dfg: &Dfg, hw: &HwGraph, times: &[f64], ops: &[usize],
         }
     }
     let mut dev_free = vec![0.0f64; hw.nodes.len()];
+    let mut mem_used = vec![0.0f64; hw.nodes.len()];
     let mut finish = vec![0.0f64; n];
     let mut assign = vec![devices[0]; n];
     let mut done = vec![false; n];
@@ -395,11 +404,22 @@ fn heuristic_segment(dfg: &Dfg, hw: &HwGraph, times: &[f64], ops: &[usize],
         let v = ready[0];
         // Choose device minimising completion.
         let mut best = (f64::INFINITY, devices[0]);
-        let cands: Vec<usize> = if pin_map[v] != usize::MAX {
+        let mut cands: Vec<usize> = if pin_map[v] != usize::MAX {
             vec![pin_map[v]]
         } else {
             devices.to_vec()
         };
+        // Memory balance (Eq. 13): while any device still fits the op,
+        // restrict the choice to those devices.
+        let op_mem = sub.ops[v].mem_bytes;
+        let fitting: Vec<usize> = cands
+            .iter()
+            .copied()
+            .filter(|&d| mem_used[d] + op_mem <= hw.nodes[d].mem_capacity)
+            .collect();
+        if !fitting.is_empty() {
+            cands = fitting;
+        }
         for &d in &cands {
             let mut data_ready = 0.0f64;
             for &q in &preds[v] {
@@ -425,6 +445,7 @@ fn heuristic_segment(dfg: &Dfg, hw: &HwGraph, times: &[f64], ops: &[usize],
         assign[v] = best.1;
         finish[v] = best.0;
         dev_free[best.1] = best.0;
+        mem_used[best.1] += op_mem;
         done[v] = true;
         n_done += 1;
     }
@@ -639,6 +660,24 @@ mod tests {
         validate_placement(&g, &hw, &p.assignment).unwrap();
         assert_ne!(p.assignment[0], p.assignment[1],
                    "memory must force a split");
+    }
+
+    #[test]
+    fn heuristic_respects_memory_capacity() {
+        // Two independent-ish heavy-memory ops after a root: completion
+        // time alone would co-locate the cheap chain, but 9 GB + 9 GB
+        // overflows one 16 GB V100 — the heuristic must spread them.
+        let mut g = Dfg::new("mem-heur");
+        let a = g.add_op("a", 1.0, 1e3, 1e6);
+        let b = g.add_op("b", 1.0, 1e3, 9e9);
+        let c = g.add_op("c", 1.0, 1e3, 9e9);
+        g.add_edge(a, b);
+        g.add_edge(b, c);
+        let hw = dgx1(2); // 16 GB per device
+        let h = place_heuristic(&g, &hw, &[0.01, 0.01, 0.01], 2).unwrap();
+        validate_placement(&g, &hw, &h.assignment).unwrap();
+        assert_ne!(h.assignment[1], h.assignment[2],
+                   "heuristic must memory-balance: {:?}", h.assignment);
     }
 
     #[test]

@@ -25,6 +25,7 @@
 use anyhow::Result;
 
 use crate::cluster::{HwGraph, LinkKind};
+use crate::memory::{self, MemoryEstimate, MemoryModel};
 use crate::models::ModelProfile;
 use crate::parallel::ScalingEfficiency;
 use crate::pipeline::{self, PipeConfig};
@@ -114,6 +115,27 @@ pub trait CostModel: Send + Sync {
     /// `devices` (which may exceed the physical box — a projection).
     fn scaling(&self, prof: &ModelProfile, hw: &HwGraph,
                step_compute_s: f64, devices: usize) -> ScalingEfficiency;
+
+    /// Per-device footprint of the worker layout `est` describes, under
+    /// the accounting model `mem` — reported alongside the step time so
+    /// [`crate::planner::Planner::plan`] can mark candidates
+    /// [`crate::memory::Feasibility::Infeasible`] instead of scoring
+    /// them.  Dispatches on the estimate's artifacts: stage bounds →
+    /// GPipe stashing ([`crate::memory::pipelined`]), a placement →
+    /// per-device sums ([`crate::memory::placed`]), neither → the whole
+    /// model on one device ([`crate::memory::single_device`], the M = 1
+    /// baseline every DP replica shares).
+    fn memory_estimate(&self, prof: &ModelProfile, est: &MpEstimate,
+                       mem: &MemoryModel) -> Result<MemoryEstimate> {
+        if let Some(bounds) = &est.pipeline_bounds {
+            memory::pipelined(prof, mem, bounds,
+                              est.microbatches.unwrap_or(1))
+        } else if let Some(assignment) = &est.placement {
+            Ok(memory::placed(prof, mem, assignment))
+        } else {
+            Ok(memory::single_device(prof, mem))
+        }
+    }
 }
 
 /// Resolve a cost model by name.
@@ -131,6 +153,31 @@ pub fn cost_by_name(name: &str) -> Result<Box<dyn CostModel>> {
 /// True iff no vertex has more than one successor (a pure layer chain).
 fn is_chain(prof: &ModelProfile) -> bool {
     prof.dfg.successors().iter().all(|s| s.len() <= 1)
+}
+
+/// Stage partition with the memory-balanced objective: per-stage resident
+/// bytes (the DFG's raw M(k), the same weights + activations the placer's
+/// Eq. 13 rows use) capped at the smallest device memory of `hw`.  On the
+/// topologies where the cap never binds this is byte-identical to the
+/// unconstrained [`pipeline::partition_stages`]; when the compute-optimal
+/// cut would overload a device it shifts to the best split that fits.
+///
+/// This is deliberately the *structural* Eq. 13 bound — identical to what
+/// the placer ILP enforces for placed candidates — not the full training
+/// footprint (gradients + optimizer state + stash multipliers), which the
+/// planner judges separately via [`CostModel::memory_estimate`] on the
+/// resulting bounds.  Cost models cannot see the accounting
+/// [`MemoryModel`] (it is a per-request planner input), so the two bounds
+/// can disagree: a partition can pass the raw cap and still be marked
+/// infeasible by the accounting layer.  The accounting verdict is the
+/// source of truth; the cap only keeps the *cut placement* from parking
+/// more raw bytes on a stage than the device physically holds.
+fn stage_partition(prof: &ModelProfile, hw: &HwGraph, times: &[f64],
+                   stages: usize) -> Result<pipeline::Partition> {
+    let op_mem: Vec<f64> =
+        prof.dfg.ops.iter().map(|o| o.mem_bytes).collect();
+    pipeline::partition_stages_capped(&prof.dfg, times, stages, &op_mem,
+                                      hw.min_device_mem())
 }
 
 /// Inter-stage link (bandwidth, latency) between the first two devices of
@@ -204,8 +251,10 @@ impl AnalyticalCost {
         }
     }
 
-    /// Overlap-aware GPipe estimate: partition (any DAG, topo-linearised),
-    /// search the micro-batch count, report the analytic schedule time.
+    /// Overlap-aware GPipe estimate: partition (any DAG, topo-linearised,
+    /// per-stage resident bytes capped at the device's Mem(n) so the
+    /// partition itself is memory-balanced), search the micro-batch
+    /// count, report the analytic schedule time.
     fn pipelined_estimate(&self, prof: &ModelProfile, hw: &HwGraph,
                           stages: usize) -> Result<MpEstimate> {
         let times = prof.dfg.op_times(self.flops_per_sec,
@@ -214,7 +263,7 @@ impl AnalyticalCost {
             return Ok(MpEstimate::serial(times.iter().sum()));
         }
         let cfg = self.pipe_cfg(prof, hw);
-        let p = pipeline::partition_stages(&prof.dfg, &times, stages)?;
+        let p = stage_partition(prof, hw, &times, stages)?;
         let (m, t, _su) =
             pipeline::best_microbatches(&p, self.max_microbatches, cfg);
         Ok(MpEstimate {
@@ -425,7 +474,7 @@ impl CostModel for SimulatorCost {
                  '{}' has {}", hw.name, devs.len());
         }
         let cfg = a.pipe_cfg(prof, hw);
-        let p = pipeline::partition_stages(&prof.dfg, &times, stages)?;
+        let p = stage_partition(prof, hw, &times, stages)?;
         // Micro-batch count from the analytic search; the *time* from
         // executing the unrolled schedule under contention + overhead.
         let (m, _analytic, _su) =
@@ -571,6 +620,59 @@ mod tests {
         let prof = models::gnmt(128);
         let hw = cluster::dgx1(2);
         assert!(s.pipelined_mp_step_time(&prof, &hw, 4).is_err());
+    }
+
+    #[test]
+    fn memory_estimate_dispatches_on_mechanism() {
+        use crate::memory::MemoryModel;
+        let c = AnalyticalCost::default();
+        let mm = MemoryModel::default();
+        let hw = cluster::dgx1_mem(2, cluster::V100_32G_MEM);
+
+        // M = 1: the whole model on one device.
+        let prof = models::biglstm(64);
+        let serial = c.mp_step_time(&prof, &hw, 1).unwrap();
+        let m1 = c.memory_estimate(&prof, &serial, &mm).unwrap();
+        let direct = crate::memory::single_device(&prof, &mm);
+        assert_eq!(m1, direct);
+
+        // Pipelined: stage bounds drive the estimate, peak below serial.
+        let pipe = c.pipelined_mp_step_time(&prof, &hw, 2).unwrap();
+        let mp = c.memory_estimate(&prof, &pipe, &mm).unwrap();
+        assert!(mp.total_bytes < m1.total_bytes,
+                "2 stages must shrink the peak: {} vs {}",
+                mp.total_bytes, m1.total_bytes);
+
+        // Placed: inception's DLPlacer assignment spreads weights.
+        let inc = models::inception_v3(32);
+        let placed = c.mp_step_time(&inc, &hw, 2).unwrap();
+        assert_eq!(placed.mechanism, MpMechanism::Placed);
+        let mplaced = c.memory_estimate(&inc, &placed, &mm).unwrap();
+        let whole = crate::memory::single_device(&inc, &mm);
+        assert!(mplaced.total_bytes <= whole.total_bytes + 1.0);
+    }
+
+    #[test]
+    fn stage_partition_caps_at_device_memory() {
+        // A topology with devices too small for the compute-optimal cut
+        // must shift the boundary; identical to unconstrained on roomy
+        // devices.
+        let c = AnalyticalCost::default();
+        let prof = models::biglstm(64);
+        let roomy = cluster::dgx1_mem(2, cluster::V100_32G_MEM);
+        let e32 = c.pipelined_mp_step_time(&prof, &roomy, 2).unwrap();
+        // 3.3 GB parts cannot hold the compute-optimal second stage
+        // (lstm1 + the 3.25 GB softmax ≈ 3.55 GB): the cut must shift to
+        // the softmax-only stage, trading balance for footprint.
+        let tiny = cluster::dgx1_mem(2, 3.3e9);
+        let e33 = c.pipelined_mp_step_time(&prof, &tiny, 2).unwrap();
+        assert_ne!(e32.pipeline_bounds, e33.pipeline_bounds,
+                   "cap must move the cut on 3.3 GB parts");
+        assert!(e33.step_time_s >= e32.step_time_s - 1e-12,
+                "memory-feasible cut cannot beat the unconstrained one");
+        // And devices too small for any split error loudly.
+        let hopeless = cluster::dgx1_mem(2, 1e9);
+        assert!(c.pipelined_mp_step_time(&prof, &hopeless, 2).is_err());
     }
 
     #[test]

@@ -28,6 +28,19 @@
 //!   pipeline partition, per-candidate scorecard; round-trips through
 //!   [`crate::util::json`].
 //!
+//! Every candidate is also checked against the per-device footprint model
+//! of [`crate::memory`] (weights + gradients + optimizer state +
+//! activations, GPipe stashing included): candidates that estimate but
+//! overflow the device are marked
+//! [`crate::memory::Feasibility::Infeasible`] in the scorecard instead
+//! of being scored, `PlanRequest::device_mem_gb` overrides the
+//! topology's capacity, and a memory-infeasible DP baseline drops out of
+//! selection entirely — strategies chosen because DP *cannot fit*, not
+//! just because hybrid is faster.  A degree whose estimation fails
+//! outright (deeper than the topology, or no stage split under the raw
+//! Eq. 13 cap) drops out of the search without a scorecard row, as
+//! topology-infeasible degrees always have.
+//!
 //! The candidate space covers both of the paper's MP mechanisms *per
 //! degree*: the Table 1 structural default (DLPlacer placement for branchy
 //! graphs, GPipe pipeline for chains) and an explicit
@@ -52,6 +65,7 @@ pub use registry::{ModelEntry, ModelRegistry, TopologyEntry,
                    TopologyRegistry};
 
 use crate::coordinator::Strategy;
+use crate::memory::{Feasibility, MemoryEstimate, MemoryModel};
 use crate::parallel::NetworkModel;
 use crate::util::json::Json;
 
@@ -109,6 +123,14 @@ pub struct PlanRequest {
     pub pipeline_only: bool,
     /// Upper bound of the speedup-curve sweep (powers of two).
     pub curve_max_devices: usize,
+    /// Per-device memory override in GB (None = the topology's own
+    /// Mem(n)).  "What if these were 16 GB parts?" — the sweep engine's
+    /// `device_mem_gb` axis.
+    pub device_mem_gb: Option<f64>,
+    /// Footprint accounting (optimizer state, activation stash,
+    /// recompute) used to mark candidates
+    /// [`crate::memory::Feasibility::Infeasible`].
+    pub memory: MemoryModel,
 }
 
 impl PlanRequest {
@@ -122,6 +144,8 @@ impl PlanRequest {
             mp_degrees: vec![2],
             pipeline_only: false,
             curve_max_devices: 256,
+            device_mem_gb: None,
+            memory: MemoryModel::default(),
         }
     }
 
@@ -152,6 +176,18 @@ impl PlanRequest {
 
     pub fn curve_to(mut self, n: usize) -> Self {
         self.curve_max_devices = n;
+        self
+    }
+
+    /// Override every device's memory capacity (GB).
+    pub fn device_mem_gb(mut self, gb: f64) -> Self {
+        self.device_mem_gb = Some(gb);
+        self
+    }
+
+    /// Use a specific footprint accounting model.
+    pub fn memory(mut self, m: MemoryModel) -> Self {
+        self.memory = m;
         self
     }
 }
@@ -190,6 +226,12 @@ pub struct CandidateScore {
     /// budget) carry `dp_workers`/`replicas` of 0, which
     /// [`crate::coordinator::Coordinator::train`] rejects with an error.
     pub strategy: Strategy,
+    /// Peak per-device footprint of this candidate's worker layout.
+    pub memory: Option<MemoryEstimate>,
+    /// Whether that footprint fits the device — infeasible candidates
+    /// stay visible in the scorecard with `{required, available}` instead
+    /// of being scored.
+    pub feasibility: Feasibility,
     pub note: String,
 }
 
@@ -239,6 +281,17 @@ pub struct Plan {
     pub placement: Option<Vec<usize>>,
     /// Stage bounds when the chosen MP mechanism is "pipelined".
     pub pipeline_bounds: Option<Vec<usize>>,
+    /// The request's per-device memory override, if any (GB).
+    pub device_mem_gb: Option<f64>,
+    /// Per-device Mem(n) the feasibility checks ran against (bytes).
+    pub available_mem_bytes: f64,
+    /// Optimizer family of the footprint model ("sgd" | "momentum" |
+    /// "adam").
+    pub optimizer: String,
+    /// Whether gradient-checkpointing recompute was assumed.
+    pub recompute: bool,
+    /// Peak per-device footprint of the chosen strategy.
+    pub memory: Option<MemoryEstimate>,
     pub scorecard: Vec<CandidateScore>,
     pub curve: Vec<CurvePoint>,
 }
@@ -319,7 +372,29 @@ impl Planner {
             bail!("device budget must be >= 1");
         }
         let prof = self.models.build(&req.model, req.batch)?;
-        let hw = self.topologies.build(&req.topology, req.devices)?;
+        let mut hw = self.topologies.build(&req.topology, req.devices)?;
+        if let Some(gb) = req.device_mem_gb {
+            if !gb.is_finite() || gb <= 0.0 {
+                bail!("device memory override must be a positive finite \
+                       GB figure, got {gb}");
+            }
+            hw.set_device_mem(gb * 1e9);
+        }
+        if !req.memory.act_factor.is_finite() || req.memory.act_factor <= 0.0
+            || !req.memory.reserved_bytes.is_finite()
+            || req.memory.reserved_bytes < 0.0
+        {
+            bail!("memory model knobs out of range: act_factor {} \
+                   (want > 0), reserved_bytes {} (want >= 0)",
+                  req.memory.act_factor, req.memory.reserved_bytes);
+        }
+        // Per-device Mem(n) every candidate's peak footprint must fit.
+        let available = hw.min_device_mem();
+        let mem_model = &req.memory;
+        // Recompute trades footprint for one extra forward pass: it
+        // inflates every worker's step time uniformly, so SU^M ratios are
+        // unaffected and only reported step times carry the factor.
+        let time_factor = mem_model.time_factor();
 
         // Candidate MP degrees: {1} ∪ requested (deduplicated, > 1).
         let mut degrees: Vec<usize> = req
@@ -334,55 +409,94 @@ impl Planner {
         // Per-degree worker estimates from the cost model.  Each M > 1 is
         // scored under its Table 1 structural default (placed / pipelined)
         // AND as an explicit GPipe pipeline over the topo linearisation;
-        // the faster one drives Eq. 5 and the runner-up stays in the
-        // scorecard.  `pipeline_only` requests skip the structural default.
-        let serial = self.cost.mp_step_time(&prof, &hw, 1)?.step_time_s;
-        let mut estimates: BTreeMap<usize, MpEstimate> = BTreeMap::new();
-        let mut alt_estimates: BTreeMap<usize, MpEstimate> = BTreeMap::new();
+        // the fastest *memory-feasible* one drives Eq. 5 and the
+        // runner-up stays in the scorecard.  A degree with no feasible
+        // mechanism keeps its fastest candidate visible as
+        // `Infeasible{required, available}` instead of being scored.
+        // `pipeline_only` requests skip the structural default.
+        let serial_est = self.cost.mp_step_time(&prof, &hw, 1)?;
+        let serial = serial_est.step_time_s;
+        let serial_mem =
+            self.cost.memory_estimate(&prof, &serial_est, mem_model)?;
+        // DP replicas all hold the whole model: M = 1 feasibility is the
+        // single-device footprint, independent of the DP width.
+        let dp_fits = serial_mem.fits(available);
+
+        struct Scored {
+            est: MpEstimate,
+            mem: MemoryEstimate,
+            fits: bool,
+        }
+        let mut best_scored: BTreeMap<usize, Scored> = BTreeMap::new();
+        let mut alt_scored: BTreeMap<usize, Scored> = BTreeMap::new();
         let mut mp_speedups: Vec<(usize, f64)> = Vec::new();
         // A degree whose estimation is infeasible on this topology (more
-        // stages than ops or physical devices) drops out of the search
-        // instead of failing the plan — M > 1 candidates are analysis
-        // material, and the M = 1 baseline above still surfaces real cost
-        // model failures.
+        // stages than ops or physical devices, or no stage split fits the
+        // device memory) drops out of the search instead of failing the
+        // plan — M > 1 candidates are analysis material, and the M = 1
+        // baseline above still surfaces real cost model failures.
         for &m in &degrees {
             let default = if req.pipeline_only {
                 None
             } else {
                 self.cost.mp_step_time(&prof, &hw, m).ok()
             };
-            let (best, alt) = match default {
-                // The structural default *is* the pipeline: one candidate.
-                Some(d) if d.mechanism == MpMechanism::Pipelined => {
-                    (d, None)
+            // Candidate list in mechanism-preference order (structural
+            // default first — ties keep it, as before the memory layer).
+            let mut cands: Vec<MpEstimate> = Vec::new();
+            let default_is_pipe = matches!(
+                &default,
+                Some(d) if d.mechanism == MpMechanism::Pipelined);
+            if let Some(d) = default {
+                cands.push(d);
+            }
+            if !default_is_pipe {
+                if let Ok(p) =
+                    self.cost.pipelined_mp_step_time(&prof, &hw, m)
+                {
+                    cands.push(p);
                 }
-                Some(d) => {
-                    match self.cost.pipelined_mp_step_time(&prof, &hw, m) {
-                        Ok(p) if p.step_time_s < d.step_time_s => {
-                            (p, Some(d))
-                        }
-                        Ok(p) => (d, Some(p)),
-                        Err(_) => (d, None),
-                    }
+            }
+            if cands.is_empty() {
+                continue;
+            }
+            let mut scored: Vec<Scored> = Vec::with_capacity(cands.len());
+            for est in cands {
+                let mem =
+                    self.cost.memory_estimate(&prof, &est, mem_model)?;
+                let fits = mem.fits(available);
+                scored.push(Scored { est, mem, fits });
+            }
+            // Fastest feasible candidate wins (strictly-faster replaces,
+            // so the structural default keeps ties); if nothing fits, the
+            // fastest overall stays as the degree's infeasible row.
+            let mut best_idx = 0usize;
+            let mut best_key = (!scored[0].fits, scored[0].est.step_time_s);
+            for (i, s) in scored.iter().enumerate().skip(1) {
+                let key = (!s.fits, s.est.step_time_s);
+                if key < best_key {
+                    best_idx = i;
+                    best_key = key;
                 }
-                // pipeline_only, or the structural default itself was
-                // infeasible: the explicit pipeline is the only candidate.
-                None => {
-                    match self.cost.pipelined_mp_step_time(&prof, &hw, m) {
-                        Ok(p) => (p, None),
-                        Err(_) => continue,
-                    }
-                }
-            };
-            mp_speedups.push((m, serial / best.step_time_s));
-            estimates.insert(m, best);
-            if let Some(a) = alt {
-                alt_estimates.insert(m, a);
+            }
+            let best = scored.swap_remove(best_idx);
+            if best.fits {
+                mp_speedups.push((m, serial / best.est.step_time_s));
+            }
+            best_scored.insert(m, best);
+            if let Some(a) = scored.pop() {
+                alt_scored.insert(m, a);
             }
         }
-        // Degrees that survived estimation (pipeline-only may drop some).
-        let degrees: Vec<usize> = estimates.keys().copied().collect();
-        let se = self.cost.scaling(&prof, &hw, serial, req.devices);
+        // Degrees whose best mechanism both estimated and fit in memory —
+        // the ones Eq. 5 and the speedup curve may use.
+        let feasible_degrees: Vec<usize> =
+            mp_speedups.iter().map(|&(m, _)| m).collect();
+        // SE_N sees the recompute-inflated compute time: the extra
+        // forward overlaps nothing, so it (slightly) improves the
+        // compute/communication ratio.
+        let se = self.cost.scaling(&prof, &hw, serial * time_factor,
+                                   req.devices);
         let net = NetworkModel {
             name: prof.name.clone(),
             epochs: prof.epochs.clone(),
@@ -396,7 +510,10 @@ impl Planner {
         // with `stages == 2`), so only M ∈ {1, 2} maps onto a runnable
         // strategy.  Wider requested degrees still appear in the scorecard
         // and speedup curve for analysis, but the *chosen* strategy is
-        // restricted to what the runtime can execute.
+        // restricted to what the runtime can execute — and to what fits
+        // in device memory: a memory-infeasible M = 1 drops DP-only from
+        // the selection entirely (the "hybrid because DP cannot fit"
+        // regime the paper's projections could not express).
         let exec_net = NetworkModel {
             mp_speedups: net
                 .mp_speedups
@@ -406,17 +523,31 @@ impl Planner {
                 .collect(),
             ..net.clone()
         };
-        let exec_ms: Vec<usize> = std::iter::once(1)
-            .chain(exec_net.mp_speedups.iter().map(|&(m, _)| m))
-            .collect();
+        let mut exec_ms: Vec<usize> = Vec::new();
+        if dp_fits {
+            exec_ms.push(1);
+        }
+        exec_ms.extend(exec_net.mp_speedups.iter().map(|&(m, _)| m));
+        if exec_ms.is_empty() {
+            bail!(
+                "no runtime-executable strategy fits in {:.1} GB per \
+                 device for '{}' (DP-only needs {:.1} GB){}",
+                available / 1e9, prof.name, serial_mem.total_bytes / 1e9,
+                if mem_model.recompute {
+                    ""
+                } else {
+                    "; consider recompute, a smaller batch, or a larger \
+                     device"
+                });
+        }
 
         // --- selection ---------------------------------------------------
         let (chosen_m, devices_used, chosen_score) = match req.objective {
             Objective::TimeToConverge => {
-                match exec_net.best_strategy(req.devices) {
+                match Self::best_among(&exec_net, &exec_ms, req.devices) {
                     Some((m, su)) => (m, req.devices, su),
                     None => self
-                        .back_off(&exec_net, req.devices)
+                        .back_off(&exec_net, &exec_ms, req.devices)
                         .ok_or_else(|| anyhow!(
                             "no strategy converges for '{}' at any device \
                              count <= {}", prof.name, req.devices))?,
@@ -442,11 +573,16 @@ impl Planner {
         let n_dp = devices_used / chosen_m.max(1);
         let global_batch = n_dp * prof.mini_batch;
         let chosen_su_m = net.su_m(chosen_m).unwrap_or(1.0);
-        let step_worker = serial / chosen_su_m;
+        let step_worker = serial * time_factor / chosen_su_m;
         let predicted_step_s = step_worker / net.se.at(n_dp).max(1e-12);
         let predicted_epochs = net.epochs.epochs(global_batch as f64);
 
-        let chosen_est = estimates.get(&chosen_m);
+        let chosen_est = best_scored.get(&chosen_m).map(|s| &s.est);
+        let chosen_mem = if chosen_m == 1 {
+            Some(serial_mem)
+        } else {
+            best_scored.get(&chosen_m).map(|s| s.mem)
+        };
         let mechanism = chosen_est
             .map(|e| e.mechanism)
             .unwrap_or(MpMechanism::None);
@@ -475,15 +611,23 @@ impl Planner {
         // --- scorecard ---------------------------------------------------
         // One row per (degree, mechanism): best mechanism first per degree
         // (it is the one Eq. 5 used), the runner-up after it for analysis.
+        // Memory-infeasible rows stay visible — su_m and footprint filled
+        // in, speedup withheld, the overflow recorded in
+        // `feasibility`/`note`.
         let mut scorecard = Vec::new();
         let mut push_row = |m: usize, su_row: f64,
-                            est: Option<&MpEstimate>| {
+                            est: Option<&MpEstimate>,
+                            mem: Option<&MemoryEstimate>| {
+            let feasibility = mem
+                .map(|e| Feasibility::check(e, available))
+                .unwrap_or(Feasibility::Feasible);
+            let fits = feasibility.is_feasible();
             let divides = req.devices % m == 0;
             let nd = if divides { req.devices / m } else { 0 };
             let b = nd * prof.mini_batch;
             let epochs =
                 if divides { net.epochs.epochs(b as f64) } else { None };
-            let speedup = if !divides {
+            let speedup = if !divides || !fits {
                 None
             } else if m == 1 {
                 net.su_dp(req.devices)
@@ -494,8 +638,9 @@ impl Planner {
                     .efficiency_ratio(b as f64)
                     .map(|r| su_row * net.se.at(nd) * nd as f64 * r)
             };
-            let step_time_s = if divides {
-                Some((serial / su_row) / net.se.at(nd).max(1e-12))
+            let step_time_s = if divides && fits {
+                Some((serial * time_factor / su_row)
+                     / net.se.at(nd).max(1e-12))
             } else {
                 None
             };
@@ -519,7 +664,12 @@ impl Planner {
                 Strategy::Hybrid { dp_workers: nd,
                                    microbatches: microbatches.unwrap_or(2) }
             };
-            let note = if !divides {
+            let note = if !fits {
+                format!(
+                    "infeasible: needs {:.1} GB > {:.1} GB per device",
+                    mem.map_or(0.0, |e| e.total_bytes) / 1e9,
+                    available / 1e9)
+            } else if !divides {
                 format!("M={m} does not divide the {}-device budget",
                         req.devices)
             } else if epochs.is_none() {
@@ -539,31 +689,39 @@ impl Planner {
                 mechanism: row_mechanism.as_str().to_string(),
                 microbatches,
                 strategy,
+                memory: mem.copied(),
+                feasibility,
                 note,
             });
         };
-        push_row(1, 1.0, None);
-        for (&m, best) in &estimates {
-            push_row(m, serial / best.step_time_s, Some(best));
-            if let Some(alt) = alt_estimates.get(&m) {
-                push_row(m, serial / alt.step_time_s, Some(alt));
+        push_row(1, 1.0, None, Some(&serial_mem));
+        for (&m, best) in &best_scored {
+            push_row(m, serial / best.est.step_time_s, Some(&best.est),
+                     Some(&best.mem));
+            if let Some(alt) = alt_scored.get(&m) {
+                push_row(m, serial / alt.est.step_time_s, Some(&alt.est),
+                         Some(&alt.mem));
             }
         }
 
         // --- end-to-end speedup curve ------------------------------------
+        // Memory-infeasible strategies contribute no curve points: a DP
+        // that cannot fit shows as a missing DP line, exactly the "hybrid
+        // because DP cannot fit" scenario family.
         let mut curve = Vec::new();
         let mut n = 1usize;
         while n <= req.curve_max_devices {
-            let hybrid = degrees
+            let hybrid = feasible_degrees
                 .iter()
                 .filter_map(|&m| net.su_hybrid(n, m))
                 .fold(None::<f64>, |acc, v| {
                     Some(acc.map_or(v, |a| a.max(v)))
                 });
-            curve.push(CurvePoint { devices: n, dp: net.su_dp(n), hybrid });
+            let dp = if dp_fits { net.su_dp(n) } else { None };
+            curve.push(CurvePoint { devices: n, dp, hybrid });
             n *= 2;
         }
-        let crossover_devices = degrees
+        let crossover_devices = feasible_degrees
             .first()
             .and_then(|&m| net.crossover_point(m, req.curve_max_devices));
 
@@ -588,19 +746,48 @@ impl Planner {
             placement: chosen_est.and_then(|e| e.placement.clone()),
             pipeline_bounds: chosen_est
                 .and_then(|e| e.pipeline_bounds.clone()),
+            device_mem_gb: req.device_mem_gb,
+            available_mem_bytes: available,
+            optimizer: mem_model.optimizer.as_str().to_string(),
+            recompute: mem_model.recompute,
+            memory: chosen_mem,
             scorecard,
             curve,
         })
     }
 
+    /// Best Eq. 3/5 score at `total` devices over the given MP widths
+    /// (`m == 1` is DP-only).  Identical to
+    /// [`NetworkModel::best_strategy`] except the candidate set is
+    /// explicit, so memory-infeasible widths (including DP itself) can be
+    /// excluded from selection.
+    fn best_among(net: &NetworkModel, ms: &[usize], total: usize)
+                  -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64)> = None;
+        for &m in ms {
+            let su = if m == 1 {
+                net.su_dp(total)
+            } else {
+                net.su_hybrid(total, m)
+            };
+            if let Some(su) = su {
+                if best.map_or(true, |(_, b)| su > b) {
+                    best = Some((m, su));
+                }
+            }
+        }
+        best
+    }
+
     /// When every strategy diverges at the full budget, halve the device
     /// count until something converges (the paper's BigLSTM regime, where
     /// the best configuration uses fewer devices than are available).
-    fn back_off(&self, net: &NetworkModel, budget: usize)
+    /// Only the memory-feasible widths in `ms` are considered.
+    fn back_off(&self, net: &NetworkModel, ms: &[usize], budget: usize)
                 -> Option<(usize, usize, f64)> {
         let mut n = budget / 2;
         while n >= 1 {
-            if let Some((m, su)) = net.best_strategy(n) {
+            if let Some((m, su)) = Self::best_among(net, ms, n) {
                 return Some((m, n, su));
             }
             n /= 2;
@@ -737,11 +924,25 @@ impl CandidateScore {
             ("mechanism", Json::Str(self.mechanism.clone())),
             ("microbatches", jounum(self.microbatches)),
             ("strategy", strategy_to_json(&self.strategy)),
+            ("memory",
+             self.memory
+                 .as_ref()
+                 .map(|m| m.to_json())
+                 .unwrap_or(Json::Null)),
+            ("feasibility", self.feasibility.to_json()),
             ("note", Json::Str(self.note.clone())),
         ])
     }
 
     fn from_json(j: &Json) -> Result<Self> {
+        let memory = match j.opt("memory") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(MemoryEstimate::from_json(v)?),
+        };
+        let feasibility = match j.opt("feasibility") {
+            None | Some(Json::Null) => Feasibility::Feasible,
+            Some(v) => Feasibility::from_json(v)?,
+        };
         Ok(CandidateScore {
             mp_degree: j.get("mp_degree")?.as_usize()?,
             su_m: j.get("su_m")?.as_f64()?,
@@ -754,6 +955,8 @@ impl CandidateScore {
             mechanism: j.get("mechanism")?.as_str()?.to_string(),
             microbatches: opt_usize(j, "microbatches")?,
             strategy: strategy_from_json(j.get("strategy")?)?,
+            memory,
+            feasibility,
             note: j.get("note")?.as_str()?.to_string(),
         })
     }
@@ -813,6 +1016,15 @@ impl Plan {
                  .map(|p| Json::Arr(
                      p.iter().map(|&d| Json::Num(d as f64)).collect()))
                  .unwrap_or(Json::Null)),
+            ("device_mem_gb", jonum(self.device_mem_gb)),
+            ("available_mem_bytes", jnum(self.available_mem_bytes)),
+            ("optimizer", Json::Str(self.optimizer.clone())),
+            ("recompute", Json::Bool(self.recompute)),
+            ("memory",
+             self.memory
+                 .as_ref()
+                 .map(|m| m.to_json())
+                 .unwrap_or(Json::Null)),
             ("scorecard",
              Json::Arr(self.scorecard.iter().map(|c| c.to_json()).collect())),
             ("curve",
@@ -842,6 +1054,14 @@ impl Plan {
             crossover_devices: opt_usize(j, "crossover_devices")?,
             placement: opt_usize_arr(j, "placement")?,
             pipeline_bounds: opt_usize_arr(j, "pipeline_bounds")?,
+            device_mem_gb: opt_f64(j, "device_mem_gb")?,
+            available_mem_bytes: j.get("available_mem_bytes")?.as_f64()?,
+            optimizer: j.get("optimizer")?.as_str()?.to_string(),
+            recompute: matches!(j.get("recompute")?, Json::Bool(true)),
+            memory: match j.opt("memory") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(MemoryEstimate::from_json(v)?),
+            },
             scorecard: j
                 .get("scorecard")?
                 .as_arr()?
@@ -877,6 +1097,13 @@ impl Plan {
                 .map(|e| format!("{e:.1}"))
                 .unwrap_or_else(|| "-".into()),
             self.predicted_speedup));
+        if let Some(m) = &self.memory {
+            s.push_str(&format!(
+                "  memory: peak {:.1} GB / {:.1} GB per device \
+                 (optimizer {}, recompute {})\n",
+                m.total_bytes / 1e9, self.available_mem_bytes / 1e9,
+                self.optimizer, self.recompute));
+        }
         match self.crossover_devices {
             Some(x) => s.push_str(&format!(
                 "  Eq. 6 crossover: hybrid overtakes DP-only at {x} \
@@ -1069,6 +1296,110 @@ mod tests {
         assert!(planner
             .plan(&PlanRequest::new("gnmt", "ringworld"))
             .is_err());
+    }
+
+    #[test]
+    fn biglstm_dp_is_infeasible_on_16gb_parts() {
+        // The acceptance bar of the memory layer: on 16 GB devices the
+        // BigLSTM DP-only candidate overflows (it needs the 32 GB V100,
+        // paper §4.1) and the planner picks the 2-stage pipeline instead;
+        // on 80 GB parts the same candidate is feasible again.
+        let planner = Planner::new();
+        let small = planner
+            .plan(&PlanRequest::new("biglstm", "dgx1")
+                .devices(8)
+                .device_mem_gb(16.0))
+            .unwrap();
+        let dp_row = small
+            .scorecard
+            .iter()
+            .find(|c| c.mp_degree == 1)
+            .unwrap();
+        assert!(!dp_row.feasibility.is_feasible(),
+                "BigLSTM DP must overflow 16 GB: {dp_row:?}");
+        match dp_row.feasibility {
+            Feasibility::Infeasible { required_bytes, available_bytes } => {
+                assert!(required_bytes > available_bytes);
+                assert!((available_bytes - 16e9).abs() < 1.0);
+            }
+            Feasibility::Feasible => unreachable!(),
+        }
+        assert!(dp_row.speedup.is_none());
+        assert!(dp_row.note.contains("infeasible"));
+        assert!(small.mp_degree > 1,
+                "DP cannot fit: the plan must go hybrid");
+        assert!(small.curve.iter().all(|p| p.dp.is_none()),
+                "infeasible DP contributes no curve points");
+
+        let big = planner
+            .plan(&PlanRequest::new("biglstm", "dgx1")
+                .devices(8)
+                .device_mem_gb(80.0))
+            .unwrap();
+        let dp_row = big.scorecard.iter().find(|c| c.mp_degree == 1);
+        assert!(dp_row.unwrap().feasibility.is_feasible(),
+                "the same candidate must fit an 80 GB part");
+        assert_eq!(big.mp_degree, 1, "with room to fit, DP wins at 8");
+    }
+
+    #[test]
+    fn nothing_fits_errors_with_memory_hint() {
+        let planner = Planner::new();
+        let err = planner
+            .plan(&PlanRequest::new("biglstm", "dgx1")
+                .devices(8)
+                .device_mem_gb(1.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("GB"), "error must name the capacity: {err}");
+        assert!(planner
+            .plan(&PlanRequest::new("gnmt", "dgx1")
+                .devices(8)
+                .device_mem_gb(-4.0))
+            .is_err());
+    }
+
+    #[test]
+    fn recompute_shrinks_footprint_and_inflates_step_time() {
+        use crate::memory::MemoryModel;
+        let planner = Planner::new();
+        let base = PlanRequest::new("inception-v3", "dgx1").devices(8);
+        let full = planner.plan(&base.clone()).unwrap();
+        let rc = planner
+            .plan(&base.memory(MemoryModel {
+                recompute: true,
+                ..Default::default()
+            }))
+            .unwrap();
+        assert!(rc.recompute && !full.recompute);
+        let (mf, mr) = (full.memory.unwrap(), rc.memory.unwrap());
+        assert!(mr.total_bytes < mf.total_bytes,
+                "recompute must shrink the footprint");
+        assert!(rc.predicted_step_s > full.predicted_step_s * 1.30,
+                "…and pay roughly one extra forward: {} vs {}",
+                rc.predicted_step_s, full.predicted_step_s);
+        assert!((rc.predicted_speedup - full.predicted_speedup).abs()
+                    < 1e-9,
+                "uniform inflation must not change relative speedups");
+    }
+
+    #[test]
+    fn default_memory_model_keeps_paper_plans_feasible() {
+        // On the registry's 32 GB dgx1 every scorecard row of the paper
+        // networks stays feasible — the memory layer must not perturb the
+        // fig5 grid.
+        let planner = Planner::new();
+        for model in ["inception-v3", "gnmt", "biglstm"] {
+            let plan = planner
+                .plan(&PlanRequest::new(model, "dgx1").devices(8))
+                .unwrap();
+            for c in &plan.scorecard {
+                assert!(c.feasibility.is_feasible(),
+                        "{model}: {c:?} must fit the 32 GB V100");
+                assert!(c.memory.is_some());
+            }
+            assert!(plan.memory.unwrap().fits(plan.available_mem_bytes));
+        }
     }
 
     #[test]

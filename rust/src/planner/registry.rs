@@ -153,6 +153,10 @@ fn build_dgx2(n: usize) -> HwGraph {
     cluster::dgx2(n.clamp(1, 16))
 }
 
+fn build_dgx_a100(n: usize) -> HwGraph {
+    cluster::dgx_a100(n.clamp(1, 8))
+}
+
 fn build_multinode(n: usize) -> HwGraph {
     cluster::multi_node(n.div_ceil(4).max(1), 4)
 }
@@ -163,8 +167,10 @@ impl TopologyRegistry {
     }
 
     /// Built-in catalog: the paper's DGX-1 testbed, a 16-GPU NVSwitch
-    /// DGX-2-style system (a scenario the paper did not evaluate), and the
-    /// IB-switched multi-node scale-out its projections assume.
+    /// DGX-2-style system (a scenario the paper did not evaluate), an
+    /// 8-GPU A100-80GB box (the memory-feasibility counterpart to the
+    /// 16 GB V100), and the IB-switched multi-node scale-out its
+    /// projections assume.
     pub fn builtin() -> Self {
         let mut r = TopologyRegistry::new();
         r.register(TopologyEntry {
@@ -178,6 +184,12 @@ impl TopologyRegistry {
             aliases: &["dgx-2", "nvswitch"],
             max_devices: 16,
             build: build_dgx2,
+        });
+        r.register(TopologyEntry {
+            name: "dgx-a100",
+            aliases: &["a100", "dgxa100"],
+            max_devices: 8,
+            build: build_dgx_a100,
         });
         r.register(TopologyEntry {
             name: "multinode",
@@ -284,5 +296,17 @@ mod tests {
         assert!(r.build("multinode", 8).unwrap().n_devices() >= 8);
         assert!(r.build("ringworld", 4).is_err());
         assert_eq!(r.max_devices("dgx2").unwrap(), 16);
+    }
+
+    #[test]
+    fn dgx_a100_registered_with_80gb_parts() {
+        let r = TopologyRegistry::builtin();
+        for name in ["dgx-a100", "a100", "dgxa100"] {
+            let hw = r.build(name, 8).unwrap();
+            assert_eq!(hw.n_devices(), 8);
+            assert!((hw.min_device_mem() - cluster::A100_80G_MEM).abs()
+                    < 1.0);
+        }
+        assert_eq!(r.max_devices("a100").unwrap(), 8);
     }
 }

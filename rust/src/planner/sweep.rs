@@ -1,6 +1,6 @@
 //! Parallel scenario sweep engine: evaluate a
-//! `(model × topology × device-budget × global-batch × strategy-family)`
-//! grid of planner queries across worker threads.
+//! `(model × topology × device-budget × device-memory × global-batch ×
+//! strategy-family)` grid of planner queries across worker threads.
 //!
 //! The ROADMAP's scenario-diversity goal does not fit one
 //! [`Planner::plan`] call at a time: the fig3/fig5 grids alone are dozens
@@ -45,6 +45,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::cost::{cost_by_name, CostModel, MpEstimate};
 use crate::cluster::HwGraph;
+use crate::memory::MemoryModel;
 use crate::models::ModelProfile;
 use crate::parallel::ScalingEfficiency;
 use crate::util::json::Json;
@@ -119,9 +120,11 @@ where
 // ==========================================================================
 
 /// Cache key for one per-candidate cost evaluation: the profile identity
-/// (name + mini-batch), the hardware identity (name + device count), the
-/// mechanism family (structural default vs explicit pipeline) and M.
-type MemoKey = (String, usize, String, usize, bool, usize);
+/// (name + mini-batch), the hardware identity (name + device count +
+/// per-device memory bits — the `device_mem_gb` axis rebuilds the same
+/// topology with different capacities, which changes stage partitions),
+/// the mechanism family (structural default vs explicit pipeline) and M.
+type MemoKey = (String, usize, String, usize, u64, bool, usize);
 
 /// A memoised evaluation outcome (errors stringified so the cell clones).
 type StoredEstimate = std::result::Result<MpEstimate, String>;
@@ -151,7 +154,8 @@ impl MemoCost {
         F: FnOnce() -> Result<MpEstimate>,
     {
         let key = (prof.name.clone(), prof.mini_batch, hw.name.clone(),
-                   hw.n_devices(), pipelined, m);
+                   hw.n_devices(), hw.min_device_mem().to_bits(),
+                   pipelined, m);
         let cell = self
             .cache
             .lock()
@@ -292,6 +296,9 @@ pub struct SweepSpec {
     pub topologies: Vec<String>,
     /// Device budgets N (projections past the physical box allowed).
     pub devices: Vec<usize>,
+    /// Per-device memory axis in GB (None = the topology's own Mem(n)) —
+    /// "V100-16GB vs A100-80GB" as one grid.
+    pub device_mem_gb: Vec<Option<f64>>,
     pub batches: Vec<BatchSpec>,
     pub families: Vec<StrategyFamily>,
     /// Candidate MP degrees for the hybrid/pipelined families.
@@ -299,6 +306,9 @@ pub struct SweepSpec {
     pub objective: Objective,
     /// Resolved per worker via [`cost_by_name`].
     pub cost_model: String,
+    /// Footprint accounting (optimizer, recompute, …) applied to every
+    /// scenario.
+    pub memory: MemoryModel,
     pub curve_max_devices: usize,
     /// Worker threads (0 = one per available core).
     pub threads: usize,
@@ -313,16 +323,40 @@ impl Default for SweepSpec {
                          "biglstm".into()],
             topologies: vec!["dgx1".into()],
             devices: vec![8, 64, 256],
+            device_mem_gb: vec![None],
             batches: vec![BatchSpec::Default],
             families: vec![StrategyFamily::DpOnly, StrategyFamily::Hybrid,
                            StrategyFamily::Pipelined],
             mp_degrees: vec![2],
             objective: Objective::TimeToConverge,
             cost_model: "analytical".into(),
+            memory: MemoryModel::default(),
             curve_max_devices: 256,
             threads: 0,
         }
     }
+}
+
+/// Stable label for a `device_mem_gb` axis value ("default" = the
+/// topology's own capacity).
+pub fn mem_gb_label(v: Option<f64>) -> String {
+    v.map(|g| format!("{g}")).unwrap_or_else(|| "default".into())
+}
+
+/// Parse a `device_mem_gb` axis entry: `"default"` or a positive number
+/// of GB.
+pub fn parse_mem_gb(s: &str) -> Result<Option<f64>> {
+    if s == "default" {
+        return Ok(None);
+    }
+    let gb: f64 = s.parse().map_err(|_| {
+        anyhow!("bad device_mem_gb '{s}' (expected 'default' or GB)")
+    })?;
+    if !gb.is_finite() || gb <= 0.0 {
+        bail!("device_mem_gb must be a positive finite GB figure, \
+               got {gb}");
+    }
+    Ok(Some(gb))
 }
 
 /// One grid point.
@@ -331,6 +365,8 @@ pub struct Scenario {
     pub model: String,
     pub topology: String,
     pub devices: usize,
+    /// Per-device memory override (None = topology default).
+    pub device_mem_gb: Option<f64>,
     pub batch: BatchSpec,
     pub family: StrategyFamily,
 }
@@ -343,15 +379,18 @@ impl SweepSpec {
         for model in &self.models {
             for topology in &self.topologies {
                 for &devices in &self.devices {
-                    for batch in &self.batches {
-                        for &family in &self.families {
-                            out.push(Scenario {
-                                model: model.clone(),
-                                topology: topology.clone(),
-                                devices,
-                                batch: batch.clone(),
-                                family,
-                            });
+                    for &device_mem_gb in &self.device_mem_gb {
+                        for batch in &self.batches {
+                            for &family in &self.families {
+                                out.push(Scenario {
+                                    model: model.clone(),
+                                    topology: topology.clone(),
+                                    devices,
+                                    device_mem_gb,
+                                    batch: batch.clone(),
+                                    family,
+                                });
+                            }
                         }
                     }
                 }
@@ -365,6 +404,7 @@ impl SweepSpec {
             ("models", self.models.is_empty()),
             ("topologies", self.topologies.is_empty()),
             ("devices", self.devices.is_empty()),
+            ("device_mem_gb", self.device_mem_gb.is_empty()),
             ("batches", self.batches.is_empty()),
             ("families", self.families.is_empty()),
         ] {
@@ -400,7 +440,11 @@ fn plan_request(planner: &Planner, spec: &SweepSpec, sc: &Scenario)
     let mut req = PlanRequest::new(&sc.model, &sc.topology)
         .devices(sc.devices)
         .objective(spec.objective)
+        .memory(spec.memory.clone())
         .curve_to(spec.curve_max_devices);
+    if let Some(gb) = sc.device_mem_gb {
+        req = req.device_mem_gb(gb);
+    }
     match sc.family {
         StrategyFamily::DpOnly => req = req.mp_degrees(&[]),
         StrategyFamily::Hybrid => req = req.mp_degrees(&spec.mp_degrees),
@@ -421,8 +465,9 @@ fn plan_request(planner: &Planner, spec: &SweepSpec, sc: &Scenario)
     req
 }
 
-/// Evaluate the grid.  Scenario errors (unknown model, infeasible point)
-/// are captured per result; only a malformed spec fails the sweep itself.
+/// Evaluate the grid.  Scenario errors (unknown model, infeasible point,
+/// nothing-fits-in-memory) are captured per result; only a malformed spec
+/// fails the sweep itself.
 pub fn run_sweep(spec: &SweepSpec) -> Result<SweepResult> {
     spec.validate()?;
     let cost: Arc<dyn CostModel> = Arc::from(cost_by_name(&spec.cost_model)?);
@@ -457,6 +502,11 @@ impl ScenarioResult {
             ("model", Json::Str(self.scenario.model.clone())),
             ("topology", Json::Str(self.scenario.topology.clone())),
             ("devices", Json::Num(self.scenario.devices as f64)),
+            ("device_mem_gb",
+             self.scenario
+                 .device_mem_gb
+                 .map(Json::Num)
+                 .unwrap_or(Json::Null)),
             ("batch", Json::Str(self.scenario.batch.label())),
             ("family",
              Json::Str(self.scenario.family.as_str().to_string())),
@@ -498,15 +548,17 @@ impl SweepResult {
     /// Flat CSV: one row per scenario with the headline plan fields.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "model,topology,devices,batch,family,status,strategy,\
-             mp_degree,mechanism,devices_used,dp_workers,microbatches,\
-             global_batch,step_time_s,epochs,speedup,error\n");
+            "model,topology,devices,device_mem_gb,batch,family,status,\
+             strategy,mp_degree,mechanism,devices_used,dp_workers,\
+             microbatches,global_batch,step_time_s,epochs,speedup,\
+             peak_mem_gb,error\n");
         for r in &self.results {
             let sc = &r.scenario;
             let mut cells: Vec<String> = vec![
                 sc.model.clone(),
                 sc.topology.clone(),
                 sc.devices.to_string(),
+                mem_gb_label(sc.device_mem_gb),
                 sc.batch.label(),
                 sc.family.as_str().to_string(),
             ];
@@ -528,24 +580,17 @@ impl SweepResult {
                             .map(|e| format!("{e}"))
                             .unwrap_or_default(),
                         format!("{}", p.predicted_speedup),
+                        p.memory
+                            .map(|m| format!("{}", m.total_bytes / 1e9))
+                            .unwrap_or_default(),
                         String::new(),
                     ]);
                 }
                 (None, err) => {
-                    cells.extend([
-                        "error".to_string(),
-                        String::new(),
-                        String::new(),
-                        String::new(),
-                        String::new(),
-                        String::new(),
-                        String::new(),
-                        String::new(),
-                        String::new(),
-                        String::new(),
-                        String::new(),
-                        err.clone().unwrap_or_default(),
-                    ]);
+                    cells.push("error".to_string());
+                    // strategy..peak_mem_gb stay blank on errored rows.
+                    cells.extend((0..11).map(|_| String::new()));
+                    cells.push(err.clone().unwrap_or_default());
                 }
             }
             let row: Vec<String> =
@@ -701,6 +746,58 @@ mod tests {
         let plan = pipe.results[0].plan.as_ref().unwrap();
         assert_eq!(plan.mp_degree, 2, "paper: pipelined hybrid at 256");
         assert_eq!(plan.mechanism, "pipelined");
+    }
+
+    #[test]
+    fn mem_axis_labels_and_parse() {
+        assert_eq!(mem_gb_label(None), "default");
+        assert_eq!(mem_gb_label(Some(16.0)), "16");
+        assert_eq!(mem_gb_label(Some(0.5)), "0.5");
+        assert_eq!(parse_mem_gb("default").unwrap(), None);
+        assert_eq!(parse_mem_gb("80").unwrap(), Some(80.0));
+        assert!(parse_mem_gb("-4").is_err());
+        assert!(parse_mem_gb("0").is_err());
+        assert!(parse_mem_gb("big").is_err());
+    }
+
+    #[test]
+    fn device_mem_axis_expands_the_grid() {
+        let spec = SweepSpec {
+            models: vec!["biglstm".into()],
+            devices: vec![8],
+            device_mem_gb: vec![Some(16.0), Some(80.0)],
+            families: vec![StrategyFamily::Hybrid],
+            curve_max_devices: 8,
+            threads: 1,
+            ..Default::default()
+        };
+        let r = run_sweep(&spec).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.results[0].scenario.device_mem_gb, Some(16.0));
+        assert_eq!(r.results[1].scenario.device_mem_gb, Some(80.0));
+        // 16 GB parts: DP cannot fit, the hybrid is forced; 80 GB parts:
+        // DP fits and wins at 8 devices — one grid, both regimes (the
+        // memoisation key must keep the two capacities apart).
+        let small = r.results[0].plan.as_ref().unwrap();
+        let big = r.results[1].plan.as_ref().unwrap();
+        assert!(small.mp_degree > 1,
+                "16 GB: DP infeasible, hybrid must win: {small:?}");
+        assert_eq!(big.mp_degree, 1, "80 GB: DP fits and wins at 8");
+        // The axis shows up in both serialisations.
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"device_mem_gb\":16"));
+        let csv = r.to_csv();
+        assert!(csv.contains("device_mem_gb"));
+        assert!(csv.contains("\"16\"") && csv.contains("\"80\""));
+    }
+
+    #[test]
+    fn empty_mem_axis_rejected() {
+        let spec = SweepSpec {
+            device_mem_gb: vec![],
+            ..Default::default()
+        };
+        assert!(run_sweep(&spec).is_err());
     }
 
     #[test]

@@ -5,11 +5,14 @@
 use hybridpar::cluster::{dgx1, multi_node};
 use hybridpar::collective::ring_allreduce;
 use hybridpar::dfg::Dfg;
+use hybridpar::memory::{self, MemoryModel, Optimizer};
 use hybridpar::milp::{solve_lp, solve_milp, BnbConfig, LpOutcome,
                       MilpOutcome, Problem};
+use hybridpar::models;
 use hybridpar::parallel::{eq6_consistent, NetworkModel, ScalingEfficiency};
 use hybridpar::pipeline;
 use hybridpar::placer;
+use hybridpar::planner::{PlanRequest, Planner};
 use hybridpar::prop::{run_cases, Gen};
 use hybridpar::sim::{simulate, SimConfig};
 use hybridpar::statistical::EpochModel;
@@ -367,6 +370,81 @@ fn prop_epoch_model_monotone_interpolation() {
             let e_mid = m.epochs(mid).unwrap();
             assert!(e_mid >= w[0].1 - 1e-9 && e_mid <= w[1].1 + 1e-9,
                     "interpolation escapes bracket");
+        }
+    });
+}
+
+#[test]
+fn prop_memory_estimate_components_consistent() {
+    // Over random accounting models and batches: totals decompose
+    // exactly, optimizer state is the advertised multiple of weights,
+    // recompute never increases any component, and activations are
+    // monotone in batch size.
+    run_cases(30, 0x3E3, |g| {
+        let batch = 1usize << g.usize_in(4, 9); // 16..512
+        let opt = match g.usize_in(0, 2) {
+            0 => Optimizer::Sgd,
+            1 => Optimizer::Momentum,
+            _ => Optimizer::Adam,
+        };
+        let m = MemoryModel {
+            optimizer: opt,
+            recompute: false,
+            act_factor: g.f64_in(1.0, 4.0),
+            reserved_bytes: g.f64_in(0.0, 2e9),
+            ..Default::default()
+        };
+        let prof = models::gnmt(batch);
+        let est = memory::single_device(&prof, &m);
+        let sum = est.weight_bytes + est.grad_bytes + est.optimizer_bytes
+            + est.activation_bytes + est.reserved_bytes;
+        assert!((est.total_bytes - sum).abs() < 1.0,
+                "total must equal the component sum");
+        assert!((est.grad_bytes - est.weight_bytes).abs() < 1.0);
+        assert!((est.optimizer_bytes
+                 - est.weight_bytes * opt.state_multiplier())
+                    .abs() < 1.0);
+        let rc = memory::single_device(
+            &prof, &MemoryModel { recompute: true, ..m.clone() });
+        assert!(rc.activation_bytes <= est.activation_bytes + 1.0);
+        assert!(rc.total_bytes <= est.total_bytes + 1.0);
+        let bigger = memory::single_device(&models::gnmt(batch * 2), &m);
+        assert!(bigger.activation_bytes > est.activation_bytes);
+    });
+}
+
+#[test]
+fn prop_memory_feasibility_monotone_in_capacity() {
+    // Adding device memory never removes a feasible candidate: for random
+    // capacity pairs lo <= hi, the feasible scorecard set at lo is a
+    // subset of the set at hi (the plan-level form of the monotonicity
+    // the integration suite checks on a fixed ladder).
+    run_cases(12, 0xFEA5, |g| {
+        let planner = Planner::new();
+        let model = if g.bool() { "gnmt" } else { "biglstm" };
+        let lo = g.f64_in(4.0, 40.0);
+        let hi = lo + g.f64_in(0.0, 60.0);
+        let rows = |gb: f64| -> Vec<(usize, String)> {
+            match planner.plan(
+                &PlanRequest::new(model, "dgx1")
+                    .devices(8)
+                    .device_mem_gb(gb))
+            {
+                Ok(p) => p
+                    .scorecard
+                    .iter()
+                    .filter(|c| c.feasibility.is_feasible())
+                    .map(|c| (c.mp_degree, c.mechanism.clone()))
+                    .collect(),
+                Err(_) => Vec::new(),
+            }
+        };
+        let at_lo = rows(lo);
+        let at_hi = rows(hi);
+        for key in &at_lo {
+            assert!(at_hi.contains(key),
+                    "{model}: {key:?} feasible at {lo:.1} GB but not at \
+                     {hi:.1} GB ({at_hi:?})");
         }
     });
 }

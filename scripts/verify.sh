@@ -1,11 +1,21 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build + tests, plus formatting and lint gates.
+# Tier-1 verification: build + tests, plus formatting, lint and doc gates.
 #
-#   scripts/verify.sh [--fast]   # --fast skips fmt/clippy
+#   scripts/verify.sh [--fast]   # --fast skips the fmt/clippy/doc gates
+#
+# Gate semantics:
+#   * build and test short-circuit — later gates are meaningless if the
+#     tree does not compile;
+#   * the lint gates (fmt, clippy, doc) all run even if an earlier one
+#     fails, so one invocation reports every broken gate;
+#   * any failed gate makes the script exit non-zero — including the doc
+#     gate, whose status used to be vulnerable to shell short-circuiting;
+#   * skipped gates are echoed by name so CI logs show what was NOT
+#     checked.
 #
 # The rust workspace manifest may live at the repo root or under rust/
 # depending on the build harness; probe both.
-set -euo pipefail
+set -uo pipefail
 
 cd "$(dirname "$0")/.."
 
@@ -28,21 +38,39 @@ fi
 
 cd "$manifest_dir"
 
-echo "== cargo build --release =="
-cargo build --release
+failed_gates=""
 
-echo "== cargo test -q =="
-cargo test -q
+run_gate() {
+    # run_gate <name> <cmd...> — run a gate, record (not exit on) failure.
+    local name=$1
+    shift
+    echo "== $name =="
+    if ! "$@"; then
+        echo "verify: gate '$name' FAILED" >&2
+        failed_gates="$failed_gates $name"
+        return 1
+    fi
+}
 
-if [ "${1:-}" != "--fast" ]; then
-    echo "== cargo fmt --check =="
-    cargo fmt --check
+# Build + test short-circuit: nothing downstream is meaningful without
+# a compiling tree and a green suite.
+run_gate "cargo build --release" cargo build --release || exit 1
+run_gate "cargo test -q" cargo test -q || exit 1
 
-    echo "== cargo clippy --all-targets -- -D warnings =="
-    cargo clippy --all-targets -- -D warnings
-
-    echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
-    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+if [ "${1:-}" = "--fast" ]; then
+    echo "verify: skipped gates (--fast): fmt, clippy, doc"
+else
+    # Lint gates accumulate failures instead of short-circuiting, so a
+    # fmt failure cannot mask a doc failure (or vice versa).
+    run_gate "cargo fmt --check" cargo fmt --check || true
+    run_gate "cargo clippy --all-targets -- -D warnings" \
+        cargo clippy --all-targets -- -D warnings || true
+    run_gate "cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)" \
+        env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps || true
 fi
 
+if [ -n "$failed_gates" ]; then
+    echo "verify FAILED:$failed_gates" >&2
+    exit 1
+fi
 echo "verify OK"
