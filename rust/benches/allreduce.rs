@@ -9,8 +9,8 @@
 use hybridpar::bench::{bench, f3, Table};
 use hybridpar::cluster::{dgx1, multi_node, HwGraph};
 use hybridpar::collective::compress::ring_allreduce_bf16;
-use hybridpar::collective::{parameter_server, ring_allreduce, ring_cost,
-                            tree_allreduce};
+use hybridpar::collective::{hierarchical_allreduce, parameter_server,
+                            ring_allreduce, ring_cost, tree_allreduce};
 use hybridpar::util::rng::Rng;
 
 fn bufs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -53,7 +53,7 @@ fn main() {
 
     // --- sweep: worker count, multi-node ---------------------------------
     let mut table = Table::new(&["workers", "topology", "ring sim ms",
-                                 "PS sim ms", "PS/ring"]);
+                                 "hier sim ms", "PS sim ms", "PS/ring"]);
     for (workers, hw) in [(4usize, dgx1(4)),
                           (8, multi_node(2, 4)),
                           (16, multi_node(4, 4))] {
@@ -64,17 +64,26 @@ fn main() {
         let ring = ring_allreduce(&mut b1, &hw, &devs).unwrap();
         let mut b2 = bufs(workers, len, 2);
         let ps = parameter_server(&mut b2, &hw, &devs).unwrap();
+        let mut b3 = bufs(workers, len, 2);
+        let hier = hierarchical_allreduce(&mut b3, &hw, &devs).unwrap();
         table.row(&[
             workers.to_string(),
             hw.name.clone(),
             f3(ring.sim_time * 1e3),
+            f3(hier.sim_time * 1e3),
             f3(ps.sim_time * 1e3),
             f3(ps.sim_time / ring.sim_time),
         ]);
         assert!(ps.sim_time > ring.sim_time,
                 "PS must lose to ring at {workers} workers");
+        if hw.is_multi_node() {
+            assert!(hier.sim_time < ring.sim_time,
+                    "two-level must beat the flat ring across nodes: \
+                     {} vs {}", hier.sim_time, ring.sim_time);
+        }
     }
-    table.print("ring vs parameter-server at scale (16 MB gradients)");
+    table.print("ring vs hierarchical vs parameter-server at scale \
+                 (16 MB gradients)");
 
     // --- host-side throughput of the real reduction ----------------------
     let hw = dgx1(4);

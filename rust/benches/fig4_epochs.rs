@@ -31,26 +31,8 @@ fn main() {
     table.print("Fig. 4 — epochs to converge vs #GPUs (global batch = \
                  gpus × mini-batch)");
 
-    // Anchor assertions from the paper's text.
-    let inc = EpochModel::inception_v3();
-    assert_eq!(inc.epochs(32.0 * 64.0).unwrap().round() as i64, 4);
-    assert_eq!(inc.epochs(64.0 * 64.0).unwrap().round() as i64, 7);
-    assert_eq!(inc.epochs(256.0 * 64.0).unwrap().round() as i64, 23);
-
-    let gn = EpochModel::gnmt();
-    assert!(gn.epochs(4.0 * 128.0).unwrap() < gn.epochs(2.0 * 128.0).unwrap(),
-            "GNMT dips slightly at 4 GPUs (tuned LR)");
-    assert!(gn.epochs(256.0 * 128.0).unwrap()
-            > 1.5 * gn.epochs(64.0 * 128.0).unwrap(),
-            "GNMT grows rapidly past 64 GPUs");
-
-    let bl = EpochModel::biglstm();
-    let e16 = bl.epochs(16.0 * 64.0).unwrap();
-    let e32 = bl.epochs(32.0 * 64.0).unwrap();
-    assert!((e32 / e16 - 3.2).abs() < 0.05,
-            "BigLSTM 32-way needs 3.2x epochs of 16-way (got {})",
-            e32 / e16);
-    assert!(bl.epochs(64.0 * 64.0).is_none(),
-            "BigLSTM diverges beyond 32-way");
-    println!("fig4_epochs OK (all paper anchors hold)");
+    // The paper's anchor assertions live in tier-1 now —
+    // `fig4_epoch_anchors_hold` in tests/integration_training.rs — so
+    // `cargo test` guards them on every run, not just bench invocations.
+    println!("fig4_epochs OK (anchors enforced by integration_training)");
 }

@@ -20,6 +20,8 @@ pub enum LinkKind {
     Pcie,
     /// 100 Gb InfiniBand inter-node: 12 GB/s, ~2.5 µs.
     Infiniband,
+    /// 25 GbE cloud-instance networking: ~3.1 GB/s, ~20 µs (TCP stack).
+    Ethernet25,
     /// Custom.
     Custom,
 }
@@ -31,6 +33,7 @@ impl LinkKind {
             LinkKind::NvSwitch => 150e9,
             LinkKind::Pcie => 12e9,
             LinkKind::Infiniband => 12e9,
+            LinkKind::Ethernet25 => 3.125e9,
             LinkKind::Custom => 10e9,
         }
     }
@@ -41,6 +44,7 @@ impl LinkKind {
             LinkKind::NvSwitch => 1.0e-6,
             LinkKind::Pcie => 2.0e-6,
             LinkKind::Infiniband => 2.5e-6,
+            LinkKind::Ethernet25 => 20.0e-6,
             LinkKind::Custom => 2.0e-6,
         }
     }
@@ -56,6 +60,11 @@ pub struct HwNode {
     pub flops_per_sec: f64,
     /// Device memory capacity Mem(n), bytes.
     pub mem_capacity: f64,
+    /// Chassis (physical machine) this node sits in.  Single-box builders
+    /// leave everything on node 0; multi-node builders assign each GPU and
+    /// its NIC to the chassis index and park backbone switches on their
+    /// own pseudo-node, so any link touching one reads as inter-node.
+    pub node: usize,
 }
 
 /// Physical link `l ∈ L` (bidirectional).
@@ -98,6 +107,7 @@ impl HwGraph {
             is_compute: true,
             flops_per_sec: flops,
             mem_capacity: mem,
+            node: 0,
         });
         self.nodes.len() - 1
     }
@@ -108,8 +118,70 @@ impl HwGraph {
             is_compute: false,
             flops_per_sec: 0.0,
             mem_capacity: 0.0,
+            node: 0,
         });
         self.nodes.len() - 1
+    }
+
+    /// Assign a hardware-graph node to a chassis (multi-node builders).
+    pub fn assign_node(&mut self, id: usize, node: usize) {
+        self.nodes[id].node = node;
+    }
+
+    /// Chassis index of a hardware-graph node.
+    pub fn node_of(&self, id: usize) -> usize {
+        self.nodes[id].node
+    }
+
+    /// Compute devices grouped by chassis, ascending chassis index.
+    /// Single-box graphs return one group holding every device.
+    pub fn node_groups(&self) -> Vec<Vec<usize>> {
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+        for d in self.devices() {
+            let nd = self.nodes[d].node;
+            match groups.iter_mut().find(|(n, _)| *n == nd) {
+                Some((_, g)) => g.push(d),
+                None => groups.push((nd, vec![d])),
+            }
+        }
+        groups.sort_by_key(|(n, _)| *n);
+        groups.into_iter().map(|(_, g)| g).collect()
+    }
+
+    /// Whether the compute devices span more than one chassis.
+    pub fn is_multi_node(&self) -> bool {
+        self.node_groups().len() > 1
+    }
+
+    /// Does this link cross a chassis boundary?  Backbone switches sit on
+    /// their own pseudo-node, so their links count as inter-node.
+    pub fn link_crosses_nodes(&self, li: usize) -> bool {
+        let l = &self.links[li];
+        self.nodes[l.a].node != self.nodes[l.b].node
+    }
+
+    /// Effective (bandwidth, latency) of the route chosen for
+    /// `bytes`-sized transfers between two nodes: store-and-forward
+    /// serialisation sums per-link transfer times, so the effective
+    /// bandwidth of a multi-hop path is `1 / Σ(1/B_l)` and its latency
+    /// `Σ L_l` — the α-β parameters an analytic collective cost should
+    /// use so it matches what [`HwGraph::transfer_time`] charges.
+    pub fn path_profile(&self, from: usize, to: usize, bytes: f64)
+                        -> Option<(f64, f64)> {
+        if from == to {
+            return None;
+        }
+        let (_, path) = self.route(from, to, bytes).ok()?;
+        let mut inv_bw = 0.0;
+        let mut lat = 0.0;
+        for li in path {
+            inv_bw += 1.0 / self.links[li].bandwidth;
+            lat += self.links[li].latency;
+        }
+        if inv_bw <= 0.0 {
+            return None;
+        }
+        Some((1.0 / inv_bw, lat))
     }
 
     pub fn add_link(&mut self, a: usize, b: usize, kind: LinkKind) {
@@ -228,8 +300,12 @@ impl HwGraph {
         }
     }
 
-    /// Minimum link bandwidth along the ring of the given devices —
-    /// the bottleneck term in ring all-reduce cost.
+    /// Minimum *raw link* bandwidth along the ring of the given devices.
+    /// Note this is the single slowest wire, not what a transfer
+    /// achieves end to end: collective pricing uses
+    /// [`HwGraph::path_profile`]'s store-and-forward effective bandwidth
+    /// instead (a PCIe+IB+IB+PCIe crossing is 3 GB/s effective even
+    /// though every link is 12 GB/s).  Kept as a topology diagnostic.
     pub fn ring_bottleneck_bw(&self, ring: &[usize]) -> f64 {
         let mut bw = f64::INFINITY;
         for i in 0..ring.len() {
@@ -257,29 +333,9 @@ pub fn dgx1_mem(n_gpus: usize, mem: f64) -> HwGraph {
     let ids: Vec<usize> = (0..n_gpus)
         .map(|i| g.add_compute(&format!("gpu{}", i), V100_FLOPS, mem))
         .collect();
-    if n_gpus <= 4 {
-        // Fully-connected NVLink quad (paper's 4-GPU DGX-1 subset).
-        for i in 0..n_gpus {
-            for j in (i + 1)..n_gpus {
-                g.add_link(ids[i], ids[j], LinkKind::NvLink);
-            }
-        }
-    } else {
-        // Hybrid cube-mesh for 8 GPUs: two quads + cross links.
-        for q in 0..2 {
-            let base = q * 4;
-            for i in 0..4.min(n_gpus - base) {
-                for j in (i + 1)..4.min(n_gpus - base) {
-                    g.add_link(ids[base + i], ids[base + j], LinkKind::NvLink);
-                }
-            }
-        }
-        for i in 0..4 {
-            if i + 4 < n_gpus {
-                g.add_link(ids[i], ids[i + 4], LinkKind::NvLink);
-            }
-        }
-    }
+    // Fully-connected NVLink quad for the paper's 4-GPU subset, hybrid
+    // cube-mesh (two quads + cross links) up to 8.
+    wire_dgx1_box(&mut g, &ids);
     g
 }
 
@@ -327,10 +383,14 @@ pub fn dgx_a100(n_gpus: usize) -> HwGraph {
 pub fn multi_node(nodes: usize, gpus_per_node: usize) -> HwGraph {
     let mut g = HwGraph::new(&format!("cluster-{}x{}", nodes, gpus_per_node));
     let switch = g.add_router("ib-switch");
+    g.assign_node(switch, nodes); // backbone pseudo-node
     for nd in 0..nodes {
         let gpus: Vec<usize> = (0..gpus_per_node)
             .map(|i| {
-                g.add_compute(&format!("n{}g{}", nd, i), V100_FLOPS, V100_MEM)
+                let id = g.add_compute(&format!("n{}g{}", nd, i),
+                                       V100_FLOPS, V100_MEM);
+                g.assign_node(id, nd);
+                id
             })
             .collect();
         for i in 0..gpus_per_node {
@@ -339,12 +399,101 @@ pub fn multi_node(nodes: usize, gpus_per_node: usize) -> HwGraph {
             }
         }
         let nic = g.add_router(&format!("n{}nic", nd));
+        g.assign_node(nic, nd);
         for &gpu in &gpus {
             g.add_link(gpu, nic, LinkKind::Pcie);
         }
         g.add_link(nic, switch, LinkKind::Infiniband);
     }
     g
+}
+
+/// Wire one chassis of `gpus` as a DGX-1: fully-connected NVLink quad for
+/// ≤ 4 GPUs, the hybrid cube-mesh (two quads + cross links) for up to 8.
+fn wire_dgx1_box(g: &mut HwGraph, ids: &[usize]) {
+    let n_gpus = ids.len();
+    if n_gpus <= 4 {
+        for i in 0..n_gpus {
+            for j in (i + 1)..n_gpus {
+                g.add_link(ids[i], ids[j], LinkKind::NvLink);
+            }
+        }
+    } else {
+        for q in 0..2 {
+            let base = q * 4;
+            for i in 0..4.min(n_gpus - base) {
+                for j in (i + 1)..4.min(n_gpus - base) {
+                    g.add_link(ids[base + i], ids[base + j], LinkKind::NvLink);
+                }
+            }
+        }
+        for i in 0..4 {
+            if i + 4 < n_gpus {
+                g.add_link(ids[i], ids[i + 4], LinkKind::NvLink);
+            }
+        }
+    }
+}
+
+/// A pod of `nodes` chassis, each `gpus_per_node` GPUs wired as a DGX-1
+/// cube-mesh, NICs reached over PCIe and joined by `backbone` links to one
+/// central switch.  The shared scale-out shape behind [`dgx1_pod`] and
+/// [`cloud_25gbe`].
+fn pod(name: &str, nodes: usize, gpus_per_node: usize, mem: f64,
+       backbone: LinkKind) -> HwGraph {
+    let nodes = nodes.max(1);
+    let gpus_per_node = gpus_per_node.clamp(1, 8);
+    let mut g = HwGraph::new(&format!("{}-{}x{}", name, nodes,
+                                      gpus_per_node));
+    let switch = g.add_router("backbone-switch");
+    g.assign_node(switch, nodes); // backbone pseudo-node
+    for nd in 0..nodes {
+        let gpus: Vec<usize> = (0..gpus_per_node)
+            .map(|i| {
+                let id = g.add_compute(&format!("n{}g{}", nd, i),
+                                       V100_FLOPS, mem);
+                g.assign_node(id, nd);
+                id
+            })
+            .collect();
+        wire_dgx1_box(&mut g, &gpus);
+        let nic = g.add_router(&format!("n{}nic", nd));
+        g.assign_node(nic, nd);
+        for &gpu in &gpus {
+            g.add_link(gpu, nic, LinkKind::Pcie);
+        }
+        g.add_link(nic, switch, backbone);
+    }
+    g
+}
+
+/// DGX-1 pod: `nodes` × 8 V100-32GB cube-mesh chassis over 100 Gb
+/// InfiniBand — the scale-out system the paper's projections assume,
+/// with the same 32 GB parts as the `dgx1` registry entry so every paper
+/// network stays memory-feasible.
+pub fn dgx1_pod(nodes: usize) -> HwGraph {
+    dgx1_pod_sized(nodes, 8)
+}
+
+/// [`dgx1_pod`] with a configurable chassis width (1–8 GPUs) — the
+/// `[cluster] gpus_per_node` knob.
+pub fn dgx1_pod_sized(nodes: usize, gpus_per_node: usize) -> HwGraph {
+    pod("dgx1-pod", nodes, gpus_per_node, V100_32G_MEM,
+        LinkKind::Infiniband)
+}
+
+/// Cloud GPU cluster: `nodes` × 8 V100-16GB instances (p3.16xlarge-class,
+/// NVLink inside the instance) joined by 25 GbE — the slowest inter-node
+/// fabric in the registry, where collective choice matters most.
+pub fn cloud_25gbe(nodes: usize) -> HwGraph {
+    cloud_25gbe_sized(nodes, 8)
+}
+
+/// [`cloud_25gbe`] with a configurable instance width (1–8 GPUs) — the
+/// `[cluster] gpus_per_node` knob.
+pub fn cloud_25gbe_sized(nodes: usize, gpus_per_node: usize) -> HwGraph {
+    pod("cloud-25gbe", nodes, gpus_per_node, V100_MEM,
+        LinkKind::Ethernet25)
 }
 
 #[cfg(test)]
@@ -474,6 +623,98 @@ mod tests {
         let g1 = dgx1(4);
         assert!((g1.ring_bottleneck_bw(&g1.devices())
                  - LinkKind::NvLink.bandwidth()).abs() < 1.0);
+    }
+
+    #[test]
+    fn node_membership_classifies_links() {
+        let g = multi_node(2, 4);
+        let groups = g.node_groups();
+        assert_eq!(groups.len(), 2);
+        assert!(groups.iter().all(|grp| grp.len() == 4));
+        assert!(g.is_multi_node());
+        for grp in &groups {
+            for &d in grp {
+                assert_eq!(g.node_of(d), g.node_of(grp[0]));
+            }
+        }
+        assert_ne!(g.node_of(groups[0][0]), g.node_of(groups[1][0]));
+        // NVLink links stay intra-node; NIC→switch links cross.
+        let mut intra = 0;
+        let mut inter = 0;
+        for li in 0..g.links.len() {
+            if g.link_crosses_nodes(li) {
+                inter += 1;
+            } else {
+                intra += 1;
+            }
+        }
+        assert_eq!(intra, 2 * 6, "two NVLink quads");
+        assert_eq!(inter, 2 * 4 + 2, "PCIe GPU→NIC + IB NIC→switch");
+        // Single-box graphs are one group.
+        let d = dgx1(8);
+        assert!(!d.is_multi_node());
+        assert_eq!(d.node_groups(), vec![d.devices()]);
+    }
+
+    #[test]
+    fn path_profile_matches_transfer_time() {
+        let g = multi_node(2, 4);
+        let devs = g.devices();
+        // Intra: one direct NVLink hop.
+        let (bw, lat) = g.path_profile(devs[0], devs[1], 64e6).unwrap();
+        assert!((bw - 25e9).abs() < 1.0);
+        assert!((lat - 1.3e-6).abs() < 1e-12);
+        // Inter: PCIe + IB + IB + PCIe store-and-forward → 3 GB/s, 9 µs.
+        let (bw, lat) = g.path_profile(devs[0], devs[4], 64e6).unwrap();
+        assert!((bw - 3e9).abs() < 1e3, "effective inter bw {bw}");
+        assert!((lat - 9e-6).abs() < 1e-12);
+        // The profile reproduces transfer_time exactly.
+        let bytes = 64e6;
+        let t = g.transfer_time(devs[0], devs[4], bytes);
+        assert!((t - (bytes / bw + lat)).abs() < 1e-12);
+        assert!(g.path_profile(devs[0], devs[0], 1e6).is_none());
+    }
+
+    #[test]
+    fn dgx1_pod_is_cube_mesh_chassis_over_ib() {
+        let g = dgx1_pod(4);
+        assert_eq!(g.n_devices(), 32);
+        assert_eq!(g.node_groups().len(), 4);
+        assert!((g.min_device_mem() - V100_32G_MEM).abs() < 1.0,
+                "pod uses the 32 GB parts of the dgx1 registry entry");
+        let devs = g.devices();
+        // Intra chassis: NVLink; across chassis: through NIC + IB.
+        let (bw_in, _) = g.path_profile(devs[0], devs[1], 64e6).unwrap();
+        assert!((bw_in - 25e9).abs() < 1.0);
+        let (bw_out, _) = g.path_profile(devs[0], devs[8], 64e6).unwrap();
+        assert!(bw_out < 4e9, "inter-chassis must be IB-limited: {bw_out}");
+        // Same cube-mesh inside a chassis as the single dgx1 box.
+        let box8 = dgx1(8);
+        let intra_links = g
+            .links
+            .iter()
+            .filter(|l| g.nodes[l.a].node == 0 && g.nodes[l.b].node == 0
+                        && g.nodes[l.a].is_compute
+                        && g.nodes[l.b].is_compute)
+            .count();
+        assert_eq!(intra_links, box8.links.len());
+    }
+
+    #[test]
+    fn cloud_25gbe_is_the_slowest_backbone() {
+        let g = cloud_25gbe(2);
+        assert_eq!(g.n_devices(), 16);
+        assert!((g.min_device_mem() - V100_MEM).abs() < 1.0);
+        let devs = g.devices();
+        let (bw, lat) = g.path_profile(devs[0], devs[8], 64e6).unwrap();
+        // PCIe + 25GbE + 25GbE + PCIe store-and-forward ≈ 1.24 GB/s.
+        assert!(bw < 1.5e9, "25 GbE backbone must dominate: {bw}");
+        assert!(lat > 40e-6, "TCP-class latencies: {lat}");
+        let ib = dgx1_pod(2);
+        let (ib_bw, _) = ib
+            .path_profile(ib.devices()[0], ib.devices()[8], 64e6)
+            .unwrap();
+        assert!(bw < ib_bw, "25 GbE slower than the IB pod");
     }
 
     #[test]

@@ -10,7 +10,15 @@
 //!   over the hardware graph's links;
 //! * [`tree_allreduce`] and a [`parameter_server`] baseline (the paper's
 //!   "performs poorly at scale" comparison point);
-//! * α-β analytical cost models used by the scaling-efficiency projections.
+//! * [`hierarchical_allreduce`] — the two-level multi-node scheme
+//!   (Sridharan et al., "On Scale-out Deep Learning Training for Cloud
+//!   and HPC"): intra-node reduce-scatter at NVLink speed, inter-node
+//!   rings over one rank per node, intra-node allgather;
+//! * α-β analytical cost models used by the scaling-efficiency
+//!   projections, plus the topology-aware selection layer
+//!   ([`Algorithm`], [`TopoProfile`], [`best_allreduce`]) the planner
+//!   uses to price DP gradient exchange per candidate instead of
+//!   assuming a flat ring.
 
 pub mod compress;
 
@@ -53,6 +61,286 @@ pub fn ps_cost(n: usize, bytes: f64, alpha: f64, beta_bw: f64) -> f64 {
         return 0.0;
     }
     2.0 * alpha + 2.0 * (n as f64) * bytes / beta_bw
+}
+
+/// α-β cost of the two-level hierarchical all-reduce over `nodes` chassis
+/// of `gpus_per_node` ranks each:
+///
+/// * intra-node reduce-scatter + allgather at `intra_bw`:
+///   `2 (g−1) (α + (bytes/g) / β_intra)`;
+/// * inter-node ring all-reduce over one rank per node and chunk, the
+///   per-step shard sends of a chassis bundled through its NIC:
+///   `2 (n−1) (α + (bytes/n) / β_inter)`.
+///
+/// Against the flat ring at the inter-node bottleneck
+/// (`2(ng−1)α + 2(ng−1)/(ng)·bytes/β_inter`) this wins whenever
+/// `β_intra ≥ n · β_inter` — which holds on every registry multi-node
+/// graph, where store-and-forward NIC paths make the effective
+/// inter-node bandwidth a small fraction of NVLink.
+pub fn hierarchical_cost(nodes: usize, gpus_per_node: usize, bytes: f64,
+                         alpha: f64, intra_bw: f64, inter_bw: f64) -> f64 {
+    let (n, g) = (nodes.max(1), gpus_per_node.max(1));
+    let mut t = 0.0;
+    if g > 1 {
+        t += 2.0 * (g as f64 - 1.0)
+            * (alpha + (bytes / g as f64) / intra_bw);
+    }
+    if n > 1 {
+        t += 2.0 * (n as f64 - 1.0)
+            * (alpha + (bytes / n as f64) / inter_bw);
+    }
+    t
+}
+
+// ==========================================================================
+// Topology-aware algorithm selection
+// ==========================================================================
+
+/// An all-reduce algorithm the selection layer can price and (for
+/// [`Algorithm::Ring`] / [`Algorithm::Tree`] / [`Algorithm::Hierarchical`])
+/// execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Bandwidth-optimal chunked ring (NCCL's default).
+    Ring,
+    /// Binary reduce + broadcast tree: `O(log n)` latency terms, wins the
+    /// latency-dominated small-buffer regime.
+    Tree,
+    /// Two-level intra/inter scheme — the multi-node scale-out choice.
+    Hierarchical,
+}
+
+impl Algorithm {
+    /// Fixed pricing order (ties prefer the earlier, simpler algorithm).
+    pub const ALL: [Algorithm; 3] =
+        [Algorithm::Ring, Algorithm::Tree, Algorithm::Hierarchical];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Algorithm::Ring => "ring",
+            Algorithm::Tree => "tree",
+            Algorithm::Hierarchical => "hierarchical",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Algorithm> {
+        Ok(match s {
+            "ring" => Algorithm::Ring,
+            "tree" => Algorithm::Tree,
+            "hierarchical" | "hier" | "2level" => Algorithm::Hierarchical,
+            other => bail!("unknown collective algorithm '{other}' \
+                            (known: ring, tree, hierarchical)"),
+        })
+    }
+}
+
+/// Effective inter-node path of a *projected* spill: a single-box graph
+/// extended across nodes crosses PCIe + IB + IB + PCIe store-and-forward
+/// (the `multi_node` NIC path), ≈ 3 GB/s at 9 µs.
+const SPILL_INTER_BW: f64 = 3e9;
+const SPILL_INTER_LAT: f64 = 9e-6;
+
+/// Collective-pricing summary of a hardware graph: chassis shape plus the
+/// effective intra-/inter-node α-β path profiles (store-and-forward, so
+/// they reproduce [`HwGraph::transfer_time`] — see
+/// [`HwGraph::path_profile`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopoProfile {
+    /// Ranks per chassis an n-worker exchange groups by.  `usize::MAX`
+    /// marks an in-box budget on a single-box graph: the exchange never
+    /// spills, so every worker count prices intra-node.
+    pub gpus_per_node: usize,
+    /// Compute devices physically present.
+    pub physical_devices: usize,
+    /// Effective bandwidth / wire latency between two co-chassis devices.
+    pub intra_bw: f64,
+    pub intra_lat: f64,
+    /// Effective bandwidth / wire latency across a chassis boundary (the
+    /// spill constants when the graph itself is a single box).
+    pub inter_bw: f64,
+    pub inter_lat: f64,
+}
+
+impl TopoProfile {
+    /// Profile of the physical graph (an in-box exchange; use
+    /// [`TopoProfile::for_budget`] when the worker count may exceed it).
+    pub fn of(hw: &HwGraph) -> TopoProfile {
+        TopoProfile::for_budget(hw, hw.n_devices())
+    }
+
+    /// Profile for pricing an exchange of up to `devices` workers on
+    /// `hw`.  Multi-node graphs keep their chassis shape (more workers
+    /// extrapolate to more chassis of the same shape); a single-box graph
+    /// stays intra-node while the budget fits and spills over the
+    /// conservative NIC path once it does not — preserving the planner's
+    /// "projection beyond the box sees the slower fabric" behaviour.
+    pub fn for_budget(hw: &HwGraph, devices: usize) -> TopoProfile {
+        const REF_BYTES: f64 = 64e6;
+        let groups = hw.node_groups();
+        let physical = hw.n_devices();
+        // Intra profile: a co-chassis pair (NVLink default when the graph
+        // is degenerate).
+        let (intra_bw, intra_lat) = groups
+            .iter()
+            .find(|g| g.len() >= 2)
+            .and_then(|g| hw.path_profile(g[0], g[1], REF_BYTES))
+            .unwrap_or((25e9, 1.3e-6));
+        if groups.len() > 1 {
+            let (inter_bw, inter_lat) = hw
+                .path_profile(groups[0][0], groups[1][0], REF_BYTES)
+                .unwrap_or((SPILL_INTER_BW, SPILL_INTER_LAT));
+            let g_max = groups.iter().map(|g| g.len()).max().unwrap_or(1);
+            TopoProfile {
+                gpus_per_node: g_max.max(1),
+                physical_devices: physical,
+                intra_bw,
+                intra_lat,
+                inter_bw,
+                inter_lat,
+            }
+        } else if devices <= physical.max(1) {
+            // In-box on a single chassis: nothing ever crosses a node.
+            TopoProfile {
+                gpus_per_node: usize::MAX,
+                physical_devices: physical,
+                intra_bw,
+                intra_lat,
+                inter_bw: SPILL_INTER_BW,
+                inter_lat: SPILL_INTER_LAT,
+            }
+        } else {
+            // Projection past a single box: more boxes of this size over
+            // the conservative NIC path.
+            TopoProfile {
+                gpus_per_node: physical.max(1),
+                physical_devices: physical,
+                intra_bw,
+                intra_lat,
+                inter_bw: SPILL_INTER_BW,
+                inter_lat: SPILL_INTER_LAT,
+            }
+        }
+    }
+
+    /// Profile for an exchange whose ranks each span `width` devices
+    /// (M-way model parallelism): only `⌊g/width⌋` DP ranks fit per
+    /// chassis, so the exchange crosses chassis sooner — an M = 8 hybrid
+    /// on an 8-GPU-chassis pod puts one rank per chassis and every hop
+    /// on the inter-node path.  `width ≤ 1` and in-box single-box
+    /// profiles (which never spill) are unchanged; a width that does not
+    /// divide the chassis rounds down (conservative packing).
+    pub fn for_worker_width(&self, width: usize) -> TopoProfile {
+        if width <= 1 || self.gpus_per_node == usize::MAX {
+            return self.clone();
+        }
+        TopoProfile {
+            gpus_per_node: (self.gpus_per_node / width).max(1),
+            ..self.clone()
+        }
+    }
+
+    /// Chassis an `n`-worker exchange spans (projections add chassis of
+    /// the same shape).
+    pub fn nodes_for(&self, n: usize) -> usize {
+        if self.gpus_per_node == usize::MAX {
+            1
+        } else {
+            n.div_ceil(self.gpus_per_node.max(1)).max(1)
+        }
+    }
+
+    /// Worst-hop α-β parameters of an `n`-worker flat ring/tree: the
+    /// inter-node path once the exchange spans chassis, the intra path
+    /// while it does not.  `alpha` is per-step software overhead added on
+    /// top of the wire latency.
+    fn worst_hop(&self, n: usize, alpha: f64) -> (f64, f64) {
+        if self.nodes_for(n) > 1 {
+            (alpha + self.inter_lat, self.inter_bw)
+        } else {
+            (alpha + self.intra_lat, self.intra_bw)
+        }
+    }
+
+    /// α-β cost of `algorithm` for an `n`-worker all-reduce of `bytes`
+    /// per worker on this topology.
+    pub fn cost(&self, algorithm: Algorithm, n: usize, bytes: f64,
+                alpha: f64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        match algorithm {
+            Algorithm::Ring => {
+                let (a, b) = self.worst_hop(n, alpha);
+                ring_cost(n, bytes, a, b)
+            }
+            Algorithm::Tree => {
+                let (a, b) = self.worst_hop(n, alpha);
+                tree_cost(n, bytes, a, b)
+            }
+            Algorithm::Hierarchical => {
+                let nodes = self.nodes_for(n);
+                let g = if nodes <= 1 {
+                    n
+                } else {
+                    self.gpus_per_node.min(n)
+                };
+                // One formula owner: the intra and inter phases of
+                // [`hierarchical_cost`], each with its own per-step wire
+                // latency folded into α.
+                hierarchical_cost(1, g, bytes, alpha + self.intra_lat,
+                                  self.intra_bw, self.inter_bw)
+                    + hierarchical_cost(nodes, 1, bytes,
+                                        alpha + self.inter_lat,
+                                        self.intra_bw, self.inter_bw)
+            }
+        }
+    }
+}
+
+/// The selection layer's verdict: which algorithm prices an exchange
+/// cheapest, and at what α-β cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CollectiveChoice {
+    pub algorithm: Algorithm,
+    pub cost_s: f64,
+}
+
+/// Default per-step software overhead (NCCL-kernel-launch class).
+pub const DEFAULT_ALPHA: f64 = 5e-6;
+
+/// Pick the best *feasible* all-reduce for an `n`-worker exchange of
+/// `bytes` per worker on `p`: every algorithm of [`Algorithm::ALL`] is
+/// priced ([`Algorithm::Hierarchical`] only once the exchange actually
+/// spans chassis — on a single node it degenerates to the ring) and the
+/// strictly cheapest wins, ties keeping the earlier entry, so the choice
+/// is deterministic.
+pub fn best_allreduce_on(n: usize, bytes: f64, p: &TopoProfile, alpha: f64)
+                         -> CollectiveChoice {
+    let mut best = CollectiveChoice {
+        algorithm: Algorithm::Ring,
+        cost_s: p.cost(Algorithm::Ring, n, bytes, alpha),
+    };
+    if n <= 1 {
+        return CollectiveChoice { algorithm: Algorithm::Ring, cost_s: 0.0 };
+    }
+    for &a in &Algorithm::ALL[1..] {
+        if a == Algorithm::Hierarchical && p.nodes_for(n) <= 1 {
+            continue; // degenerates to the ring on a single chassis
+        }
+        let c = p.cost(a, n, bytes, alpha);
+        if c < best.cost_s {
+            best = CollectiveChoice { algorithm: a, cost_s: c };
+        }
+    }
+    best
+}
+
+/// [`best_allreduce_on`] against the physical graph's own profile with
+/// the default software α — the `best_allreduce(n, bytes, hw)` entry
+/// point the planner's cost models build on.
+pub fn best_allreduce(n: usize, bytes: f64, hw: &HwGraph)
+                      -> CollectiveChoice {
+    best_allreduce_on(n, bytes, &TopoProfile::of(hw), DEFAULT_ALPHA)
 }
 
 /// In-place chunked ring all-reduce over real f32 buffers.
@@ -246,6 +534,162 @@ pub fn parameter_server(bufs: &mut [Vec<f32>], hw: &HwGraph, ranks: &[usize])
     Ok(CollectiveResult { sim_time, bytes_on_wire: wire })
 }
 
+/// In-place two-level hierarchical all-reduce over real f32 buffers —
+/// the executable counterpart of [`hierarchical_cost`].
+///
+/// Ranks are grouped by [`HwGraph::node_of`]; groups must be equal-sized
+/// (one rank set per chassis).  Three phases, each bulk-synchronous like
+/// [`ring_allreduce`]:
+///
+/// 1. **intra-node reduce-scatter** — a (g−1)-step ring inside every
+///    chassis concurrently; after it, member `j` of each chassis owns the
+///    chassis-local sum of chunk `(j+1) mod g`;
+/// 2. **inter-node rings** — for every chunk, its owner ranks (one per
+///    chassis) run an n-node ring all-reduce of that chunk; the g
+///    concurrent shard rings share each chassis NIC, so a step is charged
+///    as one bundled `Σ shard bytes ≈ bytes/n` transfer per chassis pair;
+/// 3. **intra-node allgather** — (g−1) ring steps spread every
+///    globally-reduced chunk back across the chassis.
+///
+/// On a single-chassis graph this delegates to [`ring_allreduce`].
+pub fn hierarchical_allreduce(bufs: &mut [Vec<f32>], hw: &HwGraph,
+                              ranks: &[usize]) -> Result<CollectiveResult> {
+    let n_ranks = bufs.len();
+    if n_ranks == 0 {
+        bail!("no buffers");
+    }
+    if ranks.len() != n_ranks {
+        bail!("rank/buffer count mismatch");
+    }
+    let len = bufs[0].len();
+    if bufs.iter().any(|b| b.len() != len) {
+        bail!("buffer length mismatch");
+    }
+    // Group rank indices by chassis, in first-appearance order.
+    let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+    for (r, &dev) in ranks.iter().enumerate() {
+        let nd = hw.node_of(dev);
+        match groups.iter_mut().find(|(node, _)| *node == nd) {
+            Some((_, g)) => g.push(r),
+            None => groups.push((nd, vec![r])),
+        }
+    }
+    let n_nodes = groups.len();
+    if n_nodes <= 1 {
+        return ring_allreduce(bufs, hw, ranks);
+    }
+    let g = groups[0].1.len();
+    if groups.iter().any(|(_, grp)| grp.len() != g) {
+        bail!("hierarchical all-reduce needs equal ranks per node \
+               (got {:?})",
+              groups.iter().map(|(_, grp)| grp.len()).collect::<Vec<_>>());
+    }
+    let groups: Vec<Vec<usize>> =
+        groups.into_iter().map(|(_, grp)| grp).collect();
+
+    let mut sim_time = 0.0;
+    let mut wire = 0.0;
+
+    // Chunk c of the intra partition = [starts[c], starts[c+1]).
+    let starts: Vec<usize> = (0..=g).map(|c| c * len / g).collect();
+    let chunk_bytes = |c: usize| ((starts[c + 1] - starts[c]) * 4) as f64;
+    // Accumulate `src`'s slice into `dst`'s (split-borrow helper).
+    fn apply(bufs: &mut [Vec<f32>], src: usize, dst: usize, lo: usize,
+             hi: usize, add: bool) {
+        let (a, b) = if src < dst {
+            let (l, r) = bufs.split_at_mut(dst);
+            (&l[src], &mut r[0])
+        } else {
+            let (l, r) = bufs.split_at_mut(src);
+            (&r[0], &mut l[dst])
+        };
+        if add {
+            for (x, y) in b[lo..hi].iter_mut().zip(&a[lo..hi]) {
+                *x += *y;
+            }
+        } else {
+            b[lo..hi].copy_from_slice(&a[lo..hi]);
+        }
+    }
+
+    if g > 1 {
+        // --- phase 1: intra-node reduce-scatter, all chassis concurrent.
+        for s in 0..(g - 1) {
+            let mut max_t: f64 = 0.0;
+            for grp in &groups {
+                for (j, &rank) in grp.iter().enumerate() {
+                    let c = (j + g - s) % g;
+                    let dst = grp[(j + 1) % g];
+                    max_t = max_t.max(hw.transfer_time(
+                        ranks[rank], ranks[dst], chunk_bytes(c)));
+                    wire += chunk_bytes(c);
+                    apply(bufs, rank, dst, starts[c], starts[c + 1], true);
+                }
+            }
+            sim_time += max_t;
+        }
+    }
+    // Owner (group-member index) of chunk c after the reduce-scatter.
+    let owner = |c: usize| (c + g - 1) % g;
+
+    // --- phase 2: inter-node shard rings, one owner rank per chassis
+    // and chunk; per step each chassis bundles its g shard sends through
+    // the NIC.
+    for half in 0..2 {
+        // half 0: reduce-scatter across nodes; half 1: allgather.
+        for s in 0..(n_nodes - 1) {
+            let mut pair_bytes = vec![0.0f64; n_nodes];
+            for c in 0..g {
+                let (lo_c, hi_c) = (starts[c], starts[c + 1]);
+                let clen = hi_c - lo_c;
+                let sub = |k: usize| lo_c + k * clen / n_nodes;
+                for nd in 0..n_nodes {
+                    let k = if half == 0 {
+                        (nd + n_nodes - s) % n_nodes
+                    } else {
+                        (nd + 1 + n_nodes - s) % n_nodes
+                    };
+                    let (lo, hi) = (sub(k), sub(k + 1));
+                    let src = groups[nd][owner(c)];
+                    let dst = groups[(nd + 1) % n_nodes][owner(c)];
+                    pair_bytes[nd] += ((hi - lo) * 4) as f64;
+                    wire += ((hi - lo) * 4) as f64;
+                    apply(bufs, src, dst, lo, hi, half == 0);
+                }
+            }
+            // Bundled per-chassis transfer between representative owners.
+            let mut max_t: f64 = 0.0;
+            for nd in 0..n_nodes {
+                let src = groups[nd][owner(0)];
+                let dst = groups[(nd + 1) % n_nodes][owner(0)];
+                max_t = max_t.max(hw.transfer_time(
+                    ranks[src], ranks[dst], pair_bytes[nd]));
+            }
+            sim_time += max_t;
+        }
+    }
+
+    if g > 1 {
+        // --- phase 3: intra-node allgather.
+        for s in 0..(g - 1) {
+            let mut max_t: f64 = 0.0;
+            for grp in &groups {
+                for (j, &rank) in grp.iter().enumerate() {
+                    let c = (j + 1 + g - s) % g;
+                    let dst = grp[(j + 1) % g];
+                    max_t = max_t.max(hw.transfer_time(
+                        ranks[rank], ranks[dst], chunk_bytes(c)));
+                    wire += chunk_bytes(c);
+                    apply(bufs, rank, dst, starts[c], starts[c + 1], false);
+                }
+            }
+            sim_time += max_t;
+        }
+    }
+
+    Ok(CollectiveResult { sim_time, bytes_on_wire: wire })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -375,6 +819,128 @@ mod tests {
             .unwrap()
             .sim_time;
         assert!(t2 > t1, "inter-node {t2} must exceed NVLink {t1}");
+    }
+
+    #[test]
+    fn hierarchical_matches_sum_and_all_ranks_agree() {
+        for (nodes, g) in [(2usize, 4usize), (4, 2), (3, 3), (2, 1)] {
+            let hw = multi_node(nodes, g.max(2));
+            // One rank per chassis slot: the first g devices of each node.
+            let groups = hw.node_groups();
+            let devs: Vec<usize> = groups
+                .iter()
+                .flat_map(|grp| grp.iter().take(g).copied())
+                .collect();
+            for len in [1usize, 7, 64, 1000] {
+                let mut bufs = random_bufs(nodes * g, len,
+                                           (nodes * g * len) as u64);
+                let want = expected_sum(&bufs);
+                let r = hierarchical_allreduce(&mut bufs, &hw, &devs)
+                    .unwrap();
+                assert!(r.sim_time > 0.0);
+                for b in &bufs {
+                    for (i, &v) in b.iter().enumerate() {
+                        assert!((v as f64 - want[i]).abs()
+                                < 1e-3 * want[i].abs().max(1.0),
+                                "{nodes}x{g} len={len} i={i}");
+                    }
+                }
+                for b in &bufs[1..] {
+                    assert_eq!(b, &bufs[0], "ranks must agree bitwise");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_single_node_delegates_to_ring() {
+        let hw = dgx1(4);
+        let devs = hw.devices();
+        let mut a = random_bufs(4, 333, 7);
+        let mut b = a.clone();
+        let rh = hierarchical_allreduce(&mut a, &hw, &devs).unwrap();
+        let rr = ring_allreduce(&mut b, &hw, &devs).unwrap();
+        assert_eq!(a, b, "single chassis must be the ring bit-for-bit");
+        assert_eq!(rh.sim_time, rr.sim_time);
+    }
+
+    #[test]
+    fn hierarchical_rejects_uneven_groups() {
+        let hw = multi_node(2, 4);
+        let devs = hw.devices();
+        // 3 ranks on node 0, 1 on node 1.
+        let ranks = vec![devs[0], devs[1], devs[2], devs[4]];
+        let mut bufs = random_bufs(4, 16, 1);
+        assert!(hierarchical_allreduce(&mut bufs, &hw, &ranks).is_err());
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_across_nodes() {
+        let hw = multi_node(4, 8);
+        let devs = hw.devices();
+        let len = 1 << 20; // 4 MB per rank
+        let mut a = random_bufs(32, len, 3);
+        let t_hier = hierarchical_allreduce(&mut a, &hw, &devs)
+            .unwrap()
+            .sim_time;
+        let mut b = random_bufs(32, len, 3);
+        let t_ring = ring_allreduce(&mut b, &hw, &devs).unwrap().sim_time;
+        assert!(t_hier < t_ring,
+                "two-level {t_hier} must beat the flat ring {t_ring}");
+    }
+
+    #[test]
+    fn hierarchical_cost_degenerates_sanely() {
+        assert_eq!(hierarchical_cost(1, 1, 1e9, 5e-6, 25e9, 3e9), 0.0);
+        // One node → pure intra ring; one GPU per node → pure inter ring.
+        let intra = hierarchical_cost(1, 8, 4e8, 5e-6, 25e9, 3e9);
+        assert!((intra - ring_cost(8, 4e8, 5e-6, 25e9)).abs() < 1e-12);
+        let inter = hierarchical_cost(8, 1, 4e8, 5e-6, 25e9, 3e9);
+        assert!((inter - ring_cost(8, 4e8, 5e-6, 3e9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn algorithm_parse_round_trip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(a.as_str()).unwrap(), a);
+        }
+        assert!(Algorithm::parse("butterfly").is_err());
+    }
+
+    #[test]
+    fn best_allreduce_is_topology_aware() {
+        // Multi-node + paper-size gradients → hierarchical.
+        let pod = multi_node(4, 8);
+        let big = best_allreduce(32, 640e6, &pod);
+        assert_eq!(big.algorithm, Algorithm::Hierarchical);
+        let p = TopoProfile::of(&pod);
+        assert!(big.cost_s
+                < p.cost(Algorithm::Ring, 32, 640e6, DEFAULT_ALPHA));
+        // Tiny payloads are latency-dominated → tree.
+        let small = best_allreduce(32, 1e3, &pod);
+        assert_eq!(small.algorithm, Algorithm::Tree);
+        // Single box in-budget → plain ring (hierarchical degenerates).
+        let box1 = dgx1(8);
+        let inbox = best_allreduce(8, 640e6, &box1);
+        assert_eq!(inbox.algorithm, Algorithm::Ring);
+        // n = 1 → free.
+        assert_eq!(best_allreduce(1, 640e6, &box1).cost_s, 0.0);
+    }
+
+    #[test]
+    fn topo_profile_spills_single_boxes_conservatively() {
+        let hw = dgx1(8);
+        let inbox = TopoProfile::for_budget(&hw, 8);
+        assert_eq!(inbox.nodes_for(256), 1, "in-box budgets never spill");
+        let spilled = TopoProfile::for_budget(&hw, 256);
+        assert_eq!(spilled.gpus_per_node, 8);
+        assert_eq!(spilled.nodes_for(256), 32);
+        assert!(spilled.inter_bw < spilled.intra_bw);
+        // Multi-node graphs keep their chassis shape either way.
+        let mn = TopoProfile::for_budget(&multi_node(2, 4), 4);
+        assert_eq!(mn.gpus_per_node, 4);
+        assert_eq!(mn.nodes_for(8), 2);
+        assert!((mn.inter_bw - 3e9).abs() < 1e3);
     }
 
     #[test]

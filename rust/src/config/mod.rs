@@ -248,12 +248,17 @@ pub struct PlannerConfig {
     pub model: String,
     pub topology: String,
     pub devices: usize,
+    /// Chassis count for multi-node topologies (None = single-arg sizing).
+    pub nodes: Option<usize>,
     /// Per-device mini-batch override (None = registry default).
     pub batch: Option<usize>,
     /// "time-to-converge" | "step-time".
     pub objective: String,
     /// "analytical" | "alpha-beta" | "simulator".
     pub cost_model: String,
+    /// "ring" | "tree" | "hierarchical" pin (None = the `[cluster]`
+    /// section's `collective`, itself defaulting to "auto").
+    pub collective: Option<String>,
 }
 
 impl Default for PlannerConfig {
@@ -262,9 +267,11 @@ impl Default for PlannerConfig {
             model: "inception-v3".into(),
             topology: "dgx1".into(),
             devices: 8,
+            nodes: None,
             batch: None,
             objective: "time-to-converge".into(),
             cost_model: "analytical".into(),
+            collective: None,
         }
     }
 }
@@ -308,6 +315,8 @@ pub struct SweepConfig {
     pub models: Vec<String>,
     pub topologies: Vec<String>,
     pub devices: Vec<usize>,
+    /// Chassis-count axis (1 = single-arg topology sizing).
+    pub nodes: Vec<usize>,
     /// "default" | a GB figure, per axis entry (the per-device memory
     /// axis).
     pub device_mem_gb: Vec<String>,
@@ -318,6 +327,9 @@ pub struct SweepConfig {
     pub mp_degrees: Vec<usize>,
     pub objective: String,
     pub cost_model: String,
+    /// "ring" | "tree" | "hierarchical" pin (None = the `[cluster]`
+    /// section's `collective`, itself defaulting to "auto").
+    pub collective: Option<String>,
     /// Worker threads (0 = one per available core).
     pub threads: usize,
     pub curve_max_devices: usize,
@@ -330,6 +342,7 @@ impl Default for SweepConfig {
                          "biglstm".into()],
             topologies: vec!["dgx1".into()],
             devices: vec![8, 64, 256],
+            nodes: vec![1],
             device_mem_gb: vec!["default".into()],
             batches: vec!["default".into()],
             families: vec!["dp".into(), "hybrid".into(),
@@ -337,6 +350,7 @@ impl Default for SweepConfig {
             mp_degrees: vec![2],
             objective: "time-to-converge".into(),
             cost_model: "analytical".into(),
+            collective: None,
             threads: 0,
             curve_max_devices: 256,
         }
@@ -348,10 +362,14 @@ impl Default for SweepConfig {
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub artifacts_dir: String,
-    /// "dgx1" or "multinode".
+    /// "dgx1" | "multinode" | "dgx1-pod" | "cloud-25gbe".
     pub topology: String,
     pub nodes: usize,
     pub gpus_per_node: usize,
+    /// `[cluster] collective`: "auto" (best feasible per exchange) or a
+    /// pinned "ring" | "tree" | "hierarchical" — the default `plan` and
+    /// `sweep` price with.
+    pub collective: String,
     pub train: TrainConfig,
     pub corpus_vocab: usize,
     pub epoch_tokens: u64,
@@ -371,6 +389,7 @@ impl Default for RunConfig {
             topology: "dgx1".into(),
             nodes: 1,
             gpus_per_node: 8,
+            collective: "auto".into(),
             train: TrainConfig::default(),
             corpus_vocab: 512,
             epoch_tokens: 1_000_000,
@@ -385,11 +404,18 @@ impl Default for RunConfig {
 impl RunConfig {
     /// Build from a parsed TOML document.
     pub fn from_toml(t: &Toml) -> Result<RunConfig> {
+        let collective = t.str_or("cluster.collective", "auto");
+        if !matches!(collective.as_str(),
+                     "auto" | "ring" | "tree" | "hierarchical") {
+            bail!("cluster.collective must be auto, ring, tree or \
+                   hierarchical, got '{collective}'");
+        }
         let mut c = RunConfig {
             artifacts_dir: t.str_or("run.artifacts_dir", "artifacts"),
             topology: t.str_or("cluster.topology", "dgx1"),
             nodes: t.usize_or("cluster.nodes", 1),
             gpus_per_node: t.usize_or("cluster.gpus_per_node", 8),
+            collective,
             corpus_vocab: t.usize_or("data.vocab", 512),
             epoch_tokens: t.usize_or("data.epoch_tokens", 1_000_000) as u64,
             out_csv: t.get("run.out_csv").and_then(|v| v.as_str().ok())
@@ -442,13 +468,29 @@ impl RunConfig {
                     Some(b as usize)
                 }
             };
+            let nodes = match t.get("planner.nodes") {
+                None => None,
+                Some(v) => {
+                    let n = v.as_i64()?;
+                    if n <= 0 {
+                        bail!("planner.nodes must be a positive integer, \
+                               got {n}");
+                    }
+                    Some(n as usize)
+                }
+            };
             c.planner = Some(PlannerConfig {
                 model: t.str_or("planner.model", &d.model),
                 topology: t.str_or("planner.topology", &d.topology),
                 devices: t.usize_or("planner.devices", d.devices),
+                nodes,
                 batch,
                 objective: t.str_or("planner.objective", &d.objective),
                 cost_model: t.str_or("planner.cost", &d.cost_model),
+                collective: t
+                    .get("planner.collective")
+                    .and_then(|v| v.as_str().ok())
+                    .map(|s| s.to_string()),
             });
         }
         if t.values.keys().any(|k| k.starts_with("sweep.")) {
@@ -461,6 +503,7 @@ impl RunConfig {
                 topologies: t
                     .str_list_or("sweep.topologies", &dstr(&d.topologies)),
                 devices: t.usize_list_or("sweep.devices", &d.devices),
+                nodes: t.usize_list_or("sweep.nodes", &d.nodes),
                 device_mem_gb: t.stringly_list_or(
                     "sweep.device_mem_gb", &dstr(&d.device_mem_gb)),
                 batches: t.str_list_or("sweep.batches", &dstr(&d.batches)),
@@ -470,6 +513,10 @@ impl RunConfig {
                     .usize_list_or("sweep.mp_degrees", &d.mp_degrees),
                 objective: t.str_or("sweep.objective", &d.objective),
                 cost_model: t.str_or("sweep.cost", &d.cost_model),
+                collective: t
+                    .get("sweep.collective")
+                    .and_then(|v| v.as_str().ok())
+                    .map(|s| s.to_string()),
                 threads: t.usize_or("sweep.threads", d.threads),
                 curve_max_devices: t.usize_or("sweep.curve_max_devices",
                                               d.curve_max_devices),
@@ -516,6 +563,23 @@ impl RunConfig {
             "dgx1" => Ok(crate::cluster::dgx1(self.gpus_per_node)),
             "multinode" => Ok(crate::cluster::multi_node(self.nodes,
                                                          self.gpus_per_node)),
+            "dgx1-pod" | "cloud-25gbe" => {
+                // Pod chassis are DGX-1-shaped: the cube-mesh holds at
+                // most 8 GPUs, and silently clamping would hand back a
+                // smaller cluster than configured.
+                if self.gpus_per_node > 8 {
+                    bail!("topology '{}' chassis hold at most 8 GPUs, \
+                           got gpus_per_node = {}",
+                          self.topology, self.gpus_per_node);
+                }
+                Ok(if self.topology == "dgx1-pod" {
+                    crate::cluster::dgx1_pod_sized(self.nodes.max(1),
+                                                   self.gpus_per_node)
+                } else {
+                    crate::cluster::cloud_25gbe_sized(self.nodes.max(1),
+                                                      self.gpus_per_node)
+                })
+            }
             other => bail!("unknown topology '{other}'"),
         }
     }
@@ -673,6 +737,81 @@ sizes = [1, 2, 3]
             let t = Toml::parse(doc).unwrap();
             assert!(RunConfig::from_toml(&t).is_err(), "{doc}");
         }
+    }
+
+    #[test]
+    fn cluster_collective_parses_and_validates() {
+        let t = Toml::parse(
+            "[cluster]\ntopology = \"dgx1-pod\"\nnodes = 4\n\
+             collective = \"hierarchical\"\n")
+            .unwrap();
+        let c = RunConfig::from_toml(&t).unwrap();
+        assert_eq!(c.collective, "hierarchical");
+        assert_eq!(c.nodes, 4);
+        let hw = c.build_cluster().unwrap();
+        assert_eq!(hw.n_devices(), 32);
+        assert_eq!(hw.node_groups().len(), 4);
+        // Default is auto; junk is rejected.
+        let c = RunConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(c.collective, "auto");
+        let t = Toml::parse("[cluster]\ncollective = \"carrier-pigeon\"\n")
+            .unwrap();
+        assert!(RunConfig::from_toml(&t).is_err());
+        // The cloud topology builds too, honouring gpus_per_node.
+        let t = Toml::parse(
+            "[cluster]\ntopology = \"cloud-25gbe\"\nnodes = 2\n")
+            .unwrap();
+        let hw = RunConfig::from_toml(&t).unwrap().build_cluster().unwrap();
+        assert_eq!(hw.n_devices(), 16);
+        let t = Toml::parse(
+            "[cluster]\ntopology = \"cloud-25gbe\"\nnodes = 2\n\
+             gpus_per_node = 4\n")
+            .unwrap();
+        let hw = RunConfig::from_toml(&t).unwrap().build_cluster().unwrap();
+        assert_eq!(hw.n_devices(), 8, "gpus_per_node must not be ignored");
+        assert_eq!(hw.node_groups().len(), 2);
+        // Over-wide chassis error loudly instead of clamping.
+        let t = Toml::parse(
+            "[cluster]\ntopology = \"dgx1-pod\"\nnodes = 4\n\
+             gpus_per_node = 16\n")
+            .unwrap();
+        let err = RunConfig::from_toml(&t)
+            .unwrap()
+            .build_cluster()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("at most 8"), "{err}");
+    }
+
+    #[test]
+    fn planner_and_sweep_sections_carry_nodes_and_collective() {
+        let t = Toml::parse(
+            "[planner]\ntopology = \"dgx1-pod\"\nnodes = 4\n\
+             collective = \"ring\"\n")
+            .unwrap();
+        let p = RunConfig::from_toml(&t).unwrap().planner.unwrap();
+        assert_eq!(p.nodes, Some(4));
+        assert_eq!(p.collective.as_deref(), Some("ring"));
+        // Unset keys stay None (fall back to [cluster] at use).
+        let t = Toml::parse("[planner]\nmodel = \"gnmt\"\n").unwrap();
+        let p = RunConfig::from_toml(&t).unwrap().planner.unwrap();
+        assert_eq!(p.nodes, None);
+        assert_eq!(p.collective, None);
+        for doc in ["[planner]\nnodes = 0\n", "[planner]\nnodes = -2\n"] {
+            assert!(RunConfig::from_toml(&Toml::parse(doc).unwrap())
+                        .is_err(), "{doc}");
+        }
+        let t = Toml::parse(
+            "[sweep]\nnodes = [1, 2, 4]\ncollective = \"tree\"\n")
+            .unwrap();
+        let s = RunConfig::from_toml(&t).unwrap().sweep.unwrap();
+        assert_eq!(s.nodes, vec![1, 2, 4]);
+        assert_eq!(s.collective.as_deref(), Some("tree"));
+        // Missing keys keep the single-chassis default axis.
+        let t = Toml::parse("[sweep]\ndevices = [8]\n").unwrap();
+        let s = RunConfig::from_toml(&t).unwrap().sweep.unwrap();
+        assert_eq!(s.nodes, vec![1]);
+        assert_eq!(s.collective, None);
     }
 
     #[test]

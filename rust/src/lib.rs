@@ -45,7 +45,10 @@
 //!   paper's three networks plus the transformer LM; DGX-1, a 16-GPU
 //!   NVSwitch DGX-2, and IB multi-node).
 //! * Predictions are pluggable via [`planner::CostModel`]: the analytical
-//!   Eq. 1–6 model, the α-β ring model, or the discrete-event simulator —
+//!   Eq. 1–6 model, the topology-aware α-β collective model (DP gradient
+//!   exchange priced as the best feasible ring / tree / hierarchical
+//!   all-reduce for the candidate's device set,
+//!   [`collective::best_allreduce`]), or the discrete-event simulator —
 //!   swap one for another to cross-check a plan.  Every model scores both
 //!   MP mechanisms per degree: the Table 1 structural default *and* an
 //!   explicit GPipe pipeline, so

@@ -39,7 +39,10 @@ hybridpar — hybrid DP+MP training framework (Pal et al. 2019 reproduction)
 USAGE: hybridpar <COMMAND> [OPTIONS]
 
 COMMANDS:
-  plan       --model NAME --topo dgx1|dgx2|dgx-a100|multinode --devices N
+  plan       --model NAME
+             --topo dgx1|dgx2|dgx-a100|multinode|dgx1-pod|cloud-25gbe
+             --devices N [--nodes K]
+             [--collective auto|ring|tree|hierarchical]
              [--batch B] [--objective time-to-converge|step-time]
              [--cost analytical|alpha-beta|simulator] [--mp-degrees 2,4]
              [--pipeline-only] [--max-curve N]
@@ -47,8 +50,10 @@ COMMANDS:
              [--recompute] [--act-factor F] [--reserved-gb G]
              [--config cfg.toml] [--out-json path]
              (emits the typed Plan as JSON on stdout; memory-infeasible
-              candidates appear in the scorecard as infeasible rows)
-  sweep      --models a,b --topos dgx1,dgx2 --devices 8,64,256
+              candidates appear in the scorecard as infeasible rows, and
+              the collective pricing each exchange is recorded per row)
+  sweep      --models a,b --topos dgx1,dgx1-pod --devices 8,64,256
+             [--nodes 1,2,4] [--collective auto|ring|tree|hierarchical]
              [--device-mem-gb default|G,...]
              [--batches default|paper|N,...] [--families dp,hybrid,pipelined]
              [--mp-degrees 2,4] [--threads N] [--objective ...] [--cost ...]
@@ -65,6 +70,7 @@ COMMANDS:
              [--heuristic] [--dot out.dot]
   analyze    --model inception|gnmt|biglstm [--max-devices N] [--real-se]
   allreduce  [--mbytes M] [--workers N] [--topology dgx1|multinode]
+             (benches ring, tree, hierarchical and parameter-server)
   info       [--artifacts dir]
 ";
 
@@ -95,6 +101,15 @@ fn run() -> Result<()> {
 }
 
 // --------------------------------------------------------------------------
+
+/// Resolve a collective pin from a CLI/config spelling: "auto" (or
+/// empty) means let the cost model pick per exchange.
+fn parse_collective(s: &str) -> Result<Option<collective::Algorithm>> {
+    match s {
+        "" | "auto" => Ok(None),
+        other => Ok(Some(collective::Algorithm::parse(other)?)),
+    }
+}
 
 /// Resolve the footprint-accounting model from the `[memory]` config
 /// section plus CLI overrides (`--optimizer`, `--recompute`,
@@ -150,6 +165,16 @@ fn cmd_plan(args: &Args) -> Result<()> {
         Some(s) => parse_mem_gb(s)?,
         None => mem_base.device_mem_gb,
     };
+    // --nodes: CLI > [planner] nodes; --collective: CLI > [planner] >
+    // [cluster].
+    let nodes = match args.get("nodes") {
+        Some(s) => Some(s.parse::<usize>()?),
+        None => base.nodes,
+    };
+    let collective_spec = args.get_or(
+        "collective",
+        base.collective.as_deref().unwrap_or(&cfg.collective));
+    let collective = parse_collective(&collective_spec)?;
 
     let mut req = PlanRequest::new(&model, &topo)
         .devices(devices)
@@ -157,6 +182,12 @@ fn cmd_plan(args: &Args) -> Result<()> {
         .pipeline_only(args.has_flag("pipeline-only"))
         .memory(mem_model)
         .curve_to(args.get_usize("max-curve", 256)?);
+    if let Some(n) = nodes {
+        req = req.nodes(n);
+    }
+    if let Some(a) = collective {
+        req = req.collective(a);
+    }
     if let Some(gb) = device_mem_gb {
         req = req.device_mem_gb(gb);
     }
@@ -224,6 +255,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         Some(s) => usize_list(s)?,
         None => base.devices,
     };
+    let nodes = match args.get("nodes") {
+        Some(s) => usize_list(s)?,
+        None => base.nodes,
+    };
     let batches = args.get("batches").map(csv_list).unwrap_or(base.batches);
     let families =
         args.get("families").map(csv_list).unwrap_or(base.families);
@@ -236,10 +271,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .map(csv_list)
         .unwrap_or(base.device_mem_gb);
 
+    // --collective: CLI > [sweep] > [cluster].
+    let collective_spec = args.get_or(
+        "collective",
+        base.collective.as_deref().unwrap_or(&cfg.collective));
+
     let spec = SweepSpec {
         models,
         topologies: topos,
         devices,
+        nodes,
         device_mem_gb: mem_axis
             .iter()
             .map(|s| parse_mem_gb(s))
@@ -257,6 +298,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             &args.get_or("objective", &base.objective))?,
         cost_model: args.get_or("cost", &base.cost_model),
         memory: memory_model_from(args, &mem_base)?,
+        collective: parse_collective(&collective_spec)?,
         curve_max_devices: args
             .get_usize("max-curve", base.curve_max_devices)?,
         threads: args.get_usize("threads", base.threads)?,
@@ -276,16 +318,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let mem = hybridpar::planner::sweep::mem_gb_label(sc.device_mem_gb);
         match (&r.plan, &r.error) {
             (Some(p), _) => eprintln!(
-                "  {:<14} {:<9} {:>4} dev  mem {:<7} batch {:<7} {:<9} \
-                 -> M={} {} ({:.2}x, {} devices used)",
-                sc.model, sc.topology, sc.devices, mem, sc.batch.label(),
-                sc.family.as_str(), p.mp_degree, p.mechanism,
-                p.predicted_speedup, p.devices_used),
+                "  {:<14} {:<9} {:>4} dev x{:<2} mem {:<7} batch {:<7} \
+                 {:<9} -> M={} {} [{}] ({:.2}x, {} devices used)",
+                sc.model, sc.topology, sc.devices, sc.nodes, mem,
+                sc.batch.label(), sc.family.as_str(), p.mp_degree,
+                p.mechanism, p.collective, p.predicted_speedup,
+                p.devices_used),
             (None, err) => eprintln!(
-                "  {:<14} {:<9} {:>4} dev  mem {:<7} batch {:<7} {:<9} \
-                 -> error: {}",
-                sc.model, sc.topology, sc.devices, mem, sc.batch.label(),
-                sc.family.as_str(),
+                "  {:<14} {:<9} {:>4} dev x{:<2} mem {:<7} batch {:<7} \
+                 {:<9} -> error: {}",
+                sc.model, sc.topology, sc.devices, sc.nodes, mem,
+                sc.batch.label(), sc.family.as_str(),
                 err.as_deref().unwrap_or("unknown")),
         }
     }
@@ -500,17 +543,23 @@ fn cmd_allreduce(args: &Args) -> Result<()> {
             as fn(&mut [Vec<f32>], &cluster::HwGraph, &[usize])
                   -> Result<collective::CollectiveResult>),
         ("tree", collective::tree_allreduce),
+        ("hierarchical", collective::hierarchical_allreduce),
         ("param-server", collective::parameter_server),
     ] {
         let mut bufs = make(&mut rng);
         let t0 = std::time::Instant::now();
-        let r = f(&mut bufs, &hw, &devs)?;
-        println!(
-            "{name:>14}: sim_time={} wire={:.1} MB host_wall={}",
-            fmt_secs(r.sim_time),
-            r.bytes_on_wire / 1e6,
-            fmt_secs(t0.elapsed().as_secs_f64())
-        );
+        // A worker layout can be infeasible for one algorithm (e.g.
+        // hierarchical needs equal ranks per node) without invalidating
+        // the others — report and move on.
+        match f(&mut bufs, &hw, &devs) {
+            Ok(r) => println!(
+                "{name:>14}: sim_time={} wire={:.1} MB host_wall={}",
+                fmt_secs(r.sim_time),
+                r.bytes_on_wire / 1e6,
+                fmt_secs(t0.elapsed().as_secs_f64())
+            ),
+            Err(e) => println!("{name:>14}: skipped ({e})"),
+        }
     }
     Ok(())
 }

@@ -14,7 +14,8 @@
 
 use anyhow::Result;
 
-use crate::collective::ring_cost;
+use crate::collective::{best_allreduce_on, ring_cost, Algorithm,
+                        TopoProfile};
 use crate::statistical::EpochModel;
 
 /// Where SE_N comes from.
@@ -24,7 +25,9 @@ pub enum ScalingEfficiency {
     /// *minimises* the projected benefit of hybrid parallelization (§4.3).
     Perfect,
     /// SE_N = T_compute / (T_compute + ring_allreduce(N, bytes)) with an
-    /// α-β ring cost over the bottleneck bandwidth.
+    /// α-β ring cost over the bottleneck bandwidth — the flat-ring model
+    /// that mis-prices multi-node exchanges; kept for ablations against
+    /// [`ScalingEfficiency::Collective`].
     RingAllReduce {
         /// Per-step compute time of one worker (seconds).
         step_compute_s: f64,
@@ -35,11 +38,38 @@ pub enum ScalingEfficiency {
         /// Bottleneck bandwidth of the ring (bytes/s).
         beta_bw: f64,
     },
+    /// SE_N from topology-aware collective selection:
+    /// `SE_N = T_c / (T_c + cost(best feasible all-reduce at N))`, the
+    /// per-N algorithm picked by [`best_allreduce_on`] over the
+    /// topology's [`TopoProfile`] (ring / tree / two-level hierarchical)
+    /// — or pinned by `force` (the planner's `--collective` override).
+    Collective {
+        /// Per-step compute time of one worker (seconds).
+        step_compute_s: f64,
+        /// Gradient payload per worker (bytes).
+        grad_bytes: f64,
+        /// Per-step software overhead added to every hop's wire latency.
+        alpha: f64,
+        /// Chassis shape + intra/inter α-β path profiles.
+        topo: TopoProfile,
+        /// `Some(a)` prices every N with algorithm `a` instead of the
+        /// cheapest one.
+        force: Option<Algorithm>,
+    },
 }
 
 impl ScalingEfficiency {
-    /// SE_N ∈ (0, 1].
+    /// SE_N ∈ (0, 1] for N one-device DP workers.
     pub fn at(&self, n: usize) -> f64 {
+        self.at_mp(n, 1)
+    }
+
+    /// SE_N for `n` DP ranks that each span `width` devices (M-way model
+    /// parallelism).  Only the collective model cares: wider ranks pack
+    /// fewer per chassis ([`TopoProfile::for_worker_width`]), so a
+    /// hybrid's gradient exchange crosses the slow inter-node fabric at
+    /// smaller N than a plain DP exchange would.
+    pub fn at_mp(&self, n: usize, width: usize) -> f64 {
         match self {
             ScalingEfficiency::Perfect => 1.0,
             ScalingEfficiency::RingAllReduce {
@@ -54,7 +84,64 @@ impl ScalingEfficiency {
                 let comm = ring_cost(n, *grad_bytes, *alpha, *beta_bw);
                 step_compute_s / (step_compute_s + comm)
             }
+            ScalingEfficiency::Collective {
+                step_compute_s,
+                grad_bytes,
+                alpha,
+                topo,
+                force,
+            } => {
+                if n <= 1 {
+                    return 1.0;
+                }
+                let topo = topo.for_worker_width(width);
+                let comm = match force {
+                    Some(a) => topo.cost(*a, n, *grad_bytes, *alpha),
+                    None => {
+                        best_allreduce_on(n, *grad_bytes, &topo, *alpha)
+                            .cost_s
+                    }
+                };
+                step_compute_s / (step_compute_s + comm)
+            }
         }
+    }
+
+    /// The algorithm pricing an `n`-worker exchange under this SE model:
+    /// `None` under the paper's SE = 1 assumption (communication is free,
+    /// nothing is priced) and for `n ≤ 1`.
+    pub fn collective_algorithm(&self, n: usize) -> Option<Algorithm> {
+        self.collective_algorithm_mp(n, 1)
+    }
+
+    /// [`ScalingEfficiency::collective_algorithm`] for ranks spanning
+    /// `width` devices each (see [`ScalingEfficiency::at_mp`]).
+    pub fn collective_algorithm_mp(&self, n: usize, width: usize)
+                                   -> Option<Algorithm> {
+        if n <= 1 {
+            return None;
+        }
+        match self {
+            ScalingEfficiency::Perfect => None,
+            ScalingEfficiency::RingAllReduce { .. } => Some(Algorithm::Ring),
+            ScalingEfficiency::Collective {
+                grad_bytes, alpha, topo, force, ..
+            } => Some(force.unwrap_or_else(|| {
+                let topo = topo.for_worker_width(width);
+                best_allreduce_on(n, *grad_bytes, &topo, *alpha).algorithm
+            })),
+        }
+    }
+
+    /// Pin the collective algorithm (no-op on SE models that do not price
+    /// collectives) — the `PlanRequest::collective` override.
+    pub fn with_forced(mut self, algorithm: Option<Algorithm>) -> Self {
+        if let ScalingEfficiency::Collective { ref mut force, .. } = self {
+            if algorithm.is_some() {
+                *force = algorithm;
+            }
+        }
+        self
     }
 }
 
@@ -93,7 +180,9 @@ impl NetworkModel {
 
     /// Eq. 5: hybrid speedup using `total` devices as (total/M) DP workers
     /// of M-way MP each.  None if M doesn't divide total, no SU^M is known,
-    /// or E(B) diverges.
+    /// or E(B) diverges.  SE sees the M-device worker width: wider ranks
+    /// pack fewer per chassis, so their exchange crosses nodes sooner
+    /// ([`ScalingEfficiency::at_mp`]).
     pub fn su_hybrid(&self, total: usize, m: usize) -> Option<f64> {
         if m == 0 || total % m != 0 {
             return None;
@@ -102,7 +191,7 @@ impl NetworkModel {
         let su_m = self.su_m(m)?;
         let b = (n_dp * self.mini_batch) as f64;
         let e_ratio = self.epochs.efficiency_ratio(b)?;
-        Some(su_m * self.se.at(n_dp) * n_dp as f64 * e_ratio)
+        Some(su_m * self.se.at_mp(n_dp, m) * n_dp as f64 * e_ratio)
     }
 
     /// Best strategy at `total` devices over M ∈ {1} ∪ available SU^M.
@@ -122,9 +211,11 @@ impl NetworkModel {
     }
 
     /// Eq. 6 right-hand side at (N, M): the threshold SU^M must exceed for
-    /// the hybrid at M·N devices to beat DP-only at M·N devices.
+    /// the hybrid at M·N devices to beat DP-only at M·N devices.  The
+    /// hybrid side's SE sees the M-device worker width, mirroring
+    /// [`NetworkModel::su_hybrid`] so the Eq. 6 identity holds exactly.
     pub fn crossover_threshold(&self, n: usize, m: usize) -> Option<f64> {
-        let se_n = self.se.at(n);
+        let se_n = self.se.at_mp(n, m);
         let se_mn = self.se.at(m * n);
         let b_n = (n * self.mini_batch) as f64;
         let b_mn = (m * n * self.mini_batch) as f64;
@@ -294,6 +385,73 @@ mod tests {
         assert!(dp_real < dp_perfect);
         assert!(hy_real / dp_real > hy_perfect / dp_perfect,
                 "hybrid advantage should grow with real SE");
+    }
+
+    #[test]
+    fn collective_se_beats_flat_ring_across_nodes() {
+        use crate::cluster::multi_node;
+        let topo = TopoProfile::of(&multi_node(4, 8));
+        let se = ScalingEfficiency::Collective {
+            step_compute_s: 0.1,
+            grad_bytes: 640e6,
+            alpha: 5e-6,
+            topo: topo.clone(),
+            force: None,
+        };
+        assert_eq!(se.at(1), 1.0);
+        assert!(se.collective_algorithm(1).is_none());
+        assert_eq!(se.collective_algorithm(32),
+                   Some(Algorithm::Hierarchical));
+        let ring = se.clone().with_forced(Some(Algorithm::Ring));
+        assert_eq!(ring.collective_algorithm(32), Some(Algorithm::Ring));
+        assert!(se.at(32) > ring.at(32),
+                "best collective must strictly beat the forced flat ring");
+        // Monotone decay, bounded.
+        let mut prev = 1.0 + 1e-12;
+        for n in [1usize, 2, 8, 32, 128] {
+            let s = se.at(n);
+            assert!(s > 0.0 && s <= 1.0 && s <= prev);
+            prev = s;
+        }
+        // Forcing is a no-op on non-collective SE models.
+        let p = ScalingEfficiency::Perfect
+            .with_forced(Some(Algorithm::Tree));
+        assert!(matches!(p, ScalingEfficiency::Perfect));
+        assert!(p.collective_algorithm(8).is_none());
+    }
+
+    #[test]
+    fn wider_workers_cross_nodes_sooner() {
+        use crate::cluster::multi_node;
+        // 4×8 pod: 4 DP ranks of one device each fit half a chassis and
+        // exchange over NVLink; 4 ranks of 8 devices each occupy one
+        // chassis apiece, so every hop crosses InfiniBand.
+        let se = ScalingEfficiency::Collective {
+            step_compute_s: 0.1,
+            grad_bytes: 640e6,
+            alpha: 5e-6,
+            topo: TopoProfile::of(&multi_node(4, 8)),
+            force: None,
+        };
+        assert!(se.at_mp(4, 1) > se.at_mp(4, 8),
+                "8-wide ranks must pay the inter-node fabric: {} vs {}",
+                se.at_mp(4, 1), se.at_mp(4, 8));
+        // Width 1 is the plain DP pricing.
+        assert_eq!(se.at(16), se.at_mp(16, 1));
+        // SE is monotone non-increasing in worker width.
+        let mut prev = f64::INFINITY;
+        for w in [1usize, 2, 4, 8] {
+            let s = se.at_mp(4, w);
+            assert!(s <= prev + 1e-15, "width {w}: {s} > {prev}");
+            prev = s;
+        }
+        // And the recorded algorithm follows the widened shape: one
+        // 8-wide rank per chassis leaves nothing intra-node, so the
+        // two-level scheme degenerates and the ring wins outright.
+        assert_eq!(se.collective_algorithm_mp(4, 8),
+                   Some(Algorithm::Ring));
+        assert_eq!(se.collective_algorithm_mp(16, 2),
+                   Some(Algorithm::Hierarchical));
     }
 
     #[test]

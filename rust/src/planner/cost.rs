@@ -2,12 +2,15 @@
 //!
 //! The paper predicts strategy performance three different ways — the
 //! closed-form Eq. 1–6 projection under the conservative SE_N = 1
-//! assumption (§4.3), the α-β ring all-reduce communication model for
-//! realistic scaling efficiency, and "silicon" measurements (stood in for
-//! here by the discrete-event simulator, Fig. 8).  [`CostModel`] makes the
-//! three interchangeable behind one trait so a [`crate::planner::Planner`]
-//! prediction can be cross-checked: plan with [`AnalyticalCost`], re-plan
-//! with [`SimulatorCost`], and compare.
+//! assumption (§4.3), a topology-aware α-β collective model for realistic
+//! scaling efficiency (the DP gradient exchange priced as the best
+//! feasible algorithm — ring, tree, or two-level hierarchical — for the
+//! candidate's device set, per [`crate::collective::best_allreduce`]),
+//! and "silicon" measurements (stood in for here by the discrete-event
+//! simulator, Fig. 8).  [`CostModel`] makes the three interchangeable
+//! behind one trait so a [`crate::planner::Planner`] prediction can be
+//! cross-checked: plan with [`AnalyticalCost`], re-plan with
+//! [`SimulatorCost`], and compare.
 //!
 //! Model-parallel mechanism selection follows the paper's Table 1: branchy
 //! DFGs (Inception-V3) are partitioned with DLPlacer, chain DFGs (GNMT,
@@ -24,7 +27,8 @@
 
 use anyhow::Result;
 
-use crate::cluster::{HwGraph, LinkKind};
+use crate::cluster::HwGraph;
+use crate::collective::TopoProfile;
 use crate::memory::{self, MemoryEstimate, MemoryModel};
 use crate::models::ModelProfile;
 use crate::parallel::ScalingEfficiency;
@@ -323,38 +327,31 @@ impl CostModel for AnalyticalCost {
     }
 }
 
-/// Ring-bottleneck bandwidth for an N-way DP ring: the topology's own
-/// bottleneck while the ring fits the physical box, the conservative
-/// InfiniBand figure once the projection spills across nodes.
-fn ring_beta_bw(hw: &HwGraph, devices: usize) -> f64 {
-    let devs = hw.devices();
-    let mut bw = hw.ring_bottleneck_bw(&devs);
-    if !bw.is_finite() || bw <= 0.0 {
-        bw = LinkKind::Infiniband.bandwidth();
-    }
-    if devices > devs.len() {
-        bw = bw.min(LinkKind::Infiniband.bandwidth());
-    }
-    bw
-}
-
 // ==========================================================================
-// α-β ring model
+// α-β collective model
 // ==========================================================================
 
-/// Same MP analytics as [`AnalyticalCost`], but SE_N comes from the α-β
-/// ring all-reduce cost over the topology's actual bottleneck bandwidth.
+/// Same MP analytics as [`AnalyticalCost`], but SE_N comes from α-β
+/// collective pricing over the topology's chassis shape
+/// ([`TopoProfile`]): every DP/hybrid gradient exchange is priced as the
+/// best feasible algorithm for the candidate's device set — flat chunked
+/// ring, binary tree, or two-level hierarchical all-reduce (intra-node
+/// reduce-scatter / inter-node rings / intra-node allgather) — instead of
+/// assuming a flat ring across the slow inter-node fabric.
 ///
 /// **Validity domain** — inherits the analytical MP model (same
-/// tolerances); the SE_N term assumes a bandwidth-optimal chunked ring
-/// all-reduce, exact for rings that fit the physical box and conservative
-/// (InfiniBand bottleneck) once a projection spills across nodes.  It does
-/// not model overlap of gradient exchange with backprop, so SE_N is a
-/// lower bound for frameworks that overlap.
+/// tolerances); the SE_N term assumes bandwidth-optimal chunked
+/// collectives over store-and-forward link paths, exact for exchanges
+/// that fit the physical box and conservative (NIC-path effective
+/// bandwidth) once a projection spills across nodes.  It does not model
+/// overlap of gradient exchange with backprop, so SE_N is a lower bound
+/// for frameworks that overlap.  `PlanRequest::collective` can pin one
+/// algorithm for ablations (`--collective ring` recovers the old
+/// flat-ring pricing).
 #[derive(Clone, Debug)]
 pub struct AlphaBetaCost {
     pub inner: AnalyticalCost,
-    /// Latency per ring hop (seconds).
+    /// Per-step software overhead added to every hop's wire latency.
     pub alpha: f64,
 }
 
@@ -381,11 +378,12 @@ impl CostModel for AlphaBetaCost {
 
     fn scaling(&self, prof: &ModelProfile, hw: &HwGraph,
                step_compute_s: f64, devices: usize) -> ScalingEfficiency {
-        ScalingEfficiency::RingAllReduce {
+        ScalingEfficiency::Collective {
             step_compute_s,
             grad_bytes: prof.grad_bytes,
             alpha: self.alpha,
-            beta_bw: ring_beta_bw(hw, devices),
+            topo: TopoProfile::for_budget(hw, devices),
+            force: None,
         }
     }
 }
@@ -687,19 +685,39 @@ mod tests {
 
     #[test]
     fn projection_beyond_box_uses_conservative_bandwidth() {
-        // A 256-device ring does not fit the 8-GPU DGX-1: the bottleneck
-        // must fall back to the inter-node InfiniBand figure, not NVLink.
+        // A 256-device exchange does not fit the 8-GPU DGX-1: pricing
+        // must spill over the slow NIC path, not stay on NVLink.
         let c = AlphaBetaCost::default();
         let prof = models::gnmt(128);
         let hw = cluster::dgx1(8);
         let inside = c.scaling(&prof, &hw, 0.1, 8);
         let beyond = c.scaling(&prof, &hw, 0.1, 256);
         assert!(beyond.at(256) < inside.at(256),
-                "spilled ring must see slower fabric: {} vs {}",
+                "spilled exchange must see slower fabric: {} vs {}",
                 beyond.at(256), inside.at(256));
         // Simulator delegates to the same model.
         let s = SimulatorCost::default();
         let ss = s.scaling(&prof, &hw, 0.1, 256);
         assert!((ss.at(256) - beyond.at(256)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_node_scaling_prices_the_hierarchical_collective() {
+        use crate::collective::Algorithm;
+        let c = AlphaBetaCost::default();
+        let prof = models::gnmt(128);
+        let hw = cluster::multi_node(4, 8);
+        let se = c.scaling(&prof, &hw, 0.1, 32);
+        assert_eq!(se.collective_algorithm(32),
+                   Some(Algorithm::Hierarchical),
+                   "multi-node DP must not be priced as a flat ring");
+        let flat = se.clone().with_forced(Some(Algorithm::Ring));
+        assert!(se.at(32) > flat.at(32),
+                "hierarchical pricing must strictly beat flat-ring: \
+                 {} vs {}", se.at(32), flat.at(32));
+        // Single-box pricing keeps the ring (nothing to gain in-box).
+        let box8 = cluster::dgx1(8);
+        let se_box = c.scaling(&prof, &box8, 0.1, 8);
+        assert_eq!(se_box.collective_algorithm(8), Some(Algorithm::Ring));
     }
 }

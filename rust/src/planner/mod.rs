@@ -64,6 +64,7 @@ pub use cost::{cost_by_name, AlphaBetaCost, AnalyticalCost, CostModel,
 pub use registry::{ModelEntry, ModelRegistry, TopologyEntry,
                    TopologyRegistry};
 
+use crate::collective::Algorithm;
 use crate::coordinator::Strategy;
 use crate::memory::{Feasibility, MemoryEstimate, MemoryModel};
 use crate::parallel::NetworkModel;
@@ -131,6 +132,16 @@ pub struct PlanRequest {
     /// recompute) used to mark candidates
     /// [`crate::memory::Feasibility::Infeasible`].
     pub memory: MemoryModel,
+    /// Chassis count for multi-node-capable topologies (`dgx1-pod`,
+    /// `cloud-25gbe`, `multinode`): `Some(4)` on `dgx1-pod` builds the
+    /// 4×8 system.  `None` (or 1) keeps the topology's own single-arg
+    /// sizing.  Single-box topologies reject values > 1.
+    pub nodes: Option<usize>,
+    /// Pin the collective algorithm pricing DP/hybrid gradient exchange
+    /// (`--collective ring|tree|hierarchical`); `None` lets the cost
+    /// model pick the best feasible one per candidate
+    /// ([`crate::collective::best_allreduce`]).
+    pub collective: Option<Algorithm>,
 }
 
 impl PlanRequest {
@@ -146,6 +157,8 @@ impl PlanRequest {
             curve_max_devices: 256,
             device_mem_gb: None,
             memory: MemoryModel::default(),
+            nodes: None,
+            collective: None,
         }
     }
 
@@ -190,6 +203,18 @@ impl PlanRequest {
         self.memory = m;
         self
     }
+
+    /// Build the topology as `n` chassis (multi-node entries only).
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.nodes = Some(n);
+        self
+    }
+
+    /// Pin the collective algorithm pricing gradient exchange.
+    pub fn collective(mut self, a: Algorithm) -> Self {
+        self.collective = Some(a);
+        self
+    }
 }
 
 /// One strategy candidate's score at the requested device budget.
@@ -232,6 +257,11 @@ pub struct CandidateScore {
     /// stay visible in the scorecard with `{required, available}` instead
     /// of being scored.
     pub feasibility: Feasibility,
+    /// Collective algorithm pricing this row's N_dp-way gradient exchange
+    /// ("ring" | "tree" | "hierarchical"; "none" when N_dp ≤ 1, when M
+    /// does not divide the budget, or under the SE = 1 analytical model
+    /// where communication is free).
+    pub collective: String,
     pub note: String,
 }
 
@@ -292,6 +322,11 @@ pub struct Plan {
     pub recompute: bool,
     /// Peak per-device footprint of the chosen strategy.
     pub memory: Option<MemoryEstimate>,
+    /// The request's chassis count, if any (`--nodes`).
+    pub nodes: Option<usize>,
+    /// Collective algorithm pricing the chosen strategy's gradient
+    /// exchange (see [`CandidateScore::collective`]).
+    pub collective: String,
     pub scorecard: Vec<CandidateScore>,
     pub curve: Vec<CurvePoint>,
 }
@@ -371,8 +406,16 @@ impl Planner {
         if req.devices == 0 {
             bail!("device budget must be >= 1");
         }
+        if req.nodes == Some(0) {
+            bail!("node count must be >= 1");
+        }
         let prof = self.models.build(&req.model, req.batch)?;
-        let mut hw = self.topologies.build(&req.topology, req.devices)?;
+        let mut hw = match req.nodes {
+            Some(n) if n > 1 => {
+                self.topologies.build_nodes(&req.topology, n, req.devices)?
+            }
+            _ => self.topologies.build(&req.topology, req.devices)?,
+        };
         if let Some(gb) = req.device_mem_gb {
             if !gb.is_finite() || gb <= 0.0 {
                 bail!("device memory override must be a positive finite \
@@ -494,9 +537,12 @@ impl Planner {
             mp_speedups.iter().map(|&(m, _)| m).collect();
         // SE_N sees the recompute-inflated compute time: the extra
         // forward overlaps nothing, so it (slightly) improves the
-        // compute/communication ratio.
-        let se = self.cost.scaling(&prof, &hw, serial * time_factor,
-                                   req.devices);
+        // compute/communication ratio.  A `--collective` override pins
+        // the algorithm the SE model prices with.
+        let se = self
+            .cost
+            .scaling(&prof, &hw, serial * time_factor, req.devices)
+            .with_forced(req.collective);
         let net = NetworkModel {
             name: prof.name.clone(),
             epochs: prof.epochs.clone(),
@@ -562,7 +608,8 @@ impl Planner {
                     }
                     let n_dp = req.devices / m;
                     let su_m = net.su_m(m).unwrap_or(1.0);
-                    let score = su_m * n_dp as f64 * net.se.at(n_dp);
+                    let score =
+                        su_m * n_dp as f64 * net.se.at_mp(n_dp, m);
                     if best.map_or(true, |(_, _, b)| score > b) {
                         best = Some((m, req.devices, score));
                     }
@@ -574,7 +621,8 @@ impl Planner {
         let global_batch = n_dp * prof.mini_batch;
         let chosen_su_m = net.su_m(chosen_m).unwrap_or(1.0);
         let step_worker = serial * time_factor / chosen_su_m;
-        let predicted_step_s = step_worker / net.se.at(n_dp).max(1e-12);
+        let predicted_step_s =
+            step_worker / net.se.at_mp(n_dp, chosen_m).max(1e-12);
         let predicted_epochs = net.epochs.epochs(global_batch as f64);
 
         let chosen_est = best_scored.get(&chosen_m).map(|s| &s.est);
@@ -636,17 +684,28 @@ impl Planner {
                 // scores lower than `net.su_hybrid` by construction).
                 net.epochs
                     .efficiency_ratio(b as f64)
-                    .map(|r| su_row * net.se.at(nd) * nd as f64 * r)
+                    .map(|r| su_row * net.se.at_mp(nd, m) * nd as f64 * r)
             };
             let step_time_s = if divides && fits {
                 Some((serial * time_factor / su_row)
-                     / net.se.at(nd).max(1e-12))
+                     / net.se.at_mp(nd, m).max(1e-12))
             } else {
                 None
             };
             let row_mechanism =
                 est.map(|e| e.mechanism).unwrap_or(MpMechanism::None);
             let microbatches = est.and_then(|e| e.microbatches);
+            // Algorithm pricing this row's N_dp-way exchange of M-wide
+            // ranks ("none" when nothing is exchanged or communication
+            // is free).
+            let collective = if divides && nd > 1 {
+                net.se
+                    .collective_algorithm_mp(nd, m)
+                    .map(|a| a.as_str().to_string())
+                    .unwrap_or_else(|| "none".into())
+            } else {
+                "none".to_string()
+            };
             let strategy = if m == 1 {
                 if req.devices == 1 {
                     Strategy::Single
@@ -691,6 +750,7 @@ impl Planner {
                 strategy,
                 memory: mem.copied(),
                 feasibility,
+                collective,
                 note,
             });
         };
@@ -751,6 +811,15 @@ impl Planner {
             optimizer: mem_model.optimizer.as_str().to_string(),
             recompute: mem_model.recompute,
             memory: chosen_mem,
+            nodes: req.nodes,
+            collective: if n_dp > 1 {
+                net.se
+                    .collective_algorithm_mp(n_dp, chosen_m)
+                    .map(|a| a.as_str().to_string())
+                    .unwrap_or_else(|| "none".into())
+            } else {
+                "none".to_string()
+            },
             scorecard,
             curve,
         })
@@ -930,6 +999,7 @@ impl CandidateScore {
                  .map(|m| m.to_json())
                  .unwrap_or(Json::Null)),
             ("feasibility", self.feasibility.to_json()),
+            ("collective", Json::Str(self.collective.clone())),
             ("note", Json::Str(self.note.clone())),
         ])
     }
@@ -957,6 +1027,10 @@ impl CandidateScore {
             strategy: strategy_from_json(j.get("strategy")?)?,
             memory,
             feasibility,
+            collective: match j.opt("collective") {
+                None | Some(Json::Null) => "none".to_string(),
+                Some(v) => v.as_str()?.to_string(),
+            },
             note: j.get("note")?.as_str()?.to_string(),
         })
     }
@@ -1020,6 +1094,8 @@ impl Plan {
             ("available_mem_bytes", jnum(self.available_mem_bytes)),
             ("optimizer", Json::Str(self.optimizer.clone())),
             ("recompute", Json::Bool(self.recompute)),
+            ("nodes", jounum(self.nodes)),
+            ("collective", Json::Str(self.collective.clone())),
             ("memory",
              self.memory
                  .as_ref()
@@ -1058,6 +1134,11 @@ impl Plan {
             available_mem_bytes: j.get("available_mem_bytes")?.as_f64()?,
             optimizer: j.get("optimizer")?.as_str()?.to_string(),
             recompute: matches!(j.get("recompute")?, Json::Bool(true)),
+            nodes: opt_usize(j, "nodes")?,
+            collective: match j.opt("collective") {
+                None | Some(Json::Null) => "none".to_string(),
+                Some(v) => v.as_str()?.to_string(),
+            },
             memory: match j.opt("memory") {
                 None | Some(Json::Null) => None,
                 Some(v) => Some(MemoryEstimate::from_json(v)?),
@@ -1097,6 +1178,11 @@ impl Plan {
                 .map(|e| format!("{e:.1}"))
                 .unwrap_or_else(|| "-".into()),
             self.predicted_speedup));
+        if self.collective != "none" {
+            s.push_str(&format!(
+                "  gradient exchange: {} all-reduce across {} workers\n",
+                self.collective, self.dp_workers));
+        }
         if let Some(m) = &self.memory {
             s.push_str(&format!(
                 "  memory: peak {:.1} GB / {:.1} GB per device \
@@ -1400,6 +1486,65 @@ mod tests {
             }
             assert!(plan.memory.unwrap().fits(plan.available_mem_bytes));
         }
+    }
+
+    #[test]
+    fn analytical_plans_record_no_collective() {
+        // SE = 1: communication is free, so nothing is priced.
+        let planner = Planner::new();
+        let plan = planner
+            .plan(&PlanRequest::new("gnmt", "dgx1").devices(8))
+            .unwrap();
+        assert_eq!(plan.collective, "none");
+        assert!(plan.scorecard.iter().all(|c| c.collective == "none"));
+    }
+
+    #[test]
+    fn alpha_beta_plans_record_the_pricing_algorithm() {
+        use crate::planner::cost::AlphaBetaCost;
+        // Single box: the DP exchange is priced as a ring.
+        let planner = Planner::with_cost(Box::new(AlphaBetaCost::default()));
+        let plan = planner
+            .plan(&PlanRequest::new("gnmt", "dgx1").devices(8))
+            .unwrap();
+        let dp = plan.scorecard.iter().find(|c| c.mp_degree == 1).unwrap();
+        assert_eq!(dp.collective, "ring");
+        // Multi-node pod: the same candidate prices hierarchically.
+        let pod = planner
+            .plan(&PlanRequest::new("gnmt", "dgx1-pod")
+                .devices(32)
+                .nodes(4))
+            .unwrap();
+        assert_eq!(pod.nodes, Some(4));
+        let dp = pod.scorecard.iter().find(|c| c.mp_degree == 1).unwrap();
+        assert_eq!(dp.collective, "hierarchical");
+        // And --collective ring pins the flat ring everywhere.
+        let flat = planner
+            .plan(&PlanRequest::new("gnmt", "dgx1-pod")
+                .devices(32)
+                .nodes(4)
+                .collective(Algorithm::Ring))
+            .unwrap();
+        let dp = flat.scorecard.iter().find(|c| c.mp_degree == 1).unwrap();
+        assert_eq!(dp.collective, "ring");
+    }
+
+    #[test]
+    fn single_box_topologies_reject_multi_node_requests() {
+        let planner = Planner::new();
+        let err = planner
+            .plan(&PlanRequest::new("gnmt", "dgx1").devices(16).nodes(2))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("dgx1"), "{err}");
+        assert!(planner
+            .plan(&PlanRequest::new("gnmt", "dgx1-pod").devices(16).nodes(0))
+            .is_err());
+        // nodes(1) on a single-box topology is the box itself.
+        let one = planner
+            .plan(&PlanRequest::new("gnmt", "dgx1").devices(8).nodes(1))
+            .unwrap();
+        assert_eq!(one.devices_used, 8);
     }
 
     #[test]

@@ -136,6 +136,11 @@ pub struct TopologyEntry {
     /// are projections (the paper projects to 256 GPUs from an 8-GPU box).
     pub max_devices: usize,
     pub build: fn(usize) -> HwGraph,
+    /// Multi-node builder `(nodes, device budget) → graph` for entries
+    /// that can span chassis (`dgx1-pod`, `cloud-25gbe`, `multinode`) —
+    /// the planner's `--nodes` axis.  `None` marks a single-box system:
+    /// requests with more than one node are rejected.
+    pub build_pod: Option<fn(usize, usize) -> HwGraph>,
 }
 
 /// Catalog of hardware topologies.
@@ -161,6 +166,26 @@ fn build_multinode(n: usize) -> HwGraph {
     cluster::multi_node(n.div_ceil(4).max(1), 4)
 }
 
+fn build_multinode_pod(nodes: usize, _devices: usize) -> HwGraph {
+    cluster::multi_node(nodes.max(1), 4)
+}
+
+fn build_dgx1_pod(n: usize) -> HwGraph {
+    cluster::dgx1_pod(n.div_ceil(8).max(1))
+}
+
+fn build_dgx1_pod_nodes(nodes: usize, _devices: usize) -> HwGraph {
+    cluster::dgx1_pod(nodes.max(1))
+}
+
+fn build_cloud(n: usize) -> HwGraph {
+    cluster::cloud_25gbe(n.div_ceil(8).max(1))
+}
+
+fn build_cloud_nodes(nodes: usize, _devices: usize) -> HwGraph {
+    cluster::cloud_25gbe(nodes.max(1))
+}
+
 impl TopologyRegistry {
     pub fn new() -> Self {
         TopologyRegistry::default()
@@ -169,8 +194,10 @@ impl TopologyRegistry {
     /// Built-in catalog: the paper's DGX-1 testbed, a 16-GPU NVSwitch
     /// DGX-2-style system (a scenario the paper did not evaluate), an
     /// 8-GPU A100-80GB box (the memory-feasibility counterpart to the
-    /// 16 GB V100), and the IB-switched multi-node scale-out its
-    /// projections assume.
+    /// 16 GB V100), the IB-switched multi-node scale-out its projections
+    /// assume, plus the pod systems of the collective-selection layer:
+    /// `dgx1-pod` (N × 8 V100-32GB cube-mesh chassis over InfiniBand)
+    /// and `cloud-25gbe` (N × 8 V100-16GB instances over 25 GbE).
     pub fn builtin() -> Self {
         let mut r = TopologyRegistry::new();
         r.register(TopologyEntry {
@@ -178,24 +205,42 @@ impl TopologyRegistry {
             aliases: &["dgx-1"],
             max_devices: 8,
             build: build_dgx1,
+            build_pod: None,
         });
         r.register(TopologyEntry {
             name: "dgx2",
             aliases: &["dgx-2", "nvswitch"],
             max_devices: 16,
             build: build_dgx2,
+            build_pod: None,
         });
         r.register(TopologyEntry {
             name: "dgx-a100",
             aliases: &["a100", "dgxa100"],
             max_devices: 8,
             build: build_dgx_a100,
+            build_pod: None,
         });
         r.register(TopologyEntry {
             name: "multinode",
             aliases: &["multi-node", "cluster"],
             max_devices: usize::MAX,
             build: build_multinode,
+            build_pod: Some(build_multinode_pod),
+        });
+        r.register(TopologyEntry {
+            name: "dgx1-pod",
+            aliases: &["pod", "dgx1pod"],
+            max_devices: usize::MAX,
+            build: build_dgx1_pod,
+            build_pod: Some(build_dgx1_pod_nodes),
+        });
+        r.register(TopologyEntry {
+            name: "cloud-25gbe",
+            aliases: &["cloud", "25gbe"],
+            max_devices: usize::MAX,
+            build: build_cloud,
+            build_pod: Some(build_cloud_nodes),
         });
         r
     }
@@ -232,6 +277,33 @@ impl TopologyRegistry {
             Some(e) => Ok(e.max_devices),
             None => bail!("unknown topology '{name}' (known: {})",
                           self.names().join(", ")),
+        }
+    }
+
+    /// Build a hardware graph spanning `nodes` chassis (the `--nodes`
+    /// axis).  Single-box topologies accept only `nodes ≤ 1` (falling
+    /// back to the plain builder); multi-node-capable entries size by
+    /// chassis count.
+    pub fn build_nodes(&self, name: &str, nodes: usize, devices: usize)
+                       -> Result<HwGraph> {
+        let Some(e) = self.find(name) else {
+            bail!("unknown topology '{name}' (known: {})",
+                  self.names().join(", "));
+        };
+        match e.build_pod {
+            Some(f) => Ok(f(nodes.max(1), devices)),
+            None if nodes <= 1 => Ok((e.build)(devices)),
+            None => {
+                let multi: Vec<&str> = self
+                    .entries
+                    .iter()
+                    .filter(|t| t.build_pod.is_some())
+                    .map(|t| t.name)
+                    .collect();
+                bail!("topology '{}' is a single box and cannot span {} \
+                       nodes (multi-node capable: {})",
+                      e.name, nodes, multi.join(", "))
+            }
         }
     }
 }
@@ -296,6 +368,30 @@ mod tests {
         assert!(r.build("multinode", 8).unwrap().n_devices() >= 8);
         assert!(r.build("ringworld", 4).is_err());
         assert_eq!(r.max_devices("dgx2").unwrap(), 16);
+    }
+
+    #[test]
+    fn pod_topologies_resolve_and_span_nodes() {
+        let r = TopologyRegistry::builtin();
+        // Single-arg sizing derives the chassis count from the budget.
+        assert_eq!(r.build("dgx1-pod", 32).unwrap().n_devices(), 32);
+        assert_eq!(r.build("cloud", 16).unwrap().n_devices(), 16);
+        // Explicit --nodes sizing.
+        let pod = r.build_nodes("dgx1-pod", 4, 32).unwrap();
+        assert_eq!(pod.n_devices(), 32);
+        assert_eq!(pod.node_groups().len(), 4);
+        assert!((pod.min_device_mem() - cluster::V100_32G_MEM).abs() < 1.0);
+        let cloud = r.build_nodes("25gbe", 2, 16).unwrap();
+        assert_eq!(cloud.node_groups().len(), 2);
+        let mn = r.build_nodes("multinode", 3, 12).unwrap();
+        assert_eq!(mn.n_devices(), 12);
+        // Single-box entries reject nodes > 1, accept nodes <= 1.
+        assert!(r.build_nodes("dgx1", 2, 16).is_err());
+        assert_eq!(r.build_nodes("dgx1", 1, 8).unwrap().n_devices(), 8);
+        assert!(r.build_nodes("ringworld", 2, 8).is_err());
+        let err = r.build_nodes("dgx2", 4, 64).unwrap_err().to_string();
+        assert!(err.contains("dgx1-pod"),
+                "error must list multi-node-capable entries: {err}");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Parallel scenario sweep engine: evaluate a
-//! `(model × topology × device-budget × device-memory × global-batch ×
-//! strategy-family)` grid of planner queries across worker threads.
+//! `(model × topology × device-budget × nodes × device-memory ×
+//! global-batch × strategy-family)` grid of planner queries across worker
+//! threads.
 //!
 //! The ROADMAP's scenario-diversity goal does not fit one
 //! [`Planner::plan`] call at a time: the fig3/fig5 grids alone are dozens
@@ -45,6 +46,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::cost::{cost_by_name, CostModel, MpEstimate};
 use crate::cluster::HwGraph;
+use crate::collective::Algorithm;
 use crate::memory::MemoryModel;
 use crate::models::ModelProfile;
 use crate::parallel::ScalingEfficiency;
@@ -121,10 +123,12 @@ where
 
 /// Cache key for one per-candidate cost evaluation: the profile identity
 /// (name + mini-batch), the hardware identity (name + device count +
-/// per-device memory bits — the `device_mem_gb` axis rebuilds the same
-/// topology with different capacities, which changes stage partitions),
-/// the mechanism family (structural default vs explicit pipeline) and M.
-type MemoKey = (String, usize, String, usize, u64, bool, usize);
+/// chassis count + per-device memory bits — the `device_mem_gb` axis
+/// rebuilds the same topology with different capacities, which changes
+/// stage partitions, and the `nodes` axis rebuilds it with different
+/// chassis counts), the mechanism family (structural default vs explicit
+/// pipeline) and M.
+type MemoKey = (String, usize, String, usize, usize, u64, bool, usize);
 
 /// A memoised evaluation outcome (errors stringified so the cell clones).
 type StoredEstimate = std::result::Result<MpEstimate, String>;
@@ -154,8 +158,8 @@ impl MemoCost {
         F: FnOnce() -> Result<MpEstimate>,
     {
         let key = (prof.name.clone(), prof.mini_batch, hw.name.clone(),
-                   hw.n_devices(), hw.min_device_mem().to_bits(),
-                   pipelined, m);
+                   hw.n_devices(), hw.node_groups().len(),
+                   hw.min_device_mem().to_bits(), pipelined, m);
         let cell = self
             .cache
             .lock()
@@ -296,6 +300,10 @@ pub struct SweepSpec {
     pub topologies: Vec<String>,
     /// Device budgets N (projections past the physical box allowed).
     pub devices: Vec<usize>,
+    /// Chassis-count axis (1 = the topology's own single-arg sizing;
+    /// values > 1 require a multi-node-capable topology — single-box
+    /// entries yield per-scenario errors, not a sweep failure).
+    pub nodes: Vec<usize>,
     /// Per-device memory axis in GB (None = the topology's own Mem(n)) —
     /// "V100-16GB vs A100-80GB" as one grid.
     pub device_mem_gb: Vec<Option<f64>>,
@@ -309,6 +317,9 @@ pub struct SweepSpec {
     /// Footprint accounting (optimizer, recompute, …) applied to every
     /// scenario.
     pub memory: MemoryModel,
+    /// Pin the collective algorithm for every scenario (None = best
+    /// feasible per candidate).
+    pub collective: Option<Algorithm>,
     pub curve_max_devices: usize,
     /// Worker threads (0 = one per available core).
     pub threads: usize,
@@ -323,6 +334,7 @@ impl Default for SweepSpec {
                          "biglstm".into()],
             topologies: vec!["dgx1".into()],
             devices: vec![8, 64, 256],
+            nodes: vec![1],
             device_mem_gb: vec![None],
             batches: vec![BatchSpec::Default],
             families: vec![StrategyFamily::DpOnly, StrategyFamily::Hybrid,
@@ -331,6 +343,7 @@ impl Default for SweepSpec {
             objective: Objective::TimeToConverge,
             cost_model: "analytical".into(),
             memory: MemoryModel::default(),
+            collective: None,
             curve_max_devices: 256,
             threads: 0,
         }
@@ -365,6 +378,8 @@ pub struct Scenario {
     pub model: String,
     pub topology: String,
     pub devices: usize,
+    /// Chassis count (1 = the topology's own sizing).
+    pub nodes: usize,
     /// Per-device memory override (None = topology default).
     pub device_mem_gb: Option<f64>,
     pub batch: BatchSpec,
@@ -379,17 +394,20 @@ impl SweepSpec {
         for model in &self.models {
             for topology in &self.topologies {
                 for &devices in &self.devices {
-                    for &device_mem_gb in &self.device_mem_gb {
-                        for batch in &self.batches {
-                            for &family in &self.families {
-                                out.push(Scenario {
-                                    model: model.clone(),
-                                    topology: topology.clone(),
-                                    devices,
-                                    device_mem_gb,
-                                    batch: batch.clone(),
-                                    family,
-                                });
+                    for &nodes in &self.nodes {
+                        for &device_mem_gb in &self.device_mem_gb {
+                            for batch in &self.batches {
+                                for &family in &self.families {
+                                    out.push(Scenario {
+                                        model: model.clone(),
+                                        topology: topology.clone(),
+                                        devices,
+                                        nodes,
+                                        device_mem_gb,
+                                        batch: batch.clone(),
+                                        family,
+                                    });
+                                }
                             }
                         }
                     }
@@ -404,6 +422,7 @@ impl SweepSpec {
             ("models", self.models.is_empty()),
             ("topologies", self.topologies.is_empty()),
             ("devices", self.devices.is_empty()),
+            ("nodes", self.nodes.is_empty()),
             ("device_mem_gb", self.device_mem_gb.is_empty()),
             ("batches", self.batches.is_empty()),
             ("families", self.families.is_empty()),
@@ -442,6 +461,12 @@ fn plan_request(planner: &Planner, spec: &SweepSpec, sc: &Scenario)
         .objective(spec.objective)
         .memory(spec.memory.clone())
         .curve_to(spec.curve_max_devices);
+    if sc.nodes != 1 {
+        req = req.nodes(sc.nodes);
+    }
+    if let Some(a) = spec.collective {
+        req = req.collective(a);
+    }
     if let Some(gb) = sc.device_mem_gb {
         req = req.device_mem_gb(gb);
     }
@@ -502,6 +527,7 @@ impl ScenarioResult {
             ("model", Json::Str(self.scenario.model.clone())),
             ("topology", Json::Str(self.scenario.topology.clone())),
             ("devices", Json::Num(self.scenario.devices as f64)),
+            ("nodes", Json::Num(self.scenario.nodes as f64)),
             ("device_mem_gb",
              self.scenario
                  .device_mem_gb
@@ -548,16 +574,17 @@ impl SweepResult {
     /// Flat CSV: one row per scenario with the headline plan fields.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "model,topology,devices,device_mem_gb,batch,family,status,\
-             strategy,mp_degree,mechanism,devices_used,dp_workers,\
-             microbatches,global_batch,step_time_s,epochs,speedup,\
-             peak_mem_gb,error\n");
+            "model,topology,devices,nodes,device_mem_gb,batch,family,\
+             status,strategy,mp_degree,mechanism,collective,devices_used,\
+             dp_workers,microbatches,global_batch,step_time_s,epochs,\
+             speedup,peak_mem_gb,error\n");
         for r in &self.results {
             let sc = &r.scenario;
             let mut cells: Vec<String> = vec![
                 sc.model.clone(),
                 sc.topology.clone(),
                 sc.devices.to_string(),
+                sc.nodes.to_string(),
                 mem_gb_label(sc.device_mem_gb),
                 sc.batch.label(),
                 sc.family.as_str().to_string(),
@@ -569,6 +596,7 @@ impl SweepResult {
                         p.strategy.kind().to_string(),
                         p.mp_degree.to_string(),
                         p.mechanism.clone(),
+                        p.collective.clone(),
                         p.devices_used.to_string(),
                         p.dp_workers.to_string(),
                         p.microbatches
@@ -589,7 +617,7 @@ impl SweepResult {
                 (None, err) => {
                     cells.push("error".to_string());
                     // strategy..peak_mem_gb stay blank on errored rows.
-                    cells.extend((0..11).map(|_| String::new()));
+                    cells.extend((0..12).map(|_| String::new()));
                     cells.push(err.clone().unwrap_or_default());
                 }
             }
@@ -746,6 +774,88 @@ mod tests {
         let plan = pipe.results[0].plan.as_ref().unwrap();
         assert_eq!(plan.mp_degree, 2, "paper: pipelined hybrid at 256");
         assert_eq!(plan.mechanism, "pipelined");
+    }
+
+    #[test]
+    fn nodes_axis_expands_the_grid() {
+        let spec = SweepSpec {
+            models: vec!["gnmt".into()],
+            topologies: vec!["dgx1-pod".into()],
+            devices: vec![16],
+            nodes: vec![1, 2, 4],
+            families: vec![StrategyFamily::DpOnly],
+            cost_model: "alpha-beta".into(),
+            curve_max_devices: 16,
+            threads: 1,
+            ..Default::default()
+        };
+        let r = run_sweep(&spec).unwrap();
+        assert_eq!(r.len(), 3);
+        for (i, nodes) in [1usize, 2, 4].iter().enumerate() {
+            assert_eq!(r.results[i].scenario.nodes, *nodes);
+            let plan = r.results[i].plan.as_ref().unwrap();
+            assert_eq!(plan.nodes,
+                       if *nodes == 1 { None } else { Some(*nodes) });
+        }
+        // More chassis for the same budget → slower fabric in the loop →
+        // no faster DP step.
+        let t2 = r.results[1].plan.as_ref().unwrap().predicted_step_s;
+        let t4 = r.results[2].plan.as_ref().unwrap().predicted_step_s;
+        assert!(t4 >= t2 - 1e-12,
+                "4 chassis cannot beat 2 for a 16-worker DP: {t4} vs {t2}");
+        // The axis shows up in both serialisations.
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"nodes\":2"));
+        let csv = r.to_csv();
+        assert!(csv.starts_with("model,topology,devices,nodes,"));
+        assert!(csv.contains("collective"), "header must carry the column");
+        assert!(csv.contains("\"hierarchical\""),
+                "multi-chassis DP rows must record the 2-level pricing");
+        // Single-box topology × nodes > 1 is a per-scenario error.
+        let bad = run_sweep(&SweepSpec {
+            topologies: vec!["dgx1".into()],
+            nodes: vec![2],
+            models: vec!["gnmt".into()],
+            devices: vec![8],
+            families: vec![StrategyFamily::DpOnly],
+            curve_max_devices: 8,
+            threads: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(bad.results[0].error.is_some());
+        // Empty axis is rejected.
+        assert!(run_sweep(&SweepSpec { nodes: vec![], ..Default::default() })
+            .is_err());
+    }
+
+    #[test]
+    fn forced_collective_threads_through_the_sweep() {
+        let base = SweepSpec {
+            models: vec!["gnmt".into()],
+            topologies: vec!["dgx1-pod".into()],
+            devices: vec![32],
+            nodes: vec![4],
+            families: vec![StrategyFamily::DpOnly],
+            cost_model: "alpha-beta".into(),
+            curve_max_devices: 32,
+            threads: 1,
+            ..Default::default()
+        };
+        let auto = run_sweep(&base).unwrap();
+        let plan = auto.results[0].plan.as_ref().unwrap();
+        assert_eq!(plan.collective, "hierarchical",
+                   "4x8 DP must price hierarchically: {plan:?}");
+        let forced = run_sweep(&SweepSpec {
+            collective: Some(Algorithm::Ring),
+            ..base
+        })
+        .unwrap();
+        let flat = forced.results[0].plan.as_ref().unwrap();
+        assert_eq!(flat.collective, "ring");
+        assert!(plan.predicted_step_s < flat.predicted_step_s,
+                "hierarchical pricing must strictly beat the flat ring: \
+                 {} vs {}", plan.predicted_step_s, flat.predicted_step_s);
     }
 
     #[test]

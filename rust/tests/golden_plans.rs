@@ -1,0 +1,103 @@
+//! Golden-plan snapshots: `Planner::plan` JSON for every registry
+//! model × topology pair under fixed requests, byte-compared against
+//! checked-in fixtures, so any cost-model edit shows up as a reviewable
+//! diff instead of a silent behaviour change.
+//!
+//! Snapshot protocol (insta-style bootstrap):
+//! * fixture present  → the serialised plan must match it byte-for-byte;
+//! * fixture missing  → it is written (bootstrapped) and reported, not
+//!   failed — run the test twice to turn bootstrap into comparison, as
+//!   the CI determinism job does;
+//! * `GOLDEN_REGEN=1` → fixtures are rewritten unconditionally (commit
+//!   the diff).
+//!
+//! Independent of the fixtures, every plan must serialise
+//! deterministically (two serialisations byte-equal) and round-trip
+//! through `Plan::from_json`.
+
+use std::path::PathBuf;
+
+use hybridpar::planner::{Plan, PlanRequest, Planner};
+use hybridpar::util::json::Json;
+
+/// Fixture root: `tests/fixtures/golden_plans` under whichever directory
+/// actually holds the test sources (the build harness may place
+/// `Cargo.toml` at the repo root or under `rust/`).
+fn fixture_dir() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    for candidate in ["rust/tests", "tests"] {
+        let d = manifest.join(candidate);
+        if d.join("golden_plans.rs").exists() {
+            return d.join("fixtures").join("golden_plans");
+        }
+    }
+    manifest.join("tests").join("fixtures").join("golden_plans")
+}
+
+/// The fixed request grid: every registry model on every registry
+/// topology at an 8-device budget (16 for the dgx2 box so both chassis
+/// shapes appear), short curve, default memory accounting, analytical
+/// cost — deliberately covering single-box, pod and cloud systems.
+fn requests() -> Vec<(String, String, PlanRequest)> {
+    let planner = Planner::new();
+    let mut out = Vec::new();
+    for model in planner.models().names() {
+        for topo in planner.topologies().names() {
+            let devices = if topo == "dgx2" { 16 } else { 8 };
+            let req = PlanRequest::new(model, topo)
+                .devices(devices)
+                .curve_to(64);
+            out.push((model.to_string(), topo.to_string(), req));
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_plans_match_fixtures() {
+    let planner = Planner::new();
+    let dir = fixture_dir();
+    let regen = std::env::var("GOLDEN_REGEN").is_ok_and(|v| v == "1");
+    let mut bootstrapped = 0usize;
+    let mut compared = 0usize;
+    for (model, topo, req) in requests() {
+        // Serialised outcome: the plan JSON, or the planner's error text
+        // (an infeasible pair is itself a golden behaviour).
+        let text = match planner.plan(&req) {
+            Ok(plan) => {
+                // Determinism + round-trip hold regardless of fixtures.
+                let text = plan.to_json().to_string();
+                assert_eq!(planner.plan(&req).unwrap().to_json().to_string(),
+                           text,
+                           "{model}@{topo}: non-deterministic serialisation");
+                let back =
+                    Plan::from_json(&Json::parse(&text).unwrap()).unwrap();
+                assert_eq!(back, plan, "{model}@{topo}: round-trip drift");
+                text
+            }
+            Err(e) => format!("error: {e:#}"),
+        };
+        let path = dir.join(format!("{model}__{topo}.json"));
+        if !regen && path.exists() {
+            let want = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("read {path:?}: {e}"));
+            assert_eq!(text, want.trim_end_matches('\n'),
+                       "{model}@{topo}: plan drifted from the checked-in \
+                        fixture {path:?} — if intentional, regenerate \
+                        with GOLDEN_REGEN=1 and commit the diff");
+            compared += 1;
+        } else {
+            std::fs::create_dir_all(&dir)
+                .unwrap_or_else(|e| panic!("mkdir {dir:?}: {e}"));
+            std::fs::write(&path, format!("{text}\n"))
+                .unwrap_or_else(|e| panic!("write {path:?}: {e}"));
+            bootstrapped += 1;
+        }
+    }
+    if bootstrapped > 0 {
+        eprintln!(
+            "golden_plans: bootstrapped {bootstrapped} fixture(s) into \
+             {dir:?} (compared {compared}) — rerun to byte-compare, \
+             commit the files to pin them");
+    }
+}

@@ -1,0 +1,180 @@
+//! Integration: the collective-selection layer's executable paths against
+//! each other and against their analytic α-β costs.
+//!
+//! * **cross-algorithm equivalence** — `ring_allreduce`,
+//!   `tree_allreduce` and `hierarchical_allreduce` must produce
+//!   *bitwise-identical* sums on the same buffers.  Floating-point
+//!   addition is not associative in general, so the buffers hold small
+//!   integer-valued f32s: every summation order is exact below 2^24,
+//!   which turns "same result up to rounding" into "same bytes";
+//! * **model agreement** — each executable path's simulated time must
+//!   track its analytic cost (priced through [`TopoProfile`], the same
+//!   parameters the planner uses) within a documented tolerance on both
+//!   a `dgx1` box and `multi_node` graphs;
+//! * **acceptance** — on a `multi_node(4, 8)` system the best collective
+//!   is the hierarchical one, and a planner DP candidate priced with it
+//!   strictly improves over the flat-ring pricing.
+
+use hybridpar::cluster::{dgx1, multi_node, HwGraph};
+use hybridpar::collective::{best_allreduce, hierarchical_allreduce,
+                            ring_allreduce, tree_allreduce, Algorithm,
+                            CollectiveResult, TopoProfile};
+use hybridpar::planner::{cost_by_name, PlanRequest, Planner};
+use hybridpar::util::rng::Rng;
+
+type Collective =
+    fn(&mut [Vec<f32>], &HwGraph, &[usize])
+       -> anyhow::Result<CollectiveResult>;
+
+const ALGOS: [(&str, Algorithm, Collective); 3] = [
+    ("ring", Algorithm::Ring, ring_allreduce),
+    ("tree", Algorithm::Tree, tree_allreduce),
+    ("hierarchical", Algorithm::Hierarchical, hierarchical_allreduce),
+];
+
+/// Integer-valued f32 buffers: sums of < 2^24 stay exact in f32, so every
+/// reduction order produces identical bytes.
+fn int_bufs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..len)
+                .map(|_| rng.range(-16, 16) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn executable_paths_produce_bitwise_identical_sums() {
+    for hw in [dgx1(4), multi_node(2, 4), multi_node(4, 8)] {
+        let devs = hw.devices();
+        let n = devs.len();
+        for len in [1usize, 10, 1000] {
+            let reference = int_bufs(n, len, (n * len) as u64);
+            let mut results: Vec<Vec<Vec<f32>>> = Vec::new();
+            for (name, _, f) in ALGOS {
+                let mut bufs = reference.clone();
+                f(&mut bufs, &hw, &devs)
+                    .unwrap_or_else(|e| panic!("{name} on {}: {e}",
+                                               hw.name));
+                results.push(bufs);
+            }
+            // Exact integer arithmetic: one expected vector.
+            let want: Vec<f32> = (0..len)
+                .map(|i| reference.iter().map(|b| b[i]).sum())
+                .collect();
+            for (bufs, (name, _, _)) in results.iter().zip(ALGOS) {
+                for b in bufs {
+                    assert_eq!(b, &want,
+                               "{name} on {} len {len} diverged from the \
+                                exact sum", hw.name);
+                }
+            }
+            // And therefore bitwise-identical across algorithms.
+            for (bufs, (name, _, _)) in results[1..].iter().zip(&ALGOS[1..])
+            {
+                assert_eq!(bufs, &results[0],
+                           "{name} != ring on {}", hw.name);
+            }
+        }
+    }
+}
+
+/// Tolerance of executable sim-time vs the analytic α-β cost, per
+/// (graph, algorithm).  Ring and hierarchical decompose into exactly the
+/// bulk-synchronous steps the analytic model charges, so they agree
+/// tightly (uneven-chunk slack only).  The tree's analytic form charges
+/// every level at the worst (inter-node) hop, while the executable's
+/// early reduce levels pair co-chassis ranks over NVLink — a
+/// conservative analytic overestimate, documented at 40% on multi-node
+/// graphs.
+fn tolerance(multi: bool, algorithm: Algorithm) -> f64 {
+    match (multi, algorithm) {
+        (false, _) => 0.10,
+        (true, Algorithm::Tree) => 0.40,
+        (true, _) => 0.10,
+    }
+}
+
+#[test]
+fn executable_time_tracks_analytic_cost() {
+    for hw in [dgx1(4), multi_node(2, 4), multi_node(4, 8)] {
+        let devs = hw.devices();
+        let n = devs.len();
+        let profile = TopoProfile::of(&hw);
+        let multi = hw.is_multi_node();
+        // Divisible by every chunking in play so the analytic per-step
+        // chunk sizes match the executable's exactly.
+        let len = 1usize << 18;
+        let bytes = (len * 4) as f64;
+        for (name, algorithm, f) in ALGOS {
+            let mut bufs = int_bufs(n, len, 7);
+            let sim = f(&mut bufs, &hw, &devs).unwrap().sim_time;
+            // α = 0: the executables charge wire latency only; the
+            // planner's extra software α is a pricing knob on top.
+            let analytic = profile.cost(algorithm, n, bytes, 0.0);
+            let gap = (sim - analytic).abs() / analytic;
+            let tol = tolerance(multi, algorithm);
+            assert!(gap < tol,
+                    "{name} on {}: simulated {sim} vs analytic {analytic} \
+                     (gap {:.1}% > {:.0}%)",
+                    hw.name, gap * 100.0, tol * 100.0);
+        }
+    }
+}
+
+#[test]
+fn multi_node_4x8_selects_the_hierarchical_collective() {
+    // The acceptance topology: 4 nodes × 8 V100 over InfiniBand.
+    let hw = multi_node(4, 8);
+    for bytes in [100e6, 400e6, 640e6, 850e6] {
+        let choice = best_allreduce(32, bytes, &hw);
+        assert_eq!(choice.algorithm, Algorithm::Hierarchical,
+                   "paper-size buffers must pick the 2-level scheme");
+        let p = TopoProfile::of(&hw);
+        let flat = p.cost(Algorithm::Ring, 32, bytes, 5e-6);
+        assert!(choice.cost_s < flat,
+                "hierarchical {} must strictly beat the flat ring {flat}",
+                choice.cost_s);
+    }
+}
+
+#[test]
+fn planner_prices_multi_node_dp_hierarchically() {
+    // End-to-end acceptance: on a 4×8 pod the α-β planner's DP candidate
+    // is priced with the hierarchical collective and its step time
+    // strictly improves over flat-ring pricing.
+    let planner =
+        Planner::with_cost(cost_by_name("alpha-beta").unwrap());
+    let base = PlanRequest::new("gnmt", "dgx1-pod").devices(32).nodes(4);
+    let auto = planner.plan(&base.clone()).unwrap();
+    let dp_auto = auto
+        .scorecard
+        .iter()
+        .find(|c| c.mp_degree == 1)
+        .expect("DP candidate must exist");
+    assert_eq!(dp_auto.collective, "hierarchical",
+               "multi-node DP must be priced hierarchically: {dp_auto:?}");
+    let flat = planner
+        .plan(&base.collective(Algorithm::Ring))
+        .unwrap();
+    let dp_flat = flat
+        .scorecard
+        .iter()
+        .find(|c| c.mp_degree == 1)
+        .unwrap();
+    assert_eq!(dp_flat.collective, "ring");
+    let (t_auto, t_flat) = (dp_auto.step_time_s.unwrap(),
+                            dp_flat.step_time_s.unwrap());
+    assert!(t_auto < t_flat,
+            "hierarchical DP step {t_auto} must strictly beat the \
+             flat-ring {t_flat}");
+    // The JSON round-trip carries the recorded algorithm.
+    let text = auto.to_json().to_string();
+    let back = hybridpar::planner::Plan::from_json(
+        &hybridpar::util::json::Json::parse(&text).unwrap())
+        .unwrap();
+    assert_eq!(back, auto);
+    assert!(text.contains("\"collective\":\"hierarchical\""));
+}

@@ -2,8 +2,9 @@
 //! harness — proptest is unavailable offline).  Each property runs dozens
 //! of generated cases; failures print a replayable case seed.
 
-use hybridpar::cluster::{dgx1, multi_node};
-use hybridpar::collective::ring_allreduce;
+use hybridpar::cluster::{cloud_25gbe, dgx1, dgx1_pod, multi_node};
+use hybridpar::collective::{best_allreduce_on, ring_allreduce, ring_cost,
+                            tree_cost, Algorithm, TopoProfile};
 use hybridpar::dfg::Dfg;
 use hybridpar::memory::{self, MemoryModel, Optimizer};
 use hybridpar::milp::{solve_lp, solve_milp, BnbConfig, LpOutcome,
@@ -72,6 +73,82 @@ fn prop_ring_allreduce_equals_sum() {
         for b in &bufs[1..] {
             assert_eq!(b, &bufs[0]);
         }
+    });
+}
+
+#[test]
+fn prop_tree_beats_ring_below_the_latency_crossover() {
+    // The α-β algebra has one crossover buffer size per (n, α, β):
+    //   B* = α β (n−1−L) / (L − (n−1)/n),  L = ⌈log2 n⌉,
+    // below which the tree's 2L latency terms beat the ring's 2(n−1) and
+    // above which the ring's 2(n−1)/n bandwidth factor beats the tree's
+    // 2L.  Well clear of B* on either side, the ordering must hold.
+    run_cases(60, 0xC0551, |g| {
+        let n = g.usize_in(8, 128);
+        let alpha = g.f64_in(1e-6, 1e-4);
+        let bw = g.f64_in(1e9, 100e9);
+        let l = (n as f64).log2().ceil();
+        let b_star = alpha * bw * (n as f64 - 1.0 - l)
+            / (l - (n as f64 - 1.0) / n as f64);
+        assert!(b_star > 0.0, "n={n}: latency advantage must exist");
+        let tiny = b_star * 0.25;
+        let big = b_star * 4.0;
+        assert!(tree_cost(n, tiny, alpha, bw) < ring_cost(n, tiny, alpha, bw),
+                "n={n}: tree must win at {tiny} bytes");
+        assert!(ring_cost(n, big, alpha, bw) < tree_cost(n, big, alpha, bw),
+                "n={n}: ring must win at {big} bytes");
+    });
+}
+
+#[test]
+fn prop_hierarchical_never_loses_to_flat_ring_across_nodes() {
+    // On any registry-shaped multi-node graph, for paper-size gradient
+    // buffers (Inception 95 MB … BigLSTM 850 MB), the two-level cost is
+    // at most the flat ring's: the bandwidth condition
+    // β_intra ≥ nodes · β_inter holds on every NIC-routed topology here,
+    // and the latency terms always favour the two-level scheme.
+    run_cases(30, 0x21E7E1, |g| {
+        let nodes = g.usize_in(2, 6);
+        let hw = match g.usize_in(0, 2) {
+            0 => multi_node(nodes, g.usize_in(2, 8)),
+            1 => dgx1_pod(nodes),
+            _ => cloud_25gbe(nodes),
+        };
+        let p = TopoProfile::of(&hw);
+        let n = hw.n_devices();
+        let bytes = g.f64_in(95e6, 850e6);
+        let alpha = g.f64_in(0.0, 2e-5);
+        let hier = p.cost(Algorithm::Hierarchical, n, bytes, alpha);
+        let ring = p.cost(Algorithm::Ring, n, bytes, alpha);
+        assert!(hier <= ring + 1e-12,
+                "{}: hierarchical {hier} beats flat ring {ring}", hw.name);
+    });
+}
+
+#[test]
+fn prop_best_allreduce_never_worse_than_any_fixed_algorithm() {
+    run_cases(40, 0xBE57, |g| {
+        let hw = match g.usize_in(0, 3) {
+            0 => dgx1(g.usize_in(2, 8)),
+            1 => multi_node(g.usize_in(1, 4), g.usize_in(2, 8)),
+            2 => dgx1_pod(g.usize_in(1, 4)),
+            _ => cloud_25gbe(g.usize_in(1, 3)),
+        };
+        let p = TopoProfile::of(&hw);
+        let n = g.usize_in(2, 4 * hw.n_devices());
+        let bytes = g.f64_in(1e3, 1e9);
+        let alpha = g.f64_in(0.0, 1e-4);
+        let best = best_allreduce_on(n, bytes, &p, alpha);
+        for a in Algorithm::ALL {
+            let c = p.cost(a, n, bytes, alpha);
+            assert!(best.cost_s <= c + 1e-15,
+                    "{} n={n} bytes={bytes}: best {:?} at {} loses to \
+                     {a:?} at {c}",
+                    hw.name, best.algorithm, best.cost_s);
+        }
+        // And the reported cost is the chosen algorithm's own.
+        let own = p.cost(best.algorithm, n, bytes, alpha);
+        assert!((best.cost_s - own).abs() < 1e-15);
     });
 }
 
