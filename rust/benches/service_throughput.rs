@@ -1,0 +1,113 @@
+//! Service throughput bench: drive a live planner daemon over loopback
+//! with a mixed hot/cold request stream and report p50/p99 latency plus
+//! the cache hit rate.
+//!
+//! Asserts the tentpole speedup claim: a warm-cache hit is served at
+//! least 10× faster than a cold plan (the cold path pays a full planner
+//! evaluation — DLPlacer ILP included for branchy models — where the
+//! warm path pays one canonicalisation and an LRU lookup).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+use hybridpar::bench::{f2, Table};
+use hybridpar::service::{self, ServiceOptions};
+use hybridpar::util::{fmt_secs, percentile};
+
+/// POST /plan and time the full request (connect → last byte).
+fn timed_plan(addr: SocketAddr, body: &str) -> (u16, f64) {
+    let t0 = Instant::now();
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let raw = format!(
+        "POST /plan HTTP/1.1\r\nHost: bench\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len());
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut response = Vec::new();
+    stream.read_to_end(&mut response).unwrap();
+    let status: u16 = std::str::from_utf8(&response)
+        .unwrap()
+        .split_whitespace()
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap();
+    (status, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let handle = service::bind("127.0.0.1:0", ServiceOptions {
+        threads: 4,
+        cache_entries: 256,
+        ..Default::default()
+    })
+    .expect("bind service")
+    .spawn();
+    let addr = handle.addr();
+
+    // The hot key: one request repeated throughout the stream.  Seeded
+    // once up front so every subsequent hot timing is a pure cache hit.
+    let hot_body = r#"{"model":"inception-v3","devices":8}"#;
+    let (status, seed_latency) = timed_plan(addr, hot_body);
+    assert_eq!(status, 200);
+
+    // The cold set: distinct device budgets (and models) so every
+    // request is a fresh canonical key — each pays a full planner
+    // evaluation.  Inception keeps the DLPlacer ILP on the cold path;
+    // budgets start at 9 so no cold key collides with the hot one.
+    let cold_bodies: Vec<String> = (0..24)
+        .map(|i| {
+            let model = ["inception-v3", "gnmt", "biglstm"][i % 3];
+            format!(r#"{{"model":"{model}","devices":{}}}"#, 9 + i)
+        })
+        .collect();
+
+    // Mixed stream: each cold request interleaved with 4 hot repeats.
+    let mut cold = Vec::new();
+    let mut warm = Vec::new();
+    for body in &cold_bodies {
+        let (status, dt) = timed_plan(addr, body);
+        assert_eq!(status, 200, "cold request failed: {body}");
+        cold.push(dt);
+        for _ in 0..4 {
+            let (status, dt) = timed_plan(addr, hot_body);
+            assert_eq!(status, 200);
+            warm.push(dt);
+        }
+    }
+
+    let all: Vec<f64> =
+        cold.iter().chain(warm.iter()).copied().collect();
+    let cache = handle.service().cache();
+    let (hits, misses) = (cache.hits(), cache.misses());
+    let hit_rate = hits as f64 / (hits + misses) as f64;
+
+    let mut table = Table::new(&["stream", "requests", "p50", "p99"]);
+    for (name, xs) in [("cold (fills)", &cold), ("warm (hits)", &warm),
+                       ("mixed", &all)] {
+        table.row(&[name.to_string(), xs.len().to_string(),
+                    fmt_secs(percentile(xs, 50.0)),
+                    fmt_secs(percentile(xs, 99.0))]);
+    }
+    table.print("service /plan latency (loopback, 4 workers)");
+    println!("cache: {hits} hits / {misses} fills (hit rate {})",
+             f2(hit_rate));
+    println!("cold seed request: {}", fmt_secs(seed_latency));
+
+    let cold_p50 = percentile(&cold, 50.0);
+    let warm_p50 = percentile(&warm, 50.0);
+    let speedup = cold_p50 / warm_p50;
+    println!("warm-over-cold speedup: {}x (p50 {} -> {})",
+             f2(speedup), fmt_secs(cold_p50), fmt_secs(warm_p50));
+    assert!(speedup >= 10.0,
+            "a warm-cache hit must be served >= 10x faster than a cold \
+             plan, got {speedup:.1}x ({cold_p50} vs {warm_p50})");
+    // The stream was 1 seed + 24 cold fills and 96 pure hits.
+    assert_eq!(misses, 25, "every cold request must be a fresh fill");
+    assert_eq!(hits, 96, "every hot repeat must hit");
+    assert!(hit_rate > 0.75);
+
+    handle.stop();
+    println!("service_throughput OK");
+}

@@ -357,6 +357,33 @@ impl Default for SweepConfig {
     }
 }
 
+/// `[service]` section: the planner daemon the `serve` subcommand runs.
+/// Values stay plain here (the cost model as a string) so the config
+/// layer does not depend on [`crate::service`]; `serve` resolves them
+/// via the service constructor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceConfig {
+    /// Listen address, e.g. "127.0.0.1:8080" ("…:0" = ephemeral port).
+    pub addr: String,
+    /// Request worker threads (0 = one per available core).
+    pub threads: usize,
+    /// Single-flight plan-cache capacity in entries.
+    pub cache_entries: usize,
+    /// Cost model used when a request omits `"cost"`.
+    pub cost_model: String,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            addr: "127.0.0.1:8080".into(),
+            threads: 0,
+            cache_entries: 128,
+            cost_model: "analytical".into(),
+        }
+    }
+}
+
 /// Top-level run configuration (config file `[run]`, `[cluster]`,
 /// `[train]`, `[planner]`, `[sweep]` sections).
 #[derive(Clone, Debug)]
@@ -380,6 +407,8 @@ pub struct RunConfig {
     pub sweep: Option<SweepConfig>,
     /// Present iff the config has a `[memory]` section.
     pub memory: Option<MemoryConfig>,
+    /// Present iff the config has a `[service]` section.
+    pub service: Option<ServiceConfig>,
 }
 
 impl Default for RunConfig {
@@ -397,6 +426,7 @@ impl Default for RunConfig {
             planner: None,
             sweep: None,
             memory: None,
+            service: None,
         }
     }
 }
@@ -552,6 +582,20 @@ impl RunConfig {
                 act_factor,
                 reserved_gb,
                 device_mem_gb,
+            });
+        }
+        if t.values.keys().any(|k| k.starts_with("service.")) {
+            let d = ServiceConfig::default();
+            let addr = t.str_or("service.addr", &d.addr);
+            if !addr.contains(':') {
+                bail!("service.addr must be host:port, got '{addr}'");
+            }
+            c.service = Some(ServiceConfig {
+                addr,
+                threads: t.usize_or("service.threads", d.threads),
+                cache_entries: t.usize_or("service.cache_entries",
+                                          d.cache_entries),
+                cost_model: t.str_or("service.cost", &d.cost_model),
             });
         }
         Ok(c)
@@ -825,6 +869,29 @@ sizes = [1, 2, 3]
         let t = Toml::parse("[sweep]\ndevices = [8]\n").unwrap();
         let s = RunConfig::from_toml(&t).unwrap().sweep.unwrap();
         assert_eq!(s.device_mem_gb, vec!["default"]);
+    }
+
+    #[test]
+    fn service_section_parses() {
+        let t = Toml::parse(
+            "[service]\naddr = \"0.0.0.0:9000\"\nthreads = 4\n\
+             cache_entries = 64\ncost = \"alpha-beta\"\n")
+            .unwrap();
+        let s = RunConfig::from_toml(&t).unwrap().service.unwrap();
+        assert_eq!(s.addr, "0.0.0.0:9000");
+        assert_eq!(s.threads, 4);
+        assert_eq!(s.cache_entries, 64);
+        assert_eq!(s.cost_model, "alpha-beta");
+        // Absent by default; partial sections get defaults for the rest.
+        let t = Toml::parse(DOC).unwrap();
+        assert!(RunConfig::from_toml(&t).unwrap().service.is_none());
+        let t = Toml::parse("[service]\nthreads = 2\n").unwrap();
+        let s = RunConfig::from_toml(&t).unwrap().service.unwrap();
+        assert_eq!(s.addr, "127.0.0.1:8080");
+        assert_eq!(s.cache_entries, 128);
+        // A port-less address is rejected loudly.
+        let t = Toml::parse("[service]\naddr = \"localhost\"\n").unwrap();
+        assert!(RunConfig::from_toml(&t).is_err());
     }
 
     #[test]

@@ -95,6 +95,16 @@
 //! .unwrap();
 //! assert_eq!(result.len(), 2); // canonical (model-major) order
 //! ```
+//!
+//! ## Planner-as-a-service
+//!
+//! The `serve` subcommand runs the planner as a long-lived std-only HTTP
+//! daemon ([`service`]): `POST /plan` answers are byte-identical to the
+//! `plan` CLI and amortise across callers through a single-flight LRU
+//! cache (equivalent request spellings share one entry, concurrent
+//! identical requests coalesce onto one evaluation), `POST /sweep`
+//! streams grid results as they complete, and `GET /metrics` exports
+//! Prometheus counters and latency histograms.  See `docs/service.md`.
 
 pub mod util;
 pub mod dfg;
@@ -114,6 +124,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod coordinator;
 pub mod planner;
+pub mod service;
 pub mod bench;
 pub mod prop;
 

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   plan       query the unified planner for the best strategy
 //!   sweep      evaluate a scenario grid in parallel (JSON/CSV out)
+//!   serve      run the planner as a cached HTTP daemon
 //!   train      train the transformer LM under a parallelization strategy
 //!   place      run DLPlacer on an analytic model DFG
 //!   analyze    print the Eq. 1-6 strategy projection for a network
@@ -30,6 +31,7 @@ use hybridpar::planner::sweep::{effective_threads, parse_mem_gb,
 use hybridpar::planner::{cost_by_name, AnalyticalCost, CostModel,
                          ModelRegistry, Objective, PlanRequest, Planner};
 use hybridpar::runtime::Meta;
+use hybridpar::service::{self, ServiceOptions};
 use hybridpar::util::cli::Args;
 use hybridpar::util::fmt_secs;
 
@@ -61,6 +63,12 @@ COMMANDS:
              [--config cfg.toml] [--out-json p] [--out-csv p]
              (parallel grid evaluation; JSON on stdout, deterministic
               ordering — --threads N output is byte-identical to --threads 1)
+  serve      [--addr 127.0.0.1:8080] [--threads N] [--cache-entries N]
+             [--cost analytical|alpha-beta|simulator] [--config cfg.toml]
+             (planner-as-a-service HTTP daemon: POST /plan and /sweep,
+              GET /models /topologies /healthz /metrics; /plan responses
+              are byte-identical to the plan subcommand and cached in a
+              single-flight LRU — see docs/service.md)
   train      --config cfg.toml |
              --strategy single|dp|hybrid|pipelined|async|local-sgd
              --workers N --steps N --lr F --dp-workers N --microbatches N
@@ -88,6 +96,7 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "plan" => cmd_plan(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
         "train" => cmd_train(&args),
         "place" => cmd_place(&args),
         "analyze" => cmd_analyze(&args),
@@ -205,13 +214,42 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let planner = Planner::with_cost(cost);
     let plan = planner.plan(&req)?;
     eprint!("{}", plan.summary());
-    let json = plan.to_json().to_string();
-    println!("{json}");
+    // One shared writer with the service's POST /plan (and the golden
+    // fixtures): stdout, --out-json and the HTTP body are byte-identical.
+    let doc = plan.to_json_string();
+    print!("{doc}");
     if let Some(path) = args.get("out-json") {
-        std::fs::write(path, &json)?;
+        std::fs::write(path, &doc)?;
         eprintln!("wrote {path}");
     }
     Ok(())
+}
+
+// --------------------------------------------------------------------------
+
+/// `serve`: run the planner as a long-lived HTTP daemon (see
+/// `docs/service.md`).  Defaults come from the optional `[service]`
+/// config section; CLI flags override.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => {
+            RunConfig::from_toml(&Toml::load(&PathBuf::from(path))?)?
+        }
+        None => RunConfig::default(),
+    };
+    let base = cfg.service.unwrap_or_default();
+    let addr = args.get_or("addr", &base.addr);
+    let opts = ServiceOptions {
+        threads: args.get_usize("threads", base.threads)?,
+        cache_entries: args.get_usize("cache-entries", base.cache_entries)?,
+        default_cost: args.get_or("cost", &base.cost_model),
+    };
+    let bound = service::bind(&addr, opts)?;
+    eprintln!("serving planner on http://{} \
+               (POST /plan /sweep, GET /models /topologies /healthz \
+               /metrics; ctrl-c to stop)",
+              bound.local_addr());
+    bound.serve_forever()
 }
 
 // --------------------------------------------------------------------------
@@ -332,10 +370,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 err.as_deref().unwrap_or("unknown")),
         }
     }
-    let json = result.to_json().to_string();
-    println!("{json}");
+    // One shared writer with the service's POST /sweep chunk stream.
+    let doc = result.to_json_string();
+    print!("{doc}");
     if let Some(path) = args.get("out-json") {
-        std::fs::write(path, &json)?;
+        std::fs::write(path, &doc)?;
         eprintln!("wrote {path}");
     }
     if let Some(path) = args.get("out-csv") {

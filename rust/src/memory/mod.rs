@@ -122,6 +122,58 @@ impl MemoryModel {
             1.0
         }
     }
+
+    /// Serialise the accounting knobs (the `memory` object of the
+    /// service's `POST /plan` / `POST /sweep` wire format).
+    pub fn to_json(&self) -> Json {
+        crate::planner::jobj(vec![
+            ("optimizer", Json::Str(self.optimizer.as_str().into())),
+            ("recompute", Json::Bool(self.recompute)),
+            ("act_factor", Json::Num(self.act_factor)),
+            ("reserved_bytes", Json::Num(self.reserved_bytes)),
+            ("recompute_overhead", Json::Num(self.recompute_overhead)),
+        ])
+    }
+
+    /// Parse the wire-format `memory` object.  Missing keys take the
+    /// [`MemoryModel::default`] values; unknown keys are rejected so a
+    /// typoed knob cannot silently fall back to a default.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = MemoryModel::default();
+        const KEYS: [&str; 5] = ["optimizer", "recompute", "act_factor",
+                                 "reserved_bytes", "recompute_overhead"];
+        for key in j.as_obj()?.keys() {
+            if !KEYS.contains(&key.as_str()) {
+                bail!("unknown memory key '{key}' (known: {})",
+                      KEYS.join(", "));
+            }
+        }
+        Ok(MemoryModel {
+            optimizer: match j.opt("optimizer") {
+                None | Some(Json::Null) => d.optimizer,
+                Some(v) => Optimizer::parse(v.as_str()?)?,
+            },
+            recompute: match j.opt("recompute") {
+                None | Some(Json::Null) => d.recompute,
+                Some(Json::Bool(b)) => *b,
+                Some(other) => {
+                    bail!("recompute must be a bool, got {other:?}")
+                }
+            },
+            act_factor: match j.opt("act_factor") {
+                None | Some(Json::Null) => d.act_factor,
+                Some(v) => v.as_f64()?,
+            },
+            reserved_bytes: match j.opt("reserved_bytes") {
+                None | Some(Json::Null) => d.reserved_bytes,
+                Some(v) => v.as_f64()?,
+            },
+            recompute_overhead: match j.opt("recompute_overhead") {
+                None | Some(Json::Null) => d.recompute_overhead,
+                Some(v) => v.as_f64()?,
+            },
+        })
+    }
 }
 
 /// Peak per-device footprint of one worker, by component.
@@ -503,5 +555,31 @@ mod tests {
         let back =
             MemoryEstimate::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(est, back);
+    }
+
+    #[test]
+    fn memory_model_json_round_trip() {
+        let m = MemoryModel {
+            optimizer: Optimizer::Momentum,
+            recompute: true,
+            act_factor: 1.5,
+            reserved_bytes: 1e9,
+            recompute_overhead: 0.25,
+        };
+        let j = m.to_json().to_string();
+        let back = MemoryModel::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(m, back);
+        // Missing keys default; unknown keys are rejected.
+        let partial = MemoryModel::from_json(
+            &Json::parse(r#"{"optimizer":"sgd"}"#).unwrap()).unwrap();
+        assert_eq!(partial.optimizer, Optimizer::Sgd);
+        assert_eq!(partial.act_factor, MemoryModel::default().act_factor);
+        assert!(MemoryModel::from_json(
+            &Json::parse(r#"{"optimiser":"sgd"}"#).unwrap()).is_err());
+        assert!(MemoryModel::from_json(
+            &Json::parse(r#"{"optimizer":"rmsprop"}"#).unwrap()).is_err());
+        // A mistyped recompute must error, not silently mean "off".
+        assert!(MemoryModel::from_json(
+            &Json::parse(r#"{"recompute":"true"}"#).unwrap()).is_err());
     }
 }

@@ -1,9 +1,145 @@
-//! Metrics: loss curves, step timing, CSV export.
+//! Metrics: loss curves, step timing, CSV export, and the lock-free
+//! counter/histogram primitives the planner service exports in
+//! Prometheus text format (`GET /metrics`).
 
 use std::fmt::Write as _;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
+
+// ==========================================================================
+// Service-grade primitives: Counter + Histogram
+// ==========================================================================
+
+/// A monotonically increasing event counter (Prometheus `counter`).
+/// Lock-free; safe to share across request-handling threads.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    /// One Prometheus exposition line: `name{labels} value` (`labels`
+    /// empty = no brace block).
+    pub fn render(&self, name: &str, labels: &str) -> String {
+        if labels.is_empty() {
+            format!("{name} {}\n", self.get())
+        } else {
+            format!("{name}{{{labels}}} {}\n", self.get())
+        }
+    }
+}
+
+/// Latency bucket upper bounds (seconds) shared by every service
+/// endpoint histogram: 100 µs to 10 s on a 1-2.5-5 ladder, wide enough
+/// for a cache hit (~sub-ms) and a cold DLPlacer ILP (~seconds) to land
+/// in distinct buckets.
+pub const LATENCY_BUCKETS_S: [f64; 16] = [
+    100e-6, 250e-6, 500e-6, 1e-3, 2.5e-3, 5e-3, 10e-3, 25e-3, 50e-3,
+    100e-3, 250e-3, 500e-3, 1.0, 2.5, 5.0, 10.0,
+];
+
+/// A fixed-bucket histogram (Prometheus `histogram`): cumulative bucket
+/// counts, total observation count and sum.  Lock-free — observations
+/// touch one bucket counter, the total and a CAS-looped f64 sum.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Upper bounds, strictly increasing; an implicit `+Inf` bucket
+    /// catches everything beyond the last bound.
+    bounds: Vec<f64>,
+    /// Per-bound observation counts (non-cumulative internally;
+    /// cumulated at render time, as the exposition format requires).
+    counts: Vec<AtomicU64>,
+    inf_count: AtomicU64,
+    total: AtomicU64,
+    /// Sum of observed values, stored as f64 bits.
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    /// Build with the given upper bounds (must be strictly increasing).
+    pub fn new(bounds: &[f64]) -> Self {
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]),
+                "histogram bounds must be strictly increasing");
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: bounds.iter().map(|_| AtomicU64::new(0)).collect(),
+            inf_count: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// The shared service latency ladder.
+    pub fn latency() -> Self {
+        Histogram::new(&LATENCY_BUCKETS_S)
+    }
+
+    pub fn observe(&self, v: f64) {
+        match self.bounds.iter().position(|&b| v <= b) {
+            Some(i) => self.counts[i].fetch_add(1, Ordering::Relaxed),
+            None => self.inf_count.fetch_add(1, Ordering::Relaxed),
+        };
+        self.total.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Prometheus exposition lines: `name_bucket{labels,le="…"}`
+    /// (cumulative), `name_sum`, `name_count`.  `labels` may be empty.
+    pub fn render(&self, name: &str, labels: &str) -> String {
+        let mut s = String::new();
+        let sep = if labels.is_empty() { "" } else { "," };
+        let mut cum = 0u64;
+        for (b, c) in self.bounds.iter().zip(&self.counts) {
+            cum += c.load(Ordering::Relaxed);
+            let _ = writeln!(s, "{name}_bucket{{{labels}{sep}le=\"{b}\"}} \
+                                 {cum}");
+        }
+        cum += self.inf_count.load(Ordering::Relaxed);
+        let _ = writeln!(s, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {cum}");
+        if labels.is_empty() {
+            let _ = writeln!(s, "{name}_sum {}", self.sum());
+            let _ = writeln!(s, "{name}_count {}", self.count());
+        } else {
+            let _ = writeln!(s, "{name}_sum{{{labels}}} {}", self.sum());
+            let _ = writeln!(s, "{name}_count{{{labels}}} {}", self.count());
+        }
+        s
+    }
+}
 
 /// One record per training step.
 #[derive(Clone, Copy, Debug)]
@@ -120,5 +256,60 @@ mod tests {
     fn totals() {
         let c = curve(&[1.0, 2.0]);
         assert!((c.total_sim_s() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counter_counts_and_renders() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        assert_eq!(c.render("reqs", ""), "reqs 5\n");
+        assert_eq!(c.render("reqs", "endpoint=\"plan\""),
+                   "reqs{endpoint=\"plan\"} 5\n");
+    }
+
+    #[test]
+    fn histogram_buckets_cumulate() {
+        let h = Histogram::new(&[1.0, 10.0]);
+        for v in [0.5, 0.7, 5.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 106.2).abs() < 1e-9);
+        let text = h.render("lat", "endpoint=\"plan\"");
+        assert!(text.contains("lat_bucket{endpoint=\"plan\",le=\"1\"} 2"),
+                "{text}");
+        assert!(text.contains("lat_bucket{endpoint=\"plan\",le=\"10\"} 3"),
+                "{text}");
+        assert!(text.contains("lat_bucket{endpoint=\"plan\",le=\"+Inf\"} 4"),
+                "{text}");
+        assert!(text.contains("lat_count{endpoint=\"plan\"} 4"), "{text}");
+        // Unlabelled render carries no brace block on sum/count.
+        let bare = h.render("lat", "");
+        assert!(bare.contains("lat_bucket{le=\"1\"} 2"), "{bare}");
+        assert!(bare.contains("lat_count 4"), "{bare}");
+    }
+
+    #[test]
+    fn histogram_observe_is_thread_safe() {
+        let h = Histogram::latency();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..1000 {
+                        h.observe(1e-3);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4000);
+        assert!((h.sum() - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn histogram_rejects_unsorted_bounds() {
+        let _ = Histogram::new(&[1.0, 0.5]);
     }
 }

@@ -215,6 +215,184 @@ impl PlanRequest {
         self.collective = Some(a);
         self
     }
+
+    /// Wire-format keys accepted by [`plan_request_from_json`] (the
+    /// service's `POST /plan` body).  `"cost"` selects the cost model
+    /// and is returned separately by the parser — it configures the
+    /// [`Planner`], not the request.
+    pub const WIRE_KEYS: [&'static str; 13] = [
+        "model", "topology", "devices", "batch", "objective", "mp_degrees",
+        "pipeline_only", "curve_max_devices", "device_mem_gb", "memory",
+        "nodes", "collective", "cost",
+    ];
+
+    /// The cache-canonical form of this request: a sorted-key JSON
+    /// object with every field fully defaulted, so request spellings
+    /// that cannot change one byte of the plan share one cache entry.
+    /// `cost_model` must be the *resolved* [`CostModel::name`] (so the
+    /// `"sim"` alias and `"simulator"` share too).
+    ///
+    /// Collapses applied — each is provably output-invariant:
+    /// * model aliases resolve to the canonical registry name
+    ///   (`Plan.model` records the canonical name);
+    /// * a `None` batch resolves to the registry default
+    ///   (`Plan.mini_batch` records the resolved batch);
+    /// * `mp_degrees` is sorted, deduplicated and filtered to `> 1` —
+    ///   exactly what [`Planner::plan`] does before scoring;
+    /// * `recompute_overhead` normalises to the default when recompute
+    ///   is off ([`MemoryModel::time_factor`] is 1.0 either way).
+    ///
+    /// NOT collapsed, because they echo verbatim into the plan JSON:
+    /// the topology spelling (`Plan.topology`), `nodes` `None` vs
+    /// `Some(1)` (`Plan.nodes`), and `device_mem_gb` `None` vs an
+    /// explicit value equal to the topology's own capacity
+    /// (`Plan.device_mem_gb`).
+    pub fn canonical_json(&self, models: &ModelRegistry, cost_model: &str)
+                          -> Json {
+        let model = models
+            .canonical_name(&self.model)
+            .unwrap_or(&self.model)
+            .to_string();
+        let batch =
+            self.batch.or_else(|| models.default_batch(&model).ok());
+        let mut degrees: Vec<usize> = self
+            .mp_degrees
+            .iter()
+            .copied()
+            .filter(|&m| m > 1)
+            .collect();
+        degrees.sort_unstable();
+        degrees.dedup();
+        let memory = if self.memory.recompute {
+            self.memory.clone()
+        } else {
+            MemoryModel {
+                recompute_overhead: MemoryModel::default()
+                    .recompute_overhead,
+                ..self.memory.clone()
+            }
+        };
+        jobj(vec![
+            ("model", Json::Str(model)),
+            ("topology", Json::Str(self.topology.clone())),
+            ("devices", junum(self.devices)),
+            ("batch", jounum(batch)),
+            ("objective", Json::Str(self.objective.as_str().into())),
+            ("mp_degrees",
+             Json::Arr(degrees.into_iter().map(junum).collect())),
+            ("pipeline_only", Json::Bool(self.pipeline_only)),
+            ("curve_max_devices", junum(self.curve_max_devices)),
+            ("device_mem_gb", jonum(self.device_mem_gb)),
+            ("memory", memory.to_json()),
+            ("nodes", jounum(self.nodes)),
+            ("collective",
+             self.collective
+                 .map(|a| Json::Str(a.as_str().into()))
+                 .unwrap_or(Json::Null)),
+            ("cost", Json::Str(cost_model.to_string())),
+        ])
+    }
+}
+
+/// Wire cap on device budgets: scale-out topologies materialise a
+/// hardware graph proportional to the budget, and the service parses
+/// attacker-chosen JSON — 64 Ki devices is far beyond any paper
+/// projection (256) while keeping the largest buildable graph small.
+/// The CLI and direct [`PlanRequest`] construction are uncapped.
+pub const MAX_WIRE_DEVICES: usize = 64 * 1024;
+/// Wire cap on chassis counts (pod builders allocate per chassis).
+pub const MAX_WIRE_NODES: usize = 8 * 1024;
+/// Wire cap on the remaining integer knobs (batch, curve bound, MP
+/// degrees, sweep threads) — they drive arithmetic, not allocation, so
+/// the cap is generous.
+pub const MAX_WIRE_INT: usize = 1 << 20;
+
+/// Strict wire integer: a JSON number that is a non-negative integer no
+/// larger than `max`.  `2.5` and `-1` are errors, never truncated —
+/// the wire parsers promise malformed input is rejected, not coerced.
+/// Shared with [`sweep::SweepSpec::from_json`], the other wire surface.
+pub(crate) fn wire_int(v: &Json, key: &str, max: usize) -> Result<usize> {
+    let n = v.as_f64()?;
+    if !n.is_finite() || n.fract() != 0.0 || n < 0.0 {
+        bail!("{key} must be a non-negative integer, got {n}");
+    }
+    if n > max as f64 {
+        bail!("{key} of {n} exceeds the wire cap of {max}");
+    }
+    Ok(n as usize)
+}
+
+/// Optional strict wire integer (`None`/`null` = absent).
+fn opt_wire_int(j: &Json, key: &str, max: usize) -> Result<Option<usize>> {
+    match j.opt(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(wire_int(v, key, max)?)),
+    }
+}
+
+/// Parse the service wire format for a planner query: a JSON object with
+/// any subset of [`PlanRequest::WIRE_KEYS`].  `model` is required; every
+/// other key defaults exactly as [`PlanRequest::new`] and the `plan` CLI
+/// default, so a minimal body and the bare CLI produce byte-identical
+/// plans.  Returns the request plus the optional `"cost"` model name
+/// (resolve it with [`cost_by_name`]).  Unknown keys are rejected so a
+/// typo cannot silently fall back to a default; explicit `null` values
+/// mean "default" throughout.  Integer fields are strict (no silent
+/// truncation) and capped — see [`MAX_WIRE_DEVICES`] — because this
+/// parser faces the network.
+pub fn plan_request_from_json(j: &Json)
+                              -> Result<(PlanRequest, Option<String>)> {
+    for key in j.as_obj()?.keys() {
+        if !PlanRequest::WIRE_KEYS.contains(&key.as_str()) {
+            bail!("unknown plan request key '{key}' (known: {})",
+                  PlanRequest::WIRE_KEYS.join(", "));
+        }
+    }
+    let model = j.get("model")?.as_str()?;
+    let topology = match j.opt("topology") {
+        None | Some(Json::Null) => "dgx1",
+        Some(v) => v.as_str()?,
+    };
+    let mut req = PlanRequest::new(model, topology);
+    if let Some(n) = opt_wire_int(j, "devices", MAX_WIRE_DEVICES)? {
+        req.devices = n;
+    }
+    req.batch = opt_wire_int(j, "batch", MAX_WIRE_INT)?;
+    if let Some(o) = j.opt("objective").filter(|v| **v != Json::Null) {
+        req.objective = Objective::parse(o.as_str()?)?;
+    }
+    if let Some(ms) = j.opt("mp_degrees").filter(|v| **v != Json::Null) {
+        req.mp_degrees = ms
+            .as_arr()?
+            .iter()
+            .map(|x| wire_int(x, "mp_degrees", MAX_WIRE_INT))
+            .collect::<Result<_>>()?;
+    }
+    req.pipeline_only = match j.opt("pipeline_only") {
+        None | Some(Json::Null) => false,
+        Some(Json::Bool(b)) => *b,
+        Some(other) => bail!("pipeline_only must be a bool, got {other:?}"),
+    };
+    if let Some(n) = opt_wire_int(j, "curve_max_devices", MAX_WIRE_INT)? {
+        req.curve_max_devices = n;
+    }
+    req.device_mem_gb = opt_f64(j, "device_mem_gb")?;
+    if let Some(m) = j.opt("memory").filter(|v| **v != Json::Null) {
+        req.memory = MemoryModel::from_json(m)?;
+    }
+    req.nodes = opt_wire_int(j, "nodes", MAX_WIRE_NODES)?;
+    req.collective = match j.opt("collective") {
+        None | Some(Json::Null) => None,
+        Some(v) => match v.as_str()? {
+            "auto" => None,
+            other => Some(Algorithm::parse(other)?),
+        },
+    };
+    let cost = match j.opt("cost") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(v.as_str()?.to_string()),
+    };
+    Ok((req, cost))
 }
 
 /// One strategy candidate's score at the requested device budget.
@@ -1108,6 +1286,17 @@ impl Plan {
         ])
     }
 
+    /// The canonical serialised plan document: compact sorted-key JSON
+    /// plus a trailing newline — the exact bytes the `plan` CLI prints
+    /// on stdout and writes with `--out-json`, the service's
+    /// `POST /plan` returns, and the golden-plan fixtures pin.  One
+    /// writer, so the surfaces cannot drift apart byte-wise.
+    pub fn to_json_string(&self) -> String {
+        let mut s = self.to_json().to_string();
+        s.push('\n');
+        s
+    }
+
     /// Reconstruct a plan from [`Plan::to_json`] output.
     pub fn from_json(j: &Json) -> Result<Self> {
         Ok(Plan {
@@ -1572,5 +1761,121 @@ mod tests {
             assert_eq!(Objective::parse(o.as_str()).unwrap(), o);
         }
         assert!(Objective::parse("fastest").is_err());
+    }
+
+    #[test]
+    fn plan_request_wire_format_parses_and_defaults() {
+        // A minimal body defaults exactly like PlanRequest::new.
+        let (req, cost) = plan_request_from_json(
+            &Json::parse(r#"{"model":"gnmt"}"#).unwrap()).unwrap();
+        let d = PlanRequest::new("gnmt", "dgx1");
+        assert_eq!(req.topology, d.topology);
+        assert_eq!(req.devices, d.devices);
+        assert_eq!(req.batch, None);
+        assert_eq!(req.mp_degrees, d.mp_degrees);
+        assert_eq!(req.curve_max_devices, d.curve_max_devices);
+        assert_eq!(req.memory, d.memory);
+        assert_eq!(cost, None);
+        // Every field parses.
+        let (req, cost) = plan_request_from_json(&Json::parse(
+            r#"{"model":"biglstm","topology":"dgx1-pod","devices":32,
+                "nodes":4,"collective":"ring","device_mem_gb":16,
+                "objective":"step-time","mp_degrees":[4,2],
+                "pipeline_only":true,"curve_max_devices":64,
+                "batch":32,"memory":{"recompute":true},"cost":"sim"}"#)
+            .unwrap()).unwrap();
+        assert_eq!(req.model, "biglstm");
+        assert_eq!(req.topology, "dgx1-pod");
+        assert_eq!(req.devices, 32);
+        assert_eq!(req.nodes, Some(4));
+        assert_eq!(req.collective, Some(Algorithm::Ring));
+        assert_eq!(req.device_mem_gb, Some(16.0));
+        assert_eq!(req.objective, Objective::StepTime);
+        assert_eq!(req.mp_degrees, vec![4, 2]);
+        assert!(req.pipeline_only);
+        assert_eq!(req.curve_max_devices, 64);
+        assert_eq!(req.batch, Some(32));
+        assert!(req.memory.recompute);
+        assert_eq!(cost.as_deref(), Some("sim"));
+        // "auto" collective and explicit nulls mean default.
+        let (req, _) = plan_request_from_json(&Json::parse(
+            r#"{"model":"gnmt","collective":"auto","batch":null,
+                "nodes":null}"#).unwrap()).unwrap();
+        assert_eq!(req.collective, None);
+        assert_eq!(req.batch, None);
+        assert_eq!(req.nodes, None);
+        // Unknown keys, missing model and mistyped values are rejected.
+        for bad in [r#"{"model":"gnmt","modle":1}"#,
+                    r#"{"topology":"dgx1"}"#,
+                    r#"{"model":"gnmt","pipeline_only":3}"#,
+                    r#"{"model":"gnmt","collective":"pigeon"}"#] {
+            assert!(plan_request_from_json(&Json::parse(bad).unwrap())
+                        .is_err(), "{bad}");
+        }
+        // The wire is strict about integers: fractions and negatives
+        // error instead of truncating, and allocation-bearing fields
+        // are capped (the daemon parses attacker-chosen JSON).
+        for bad in [r#"{"model":"gnmt","devices":2.5}"#,
+                    r#"{"model":"gnmt","devices":-8}"#,
+                    r#"{"model":"gnmt","devices":1000000000000000}"#,
+                    r#"{"model":"gnmt","nodes":100000}"#,
+                    r#"{"model":"gnmt","mp_degrees":[2.5]}"#,
+                    r#"{"model":"gnmt","batch":-1}"#] {
+            let err = plan_request_from_json(&Json::parse(bad).unwrap())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("integer") || err.contains("wire cap"),
+                    "{bad}: {err}");
+        }
+        let (req, _) = plan_request_from_json(&Json::parse(
+            r#"{"model":"gnmt","devices":65536}"#).unwrap()).unwrap();
+        assert_eq!(req.devices, MAX_WIRE_DEVICES, "the cap is inclusive");
+    }
+
+    #[test]
+    fn canonical_json_collapses_equivalent_spellings_only() {
+        let models = ModelRegistry::builtin();
+        let key = |r: &PlanRequest, cost: &str| {
+            r.canonical_json(&models, cost).to_string()
+        };
+        // Alias + explicit-default batch + degenerate degree list all
+        // collapse onto the bare spelling.
+        let a = PlanRequest::new("inception", "dgx1");
+        let b = PlanRequest::new("inception-v3", "dgx1")
+            .batch(32)
+            .mp_degrees(&[2, 2, 1]);
+        assert_eq!(key(&a, "analytical"), key(&b, "analytical"));
+        // recompute_overhead is invisible while recompute is off…
+        let mut e = PlanRequest::new("inception", "dgx1");
+        e.memory.recompute_overhead = 0.9;
+        assert_eq!(key(&a, "analytical"), key(&e, "analytical"));
+        // …and significant once it is on.
+        let mut f = e.clone();
+        f.memory.recompute = true;
+        let mut g = PlanRequest::new("inception", "dgx1");
+        g.memory = MemoryModel { recompute: true, ..g.memory.clone() };
+        assert_ne!(key(&f, "analytical"), key(&g, "analytical"));
+        // Output-visible differences stay distinct: nodes(1) vs None,
+        // device_mem_gb override vs topology default, cost model.
+        let c = PlanRequest::new("inception-v3", "dgx1").nodes(1);
+        assert_ne!(key(&a, "analytical"), key(&c, "analytical"));
+        let d = PlanRequest::new("inception-v3", "dgx1")
+            .device_mem_gb(32.0);
+        assert_ne!(key(&a, "analytical"), key(&d, "analytical"));
+        assert_ne!(key(&a, "analytical"), key(&a, "simulator"));
+        // Canonical keys are themselves sorted-key JSON (BTreeMap), so
+        // re-parsing and re-printing is identity.
+        let k = key(&a, "analytical");
+        assert_eq!(Json::parse(&k).unwrap().to_string(), k);
+    }
+
+    #[test]
+    fn plan_document_is_json_plus_newline() {
+        let plan = Planner::new()
+            .plan(&PlanRequest::new("gnmt", "dgx1").devices(8))
+            .unwrap();
+        let doc = plan.to_json_string();
+        assert!(doc.ends_with('\n'));
+        assert_eq!(doc.trim_end_matches('\n'), plan.to_json().to_string());
     }
 }

@@ -92,6 +92,12 @@ impl ModelRegistry {
         self.entries.iter().map(|e| e.name).collect()
     }
 
+    /// The raw catalog, registration order (the service's `GET /models`
+    /// listing; later duplicates shadow earlier ones at lookup time).
+    pub fn entries(&self) -> &[ModelEntry] {
+        &self.entries
+    }
+
     fn find(&self, name: &str) -> Option<&ModelEntry> {
         // Reverse scan so later registrations shadow earlier ones.
         self.entries
@@ -251,6 +257,12 @@ impl TopologyRegistry {
 
     pub fn names(&self) -> Vec<&'static str> {
         self.entries.iter().map(|e| e.name).collect()
+    }
+
+    /// The raw catalog, registration order (the service's
+    /// `GET /topologies` listing).
+    pub fn entries(&self) -> &[TopologyEntry] {
+        &self.entries
     }
 
     fn find(&self, name: &str) -> Option<&TopologyEntry> {

@@ -417,7 +417,11 @@ impl SweepSpec {
         out
     }
 
-    fn validate(&self) -> Result<()> {
+    /// Reject structurally empty grids (an empty axis would silently
+    /// evaluate nothing).  [`run_sweep`]/[`stream_sweep`] call this
+    /// first; the service also calls it *before* committing a streamed
+    /// 200 response head, so a malformed spec can still get a 400.
+    pub fn validate(&self) -> Result<()> {
         for (axis, empty) in [
             ("models", self.models.is_empty()),
             ("topologies", self.topologies.is_empty()),
@@ -432,6 +436,157 @@ impl SweepSpec {
             }
         }
         Ok(())
+    }
+
+    /// Wire-format keys accepted by [`SweepSpec::from_json`] (the
+    /// service's `POST /sweep` body).
+    pub const WIRE_KEYS: [&'static str; 14] = [
+        "models", "topologies", "devices", "nodes", "device_mem_gb",
+        "batches", "families", "mp_degrees", "objective", "cost", "memory",
+        "collective", "curve_max_devices", "threads",
+    ];
+
+    /// Parse the service wire format for a sweep: a JSON object with any
+    /// subset of [`SweepSpec::WIRE_KEYS`].  Missing keys (and explicit
+    /// `null`s) take the [`SweepSpec::default`] axes — the paper's
+    /// evaluation grid — and unknown keys are rejected so a typoed axis
+    /// cannot silently widen the grid to its default.  Axis entries
+    /// mirror the CLI spellings: `batches` takes `"default"` / `"paper"`
+    /// / integers, `device_mem_gb` takes `"default"` / positive GB
+    /// numbers, `collective` takes `"auto"` or an algorithm name.
+    /// Integer entries are strict and capped like the `/plan` wire
+    /// ([`super::MAX_WIRE_DEVICES`]) — fractions and negatives are
+    /// errors, never truncated.
+    pub fn from_json(j: &Json) -> Result<SweepSpec> {
+        for key in j.as_obj()?.keys() {
+            if !SweepSpec::WIRE_KEYS.contains(&key.as_str()) {
+                bail!("unknown sweep key '{key}' (known: {})",
+                      SweepSpec::WIRE_KEYS.join(", "));
+            }
+        }
+        fn strings(j: &Json, key: &str, default: Vec<String>)
+                   -> Result<Vec<String>> {
+            match j.opt(key) {
+                None | Some(Json::Null) => Ok(default),
+                Some(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(|x| Ok(x.as_str()?.to_string()))
+                    .collect(),
+            }
+        }
+        // One strict-integer validator for both wire surfaces
+        // (crate::planner::wire_int).
+        fn usizes(j: &Json, key: &str, max: usize, default: Vec<usize>)
+                  -> Result<Vec<usize>> {
+            match j.opt(key) {
+                None | Some(Json::Null) => Ok(default),
+                Some(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(|x| super::wire_int(x, key, max))
+                    .collect(),
+            }
+        }
+        let d = SweepSpec::default();
+        let device_mem_gb = match j.opt("device_mem_gb") {
+            None | Some(Json::Null) => d.device_mem_gb,
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|x| match x {
+                    Json::Num(g) if g.is_finite() && *g > 0.0 => {
+                        Ok(Some(*g))
+                    }
+                    Json::Num(g) => bail!(
+                        "device_mem_gb must be a positive finite GB \
+                         figure, got {g}"),
+                    other => parse_mem_gb(other.as_str()?),
+                })
+                .collect::<Result<_>>()?,
+        };
+        let batches = match j.opt("batches") {
+            None | Some(Json::Null) => d.batches,
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|x| match x {
+                    Json::Num(_) => {
+                        let b =
+                            super::wire_int(x, "batches",
+                                            super::MAX_WIRE_INT)?;
+                        if b == 0 {
+                            bail!("batches entries must be >= 1");
+                        }
+                        Ok(BatchSpec::Fixed(b))
+                    }
+                    other => BatchSpec::parse(other.as_str()?),
+                })
+                .collect::<Result<_>>()?,
+        };
+        let families = match j.opt("families") {
+            None | Some(Json::Null) => d.families,
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|x| StrategyFamily::parse(x.as_str()?))
+                .collect::<Result<_>>()?,
+        };
+        let objective = match j.opt("objective") {
+            None | Some(Json::Null) => d.objective,
+            Some(v) => Objective::parse(v.as_str()?)?,
+        };
+        let memory = match j.opt("memory") {
+            None | Some(Json::Null) => d.memory,
+            Some(v) => MemoryModel::from_json(v)?,
+        };
+        let collective = match j.opt("collective") {
+            None | Some(Json::Null) => None,
+            Some(v) => match v.as_str()? {
+                "auto" => None,
+                other => Some(Algorithm::parse(other)?),
+            },
+        };
+        let cost_model = match j.opt("cost") {
+            None | Some(Json::Null) => d.cost_model,
+            Some(v) => v.as_str()?.to_string(),
+        };
+        let scalar = |key: &str, default: usize| -> Result<usize> {
+            match j.opt(key) {
+                None | Some(Json::Null) => Ok(default),
+                Some(v) => super::wire_int(v, key, super::MAX_WIRE_INT),
+            }
+        };
+        Ok(SweepSpec {
+            models: strings(j, "models", d.models)?,
+            topologies: strings(j, "topologies", d.topologies)?,
+            devices: usizes(j, "devices", super::MAX_WIRE_DEVICES,
+                            d.devices)?,
+            nodes: usizes(j, "nodes", super::MAX_WIRE_NODES, d.nodes)?,
+            device_mem_gb,
+            batches,
+            families,
+            mp_degrees: usizes(j, "mp_degrees", super::MAX_WIRE_INT,
+                               d.mp_degrees)?,
+            objective,
+            cost_model,
+            memory,
+            collective,
+            curve_max_devices: scalar("curve_max_devices",
+                                      d.curve_max_devices)?,
+            threads: scalar("threads", d.threads)?,
+        })
+    }
+
+    /// Number of grid points — `scenarios().len()` without
+    /// materialising them (saturating), so the service can bound a
+    /// client-supplied grid *before* allocating it.
+    pub fn cardinality(&self) -> usize {
+        [self.models.len(), self.topologies.len(), self.devices.len(),
+         self.nodes.len(), self.device_mem_gb.len(), self.batches.len(),
+         self.families.len()]
+            .iter()
+            .fold(1usize, |acc, &n| acc.saturating_mul(n))
     }
 }
 
@@ -490,31 +645,97 @@ fn plan_request(planner: &Planner, spec: &SweepSpec, sc: &Scenario)
     req
 }
 
-/// Evaluate the grid.  Scenario errors (unknown model, infeasible point,
-/// nothing-fits-in-memory) are captured per result; only a malformed spec
-/// fails the sweep itself.
-pub fn run_sweep(spec: &SweepSpec) -> Result<SweepResult> {
+/// Evaluate the grid, delivering each [`ScenarioResult`] to `sink` in
+/// canonical scenario order *as its ordered prefix completes* — the
+/// service's `POST /sweep` streams response chunks from this, and
+/// [`run_sweep`] collects it into a [`SweepResult`].  Workers share
+/// scenarios dynamically (the same scoped-threads + atomic-index
+/// machinery as [`parallel_map`]); a reorder buffer holds out-of-order
+/// completions so the sink observes canonical order regardless of
+/// thread count — concatenating the sink's inputs is byte-identical to
+/// the collected result for any `threads`.  A sink error stops the
+/// sweep early: no new scenarios are handed out, in-flight ones finish
+/// and are discarded, and the sink's error is returned.
+pub fn stream_sweep<F>(spec: &SweepSpec, mut sink: F) -> Result<()>
+where
+    F: FnMut(ScenarioResult) -> Result<()>,
+{
     spec.validate()?;
     let cost: Arc<dyn CostModel> = Arc::from(cost_by_name(&spec.cost_model)?);
     let planner = Planner::with_cost(Box::new(MemoCost::new(cost)));
     let scenarios = spec.scenarios();
-    let results = parallel_map(spec.threads, &scenarios, |_, sc| {
+    let eval = |sc: &Scenario| {
         match planner.plan(&plan_request(&planner, spec, sc)) {
             Ok(plan) => (Some(plan), None),
             Err(e) => (None, Some(format!("{e:#}"))),
         }
+    };
+    let n_workers = effective_threads(spec.threads, scenarios.len());
+    if n_workers <= 1 {
+        for scenario in scenarios {
+            let (plan, error) = eval(&scenario);
+            sink(ScenarioResult { scenario, plan, error })?;
+        }
+        return Ok(());
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, (Option<Plan>, Option<String>))>();
+    let mut slots: Vec<Option<(Option<Plan>, Option<String>)>> = Vec::new();
+    slots.resize_with(scenarios.len(), || None);
+    let mut sink_result: Result<()> = Ok(());
+    std::thread::scope(|scope| {
+        for _ in 0..n_workers {
+            let tx = tx.clone();
+            let next = &next;
+            let eval = &eval;
+            let scenarios = &scenarios;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= scenarios.len() {
+                    break;
+                }
+                let r = eval(&scenarios[i]);
+                if tx.send((i, r)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut flushed = 0usize;
+        'recv: for (i, r) in rx.iter() {
+            slots[i] = Some(r);
+            while flushed < slots.len() && slots[flushed].is_some() {
+                let (plan, error) = slots[flushed].take().unwrap();
+                let res = ScenarioResult {
+                    scenario: scenarios[flushed].clone(),
+                    plan,
+                    error,
+                };
+                flushed += 1;
+                if let Err(e) = sink(res) {
+                    sink_result = Err(e);
+                    // Exhaust the work counter so the workers stop
+                    // picking up scenarios (their in-flight item still
+                    // completes and is discarded with the buffer).
+                    next.store(scenarios.len(), Ordering::Relaxed);
+                    break 'recv;
+                }
+            }
+        }
     });
-    Ok(SweepResult {
-        results: scenarios
-            .into_iter()
-            .zip(results)
-            .map(|(scenario, (plan, error))| ScenarioResult {
-                scenario,
-                plan,
-                error,
-            })
-            .collect(),
-    })
+    sink_result
+}
+
+/// Evaluate the grid.  Scenario errors (unknown model, infeasible point,
+/// nothing-fits-in-memory) are captured per result; only a malformed spec
+/// fails the sweep itself.
+pub fn run_sweep(spec: &SweepSpec) -> Result<SweepResult> {
+    let mut results = Vec::with_capacity(spec.cardinality());
+    stream_sweep(spec, |r| {
+        results.push(r);
+        Ok(())
+    })?;
+    Ok(SweepResult { results })
 }
 
 // ==========================================================================
@@ -569,6 +790,17 @@ impl SweepResult {
             "scenarios",
             Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
         )])
+    }
+
+    /// The canonical serialised sweep document: compact JSON plus a
+    /// trailing newline — the exact bytes the `sweep` CLI prints on
+    /// stdout and writes with `--out-json`, and that the service's
+    /// chunked `POST /sweep` response concatenates to.  One writer, so
+    /// the surfaces cannot drift apart byte-wise.
+    pub fn to_json_string(&self) -> String {
+        let mut s = self.to_json().to_string();
+        s.push('\n');
+        s
     }
 
     /// Flat CSV: one row per scenario with the headline plan fields.
@@ -908,6 +1140,119 @@ mod tests {
             ..Default::default()
         };
         assert!(run_sweep(&spec).is_err());
+    }
+
+    #[test]
+    fn stream_sweep_delivers_canonical_order_at_any_thread_count() {
+        let mut spec = SweepSpec {
+            models: vec!["gnmt".into(), "inception-v3".into()],
+            devices: vec![8, 64],
+            families: vec![StrategyFamily::DpOnly, StrategyFamily::Hybrid],
+            curve_max_devices: 64,
+            threads: 1,
+            ..Default::default()
+        };
+        let want = run_sweep(&spec).unwrap();
+        for threads in [1usize, 2, 4, 0] {
+            spec.threads = threads;
+            let mut got = Vec::new();
+            stream_sweep(&spec, |r| {
+                got.push(r);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(got.len(), want.results.len(), "threads={threads}");
+            let streamed = SweepResult { results: got };
+            assert_eq!(streamed.to_json().to_string(),
+                       want.to_json().to_string(),
+                       "threads={threads}: streamed order/content drifted");
+        }
+    }
+
+    #[test]
+    fn stream_sweep_sink_error_stops_early() {
+        let spec = SweepSpec {
+            models: vec!["gnmt".into()],
+            devices: vec![8, 16, 32, 64],
+            families: vec![StrategyFamily::DpOnly],
+            curve_max_devices: 8,
+            threads: 2,
+            ..Default::default()
+        };
+        let mut seen = 0usize;
+        let err = stream_sweep(&spec, |_| {
+            seen += 1;
+            if seen == 2 {
+                anyhow::bail!("client went away")
+            }
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("client went away"));
+        assert_eq!(seen, 2, "sink must not be called after its error");
+    }
+
+    #[test]
+    fn sweep_spec_wire_format_parses_and_defaults() {
+        use crate::util::json::Json;
+        // Empty body = the default paper grid.
+        let spec = SweepSpec::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(spec, SweepSpec::default());
+        // Axes parse with CLI spellings; numbers allowed where the CLI
+        // takes them.
+        let spec = SweepSpec::from_json(&Json::parse(
+            r#"{"models":["gnmt"],"topologies":["dgx1-pod"],
+                "devices":[16],"nodes":[2],"device_mem_gb":["default",80],
+                "batches":["paper",64],"families":["dp"],
+                "mp_degrees":[2,4],"objective":"step-time",
+                "cost":"alpha-beta","collective":"ring",
+                "memory":{"recompute":true},"curve_max_devices":16,
+                "threads":2}"#).unwrap()).unwrap();
+        assert_eq!(spec.models, vec!["gnmt"]);
+        assert_eq!(spec.topologies, vec!["dgx1-pod"]);
+        assert_eq!(spec.devices, vec![16]);
+        assert_eq!(spec.nodes, vec![2]);
+        assert_eq!(spec.device_mem_gb, vec![None, Some(80.0)]);
+        assert_eq!(spec.batches,
+                   vec![BatchSpec::Paper, BatchSpec::Fixed(64)]);
+        assert_eq!(spec.families, vec![StrategyFamily::DpOnly]);
+        assert_eq!(spec.mp_degrees, vec![2, 4]);
+        assert_eq!(spec.objective, Objective::StepTime);
+        assert_eq!(spec.cost_model, "alpha-beta");
+        assert_eq!(spec.collective, Some(Algorithm::Ring));
+        assert!(spec.memory.recompute);
+        assert_eq!(spec.curve_max_devices, 16);
+        assert_eq!(spec.threads, 2);
+        // Unknown keys and bad entries are rejected — integers strictly
+        // (no silent truncation of fractions/negatives, wire caps on
+        // allocation-bearing axes).
+        for bad in [r#"{"model":["gnmt"]}"#,
+                    r#"{"device_mem_gb":[-4]}"#,
+                    r#"{"families":["magic"]}"#,
+                    r#"{"collective":"pigeon"}"#,
+                    r#"{"batches":[-1]}"#,
+                    r#"{"batches":[2.5]}"#,
+                    r#"{"batches":[0]}"#,
+                    r#"{"devices":[2.5]}"#,
+                    r#"{"devices":[1000000000000000]}"#,
+                    r#"{"nodes":[100000]}"#,
+                    r#"{"threads":-2}"#] {
+            assert!(SweepSpec::from_json(&Json::parse(bad).unwrap())
+                        .is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn cardinality_matches_scenarios() {
+        let spec = SweepSpec::default();
+        assert_eq!(spec.cardinality(), spec.scenarios().len());
+        let wide = SweepSpec {
+            models: vec!["a".into(), "b".into()],
+            devices: vec![1, 2, 3],
+            nodes: vec![1, 2],
+            ..Default::default()
+        };
+        assert_eq!(wide.cardinality(), wide.scenarios().len());
     }
 
     #[test]

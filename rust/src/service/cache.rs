@@ -1,0 +1,225 @@
+//! Single-flight LRU plan cache.
+//!
+//! The service's `POST /plan` amortisation layer: responses are keyed by
+//! the canonicalised request (see
+//! [`PlanRequest::canonical_json`](crate::planner::PlanRequest::canonical_json)),
+//! so equivalent spellings share one entry, and each entry is an
+//! [`OnceLock`] cell — concurrent requests for the same key **coalesce
+//! onto one in-flight computation** instead of evaluating the planner
+//! N times (the same trick the sweep engine's `MemoCost` uses, lifted
+//! to whole responses).
+//!
+//! Recency is a monotonic tick per entry; eviction scans for the
+//! minimum (O(entries), which at service cache sizes — hundreds — is
+//! noise next to a planner evaluation).  The map lock is held only for
+//! lookup/insert/evict, never across a computation.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::Result;
+
+/// A finished computation: the response document, or the (deterministic)
+/// error text.  Errors are cached like successes — the planner is a pure
+/// function of the canonical request, so "unknown model 'alexnet'" today
+/// is "unknown model 'alexnet'" tomorrow.
+pub type Cached = std::result::Result<Arc<String>, String>;
+
+type Cell = Arc<OnceLock<Cached>>;
+
+struct Entry {
+    cell: Cell,
+    last_used: u64,
+}
+
+struct State {
+    entries: HashMap<String, Entry>,
+    tick: u64,
+}
+
+/// Single-flight LRU cache of serialised plan responses.
+pub struct PlanCache {
+    capacity: usize,
+    state: Mutex<State>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    /// `capacity` is clamped to at least 1 (a zero-entry cache could
+    /// not even coalesce concurrent identical requests).
+    pub fn new(capacity: usize) -> Self {
+        PlanCache {
+            capacity: capacity.max(1),
+            state: Mutex::new(State { entries: HashMap::new(), tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up `key`, computing (and caching) the value with `compute`
+    /// on a miss.  Exactly one caller runs `compute` per cache fill —
+    /// concurrent callers with the same key block on the winner's cell
+    /// and are counted as hits (they were served without a planner
+    /// evaluation).  Returns the cached result and whether this call
+    /// was a hit.
+    pub fn get_or_compute<F>(&self, key: &str, compute: F) -> (Cached, bool)
+    where
+        F: FnOnce() -> Result<String>,
+    {
+        let cell = {
+            let mut st = self.state.lock().unwrap();
+            st.tick += 1;
+            let tick = st.tick;
+            if let Some(entry) = st.entries.get_mut(key) {
+                entry.last_used = tick;
+                entry.cell.clone()
+            } else {
+                let cell: Cell = Arc::new(OnceLock::new());
+                st.entries.insert(key.to_string(), Entry {
+                    cell: cell.clone(),
+                    last_used: tick,
+                });
+                if st.entries.len() > self.capacity {
+                    // Evict the stalest entry (never the one just
+                    // inserted — it owns the newest tick).  An evicted
+                    // in-flight cell stays alive for its waiters via
+                    // the Arc; only future requests re-compute.
+                    if let Some(stalest) = st
+                        .entries
+                        .iter()
+                        .min_by_key(|(_, e)| e.last_used)
+                        .map(|(k, _)| k.clone())
+                    {
+                        st.entries.remove(&stalest);
+                    }
+                }
+                cell
+            }
+        };
+        let mut filled = false;
+        let value = cell.get_or_init(|| {
+            filled = true;
+            match compute() {
+                Ok(v) => Ok(Arc::new(v)),
+                Err(e) => Err(format!("{e:#}")),
+            }
+        });
+        if filled {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        (value.clone(), !filled)
+    }
+
+    /// Requests served without a planner evaluation (including callers
+    /// coalesced onto another request's in-flight computation).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache fills — actual planner evaluations.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Resident entries (in-flight included).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ok(cached: &Cached) -> &str {
+        cached.as_ref().unwrap().as_str()
+    }
+
+    #[test]
+    fn cold_then_hot() {
+        let cache = PlanCache::new(8);
+        let (v, hit) = cache.get_or_compute("k", || Ok("plan".into()));
+        assert_eq!(ok(&v), "plan");
+        assert!(!hit);
+        let (v, hit) = cache.get_or_compute("k", || {
+            panic!("hot path must not recompute")
+        });
+        assert_eq!(ok(&v), "plan");
+        assert!(hit);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn errors_are_cached_too() {
+        let cache = PlanCache::new(8);
+        let (v, _) =
+            cache.get_or_compute("bad", || anyhow::bail!("unknown model"));
+        assert!(v.unwrap_err().contains("unknown model"));
+        let (v, hit) = cache.get_or_compute("bad", || {
+            panic!("deterministic errors must be served from cache")
+        });
+        assert!(v.is_err());
+        assert!(hit);
+    }
+
+    #[test]
+    fn lru_evicts_the_stalest_entry() {
+        let cache = PlanCache::new(2);
+        cache.get_or_compute("a", || Ok("A".into()));
+        cache.get_or_compute("b", || Ok("B".into()));
+        // Touch "a" so "b" is the stalest, then insert "c".
+        cache.get_or_compute("a", || unreachable!());
+        cache.get_or_compute("c", || Ok("C".into()));
+        assert_eq!(cache.len(), 2);
+        // "a" survived, "b" was evicted.
+        let (_, hit) = cache.get_or_compute("a", || unreachable!());
+        assert!(hit);
+        let (_, hit) = cache.get_or_compute("b", || Ok("B2".into()));
+        assert!(!hit, "evicted entry must recompute");
+    }
+
+    #[test]
+    fn concurrent_identical_requests_fill_once() {
+        let cache = PlanCache::new(8);
+        let fills = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    let (v, _) = cache.get_or_compute("k", || {
+                        fills.fetch_add(1, Ordering::Relaxed);
+                        // Widen the race window: the other threads must
+                        // block on the cell, not start their own fill.
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(20));
+                        Ok("slow plan".into())
+                    });
+                    assert_eq!(ok(&v), "slow plan");
+                });
+            }
+        });
+        assert_eq!(fills.load(Ordering::Relaxed), 1, "single-flight");
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 7);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let cache = PlanCache::new(0);
+        assert_eq!(cache.capacity(), 1);
+        cache.get_or_compute("a", || Ok("A".into()));
+        assert!(!cache.is_empty());
+    }
+}

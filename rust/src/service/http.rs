@@ -1,0 +1,257 @@
+//! Minimal HTTP/1.1 framing for the planner service (hyper unavailable
+//! offline; see DESIGN.md substitutions).
+//!
+//! Covers exactly what the service needs: request-line + header parsing
+//! with size caps, `Content-Length` bodies, fixed-length responses, and
+//! a chunked-transfer writer for the streamed `POST /sweep` endpoint.
+//! Every response carries `Connection: close` — the service is
+//! one-request-per-connection by design (the expensive path is the
+//! planner evaluation, not the TCP handshake, and closing keeps the
+//! worker pool's accounting trivial).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed request line + headers + body.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Uppercase method ("GET", "POST", …).
+    pub method: String,
+    /// Path with any `?query` suffix stripped (the service's endpoints
+    /// take no query parameters).
+    pub path: String,
+    /// Lowercased header names, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of a (lowercase) header name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Cap on the request line + headers (pre-body) section.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Cap on the request body (a `SweepSpec` is well under this).
+pub const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+
+/// Read one request off the stream.  Fails loudly on malformed framing,
+/// oversized heads/bodies, or EOF mid-request; the caller maps parse
+/// failures to a 400 where a response is still possible.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream);
+    let mut head = String::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("connection closed mid-request");
+        }
+        head.push_str(&line);
+        if head.len() > MAX_HEAD_BYTES {
+            bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        if line == "\r\n" || line == "\n" {
+            break;
+        }
+    }
+    let mut lines = head.lines();
+    let request_line = lines
+        .next()
+        .ok_or_else(|| anyhow!("empty request"))?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow!("missing method"))?
+        .to_ascii_uppercase();
+    let raw_path = parts
+        .next()
+        .ok_or_else(|| anyhow!("missing request path"))?;
+    let version = parts
+        .next()
+        .ok_or_else(|| anyhow!("missing HTTP version"))?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol '{version}'");
+    }
+    let path = raw_path
+        .split_once('?')
+        .map(|(p, _)| p)
+        .unwrap_or(raw_path)
+        .to_string();
+    let mut headers = Vec::new();
+    for l in lines {
+        if l.is_empty() {
+            break;
+        }
+        let (k, v) = l
+            .split_once(':')
+            .ok_or_else(|| anyhow!("malformed header line '{l}'"))?;
+        headers.push((k.trim().to_ascii_lowercase(),
+                      v.trim().to_string()));
+    }
+    let content_length = match headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+    {
+        None => 0usize,
+        Some((_, v)) => v
+            .parse::<usize>()
+            .map_err(|e| anyhow!("bad content-length '{v}': {e}"))?,
+    };
+    if content_length > MAX_BODY_BYTES {
+        bail!("request body of {content_length} bytes exceeds the \
+               {MAX_BODY_BYTES}-byte cap");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, headers, body })
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response (`Content-Length` framing,
+/// `Connection: close`).
+pub fn write_response(stream: &mut TcpStream, status: u16,
+                      content_type: &str, body: &[u8]) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\n\
+         Content-Type: {content_type}\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\
+         \r\n",
+        reason(status),
+        body.len());
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Chunked-transfer response writer for the streamed `POST /sweep`
+/// endpoint: the head commits the status before the sweep runs, then
+/// each completed scenario goes out as its own chunk.  Concatenating
+/// the chunks reproduces the `sweep` CLI's JSON document byte-for-byte.
+pub struct ChunkedWriter<'a> {
+    stream: &'a mut TcpStream,
+}
+
+impl<'a> ChunkedWriter<'a> {
+    /// Write the response head and return the chunk writer.
+    pub fn start(stream: &'a mut TcpStream, status: u16,
+                 content_type: &str) -> Result<Self> {
+        let head = format!(
+            "HTTP/1.1 {status} {}\r\n\
+             Content-Type: {content_type}\r\n\
+             Transfer-Encoding: chunked\r\n\
+             Connection: close\r\n\
+             \r\n",
+            reason(status));
+        stream.write_all(head.as_bytes())?;
+        Ok(ChunkedWriter { stream })
+    }
+
+    /// Write one chunk (empty input writes nothing — a zero-length
+    /// chunk would terminate the stream).
+    pub fn chunk(&mut self, data: &[u8]) -> Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.stream, "{:x}\r\n", data.len())?;
+        self.stream.write_all(data)?;
+        self.stream.write_all(b"\r\n")?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Terminate the chunk stream.  Dropping the writer *without*
+    /// calling this leaves the client with a truncated chunk stream —
+    /// exactly right when a sweep fails mid-flight, since the committed
+    /// 200 head cannot be taken back.
+    pub fn finish(self) -> Result<()> {
+        self.stream.write_all(b"0\r\n\r\n")?;
+        self.stream.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    /// Round-trip helper: write `raw` into a socket, parse it off the
+    /// other end.
+    fn parse(raw: &[u8]) -> Result<Request> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&raw).unwrap();
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let req = read_request(&mut conn);
+        client.join().unwrap();
+        req
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse(
+            b"POST /plan?x=1 HTTP/1.1\r\n\
+              Host: localhost\r\n\
+              Content-Type: application/json\r\n\
+              Content-Length: 16\r\n\
+              \r\n\
+              {\"model\":\"gnmt\"}").unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/plan", "query string must be stripped");
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.body, b"{\"model\":\"gnmt\"}");
+    }
+
+    #[test]
+    fn parses_bodyless_get() {
+        let req = parse(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(parse(b"\r\n\r\n").is_err());
+        assert!(parse(b"GET /x\r\n\r\n").is_err(), "missing version");
+        assert!(parse(b"GET /x SMTP/1.0\r\n\r\n").is_err());
+        assert!(parse(b"GET /x HTTP/1.1\r\nbroken header\r\n\r\n").is_err());
+        assert!(parse(b"POST /x HTTP/1.1\r\nContent-Length: oops\r\n\r\n")
+                    .is_err());
+        // Declared body longer than what arrives.
+        assert!(parse(b"POST /x HTTP/1.1\r\nContent-Length: 99\r\n\r\nhi")
+                    .is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_bodies() {
+        let head = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                           MAX_BODY_BYTES + 1);
+        assert!(parse(head.as_bytes()).is_err());
+    }
+}

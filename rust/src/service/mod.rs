@@ -1,0 +1,683 @@
+//! Planner-as-a-service: a dependency-free HTTP/1.1 daemon exposing the
+//! unified planner, so repeated `PlanRequest → Plan` and
+//! `SweepSpec → SweepResult` queries amortise across callers instead of
+//! paying a fresh CLI invocation each (the deployment shape of Kahira et
+//! al.'s training oracle).  Everything is `std` — `TcpListener` plus a
+//! scoped worker-thread pool in the style of
+//! [`parallel_map`](crate::planner::sweep::parallel_map).
+//!
+//! Endpoints:
+//!
+//! | route             | body                | response |
+//! |-------------------|---------------------|----------|
+//! | `POST /plan`      | `PlanRequest` JSON  | the plan document — byte-identical to the `plan` CLI's stdout |
+//! | `POST /sweep`     | `SweepSpec` JSON    | the sweep document, chunk-streamed per scenario as the grid completes |
+//! | `GET /models`     | —                   | model registry listing |
+//! | `GET /topologies` | —                   | topology registry listing |
+//! | `GET /healthz`    | —                   | `{"status":"ok"}` |
+//! | `GET /metrics`    | —                   | Prometheus text: request counts, cache hits/misses, per-endpoint latency histograms |
+//!
+//! The heart is the **single-flight LRU plan cache** ([`cache`]):
+//! requests are canonicalised
+//! ([`PlanRequest::canonical_json`](crate::planner::PlanRequest::canonical_json))
+//! so equivalent spellings — model
+//! aliases, explicitly-spelled defaults, permuted degree lists — share
+//! one entry, and concurrent identical requests coalesce onto a single
+//! in-flight planner evaluation.  Cache *hits* are requests served
+//! without an evaluation; *misses* are fills.  Worked examples and the
+//! full canonicalisation rules live in `docs/service.md`.
+//!
+//! ```no_run
+//! use hybridpar::service::{self, ServiceOptions};
+//!
+//! let bound = service::bind("127.0.0.1:0",
+//!                           ServiceOptions::default()).unwrap();
+//! println!("listening on {}", bound.local_addr());
+//! bound.serve_forever().unwrap();   // or .spawn() for tests/benches
+//! ```
+
+pub mod cache;
+pub mod http;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::{Counter, Histogram};
+use crate::planner::sweep::{stream_sweep, SweepSpec};
+use crate::planner::{cost_by_name, jobj, plan_request_from_json,
+                     ModelRegistry, Planner, TopologyRegistry};
+use crate::util::json::Json;
+
+use self::cache::PlanCache;
+
+const CONTENT_JSON: &str = "application/json";
+const CONTENT_PROM: &str = "text/plain; version=0.0.4";
+
+/// Metric name prefix for every exported series.
+const METRIC_PREFIX: &str = "hybridpar_service";
+
+/// The endpoint label set (fixed, so `/metrics` output is deterministic
+/// and unbounded label cardinality is impossible — unknown paths all
+/// land on "other").
+const ENDPOINTS: [&str; 7] = ["plan", "sweep", "models", "topologies",
+                              "healthz", "metrics", "other"];
+
+/// Status codes the service can emit (fixed label set, like
+/// [`ENDPOINTS`]).
+const CODES: [u16; 5] = [200, 400, 404, 405, 500];
+
+/// Cap on one `POST /sweep` grid.  A request describes its grid as a
+/// cartesian product, so a small body can demand an enormous amount of
+/// work; past this many scenarios the request is a 400, not a
+/// daemon-sized job.
+pub const MAX_SWEEP_SCENARIOS: usize = 4096;
+
+// ==========================================================================
+// Options
+// ==========================================================================
+
+/// Daemon knobs (`serve` CLI flags / the `[service]` config section).
+#[derive(Clone, Debug)]
+pub struct ServiceOptions {
+    /// Request worker threads (0 = one per available core).
+    pub threads: usize,
+    /// Plan-cache capacity in entries (clamped to ≥ 1).
+    pub cache_entries: usize,
+    /// Cost model used when a request omits `"cost"`; the same default
+    /// as the `plan` CLI, so minimal bodies stay byte-compatible.
+    pub default_cost: String,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> Self {
+        ServiceOptions {
+            threads: 0,
+            cache_entries: 128,
+            default_cost: "analytical".into(),
+        }
+    }
+}
+
+// ==========================================================================
+// Per-endpoint metrics
+// ==========================================================================
+
+/// Request counters (by endpoint × status code) and per-endpoint latency
+/// histograms, rendered as Prometheus text by
+/// [`PlannerService::metrics_doc`].
+struct ServiceMetrics {
+    /// `[endpoint][code]` request counts.
+    requests: Vec<Vec<Counter>>,
+    /// `[endpoint]` request latency.
+    latency: Vec<Histogram>,
+}
+
+impl ServiceMetrics {
+    fn new() -> Self {
+        ServiceMetrics {
+            requests: ENDPOINTS
+                .iter()
+                .map(|_| CODES.iter().map(|_| Counter::new()).collect())
+                .collect(),
+            latency: ENDPOINTS.iter().map(|_| Histogram::latency()).collect(),
+        }
+    }
+
+    fn endpoint_index(endpoint: &str) -> usize {
+        ENDPOINTS
+            .iter()
+            .position(|&e| e == endpoint)
+            .unwrap_or(ENDPOINTS.len() - 1)
+    }
+
+    fn record(&self, endpoint: &str, code: u16, seconds: f64) {
+        let e = Self::endpoint_index(endpoint);
+        let c = CODES.iter().position(|&x| x == code).unwrap_or(CODES.len() - 1);
+        self.requests[e][c].inc();
+        self.latency[e].observe(seconds);
+    }
+
+    fn render(&self, cache: &PlanCache) -> String {
+        let p = METRIC_PREFIX;
+        let mut s = String::new();
+        s.push_str(&format!(
+            "# HELP {p}_requests_total Requests served, by endpoint and \
+             status code.\n# TYPE {p}_requests_total counter\n"));
+        for (e, endpoint) in ENDPOINTS.iter().enumerate() {
+            for (c, code) in CODES.iter().enumerate() {
+                s.push_str(&self.requests[e][c].render(
+                    &format!("{p}_requests_total"),
+                    &format!("endpoint=\"{endpoint}\",code=\"{code}\"")));
+            }
+        }
+        s.push_str(&format!(
+            "# HELP {p}_plan_cache_hits_total Plan requests served \
+             without a planner evaluation (coalesced waiters included).\n\
+             # TYPE {p}_plan_cache_hits_total counter\n\
+             {p}_plan_cache_hits_total {}\n", cache.hits()));
+        s.push_str(&format!(
+            "# HELP {p}_plan_cache_misses_total Plan-cache fills (actual \
+             planner evaluations).\n\
+             # TYPE {p}_plan_cache_misses_total counter\n\
+             {p}_plan_cache_misses_total {}\n", cache.misses()));
+        s.push_str(&format!(
+            "# HELP {p}_plan_cache_entries Resident plan-cache entries.\n\
+             # TYPE {p}_plan_cache_entries gauge\n\
+             {p}_plan_cache_entries {}\n", cache.len()));
+        s.push_str(&format!(
+            "# HELP {p}_request_duration_seconds Request latency by \
+             endpoint.\n\
+             # TYPE {p}_request_duration_seconds histogram\n"));
+        for (e, endpoint) in ENDPOINTS.iter().enumerate() {
+            s.push_str(&self.latency[e].render(
+                &format!("{p}_request_duration_seconds"),
+                &format!("endpoint=\"{endpoint}\"")));
+        }
+        s
+    }
+}
+
+// ==========================================================================
+// The service
+// ==========================================================================
+
+/// JSON error document: `{"error":"…"}` plus newline.
+fn error_body(msg: &str) -> Arc<String> {
+    let mut s = jobj(vec![("error", Json::Str(msg.to_string()))]).to_string();
+    s.push('\n');
+    Arc::new(s)
+}
+
+/// Request-handling state shared by every worker thread: the registries,
+/// the single-flight plan cache, and the metrics.
+pub struct PlannerService {
+    models: ModelRegistry,
+    topologies: TopologyRegistry,
+    cache: PlanCache,
+    metrics: ServiceMetrics,
+    default_cost: String,
+}
+
+impl PlannerService {
+    /// Built-in registries.  Fails if `default_cost` does not resolve —
+    /// better at startup than on the first request.
+    pub fn new(opts: &ServiceOptions) -> Result<Self> {
+        let default_cost = cost_by_name(&opts.default_cost)
+            .context("service default cost model")?
+            .name()
+            .to_string();
+        Ok(PlannerService {
+            models: ModelRegistry::builtin(),
+            topologies: TopologyRegistry::builtin(),
+            cache: PlanCache::new(opts.cache_entries),
+            metrics: ServiceMetrics::new(),
+            default_cost,
+        })
+    }
+
+    /// The plan cache (tests and benches read the hit/miss counters).
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// `POST /plan`: parse → canonicalise → single-flight cache →
+    /// respond.  The 200 body is [`Plan::to_json_string`]
+    /// (byte-identical to the `plan` CLI); planner and parse errors are
+    /// 400s with `{"error":…}` bodies — and deterministic planner
+    /// errors are cached exactly like plans.
+    ///
+    /// [`Plan::to_json_string`]: crate::planner::Plan::to_json_string
+    fn handle_plan(&self, body: &[u8]) -> (u16, Arc<String>) {
+        let parsed = std::str::from_utf8(body)
+            .map_err(anyhow::Error::from)
+            .and_then(Json::parse)
+            .and_then(|j| plan_request_from_json(&j));
+        let (req, cost_name) = match parsed {
+            Ok(p) => p,
+            Err(e) => return (400, error_body(&format!("{e:#}"))),
+        };
+        let cost = match cost_by_name(
+            cost_name.as_deref().unwrap_or(&self.default_cost)) {
+            Ok(c) => c,
+            Err(e) => return (400, error_body(&format!("{e:#}"))),
+        };
+        let key = req.canonical_json(&self.models, cost.name()).to_string();
+        let (cached, _hit) = self.cache.get_or_compute(&key, || {
+            let planner = Planner::with_parts(self.models.clone(),
+                                              self.topologies.clone(), cost);
+            Ok(planner.plan(&req)?.to_json_string())
+        });
+        match cached {
+            Ok(doc) => (200, doc),
+            Err(e) => (400, error_body(&e)),
+        }
+    }
+
+    /// `POST /sweep`: parse + validate, then stream the sweep document
+    /// as chunked transfer encoding — one chunk per completed scenario,
+    /// in canonical order, concatenating to the `sweep` CLI's JSON
+    /// byte-for-byte.  Validation failures are plain 400s; a failure
+    /// *after* the 200 head is committed truncates the chunk stream
+    /// (recorded as a 500 in the metrics).
+    fn handle_sweep(&self, body: &[u8], stream: &mut TcpStream) -> u16 {
+        let parsed = std::str::from_utf8(body)
+            .map_err(anyhow::Error::from)
+            .and_then(Json::parse)
+            .and_then(|j| SweepSpec::from_json(&j))
+            .and_then(|mut spec| {
+                spec.validate()?;
+                cost_by_name(&spec.cost_model)?;
+                if spec.cardinality() > MAX_SWEEP_SCENARIOS {
+                    bail!("sweep grid of {} scenarios exceeds the \
+                           service cap of {MAX_SWEEP_SCENARIOS} — split \
+                           the request", spec.cardinality());
+                }
+                // Worker threads are a server resource: clamp the
+                // client's request to this host's cores (0 already
+                // means one per core, which effective_threads resolves).
+                if spec.threads != 0 {
+                    let cores = std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1);
+                    spec.threads = spec.threads.min(cores);
+                }
+                Ok(spec)
+            });
+        let spec = match parsed {
+            Ok(s) => s,
+            Err(e) => {
+                let body = error_body(&format!("{e:#}"));
+                let _ = http::write_response(stream, 400, CONTENT_JSON,
+                                             body.as_bytes());
+                return 400;
+            }
+        };
+        let Ok(mut writer) =
+            http::ChunkedWriter::start(stream, 200, CONTENT_JSON)
+        else {
+            return 500;
+        };
+        let mut first = true;
+        let streamed = stream_sweep(&spec, |r| {
+            let mut chunk = String::new();
+            chunk.push_str(if first { "{\"scenarios\":[" } else { "," });
+            first = false;
+            chunk.push_str(&r.to_json().to_string());
+            writer.chunk(chunk.as_bytes())
+        });
+        if streamed.is_err() {
+            return 500;
+        }
+        let tail: &[u8] = if first { b"{\"scenarios\":[]}\n" } else { b"]}\n" };
+        if writer.chunk(tail).is_err() || writer.finish().is_err() {
+            return 500;
+        }
+        200
+    }
+
+    /// `GET /models` document.
+    fn models_doc(&self) -> Arc<String> {
+        let entries: Vec<Json> = self
+            .models
+            .entries()
+            .iter()
+            .map(|e| jobj(vec![
+                ("name", Json::Str(e.name.into())),
+                ("aliases",
+                 Json::Arr(e.aliases
+                     .iter()
+                     .map(|&a| Json::Str(a.into()))
+                     .collect())),
+                ("default_batch", Json::Num(e.default_batch as f64)),
+            ]))
+            .collect();
+        let mut s = jobj(vec![("models", Json::Arr(entries))]).to_string();
+        s.push('\n');
+        Arc::new(s)
+    }
+
+    /// `GET /topologies` document (`max_devices` is `null` for
+    /// unbounded scale-out entries).
+    fn topologies_doc(&self) -> Arc<String> {
+        let entries: Vec<Json> = self
+            .topologies
+            .entries()
+            .iter()
+            .map(|e| jobj(vec![
+                ("name", Json::Str(e.name.into())),
+                ("aliases",
+                 Json::Arr(e.aliases
+                     .iter()
+                     .map(|&a| Json::Str(a.into()))
+                     .collect())),
+                ("max_devices",
+                 if e.max_devices == usize::MAX {
+                     Json::Null
+                 } else {
+                     Json::Num(e.max_devices as f64)
+                 }),
+                ("multi_node", Json::Bool(e.build_pod.is_some())),
+            ]))
+            .collect();
+        let mut s =
+            jobj(vec![("topologies", Json::Arr(entries))]).to_string();
+        s.push('\n');
+        Arc::new(s)
+    }
+
+    /// `GET /metrics` document (Prometheus text exposition).
+    pub fn metrics_doc(&self) -> String {
+        self.metrics.render(&self.cache)
+    }
+
+    /// Serve one connection: read a request, dispatch, record metrics.
+    /// One request per connection (every response is
+    /// `Connection: close`).
+    fn handle_conn(&self, mut stream: TcpStream) {
+        let t0 = Instant::now();
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        // Per-write timeout: a client that stops reading its response
+        // fills the kernel send buffer and would otherwise park this
+        // worker in write_all forever — with a small fixed pool that is
+        // a trivial denial of service.  (Sweep compute time between
+        // chunks is unaffected; the clock only runs inside a write.)
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(60)));
+        let _ = stream.set_nodelay(true);
+        let (endpoint, code) = match http::read_request(&mut stream) {
+            Err(e) => {
+                let body = error_body(&format!("{e:#}"));
+                let _ = http::write_response(&mut stream, 400, CONTENT_JSON,
+                                             body.as_bytes());
+                ("other", 400)
+            }
+            Ok(req) => self.dispatch(&req, &mut stream),
+        };
+        self.metrics.record(endpoint, code, t0.elapsed().as_secs_f64());
+    }
+
+    fn dispatch(&self, req: &http::Request, stream: &mut TcpStream)
+                -> (&'static str, u16) {
+        let endpoint = match req.path.as_str() {
+            "/plan" => "plan",
+            "/sweep" => "sweep",
+            "/models" => "models",
+            "/topologies" => "topologies",
+            "/healthz" => "healthz",
+            "/metrics" => "metrics",
+            _ => "other",
+        };
+        let (code, content_type, body): (u16, &str, Arc<String>) =
+            match (endpoint, req.method.as_str()) {
+                ("plan", "POST") => {
+                    let (code, body) = self.handle_plan(&req.body);
+                    (code, CONTENT_JSON, body)
+                }
+                // /sweep writes its own (chunked) response.
+                ("sweep", "POST") => {
+                    return (endpoint, self.handle_sweep(&req.body, stream));
+                }
+                ("models", "GET") => (200, CONTENT_JSON, self.models_doc()),
+                ("topologies", "GET") => {
+                    (200, CONTENT_JSON, self.topologies_doc())
+                }
+                ("healthz", "GET") => (
+                    200,
+                    CONTENT_JSON,
+                    Arc::new("{\"status\":\"ok\"}\n".to_string()),
+                ),
+                ("metrics", "GET") => {
+                    (200, CONTENT_PROM, Arc::new(self.metrics_doc()))
+                }
+                ("other", _) => (
+                    404,
+                    CONTENT_JSON,
+                    error_body(&format!(
+                        "no endpoint '{}' (known: /plan, /sweep, /models, \
+                         /topologies, /healthz, /metrics)", req.path)),
+                ),
+                (_, method) => (
+                    405,
+                    CONTENT_JSON,
+                    error_body(&format!(
+                        "{} does not support {method}", req.path)),
+                ),
+            };
+        let _ = http::write_response(stream, code, content_type,
+                                     body.as_bytes());
+        (endpoint, code)
+    }
+}
+
+// ==========================================================================
+// The daemon
+// ==========================================================================
+
+/// A bound-but-not-yet-serving daemon: bind first so callers can learn
+/// the ephemeral port (tests bind `127.0.0.1:0`) before the accept loop
+/// starts.
+pub struct BoundService {
+    listener: TcpListener,
+    service: Arc<PlannerService>,
+    threads: usize,
+}
+
+/// Bind `addr` with the given options.
+pub fn bind(addr: &str, opts: ServiceOptions) -> Result<BoundService> {
+    let service = Arc::new(PlannerService::new(&opts)?);
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("bind {addr}"))?;
+    Ok(BoundService { listener, service, threads: opts.threads })
+}
+
+/// Accept loop + worker pool, until `shutdown` flips (checked once per
+/// accepted connection; [`ServiceHandle::stop`] flips it and then dials
+/// the listener to unblock the acceptor).
+fn serve_on(listener: &TcpListener, service: &PlannerService,
+            threads: usize, shutdown: &AtomicBool) -> Result<()> {
+    let n_workers = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+    .max(1);
+    // parallel_map-style pool: scoped workers pull connections off one
+    // shared channel; the calling thread is the acceptor.
+    let (tx, rx) = mpsc::channel::<TcpStream>();
+    let rx = Mutex::new(rx);
+    std::thread::scope(|scope| {
+        for _ in 0..n_workers {
+            let rx = &rx;
+            scope.spawn(move || loop {
+                // Hold the receiver lock only for the dequeue: requests
+                // are handled concurrently across workers.
+                let conn = rx.lock().unwrap().recv();
+                match conn {
+                    Ok(stream) => service.handle_conn(stream),
+                    Err(_) => break, // acceptor hung up: drain complete
+                }
+            });
+        }
+        for conn in listener.incoming() {
+            if shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    if tx.send(stream).is_err() {
+                        break;
+                    }
+                }
+                // A failed accept (client reset mid-handshake) is not a
+                // daemon failure.
+                Err(_) => continue,
+            }
+        }
+        drop(tx);
+    });
+    Ok(())
+}
+
+impl BoundService {
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    pub fn service(&self) -> &PlannerService {
+        &self.service
+    }
+
+    /// Serve on the calling thread until the process dies (the `serve`
+    /// CLI path).
+    pub fn serve_forever(self) -> Result<()> {
+        let shutdown = AtomicBool::new(false);
+        serve_on(&self.listener, &self.service, self.threads, &shutdown)
+    }
+
+    /// Serve on a background thread; the returned handle stops the
+    /// daemon cleanly (tests and benches).
+    pub fn spawn(self) -> ServiceHandle {
+        let addr = self.local_addr();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let service = self.service.clone();
+        let sd = shutdown.clone();
+        let threads = self.threads;
+        let listener = self.listener;
+        let join = std::thread::spawn(move || {
+            let _ = serve_on(&listener, &service, threads, &sd);
+        });
+        ServiceHandle { addr, service: self.service, shutdown, join }
+    }
+}
+
+/// A running background daemon (from [`BoundService::spawn`]).
+pub struct ServiceHandle {
+    addr: SocketAddr,
+    service: Arc<PlannerService>,
+    shutdown: Arc<AtomicBool>,
+    join: std::thread::JoinHandle<()>,
+}
+
+impl ServiceHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn service(&self) -> &PlannerService {
+        &self.service
+    }
+
+    /// Flip the shutdown flag, unblock the acceptor with one last
+    /// connection, and join the serving thread (which drains in-flight
+    /// requests first).
+    pub fn stop(self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.join.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_index_is_total() {
+        for e in ENDPOINTS {
+            assert_eq!(ENDPOINTS[ServiceMetrics::endpoint_index(e)], e);
+        }
+        assert_eq!(ServiceMetrics::endpoint_index("bogus"),
+                   ENDPOINTS.len() - 1);
+    }
+
+    #[test]
+    fn metrics_doc_renders_every_series() {
+        let svc =
+            PlannerService::new(&ServiceOptions::default()).unwrap();
+        svc.metrics.record("plan", 200, 0.001);
+        svc.metrics.record("plan", 400, 0.002);
+        let doc = svc.metrics_doc();
+        assert!(doc.contains(
+            "hybridpar_service_requests_total{endpoint=\"plan\",\
+             code=\"200\"} 1"), "{doc}");
+        assert!(doc.contains("hybridpar_service_plan_cache_hits_total 0"));
+        assert!(doc.contains("hybridpar_service_plan_cache_misses_total 0"));
+        assert!(doc.contains(
+            "hybridpar_service_request_duration_seconds_bucket\
+             {endpoint=\"plan\","), "{doc}");
+        assert!(doc.contains(
+            "hybridpar_service_request_duration_seconds_count\
+             {endpoint=\"plan\"} 2"), "{doc}");
+    }
+
+    #[test]
+    fn plan_handler_caches_and_matches_cli_document() {
+        use crate::planner::{PlanRequest, Planner};
+        let svc =
+            PlannerService::new(&ServiceOptions::default()).unwrap();
+        let body = br#"{"model":"gnmt","devices":8}"#;
+        let (code, doc) = svc.handle_plan(body);
+        assert_eq!(code, 200);
+        let want = Planner::new()
+            .plan(&PlanRequest::new("gnmt", "dgx1").devices(8))
+            .unwrap()
+            .to_json_string();
+        assert_eq!(doc.as_str(), want,
+                   "service body must be byte-identical to the CLI doc");
+        // Alias + explicitly-spelled defaults share the entry.
+        let (code, doc2) = svc.handle_plan(
+            br#"{"model":"gnmt","topology":"dgx1","devices":8,
+                 "cost":"analytical"}"#);
+        assert_eq!(code, 200);
+        assert_eq!(doc2, doc);
+        assert_eq!((svc.cache().hits(), svc.cache().misses()), (1, 1));
+    }
+
+    #[test]
+    fn plan_handler_rejects_bad_bodies() {
+        let svc =
+            PlannerService::new(&ServiceOptions::default()).unwrap();
+        let bad_bodies: [&[u8]; 3] = [b"not json", br#"{"devices":8}"#,
+                                      br#"{"model":"gnmt","bogus_key":1}"#];
+        for bad in bad_bodies {
+            let (code, body) = svc.handle_plan(bad);
+            assert_eq!(code, 400, "{body}");
+            assert!(body.starts_with("{\"error\":"), "{body}");
+        }
+        // Unknown models are planner errors: 400, and cached.
+        let (code, _) = svc.handle_plan(br#"{"model":"alexnet"}"#);
+        assert_eq!(code, 400);
+        let (code, _) = svc.handle_plan(br#"{"model":"alexnet"}"#);
+        assert_eq!(code, 400);
+        assert_eq!(svc.cache().hits(), 1,
+                   "deterministic planner errors are cached");
+    }
+
+    #[test]
+    fn registry_docs_list_the_catalogs() {
+        let svc =
+            PlannerService::new(&ServiceOptions::default()).unwrap();
+        let models = svc.models_doc();
+        assert!(models.contains("\"inception-v3\""), "{models}");
+        assert!(models.contains("\"default_batch\":128"), "{models}");
+        let topos = svc.topologies_doc();
+        assert!(topos.contains("\"dgx1-pod\""), "{topos}");
+        assert!(topos.contains("\"max_devices\":null"), "{topos}");
+        assert!(topos.contains("\"multi_node\":true"), "{topos}");
+        // Both parse back as JSON.
+        Json::parse(&models).unwrap();
+        Json::parse(&topos).unwrap();
+    }
+
+    #[test]
+    fn bad_default_cost_fails_at_startup() {
+        let opts = ServiceOptions {
+            default_cost: "crystal-ball".into(),
+            ..Default::default()
+        };
+        assert!(PlannerService::new(&opts).is_err());
+    }
+}

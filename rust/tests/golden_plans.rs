@@ -61,27 +61,29 @@ fn golden_plans_match_fixtures() {
     let mut bootstrapped = 0usize;
     let mut compared = 0usize;
     for (model, topo, req) in requests() {
-        // Serialised outcome: the plan JSON, or the planner's error text
-        // (an infeasible pair is itself a golden behaviour).
-        let text = match planner.plan(&req) {
+        // Serialised outcome via the shared document writer (the same
+        // bytes the `plan` CLI prints and the service's POST /plan
+        // returns), or the planner's error text (an infeasible pair is
+        // itself a golden behaviour).
+        let doc = match planner.plan(&req) {
             Ok(plan) => {
                 // Determinism + round-trip hold regardless of fixtures.
-                let text = plan.to_json().to_string();
-                assert_eq!(planner.plan(&req).unwrap().to_json().to_string(),
-                           text,
+                let doc = plan.to_json_string();
+                assert_eq!(planner.plan(&req).unwrap().to_json_string(),
+                           doc,
                            "{model}@{topo}: non-deterministic serialisation");
-                let back =
-                    Plan::from_json(&Json::parse(&text).unwrap()).unwrap();
+                let back = Plan::from_json(
+                    &Json::parse(doc.trim_end()).unwrap()).unwrap();
                 assert_eq!(back, plan, "{model}@{topo}: round-trip drift");
-                text
+                doc
             }
-            Err(e) => format!("error: {e:#}"),
+            Err(e) => format!("error: {e:#}\n"),
         };
         let path = dir.join(format!("{model}__{topo}.json"));
         if !regen && path.exists() {
             let want = std::fs::read_to_string(&path)
                 .unwrap_or_else(|e| panic!("read {path:?}: {e}"));
-            assert_eq!(text, want.trim_end_matches('\n'),
+            assert_eq!(doc, want,
                        "{model}@{topo}: plan drifted from the checked-in \
                         fixture {path:?} — if intentional, regenerate \
                         with GOLDEN_REGEN=1 and commit the diff");
@@ -89,7 +91,7 @@ fn golden_plans_match_fixtures() {
         } else {
             std::fs::create_dir_all(&dir)
                 .unwrap_or_else(|e| panic!("mkdir {dir:?}: {e}"));
-            std::fs::write(&path, format!("{text}\n"))
+            std::fs::write(&path, &doc)
                 .unwrap_or_else(|e| panic!("write {path:?}: {e}"));
             bootstrapped += 1;
         }

@@ -1,0 +1,320 @@
+//! Planner-service integration tests over real sockets: a tiny HTTP/1.1
+//! client (chunked decoding included) drives a daemon bound to an
+//! ephemeral loopback port.
+//!
+//! The headline guarantees under test:
+//! * `POST /plan` bodies are **byte-identical** to the `plan` CLI's
+//!   stdout (one shared `Plan::to_json_string` writer);
+//! * N concurrent identical requests produce byte-identical bodies with
+//!   **exactly one cache fill** (single-flight), observable in
+//!   `/metrics`;
+//! * a cold/hot request pair shows hit-count 1 in `/metrics`;
+//! * equivalent request spellings (aliases, explicitly-spelled
+//!   defaults) share one cache entry;
+//! * `POST /sweep`'s chunk stream concatenates to the `sweep` CLI's
+//!   JSON document byte-for-byte.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use hybridpar::planner::sweep::{run_sweep, StrategyFamily, SweepSpec};
+use hybridpar::planner::{PlanRequest, Planner};
+use hybridpar::service::{self, ServiceHandle, ServiceOptions};
+
+// --------------------------------------------------------------------------
+// Minimal HTTP client
+// --------------------------------------------------------------------------
+
+struct Response {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Response {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn text(&self) -> &str {
+        std::str::from_utf8(&self.body).expect("utf-8 body")
+    }
+}
+
+fn decode_chunked(mut data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    loop {
+        let pos = data
+            .windows(2)
+            .position(|w| w == b"\r\n")
+            .expect("chunk size line");
+        let size = usize::from_str_radix(
+            std::str::from_utf8(&data[..pos]).unwrap().trim(), 16)
+            .expect("hex chunk size");
+        data = &data[pos + 2..];
+        if size == 0 {
+            break;
+        }
+        out.extend_from_slice(&data[..size]);
+        assert_eq!(&data[size..size + 2], b"\r\n", "chunk terminator");
+        data = &data[size + 2..];
+    }
+    out
+}
+
+fn raw_request(addr: SocketAddr, raw: &[u8]) -> Response {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(raw).unwrap();
+    let mut bytes = Vec::new();
+    stream.read_to_end(&mut bytes).unwrap();
+    let head_end = bytes
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("response head")
+        + 4;
+    let head = std::str::from_utf8(&bytes[..head_end]).unwrap();
+    let mut lines = head.split("\r\n");
+    let status: u16 = lines
+        .next()
+        .unwrap()
+        .split_whitespace()
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap();
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    let mut body = bytes[head_end..].to_vec();
+    if headers
+        .iter()
+        .any(|(k, v)| k == "transfer-encoding" && v == "chunked")
+    {
+        body = decode_chunked(&body);
+    }
+    Response { status, headers, body }
+}
+
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str)
+           -> Response {
+    let raw = format!(
+        "{method} {path} HTTP/1.1\r\n\
+         Host: test\r\n\
+         Content-Type: application/json\r\n\
+         Content-Length: {}\r\n\
+         \r\n\
+         {body}",
+        body.len());
+    raw_request(addr, raw.as_bytes())
+}
+
+fn get(addr: SocketAddr, path: &str) -> Response {
+    request(addr, "GET", path, "")
+}
+
+fn spawn_service(threads: usize, cache_entries: usize) -> ServiceHandle {
+    service::bind("127.0.0.1:0", ServiceOptions {
+        threads,
+        cache_entries,
+        ..Default::default()
+    })
+    .expect("bind ephemeral service")
+    .spawn()
+}
+
+// --------------------------------------------------------------------------
+// Tests
+// --------------------------------------------------------------------------
+
+#[test]
+fn healthz_registries_and_error_paths() {
+    let handle = spawn_service(2, 16);
+    let addr = handle.addr();
+
+    let health = get(addr, "/healthz");
+    assert_eq!(health.status, 200);
+    assert_eq!(health.text(), "{\"status\":\"ok\"}\n");
+    assert_eq!(health.header("connection"), Some("close"));
+
+    let models = get(addr, "/models");
+    assert_eq!(models.status, 200);
+    for name in ["inception-v3", "gnmt", "biglstm", "transformer-lm"] {
+        assert!(models.text().contains(&format!("\"{name}\"")),
+                "{}", models.text());
+    }
+    let topos = get(addr, "/topologies");
+    assert_eq!(topos.status, 200);
+    assert!(topos.text().contains("\"dgx1-pod\""));
+    assert!(topos.text().contains("\"multi_node\":true"));
+
+    // Unknown path, wrong method, malformed body, malformed framing.
+    assert_eq!(get(addr, "/nope").status, 404);
+    assert_eq!(get(addr, "/plan").status, 405);
+    let bad = request(addr, "POST", "/plan", "{not json");
+    assert_eq!(bad.status, 400);
+    assert!(bad.text().starts_with("{\"error\":"), "{}", bad.text());
+    let framing = raw_request(addr, b"GARBAGE\r\n\r\n");
+    assert_eq!(framing.status, 400);
+    // Allocation-bearing wire integers are capped: a huge device budget
+    // is a 400, not an attempt to materialise a 10^15-node graph.
+    let capped = request(addr, "POST", "/plan",
+                         r#"{"model":"gnmt","topology":"dgx1-pod",
+                             "devices":1000000000000000}"#);
+    assert_eq!(capped.status, 400);
+    assert!(capped.text().contains("wire cap"), "{}", capped.text());
+
+    handle.stop();
+}
+
+#[test]
+fn plan_is_byte_identical_to_cli_and_cold_hot_shows_one_hit() {
+    let handle = spawn_service(2, 16);
+    let addr = handle.addr();
+
+    // The exact document the `plan` CLI prints for the same query (the
+    // CLI's stdout IS Plan::to_json_string — one shared writer).
+    let want = Planner::new()
+        .plan(&PlanRequest::new("gnmt", "dgx1").devices(8))
+        .unwrap()
+        .to_json_string();
+
+    let cold = request(addr, "POST", "/plan",
+                       r#"{"model":"gnmt","devices":8}"#);
+    assert_eq!(cold.status, 200);
+    assert_eq!(cold.text(), want,
+               "POST /plan must be byte-identical to the plan CLI");
+
+    // Hot: an *equivalent spelling* (explicit defaults + alias-free
+    // canonical name) must hit the same entry and return the same bytes.
+    let hot = request(addr, "POST", "/plan",
+                      r#"{"model":"gnmt","topology":"dgx1","devices":8,
+                          "objective":"time-to-converge",
+                          "cost":"analytical","batch":128}"#);
+    assert_eq!(hot.status, 200);
+    assert_eq!(hot.body, cold.body);
+
+    // The cold/hot pair is 1 fill + 1 hit in /metrics.
+    let metrics = get(addr, "/metrics");
+    assert_eq!(metrics.status, 200);
+    assert!(metrics.header("content-type").unwrap().starts_with("text/plain"));
+    assert!(metrics.text().contains(
+        "hybridpar_service_plan_cache_hits_total 1"), "{}", metrics.text());
+    assert!(metrics.text().contains(
+        "hybridpar_service_plan_cache_misses_total 1"),
+        "{}", metrics.text());
+    assert!(metrics.text().contains(
+        "hybridpar_service_requests_total{endpoint=\"plan\",code=\"200\"} \
+         2"), "{}", metrics.text());
+
+    handle.stop();
+}
+
+#[test]
+fn concurrent_identical_plans_coalesce_to_one_fill() {
+    const CLIENTS: usize = 8;
+    let handle = spawn_service(4, 16);
+    let addr = handle.addr();
+
+    let bodies: Vec<Vec<u8>> = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..CLIENTS)
+            .map(|_| {
+                scope.spawn(move || {
+                    let r = request(
+                        addr, "POST", "/plan",
+                        r#"{"model":"inception-v3","devices":8}"#);
+                    assert_eq!(r.status, 200);
+                    r.body
+                })
+            })
+            .collect();
+        workers.into_iter().map(|w| w.join().unwrap()).collect()
+    });
+    for b in &bodies[1..] {
+        assert_eq!(b, &bodies[0],
+                   "concurrent identical requests must return \
+                    byte-identical bodies");
+    }
+    // Exactly one planner evaluation happened (single-flight): the
+    // other N-1 requests were served from the entry, in-flight or not.
+    let cache = handle.service().cache();
+    assert_eq!(cache.misses(), 1, "exactly one cache fill");
+    assert_eq!(cache.hits(), (CLIENTS - 1) as u64);
+    let metrics = get(addr, "/metrics");
+    assert!(metrics.text().contains(
+        "hybridpar_service_plan_cache_misses_total 1"),
+        "{}", metrics.text());
+
+    handle.stop();
+}
+
+#[test]
+fn sweep_stream_concatenates_to_the_cli_document() {
+    let handle = spawn_service(2, 16);
+    let addr = handle.addr();
+
+    let body = r#"{"models":["gnmt"],"topologies":["dgx1"],
+                   "devices":[8,64],"families":["dp","hybrid"],
+                   "curve_max_devices":64,"threads":2}"#;
+    let streamed = request(addr, "POST", "/sweep", body);
+    assert_eq!(streamed.status, 200);
+    assert_eq!(streamed.header("transfer-encoding"), Some("chunked"));
+
+    // The same grid through the in-process engine — the CLI's stdout.
+    let want = run_sweep(&SweepSpec {
+        models: vec!["gnmt".into()],
+        topologies: vec!["dgx1".into()],
+        devices: vec![8, 64],
+        families: vec![StrategyFamily::DpOnly, StrategyFamily::Hybrid],
+        curve_max_devices: 64,
+        threads: 2,
+        ..Default::default()
+    })
+    .unwrap()
+    .to_json_string();
+    assert_eq!(streamed.text(), want,
+               "chunk concatenation must equal the sweep CLI document");
+
+    // Malformed specs are plain 400s (no chunk stream committed).
+    let bad = request(addr, "POST", "/sweep", r#"{"modles":["gnmt"]}"#);
+    assert_eq!(bad.status, 400);
+    assert!(bad.text().starts_with("{\"error\":"));
+    let empty_axis = request(addr, "POST", "/sweep", r#"{"devices":[]}"#);
+    assert_eq!(empty_axis.status, 400);
+    // An oversized cartesian grid is rejected before any work starts:
+    // 3 models x 16 devices x 8 nodes x 4 batches x 3 families = 4608
+    // scenarios > the 4096 service cap.
+    let devices: Vec<String> = (1..=16).map(|d| d.to_string()).collect();
+    let too_big = format!(
+        r#"{{"devices":[{}],"nodes":[1,2,3,4,5,6,7,8],
+            "batches":["default","paper","32","64"]}}"#,
+        devices.join(","));
+    let capped = request(addr, "POST", "/sweep", &too_big);
+    assert_eq!(capped.status, 400);
+    assert!(capped.text().contains("cap"), "{}", capped.text());
+
+    handle.stop();
+}
+
+#[test]
+fn distinct_requests_fill_distinct_entries() {
+    let handle = spawn_service(2, 16);
+    let addr = handle.addr();
+
+    // nodes: null vs 1 is output-visible (Plan.nodes) — two entries.
+    let a = request(addr, "POST", "/plan",
+                    r#"{"model":"gnmt","devices":8}"#);
+    let b = request(addr, "POST", "/plan",
+                    r#"{"model":"gnmt","devices":8,"nodes":1}"#);
+    assert_eq!(a.status, 200);
+    assert_eq!(b.status, 200);
+    assert_ne!(a.body, b.body, "nodes must echo into the plan");
+    let cache = handle.service().cache();
+    assert_eq!(cache.misses(), 2);
+    assert_eq!(cache.hits(), 0);
+
+    handle.stop();
+}
