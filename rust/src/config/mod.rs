@@ -259,6 +259,8 @@ pub struct PlannerConfig {
     /// "ring" | "tree" | "hierarchical" pin (None = the `[cluster]`
     /// section's `collective`, itself defaulting to "auto").
     pub collective: Option<String>,
+    /// "auto" | "layerwise" — which search mechanism drives selection.
+    pub mechanism: String,
 }
 
 impl Default for PlannerConfig {
@@ -272,6 +274,7 @@ impl Default for PlannerConfig {
             objective: "time-to-converge".into(),
             cost_model: "analytical".into(),
             collective: None,
+            mechanism: "auto".into(),
         }
     }
 }
@@ -521,6 +524,7 @@ impl RunConfig {
                     .get("planner.collective")
                     .and_then(|v| v.as_str().ok())
                     .map(|s| s.to_string()),
+                mechanism: t.str_or("planner.mechanism", &d.mechanism),
             });
         }
         if t.values.keys().any(|k| k.starts_with("sweep.")) {
@@ -718,6 +722,12 @@ sizes = [1, 2, 3]
         assert_eq!(p.batch, Some(64));
         assert_eq!(p.objective, "step-time");
         assert_eq!(p.cost_model, "simulator");
+        assert_eq!(p.mechanism, "auto", "mechanism defaults to auto");
+        let t = Toml::parse(
+            "[planner]\nmodel = \"gnmt\"\nmechanism = \"layerwise\"\n")
+            .unwrap();
+        let p = RunConfig::from_toml(&t).unwrap().planner.unwrap();
+        assert_eq!(p.mechanism, "layerwise");
     }
 
     #[test]

@@ -23,7 +23,10 @@
 //! * [`Strategy::AsyncPs`]   — asynchronous parameter-server SGD with
 //!   bounded staleness (paper §7.3, implemented in [`alt`]);
 //! * [`Strategy::LocalSgd`]  — local SGD with periodic model averaging
-//!   (paper §7.3, implemented in [`alt`]).
+//!   (paper §7.3, implemented in [`alt`]);
+//! * [`Strategy::LayerWise`] — a mixed per-op assignment from the
+//!   layer-wise search ([`crate::layerwise`]); planner/sweep projection
+//!   only (the AOT artifacts execute the fixed strategies above).
 
 pub mod alt;
 
@@ -39,7 +42,7 @@ use crate::metrics::LossCurve;
 use crate::runtime::Engine;
 
 /// Parallelization strategy for a training run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Strategy {
     /// One device, fused step.
     Single,
@@ -62,6 +65,18 @@ pub enum Strategy {
     /// Local SGD with periodic model averaging (Crossbow-style, §7.3):
     /// `workers` train independently, averaging every `sync_every` steps.
     LocalSgd { workers: usize, sync_every: usize },
+    /// `dp_workers`-way DP of `degree`-device groups running a *mixed*
+    /// per-op assignment found by the layer-wise search
+    /// ([`crate::layerwise::solve`]): each op independently replicates,
+    /// tensor-splits along batch or feature, or pins to a group device.
+    /// `assignment` is (op name, config label) per DFG op.  A
+    /// planner/sweep projection — the AOT artifacts execute only the
+    /// fixed strategies above.
+    LayerWise {
+        degree: usize,
+        dp_workers: usize,
+        assignment: Vec<(String, String)>,
+    },
 }
 
 impl Strategy {
@@ -75,6 +90,7 @@ impl Strategy {
             Strategy::PipelinedHybrid { .. } => "pipelined-hybrid",
             Strategy::AsyncPs { .. } => "async-ps",
             Strategy::LocalSgd { .. } => "local-sgd",
+            Strategy::LayerWise { .. } => "layerwise",
         }
     }
 
@@ -89,6 +105,9 @@ impl Strategy {
             }
             Strategy::AsyncPs { workers, .. } => *workers,
             Strategy::LocalSgd { workers, .. } => *workers,
+            Strategy::LayerWise { degree, dp_workers, .. } => {
+                degree * dp_workers
+            }
         }
     }
 
@@ -116,6 +135,11 @@ impl Strategy {
             // mini-batch; one averaging round aggregates `workers`
             // trajectories, so the effective batch is workers × batch.
             Strategy::LocalSgd { workers, .. } => engine_batch * workers,
+            // Each group processes one mini-batch per step (replicated and
+            // split ops alike see the full batch), DP-scaled by workers.
+            Strategy::LayerWise { dp_workers, .. } => {
+                engine_batch * dp_workers
+            }
         }
     }
 }
@@ -183,27 +207,32 @@ impl Coordinator {
     /// Train the transformer LM on `corpus` under `cfg`.
     pub fn train(&self, corpus: &mut Corpus, cfg: &TrainConfig)
                  -> Result<TrainReport> {
-        match cfg.strategy {
+        match &cfg.strategy {
             Strategy::Single => self.train_single(corpus, cfg),
             Strategy::DataParallel { workers, delayed_factor } => {
-                self.train_dp(corpus, cfg, workers, delayed_factor)
+                self.train_dp(corpus, cfg, *workers, *delayed_factor)
             }
             Strategy::Hybrid { dp_workers, microbatches } => {
-                self.train_hybrid(corpus, cfg, dp_workers, microbatches)
+                self.train_hybrid(corpus, cfg, *dp_workers, *microbatches)
+            }
+            Strategy::LayerWise { degree, .. } => {
+                bail!("the AOT artifacts execute fixed strategies only; a \
+                       {degree}-wide layer-wise assignment is a \
+                       planner/sweep projection")
             }
             Strategy::PipelinedHybrid { stages, microbatches, replicas } => {
-                if stages != 2 {
+                if *stages != 2 {
                     bail!("runtime artifacts implement a 2-stage pipeline; \
                            a {stages}-stage PipelinedHybrid is a \
                            planner/sweep projection only");
                 }
-                self.train_hybrid(corpus, cfg, replicas, microbatches)
+                self.train_hybrid(corpus, cfg, *replicas, *microbatches)
             }
             Strategy::AsyncPs { workers, staleness } => {
-                self.train_async_ps(corpus, cfg, workers, staleness)
+                self.train_async_ps(corpus, cfg, *workers, *staleness)
             }
             Strategy::LocalSgd { workers, sync_every } => {
-                self.train_local_sgd(corpus, cfg, workers, sync_every)
+                self.train_local_sgd(corpus, cfg, *workers, *sync_every)
             }
         }
     }
@@ -544,6 +573,14 @@ mod tests {
             Strategy::AsyncPs { workers: 4, staleness: 2 }.devices(), 4);
         assert_eq!(
             Strategy::LocalSgd { workers: 4, sync_every: 8 }.devices(), 4);
+        assert_eq!(
+            Strategy::LayerWise {
+                degree: 2,
+                dp_workers: 4,
+                assignment: vec![("embed".into(), "replicate".into())],
+            }
+            .devices(),
+            8);
     }
 
     #[test]
@@ -563,6 +600,15 @@ mod tests {
         assert_eq!(ap.global_batch(8, 4), 8);
         let ls = Strategy::LocalSgd { workers: 4, sync_every: 8 };
         assert_eq!(ls.global_batch(8, 4), 32);
+        // A layer-wise group consumes one mini-batch per step; only the
+        // DP dimension scales the statistics.
+        let lw = Strategy::LayerWise {
+            degree: 4,
+            dp_workers: 2,
+            assignment: vec![],
+        };
+        assert_eq!(lw.global_batch(8, 4), 16);
+        assert_eq!(lw.kind(), "layerwise");
     }
 
     #[test]

@@ -327,4 +327,79 @@ mod tests {
         let g = diamond();
         assert_eq!(g.edges[0].bytes, 4e6);
     }
+
+    #[test]
+    fn topo_covers_disconnected_components() {
+        // Two islands: a -> b and c -> d with no edges between them.  The
+        // order must still visit every op exactly once, edges respected.
+        let mut g = Dfg::new("islands");
+        let a = g.add_op("a", 1.0, 1.0, 1.0);
+        let b = g.add_op("b", 1.0, 1.0, 1.0);
+        let c = g.add_op("c", 1.0, 1.0, 1.0);
+        let d = g.add_op("d", 1.0, 1.0, 1.0);
+        g.add_edge(a, b);
+        g.add_edge(c, d);
+        let order = g.topo_order().unwrap();
+        assert_eq!(order.len(), 4);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3], "each op exactly once");
+        let pos = |v: usize| order.iter().position(|&x| x == v).unwrap();
+        assert!(pos(a) < pos(b));
+        assert!(pos(c) < pos(d));
+        // An edgeless graph is trivially ordered too.
+        let mut lone = Dfg::new("edgeless");
+        lone.add_op("x", 1.0, 1.0, 1.0);
+        lone.add_op("y", 1.0, 1.0, 1.0);
+        assert_eq!(lone.topo_order().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn coarsen_merges_diamond_into_block_chain() {
+        // Prefix groups across a diamond: head -> {mid/b, mid/c} -> tail
+        // coarsens to the 3-block chain head -> mid -> tail, with the
+        // parallel-branch edges merged (bytes summed) and the intra-group
+        // edge (none here) dropped.
+        let mut g = Dfg::new("dia");
+        let a = g.add_op("head", 1e9, 4e6, 1e6);
+        let b = g.add_op("mid/b", 2e9, 4e6, 1e6);
+        let c = g.add_op("mid/c", 2e9, 4e6, 1e6);
+        let d = g.add_op("tail", 1e9, 4e6, 1e6);
+        g.add_edge(a, b);
+        g.add_edge(a, c);
+        g.add_edge(b, d);
+        g.add_edge(c, d);
+        let coarse = g.coarsen_by_prefix();
+        assert_eq!(coarse.n_ops(), 3);
+        // BTreeMap grouping: alphabetical block order head, mid, tail.
+        let names: Vec<&str> =
+            coarse.ops.iter().map(|o| o.name.as_str()).collect();
+        assert_eq!(names, vec!["head", "mid", "tail"]);
+        let mid = &coarse.ops[1];
+        assert!((mid.flops - 4e9).abs() < 1.0, "branch flops summed");
+        assert_eq!(coarse.edges.len(), 2, "parallel edges merge");
+        for e in &coarse.edges {
+            assert!((e.bytes - 8e6).abs() < 1.0,
+                    "merged edge sums both branch transfers: {}", e.bytes);
+        }
+        assert!(coarse.topo_order().is_ok());
+    }
+
+    #[test]
+    fn coarsen_keeps_disconnected_groups_apart() {
+        // Disconnected prefix groups stay disconnected — coarsening must
+        // not invent edges, and the result still topo-sorts.
+        let mut g = Dfg::new("split");
+        let a1 = g.add_op("left/x", 1e9, 1e6, 2.0);
+        let a2 = g.add_op("left/y", 1e9, 1e6, 2.0);
+        g.add_op("right/x", 3e9, 1e6, 4.0);
+        g.add_edge(a1, a2);
+        let coarse = g.coarsen_by_prefix();
+        assert_eq!(coarse.n_ops(), 2);
+        assert!(coarse.edges.is_empty(),
+                "no cross-group edge exists in the source");
+        assert_eq!(coarse.topo_order().unwrap().len(), 2);
+        assert!((coarse.total_mem() - 8.0).abs() < 1e-9,
+                "footprints survive the merge");
+    }
 }

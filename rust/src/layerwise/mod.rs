@@ -1,0 +1,839 @@
+//! Layer-wise strategy search: per-op parallelization configurations
+//! composed into a mixed whole-model strategy (PaSE-style, see
+//! PAPERS.md).
+//!
+//! The paper scores a *fixed* whole-model candidate family — DP, placed
+//! MP, GPipe hybrids at each degree M — but its own premise (the best
+//! split depends on per-layer compute/comm/memory shape) is left
+//! unexploited.  This module searches the per-op space instead: every op
+//! of the DFG independently picks one of
+//!
+//! * **replicate** — every device of the M-wide group computes the full
+//!   op (no intra-op comm: the replicas produce identical results);
+//! * **split-batch** — the mini-batch is sharded M ways; compute drops to
+//!   1/M but the op's *weight gradients* must be all-reduced inside the
+//!   group every step;
+//! * **split-feature** — the output features (and so the weights) are
+//!   sharded M ways; compute drops to 1/M and weight gradients stay
+//!   local, at the price of re-layout collectives on the op's edges;
+//! * **stage d** — the whole op is placed on group device `d`
+//!   (placement-style model parallelism; cross-stage edges pay
+//!   point-to-point transfers over [`crate::cluster::HwGraph`] links).
+//!
+//! Edge re-layout costs between adjacent ops are priced through
+//! [`crate::collective::best_allreduce_on`] (collective-class reshards)
+//! and [`crate::cluster::HwGraph::path_profile`] (stage-to-stage
+//! transfers).  A dynamic program over the topo-linearised DFG composes
+//! the per-op choices into the cheapest mixed assignment: exact Viterbi
+//! on chains (GNMT, BigLSTM, the transformer LM — and Inception once
+//! coarsened to blocks via [`crate::dfg::Dfg::coarsen_by_prefix`]),
+//! greedy-committed on irreducibly branchy DAGs.  An optional MILP
+//! refinement lowers the same pricing onto [`crate::milp::Problem`] /
+//! [`crate::milp::solve_milp`] and cross-checks (or improves) the DP
+//! optimum on small graphs.
+//!
+//! The objective is the serialised sum of intra-op times and edge
+//! re-layout costs — exact for chains executed one op at a time,
+//! conservative for DAGs whose branches could overlap.  The planner
+//! surfaces the result as `mechanism = "layerwise"` scorecard rows and a
+//! [`crate::coordinator::Strategy::LayerWise`] per-op assignment.
+
+use anyhow::{bail, Result};
+
+use crate::cluster::HwGraph;
+use crate::collective::{best_allreduce_on, TopoProfile, DEFAULT_ALPHA};
+use crate::dfg::Dfg;
+use crate::memory::{op_activation_bytes, op_weight_bytes};
+use crate::milp::{solve_milp, BnbConfig, MilpOutcome, Problem};
+
+/// One op's parallelization configuration inside an M-device group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpConfig {
+    /// Full op on every device (identical replicas, no intra comm).
+    Replicate,
+    /// Mini-batch sharded M ways; weight grads all-reduced in-group.
+    SplitBatch,
+    /// Output features (and weights) sharded M ways; grads stay local.
+    SplitFeature,
+    /// Whole op placed on group device `d` (placement-style MP).
+    Stage(usize),
+}
+
+impl OpConfig {
+    /// Wire label ("replicate", "split-batch", "split-feature", "stage3").
+    pub fn label(&self) -> String {
+        match self {
+            OpConfig::Replicate => "replicate".to_string(),
+            OpConfig::SplitBatch => "split-batch".to_string(),
+            OpConfig::SplitFeature => "split-feature".to_string(),
+            OpConfig::Stage(d) => format!("stage{d}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<OpConfig> {
+        Ok(match s {
+            "replicate" => OpConfig::Replicate,
+            "split-batch" => OpConfig::SplitBatch,
+            "split-feature" => OpConfig::SplitFeature,
+            other => match other.strip_prefix("stage") {
+                Some(d) => OpConfig::Stage(d.parse::<usize>().map_err(
+                    |e| anyhow::anyhow!("bad stage index '{other}': {e}"))?),
+                None => bail!("unknown op config '{other}' (known: \
+                               replicate, split-batch, split-feature, \
+                               stage<d>)"),
+            },
+        })
+    }
+}
+
+/// Search knobs.  `flops_per_sec` / `launch_overhead_s` derive the per-op
+/// Δ(k) exactly as the planner's cost models do
+/// ([`crate::planner::CostModel::op_time_params`]), so layer-wise rows
+/// are comparable with the fixed candidates they sit next to.
+#[derive(Clone, Debug)]
+pub struct LayerwiseOptions {
+    pub flops_per_sec: f64,
+    pub launch_overhead_s: f64,
+    /// Per-step software overhead for collective re-layout pricing.
+    pub alpha: f64,
+    /// Cap on enumerated `Stage(d)` configs per op (placement choices).
+    pub max_stage_configs: usize,
+    /// Lower the problem onto the MILP solver and adopt its solution
+    /// when it beats the DP (exact on any DAG; the DP is exact on chains
+    /// only).  Bounded by `milp_max_ops` — branch-and-bound over
+    /// `n_ops × n_configs` binaries is for small graphs.
+    pub refine_milp: bool,
+    pub milp_max_ops: usize,
+}
+
+impl Default for LayerwiseOptions {
+    fn default() -> Self {
+        LayerwiseOptions {
+            flops_per_sec: 7e12,
+            launch_overhead_s: 15e-6,
+            alpha: DEFAULT_ALPHA,
+            max_stage_configs: 8,
+            refine_milp: false,
+            milp_max_ops: 8,
+        }
+    }
+}
+
+/// The search result: a per-op assignment (at the *original* op
+/// granularity, even when the DP ran block-level) plus the priced step
+/// time and the per-device footprint inputs the memory-feasibility layer
+/// needs ([`crate::memory::layerwise`]).
+#[derive(Clone, Debug)]
+pub struct LayerWiseSolution {
+    /// Device-group width M the assignment targets.
+    pub degree: usize,
+    /// (op name, config label) per original op, in op-index order.
+    pub assignment: Vec<(String, String)>,
+    /// Priced step time: Σ intra-op + Σ edge re-layout (seconds).
+    pub step_time_s: f64,
+    /// Compute part of the step (Δ(k) terms).
+    pub compute_s: f64,
+    /// Communication part (grad sync + re-layout collectives + stage
+    /// transfers).
+    pub comm_s: f64,
+    /// Per group-device (weight bytes, raw activation bytes).
+    pub per_device: Vec<(f64, f64)>,
+    /// True when the assignment mixes ≥ 2 distinct configurations — the
+    /// cases where the search found something no fixed candidate is.
+    pub mixed: bool,
+    /// Search granularity: "op" (chain DFGs) or "block" (coarsened).
+    pub granularity: &'static str,
+    /// DP objective before any MILP refinement.
+    pub dp_step_time_s: f64,
+    /// MILP objective when refinement ran (cross-check artifact).
+    pub milp_step_time_s: Option<f64>,
+}
+
+// ==========================================================================
+// Pricing
+// ==========================================================================
+
+/// Priced search space over one work graph (op- or block-granular):
+/// per-(op, config) intra costs and per-edge config-pair re-layout
+/// matrices.  The DP and the MILP lowering read the *same* tables, so
+/// their optima can only differ by search power, never by pricing.
+struct Pricing {
+    m: usize,
+    configs: Vec<OpConfig>,
+    /// intra[i][c]: compute + intra-op comm of op i under config c.
+    intra: Vec<Vec<f64>>,
+    /// compute part of `intra` (for the solution's breakdown).
+    intra_compute: Vec<Vec<f64>>,
+    /// Work-graph edges (src, dst, relay[c_src][c_dst]).
+    edges: Vec<(usize, usize, Vec<Vec<f64>>)>,
+}
+
+/// Re-layout cost between a producer in `src` layout and a consumer in
+/// `dst` layout, in seconds.  `ar` is one group collective
+/// (allgather/reduce class) of the edge's bytes, `p2p` one point-to-point
+/// transfer of them.  Costs charge forward re-layout plus the mirrored
+/// backward-gradient re-layout:
+///
+/// * aligned batch shards, identical replicas, and same-device stages
+///   move nothing;
+/// * a replicated producer is free to consume forward (every device
+///   already holds the full tensor) and pays one collective backward to
+///   reassemble its output gradient;
+/// * any genuine reshard (batch↔feature, shard↔full, shard↔stage) pays
+///   one collective each way;
+/// * stage-to-stage hops pay the link path forward and backward.
+fn relayout(src: OpConfig, dst: OpConfig, ar: f64, p2p: f64) -> f64 {
+    use OpConfig::*;
+    match (src, dst) {
+        (Replicate, Replicate) | (SplitBatch, SplitBatch) => 0.0,
+        (Replicate, _) => ar,
+        (Stage(a), Stage(b)) if a == b => 0.0,
+        (Stage(_), Stage(_)) => 2.0 * p2p,
+        _ => 2.0 * ar,
+    }
+}
+
+impl Pricing {
+    fn build(work: &Dfg, hw: &HwGraph, m: usize, opts: &LayerwiseOptions)
+             -> Pricing {
+        let profile = TopoProfile::for_budget(hw, m);
+        // Stage-to-stage link: the co-located pair's path (NVLink-class
+        // defaults when the graph is degenerate), matching the pipeline
+        // estimator's stage link.
+        let devs = hw.devices();
+        let (link_bw, link_lat) = if devs.len() >= 2 {
+            hw.path_profile(devs[0], devs[1], 64e6)
+                .unwrap_or((25e9, 1.3e-6))
+        } else {
+            (25e9, 1.3e-6)
+        };
+        let ar = |bytes: f64| best_allreduce_on(m, bytes, &profile,
+                                                opts.alpha).cost_s;
+        let p2p = |bytes: f64| bytes / link_bw + link_lat;
+
+        let mut configs = vec![OpConfig::Replicate, OpConfig::SplitBatch,
+                               OpConfig::SplitFeature];
+        for d in 0..m.min(opts.max_stage_configs) {
+            configs.push(OpConfig::Stage(d));
+        }
+
+        let n = work.n_ops();
+        let mut intra = vec![vec![0.0; configs.len()]; n];
+        let mut intra_compute = vec![vec![0.0; configs.len()]; n];
+        for (i, op) in work.ops.iter().enumerate() {
+            let full = op.flops / opts.flops_per_sec + opts.launch_overhead_s;
+            let split =
+                op.flops / (opts.flops_per_sec * m as f64)
+                    + opts.launch_overhead_s;
+            let w = op_weight_bytes(op);
+            for (c, cfg) in configs.iter().enumerate() {
+                let (compute, comm) = match cfg {
+                    OpConfig::Replicate | OpConfig::Stage(_) => (full, 0.0),
+                    OpConfig::SplitBatch => (split, ar(w)),
+                    OpConfig::SplitFeature => (split, 0.0),
+                };
+                intra_compute[i][c] = compute;
+                intra[i][c] = compute + comm;
+            }
+        }
+
+        let edges = work
+            .edges
+            .iter()
+            .map(|e| {
+                let ar_e = ar(e.bytes);
+                let p2p_e = p2p(e.bytes);
+                let relay: Vec<Vec<f64>> = configs
+                    .iter()
+                    .map(|&cs| {
+                        configs
+                            .iter()
+                            .map(|&cd| relayout(cs, cd, ar_e, p2p_e))
+                            .collect()
+                    })
+                    .collect();
+                (e.src, e.dst, relay)
+            })
+            .collect();
+
+        Pricing { m, configs, intra, intra_compute, edges }
+    }
+
+    /// Total objective of a full assignment (config index per op).
+    fn price(&self, assign: &[usize]) -> f64 {
+        let intra: f64 =
+            assign.iter().enumerate().map(|(i, &c)| self.intra[i][c]).sum();
+        let relay: f64 = self
+            .edges
+            .iter()
+            .map(|(u, v, r)| r[assign[*u]][assign[*v]])
+            .sum();
+        intra + relay
+    }
+}
+
+// ==========================================================================
+// Dynamic program
+// ==========================================================================
+
+/// Linear order of a pure chain (≤ 1 pred and ≤ 1 succ everywhere, one
+/// source, fully connected); `None` for anything branchy or disconnected.
+fn chain_order(dfg: &Dfg) -> Option<Vec<usize>> {
+    let n = dfg.n_ops();
+    if n == 0 {
+        return None;
+    }
+    let succ = dfg.successors();
+    let pred = dfg.predecessors();
+    if succ.iter().any(|s| s.len() > 1) || pred.iter().any(|p| p.len() > 1) {
+        return None;
+    }
+    let sources: Vec<usize> =
+        (0..n).filter(|&v| pred[v].is_empty()).collect();
+    if sources.len() != 1 {
+        return None;
+    }
+    let mut order = Vec::with_capacity(n);
+    let mut at = sources[0];
+    loop {
+        order.push(at);
+        match succ[at].first() {
+            Some(&next) => at = next,
+            None => break,
+        }
+    }
+    if order.len() == n { Some(order) } else { None }
+}
+
+/// Exact Viterbi over a chain: `best[i][c]` = cheapest prefix ending with
+/// op `order[i]` in config `c`; backpointers recover the argmin.
+fn viterbi(p: &Pricing, order: &[usize]) -> Vec<usize> {
+    let nc = p.configs.len();
+    // Summed relay matrix per consecutive (u, v) pair (parallel edges
+    // accumulate).
+    let pair_relay = |u: usize, v: usize| -> Vec<Vec<f64>> {
+        let mut acc = vec![vec![0.0; nc]; nc];
+        for (eu, ev, r) in &p.edges {
+            if *eu == u && *ev == v {
+                for a in 0..nc {
+                    for b in 0..nc {
+                        acc[a][b] += r[a][b];
+                    }
+                }
+            }
+        }
+        acc
+    };
+    let mut best: Vec<Vec<f64>> = vec![p.intra[order[0]].clone()];
+    let mut back: Vec<Vec<usize>> = Vec::new();
+    for w in order.windows(2) {
+        let relay = pair_relay(w[0], w[1]);
+        let prev = best.last().unwrap().clone();
+        let mut row = vec![f64::INFINITY; nc];
+        let mut arg = vec![0usize; nc];
+        for c in 0..nc {
+            for (cp, &pv) in prev.iter().enumerate() {
+                let v = pv + relay[cp][c] + p.intra[w[1]][c];
+                if v < row[c] {
+                    row[c] = v;
+                    arg[c] = cp;
+                }
+            }
+        }
+        best.push(row);
+        back.push(arg);
+    }
+    // Backtrack from the cheapest final config.
+    let last = best.last().unwrap();
+    let mut c = last
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let mut rev = vec![c];
+    for arg in back.iter().rev() {
+        c = arg[c];
+        rev.push(c);
+    }
+    rev.reverse();
+    // rev[i] is the config of order[i]; scatter to op-index order.
+    let mut assign = vec![0usize; p.intra.len()];
+    for (i, &v) in order.iter().enumerate() {
+        assign[v] = rev[i];
+    }
+    assign
+}
+
+/// Greedy forward pass for branchy work graphs: ops commit in topo order,
+/// each picking the config that is cheapest against its already-committed
+/// predecessors.  A heuristic (no lookahead); the MILP refinement path is
+/// the exact solver for these graphs.
+fn greedy(p: &Pricing, order: &[usize]) -> Vec<usize> {
+    let nc = p.configs.len();
+    let n = p.intra.len();
+    let mut assign = vec![usize::MAX; n];
+    // Incoming relay matrices per op.
+    for &v in order {
+        let mut bc = 0usize;
+        let mut bv = f64::INFINITY;
+        for c in 0..nc {
+            let mut cost = p.intra[v][c];
+            for (eu, ev, r) in &p.edges {
+                if *ev == v && assign[*eu] != usize::MAX {
+                    cost += r[assign[*eu]][c];
+                }
+            }
+            if cost < bv {
+                bv = cost;
+                bc = c;
+            }
+        }
+        assign[v] = bc;
+    }
+    assign
+}
+
+// ==========================================================================
+// MILP lowering
+// ==========================================================================
+
+/// Lower the priced search space onto [`crate::milp::Problem`]: one
+/// binary `x[i,c]` per (op, config) with the intra cost as objective and
+/// `Σ_c x[i,c] = 1`, plus one continuous `y ∈ [0,1]` per (edge, config
+/// pair) with positive re-layout cost and `y ≥ x[u,cu] + x[v,cv] − 1`
+/// (the standard exact product linearisation — minimisation presses every
+/// `y` to the bound, so the LP relaxation's integral optima equal the
+/// combinatorial optimum).  Returns the problem and the `x` index map.
+fn lower_to_milp(p: &Pricing) -> (Problem, Vec<Vec<usize>>) {
+    let nc = p.configs.len();
+    let mut prob = Problem::minimize();
+    let x: Vec<Vec<usize>> = p
+        .intra
+        .iter()
+        .enumerate()
+        .map(|(i, row)| {
+            (0..nc)
+                .map(|c| {
+                    prob.add_binary(
+                        &format!("x_{i}_{}", p.configs[c].label()), row[c])
+                })
+                .collect()
+        })
+        .collect();
+    for row in &x {
+        let coeffs: Vec<(usize, f64)> =
+            row.iter().map(|&j| (j, 1.0)).collect();
+        prob.add_eq(&coeffs, 1.0);
+    }
+    for (ei, (u, v, relay)) in p.edges.iter().enumerate() {
+        for cu in 0..nc {
+            for cv in 0..nc {
+                let cost = relay[cu][cv];
+                if cost <= 0.0 {
+                    continue;
+                }
+                let y = prob.add_var(&format!("y_{ei}_{cu}_{cv}"), 0.0, 1.0,
+                                     cost);
+                prob.add_ge(&[(y, 1.0), (x[*u][cu], -1.0),
+                              (x[*v][cv], -1.0)],
+                            -1.0);
+            }
+        }
+    }
+    (prob, x)
+}
+
+/// Solve the MILP lowering, warm-started from the DP assignment.
+/// Returns (objective, assignment) of the best solution found.  The
+/// objective is re-priced through [`Pricing::price`] rather than taken
+/// from the LP arithmetic, so DP and MILP optima are bit-comparable:
+/// identical assignments price identically.
+fn milp_solve(p: &Pricing, dp_assign: &[usize])
+              -> Result<Option<(f64, Vec<usize>)>> {
+    let (prob, x) = lower_to_milp(p);
+    // Warm start: the DP solution as the incumbent upper bound.
+    let mut x0 = vec![0.0; prob.vars.len()];
+    for (i, &c) in dp_assign.iter().enumerate() {
+        x0[x[i][c]] = 1.0;
+    }
+    for (ei, (u, v, relay)) in p.edges.iter().enumerate() {
+        let (cu, cv) = (dp_assign[*u], dp_assign[*v]);
+        if relay[cu][cv] > 0.0 {
+            // y var order matches lower_to_milp's insertion; find by name
+            // cost instead of replaying the index arithmetic.
+            let name = format!("y_{ei}_{cu}_{cv}");
+            if let Some(j) =
+                prob.vars.iter().position(|vr| vr.name == name)
+            {
+                x0[j] = 1.0;
+            }
+        }
+    }
+    let incumbent = if prob.is_feasible(&x0, 1e-6) {
+        Some((p.price(dp_assign), x0))
+    } else {
+        None
+    };
+    let out = solve_milp(&prob, BnbConfig::default(), incumbent)?;
+    let xs = match out {
+        MilpOutcome::Optimal { x, .. }
+        | MilpOutcome::Feasible { x, .. } => x,
+        _ => return Ok(None),
+    };
+    let nc = p.configs.len();
+    let assign: Vec<usize> = x
+        .iter()
+        .map(|row| {
+            (0..nc)
+                .max_by(|&a, &b| {
+                    xs[row[a]].partial_cmp(&xs[row[b]]).unwrap()
+                })
+                .unwrap_or(0)
+        })
+        .collect();
+    let obj = p.price(&assign);
+    Ok(Some((obj, assign)))
+}
+
+// ==========================================================================
+// Solver entry point
+// ==========================================================================
+
+/// Find the cheapest per-op configuration assignment for running `dfg`
+/// on an `m`-device group of `hw`.  Chain DFGs solve exactly at op
+/// granularity; branchy DFGs are coarsened to blocks
+/// ([`Dfg::coarsen_by_prefix`]) first and solve exactly if the block
+/// graph is a chain (Inception's is), greedily otherwise — with the
+/// optional MILP refinement recovering exactness on small graphs.
+pub fn solve(dfg: &Dfg, hw: &HwGraph, m: usize, opts: &LayerwiseOptions)
+             -> Result<LayerWiseSolution> {
+    if m < 2 {
+        bail!("layer-wise search needs a device group of at least 2 \
+               (got {m})");
+    }
+    let physical = hw.devices().len();
+    if m > physical {
+        bail!("layer-wise device group of {m} exceeds the {physical} \
+               physical devices of the topology");
+    }
+    if dfg.n_ops() == 0 {
+        bail!("layer-wise search over an empty DFG");
+    }
+
+    // Pick the work granularity.
+    let (work, granularity) = match chain_order(dfg) {
+        Some(_) => (dfg.clone(), "op"),
+        None => (dfg.coarsen_by_prefix(), "block"),
+    };
+    let pricing = Pricing::build(&work, hw, m, opts);
+    let order = work.topo_order()?;
+
+    let dp_assign = match chain_order(&work) {
+        Some(chain) => viterbi(&pricing, &chain),
+        None => greedy(&pricing, &order),
+    };
+    let dp_obj = pricing.price(&dp_assign);
+
+    let (mut assign, mut obj) = (dp_assign.clone(), dp_obj);
+    let mut milp_obj = None;
+    if opts.refine_milp && work.n_ops() <= opts.milp_max_ops {
+        if let Some((mo, ma)) = milp_solve(&pricing, &dp_assign)? {
+            milp_obj = Some(mo);
+            if mo < obj - 1e-12 {
+                obj = mo;
+                assign = ma;
+            }
+        }
+    }
+
+    // Expand the work-graph assignment to original ops.  At block
+    // granularity every original op inherits its block's config; the
+    // block key is the op-name prefix up to the first '/'.
+    let per_op: Vec<OpConfig> = if granularity == "op" {
+        assign.iter().map(|&c| pricing.configs[c]).collect()
+    } else {
+        let key_of = |name: &str| -> String {
+            name.split('/').next().unwrap_or(name).to_string()
+        };
+        dfg.ops
+            .iter()
+            .map(|op| {
+                let key = key_of(&op.name);
+                let gi = work
+                    .ops
+                    .iter()
+                    .position(|g| g.name == key)
+                    .unwrap_or(0);
+                pricing.configs[assign[gi]]
+            })
+            .collect()
+    };
+
+    // Per group-device footprint inputs for the memory layer.
+    let mut per_device = vec![(0.0f64, 0.0f64); m];
+    for (op, cfg) in dfg.ops.iter().zip(&per_op) {
+        let w = op_weight_bytes(op);
+        let a = op_activation_bytes(op);
+        let mf = m as f64;
+        match cfg {
+            OpConfig::Replicate => {
+                for d in per_device.iter_mut() {
+                    d.0 += w;
+                    d.1 += a;
+                }
+            }
+            OpConfig::SplitBatch => {
+                for d in per_device.iter_mut() {
+                    d.0 += w;
+                    d.1 += a / mf;
+                }
+            }
+            OpConfig::SplitFeature => {
+                for d in per_device.iter_mut() {
+                    d.0 += w / mf;
+                    d.1 += a / mf;
+                }
+            }
+            OpConfig::Stage(k) => {
+                let slot = (*k).min(m - 1);
+                per_device[slot].0 += w;
+                per_device[slot].1 += a;
+            }
+        }
+    }
+
+    let compute_s: f64 = assign
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| pricing.intra_compute[i][c])
+        .sum();
+    let comm_s = obj - compute_s;
+    let mixed = {
+        let first = per_op.first().copied();
+        per_op.iter().any(|c| Some(*c) != first)
+    };
+
+    Ok(LayerWiseSolution {
+        degree: m,
+        assignment: dfg
+            .ops
+            .iter()
+            .zip(&per_op)
+            .map(|(op, cfg)| (op.name.clone(), cfg.label()))
+            .collect(),
+        step_time_s: obj,
+        compute_s,
+        comm_s: comm_s.max(0.0),
+        per_device,
+        mixed,
+        granularity,
+        dp_step_time_s: dp_obj,
+        milp_step_time_s: milp_obj,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+    use crate::models;
+
+    fn chain(specs: &[(f64, f64, f64)]) -> Dfg {
+        // (flops, out_bytes, mem_bytes) per op, linearly connected.
+        let mut g = Dfg::new("chain");
+        let mut prev = None;
+        for (i, &(f, o, m)) in specs.iter().enumerate() {
+            let op = g.add_op(&format!("op{i}"), f, o, m);
+            if let Some(p) = prev {
+                g.add_edge(p, op);
+            }
+            prev = Some(op);
+        }
+        g
+    }
+
+    fn diamond() -> Dfg {
+        let mut g = Dfg::new("diamond");
+        let a = g.add_op("a", 1e12, 4e6, 40e6);
+        let b = g.add_op("b", 2e12, 4e6, 40e6);
+        let c = g.add_op("c", 2e12, 4e6, 40e6);
+        let d = g.add_op("d", 1e12, 4e6, 40e6);
+        g.add_edge(a, b);
+        g.add_edge(a, c);
+        g.add_edge(b, d);
+        g.add_edge(c, d);
+        g
+    }
+
+    #[test]
+    fn config_labels_round_trip() {
+        for c in [OpConfig::Replicate, OpConfig::SplitBatch,
+                  OpConfig::SplitFeature, OpConfig::Stage(0),
+                  OpConfig::Stage(7)] {
+            assert_eq!(OpConfig::parse(&c.label()).unwrap(), c);
+        }
+        assert!(OpConfig::parse("magic").is_err());
+        assert!(OpConfig::parse("stagex").is_err());
+    }
+
+    #[test]
+    fn solver_beats_every_uniform_configuration() {
+        // The DP minimises over a superset of the uniform assignments, so
+        // it can never be worse than replicate-all / split-all.
+        let hw = cluster::dgx1(8);
+        let opts = LayerwiseOptions::default();
+        for m in [2usize, 4] {
+            let prof = models::gnmt(128);
+            let sol = solve(&prof.dfg, &hw, m, &opts).unwrap();
+            let pricing = Pricing::build(&prof.dfg, &hw, m, &opts);
+            let nc = pricing.configs.len();
+            for c in 0..nc {
+                let uniform = vec![c; prof.dfg.n_ops()];
+                assert!(sol.step_time_s
+                        <= pricing.price(&uniform) + 1e-12,
+                        "m={m} config {:?} beat the DP",
+                        pricing.configs[c]);
+            }
+        }
+    }
+
+    #[test]
+    fn big_weights_push_ops_off_split_batch() {
+        // One op with huge weights and modest compute: split-batch's grad
+        // all-reduce dwarfs the compute saving, so the DP must choose
+        // split-feature (grads local) or replicate for it.
+        let g = chain(&[
+            (2e12, 5e6, 40e6),   // compute-heavy, light weights
+            (1e10, 5e6, 3e9),    // weight-heavy (3 GB), light compute
+            (2e12, 5e6, 40e6),
+        ]);
+        let hw = cluster::dgx1(8);
+        let sol = solve(&g, &hw, 2,
+                        &LayerwiseOptions::default()).unwrap();
+        let cfg1 = OpConfig::parse(&sol.assignment[1].1).unwrap();
+        assert_ne!(cfg1, OpConfig::SplitBatch,
+                   "3 GB of grads cannot be worth all-reducing: {:?}",
+                   sol.assignment);
+    }
+
+    #[test]
+    fn tiny_ops_prefer_replication() {
+        // An op with negligible compute and weights feeding a sharded
+        // consumer: replicate (edge cost 1 collective) must beat the
+        // sharded configs (2 collectives on the out-edge).
+        let prof = models::biglstm(64);
+        let hw = cluster::dgx1(8);
+        let sol = solve(&prof.dfg, &hw, 2,
+                        &LayerwiseOptions::default()).unwrap();
+        assert!(sol.mixed, "biglstm must mix configs: {:?}",
+                sol.assignment);
+        assert_eq!(sol.assignment[0].0, "embed");
+        // The big softmax (3.2 GB weights) must not pick split-batch.
+        let sm = sol.assignment.last().unwrap();
+        assert_eq!(sm.0, "softmax");
+        assert_ne!(sm.1, "split-batch");
+    }
+
+    #[test]
+    fn chains_solve_at_op_granularity_and_branchy_at_block() {
+        let hw = cluster::dgx1(8);
+        let opts = LayerwiseOptions::default();
+        let g = models::gnmt(128);
+        assert_eq!(solve(&g.dfg, &hw, 2, &opts).unwrap().granularity,
+                   "op");
+        let inc = models::inception_v3(32);
+        let sol = solve(&inc.dfg, &hw, 2, &opts).unwrap();
+        assert_eq!(sol.granularity, "block");
+        assert_eq!(sol.assignment.len(), inc.dfg.n_ops());
+        // Ops of one block share one config.
+        for (name, cfg) in &sol.assignment {
+            if name.starts_with("mixed0a/") {
+                assert_eq!(cfg, &sol.assignment
+                           .iter()
+                           .find(|(n, _)| n.starts_with("mixed0a/"))
+                           .unwrap().1);
+            }
+        }
+    }
+
+    #[test]
+    fn dp_matches_milp_on_small_chains() {
+        // The Viterbi DP is exact on chains; the MILP lowering of the
+        // same pricing must agree to numerical tolerance.
+        let hw = cluster::dgx1(4);
+        let opts = LayerwiseOptions {
+            refine_milp: true,
+            ..Default::default()
+        };
+        let graphs = [
+            chain(&[(1e12, 4e6, 40e6), (1e10, 4e6, 2e9),
+                    (2e12, 8e6, 80e6)]),
+            chain(&[(5e11, 2e6, 1e9), (5e11, 2e6, 20e6),
+                    (5e11, 2e6, 1e9), (5e11, 2e6, 20e6)]),
+        ];
+        for g in &graphs {
+            for m in [2usize, 3] {
+                let sol = solve(g, &hw, m, &opts).unwrap();
+                let milp = sol.milp_step_time_s.expect("refinement ran");
+                let gap = (milp - sol.dp_step_time_s).abs()
+                    / sol.dp_step_time_s.max(1e-12);
+                assert!(gap < 1e-9,
+                        "m={m}: DP {} vs MILP {milp}",
+                        sol.dp_step_time_s);
+                assert!((sol.step_time_s - sol.dp_step_time_s).abs()
+                        < 1e-12,
+                        "agreement must keep the DP assignment");
+            }
+        }
+    }
+
+    #[test]
+    fn milp_refines_greedy_on_branchy_graphs() {
+        // On a diamond the greedy forward pass has no lookahead; the MILP
+        // is exact, so refinement can only improve (or match) it — and
+        // the reported step time is the better of the two.
+        let g = diamond();
+        let hw = cluster::dgx1(4);
+        let opts = LayerwiseOptions {
+            refine_milp: true,
+            ..Default::default()
+        };
+        let sol = solve(&g, &hw, 2, &opts).unwrap();
+        let milp = sol.milp_step_time_s.expect("refinement ran");
+        assert!(milp <= sol.dp_step_time_s + 1e-12);
+        assert!((sol.step_time_s - sol.dp_step_time_s.min(milp)).abs()
+                < 1e-12);
+    }
+
+    #[test]
+    fn per_device_footprints_cover_the_model() {
+        // Weight bytes across the group ≥ the model's (replication can
+        // only add); activations shrink with sharding.
+        let prof = models::gnmt(128);
+        let hw = cluster::dgx1(8);
+        let sol = solve(&prof.dfg, &hw, 2,
+                        &LayerwiseOptions::default()).unwrap();
+        assert_eq!(sol.per_device.len(), 2);
+        let total_w: f64 = prof.dfg.ops.iter()
+            .map(op_weight_bytes).sum();
+        let group_w: f64 = sol.per_device.iter().map(|d| d.0).sum();
+        assert!(group_w >= total_w * (1.0 - 1e-9),
+                "group weights {group_w} < model {total_w}");
+        assert!(sol.compute_s > 0.0);
+        assert!(sol.step_time_s >= sol.compute_s);
+    }
+
+    #[test]
+    fn solve_rejects_degenerate_inputs() {
+        let prof = models::gnmt(128);
+        let hw = cluster::dgx1(8);
+        assert!(solve(&prof.dfg, &hw, 1,
+                      &LayerwiseOptions::default()).is_err());
+        assert!(solve(&Dfg::new("empty"), &hw, 2,
+                      &LayerwiseOptions::default()).is_err());
+        assert!(solve(&prof.dfg, &hw, 64,
+                      &LayerwiseOptions::default()).is_err(),
+                "a 64-wide group cannot exist on an 8-device box");
+    }
+}

@@ -54,6 +54,13 @@
 //!   explicit GPipe pipeline, so
 //!   [`coordinator::Strategy::PipelinedHybrid`] candidates (the pipelined
 //!   ConvNet hybrids of PaSE / the Oracle paper) compete in every search.
+//! * Beyond the fixed candidate family, a PaSE-style *layer-wise* search
+//!   ([`layerwise`]) composes per-op configurations (replicate /
+//!   batch-split / feature-split / stage placement) into a mixed
+//!   whole-model strategy by dynamic programming over the DFG, with an
+//!   optional MILP cross-check; it appears as `mechanism = "layerwise"`
+//!   rows in every scorecard and takes over plan selection under
+//!   `PlanRequest::mechanism("layerwise")` / `plan --mechanism layerwise`.
 //! * The returned [`planner::Plan`] carries the chosen
 //!   [`coordinator::Strategy`], predicted step time, epochs-to-converge,
 //!   the end-to-end speedup curve, the placement / pipeline partition, and
@@ -117,6 +124,7 @@ pub mod models;
 pub mod memory;
 pub mod placer;
 pub mod pipeline;
+pub mod layerwise;
 pub mod parallel;
 pub mod data;
 pub mod config;

@@ -29,7 +29,8 @@ use hybridpar::planner::sweep::{effective_threads, parse_mem_gb,
                                 run_sweep, BatchSpec, StrategyFamily,
                                 SweepSpec};
 use hybridpar::planner::{cost_by_name, AnalyticalCost, CostModel,
-                         ModelRegistry, Objective, PlanRequest, Planner};
+                         ModelRegistry, Objective, PlanMechanism,
+                         PlanRequest, Planner};
 use hybridpar::runtime::Meta;
 use hybridpar::service::{self, ServiceOptions};
 use hybridpar::util::cli::Args;
@@ -47,7 +48,7 @@ COMMANDS:
              [--collective auto|ring|tree|hierarchical]
              [--batch B] [--objective time-to-converge|step-time]
              [--cost analytical|alpha-beta|simulator] [--mp-degrees 2,4]
-             [--pipeline-only] [--max-curve N]
+             [--mechanism auto|layerwise] [--pipeline-only] [--max-curve N]
              [--device-mem-gb G] [--optimizer sgd|momentum|adam]
              [--recompute] [--act-factor F] [--reserved-gb G]
              [--config cfg.toml] [--out-json path]
@@ -57,7 +58,8 @@ COMMANDS:
   sweep      --models a,b --topos dgx1,dgx1-pod --devices 8,64,256
              [--nodes 1,2,4] [--collective auto|ring|tree|hierarchical]
              [--device-mem-gb default|G,...]
-             [--batches default|paper|N,...] [--families dp,hybrid,pipelined]
+             [--batches default|paper|N,...]
+             [--families dp,hybrid,pipelined,layerwise]
              [--mp-degrees 2,4] [--threads N] [--objective ...] [--cost ...]
              [--optimizer ...] [--recompute] [--max-curve N]
              [--config cfg.toml] [--out-json p] [--out-csv p]
@@ -185,10 +187,14 @@ fn cmd_plan(args: &Args) -> Result<()> {
         base.collective.as_deref().unwrap_or(&cfg.collective));
     let collective = parse_collective(&collective_spec)?;
 
+    let mechanism = PlanMechanism::parse(
+        &args.get_or("mechanism", &base.mechanism))?;
+
     let mut req = PlanRequest::new(&model, &topo)
         .devices(devices)
         .objective(objective)
         .pipeline_only(args.has_flag("pipeline-only"))
+        .mechanism(mechanism)
         .memory(mem_model)
         .curve_to(args.get_usize("max-curve", 256)?);
     if let Some(n) = nodes {

@@ -409,6 +409,24 @@ pub fn pipelined(prof: &ModelProfile, model: &MemoryModel,
     Ok(peak.expect("at least one stage"))
 }
 
+/// Footprint of a layer-wise mixed assignment: the solver
+/// ([`crate::layerwise::solve`]) accumulates per group-device
+/// (weight bytes, raw activation bytes) pairs from each op's
+/// configuration — full on replicas, 1/M shards under tensor splits,
+/// single-device under stage placement — and this applies the same
+/// backward-stash / recompute accounting as the fixed-candidate
+/// estimators, reporting the peak device.
+pub fn layerwise(model: &MemoryModel, per_device: &[(f64, f64)])
+                 -> MemoryEstimate {
+    per_device
+        .iter()
+        .map(|&(w, raw)| {
+            MemoryEstimate::from_parts(model, w, act_resident(model, raw))
+        })
+        .max_by(|x, y| x.total_bytes.partial_cmp(&y.total_bytes).unwrap())
+        .unwrap_or_else(|| MemoryEstimate::from_parts(model, 0.0, 0.0))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -527,6 +545,24 @@ mod tests {
         let alt: Vec<usize> = (0..n).map(|i| i % 2).collect();
         let split = placed(&prof, &m, &alt);
         assert!(split.total_bytes < single.total_bytes);
+    }
+
+    #[test]
+    fn layerwise_peaks_on_the_heavy_device_and_matches_single() {
+        let m = MemoryModel::default();
+        let prof = models::gnmt(128);
+        let w: f64 = prof.dfg.ops.iter().map(op_weight_bytes).sum();
+        let a: f64 = prof.dfg.ops.iter().map(op_activation_bytes).sum();
+        // Everything replicated on one device ≡ the single-device model.
+        let rep = layerwise(&m, &[(w, a)]);
+        let single = single_device(&prof, &m);
+        assert!((rep.total_bytes - single.total_bytes).abs() < 1.0);
+        // The peak device wins, not the sum.
+        let uneven = layerwise(&m, &[(w, a), (w / 4.0, a / 4.0)]);
+        assert!((uneven.total_bytes - single.total_bytes).abs() < 1.0);
+        // Empty group degenerates to the reserve-only estimate.
+        let empty = layerwise(&m, &[]);
+        assert!((empty.total_bytes - m.reserved_bytes).abs() < 1.0);
     }
 
     #[test]

@@ -140,6 +140,16 @@ pub trait CostModel: Send + Sync {
             Ok(memory::single_device(prof, mem))
         }
     }
+
+    /// The (flops_per_sec, launch_overhead_s) pair this model derives
+    /// per-op times Δ(k) from — exported so the layer-wise search
+    /// ([`crate::layerwise::solve`]) prices op configurations with the
+    /// *same* device-rate assumptions as the fixed candidates it sits
+    /// next to in a scorecard.  Models that wrap another model forward to
+    /// it; the default is the analytical model's blended V100 rate.
+    fn op_time_params(&self) -> (f64, f64) {
+        (7e12, 15e-6)
+    }
 }
 
 /// Resolve a cost model by name.
@@ -325,6 +335,10 @@ impl CostModel for AnalyticalCost {
                _step_compute_s: f64, _devices: usize) -> ScalingEfficiency {
         ScalingEfficiency::Perfect
     }
+
+    fn op_time_params(&self) -> (f64, f64) {
+        (self.flops_per_sec, self.launch_overhead_s)
+    }
 }
 
 // ==========================================================================
@@ -385,6 +399,10 @@ impl CostModel for AlphaBetaCost {
             topo: TopoProfile::for_budget(hw, devices),
             force: None,
         }
+    }
+
+    fn op_time_params(&self) -> (f64, f64) {
+        self.inner.op_time_params()
     }
 }
 
@@ -494,6 +512,10 @@ impl CostModel for SimulatorCost {
                step_compute_s: f64, devices: usize) -> ScalingEfficiency {
         self.inner.scaling(prof, hw, step_compute_s, devices)
     }
+
+    fn op_time_params(&self) -> (f64, f64) {
+        self.inner.op_time_params()
+    }
 }
 
 #[cfg(test)]
@@ -507,6 +529,24 @@ mod tests {
         assert!(is_chain(&models::gnmt(128)));
         assert!(is_chain(&models::biglstm(64)));
         assert!(!is_chain(&models::inception_v3(32)));
+    }
+
+    #[test]
+    fn op_time_params_forward_through_wrappers() {
+        // The layer-wise search prices ops with the same Δ(k) derivation
+        // as the model it rides along with — wrappers must forward.
+        let tweaked = AnalyticalCost {
+            flops_per_sec: 9e12,
+            launch_overhead_s: 1e-6,
+            ..Default::default()
+        };
+        assert_eq!(tweaked.op_time_params(), (9e12, 1e-6));
+        let ab = AlphaBetaCost { inner: tweaked.clone(), alpha: 5e-6 };
+        assert_eq!(ab.op_time_params(), (9e12, 1e-6));
+        let sim = SimulatorCost { inner: ab, ..Default::default() };
+        assert_eq!(sim.op_time_params(), (9e12, 1e-6));
+        assert_eq!(AnalyticalCost::default().op_time_params(),
+                   (7e12, 15e-6));
     }
 
     #[test]

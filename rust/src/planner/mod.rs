@@ -55,7 +55,7 @@ pub mod cost;
 pub mod registry;
 pub mod sweep;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -66,7 +66,8 @@ pub use registry::{ModelEntry, ModelRegistry, TopologyEntry,
 
 use crate::collective::Algorithm;
 use crate::coordinator::Strategy;
-use crate::memory::{Feasibility, MemoryEstimate, MemoryModel};
+use crate::layerwise::{self, LayerwiseOptions};
+use crate::memory::{self, Feasibility, MemoryEstimate, MemoryModel};
 use crate::parallel::NetworkModel;
 use crate::util::json::Json;
 
@@ -95,6 +96,41 @@ impl Objective {
             "step-time" | "step" | "throughput" => Objective::StepTime,
             other => bail!("unknown objective '{other}' \
                             (known: time-to-converge, step-time)"),
+        })
+    }
+}
+
+/// Which search mechanism drives plan *selection*.
+///
+/// Under [`PlanMechanism::Auto`] the planner picks among the paper's
+/// fixed candidates (DP / placed / pipelined) exactly as before — the
+/// layer-wise rows are analysis material in the scorecard.  Under
+/// [`PlanMechanism::Layerwise`] the per-op search
+/// ([`crate::layerwise::solve`]) drives selection: the chosen strategy is
+/// the best mixed assignment across the requested degrees.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanMechanism {
+    /// Fixed-candidate selection (the default; layer-wise rows are
+    /// advisory).
+    Auto,
+    /// The layer-wise mixed assignment drives selection.
+    Layerwise,
+}
+
+impl PlanMechanism {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlanMechanism::Auto => "auto",
+            PlanMechanism::Layerwise => "layerwise",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" | "fixed" => PlanMechanism::Auto,
+            "layerwise" | "layer-wise" | "pase" => PlanMechanism::Layerwise,
+            other => bail!("unknown plan mechanism '{other}' \
+                            (known: auto, layerwise)"),
         })
     }
 }
@@ -142,6 +178,10 @@ pub struct PlanRequest {
     /// model pick the best feasible one per candidate
     /// ([`crate::collective::best_allreduce`]).
     pub collective: Option<Algorithm>,
+    /// Which mechanism drives selection (`--mechanism layerwise` runs
+    /// the per-op search; the default `auto` keeps fixed-candidate
+    /// selection with layer-wise rows as scorecard analysis).
+    pub mechanism: PlanMechanism,
 }
 
 impl PlanRequest {
@@ -159,6 +199,7 @@ impl PlanRequest {
             memory: MemoryModel::default(),
             nodes: None,
             collective: None,
+            mechanism: PlanMechanism::Auto,
         }
     }
 
@@ -216,14 +257,20 @@ impl PlanRequest {
         self
     }
 
+    /// Let the layer-wise per-op search drive selection.
+    pub fn mechanism(mut self, m: PlanMechanism) -> Self {
+        self.mechanism = m;
+        self
+    }
+
     /// Wire-format keys accepted by [`plan_request_from_json`] (the
     /// service's `POST /plan` body).  `"cost"` selects the cost model
     /// and is returned separately by the parser — it configures the
     /// [`Planner`], not the request.
-    pub const WIRE_KEYS: [&'static str; 13] = [
+    pub const WIRE_KEYS: [&'static str; 14] = [
         "model", "topology", "devices", "batch", "objective", "mp_degrees",
         "pipeline_only", "curve_max_devices", "device_mem_gb", "memory",
-        "nodes", "collective", "cost",
+        "nodes", "collective", "mechanism", "cost",
     ];
 
     /// The cache-canonical form of this request: a sorted-key JSON
@@ -289,6 +336,7 @@ impl PlanRequest {
              self.collective
                  .map(|a| Json::Str(a.as_str().into()))
                  .unwrap_or(Json::Null)),
+            ("mechanism", Json::Str(self.mechanism.as_str().into())),
             ("cost", Json::Str(cost_model.to_string())),
         ])
     }
@@ -388,6 +436,9 @@ pub fn plan_request_from_json(j: &Json)
             other => Some(Algorithm::parse(other)?),
         },
     };
+    if let Some(m) = j.opt("mechanism").filter(|v| **v != Json::Null) {
+        req.mechanism = PlanMechanism::parse(m.as_str()?)?;
+    }
     let cost = match j.opt("cost") {
         None | Some(Json::Null) => None,
         Some(v) => Some(v.as_str()?.to_string()),
@@ -709,6 +760,91 @@ impl Planner {
                 alt_scored.insert(m, a);
             }
         }
+        // --- layer-wise mixed candidates ---------------------------------
+        // One per degree: the per-op configuration DP
+        // ([`crate::layerwise::solve`]) priced with this cost model's own
+        // Δ(k) parameters, surfaced as `mechanism = "layerwise"` scorecard
+        // rows — and, under `--mechanism layerwise`, driving selection.
+        // When the degree's best *fixed* candidate is faster than the
+        // mixed assignment (deep GPipe micro-batch overlap is outside the
+        // per-op configuration space), the layer-wise row honestly mirrors
+        // that fixed candidate instead: the search can always fall back to
+        // a fixed strategy, so its row is never worse than the fixed
+        // family at the same degree.  `pipeline_only` requests restrict
+        // the scorecard to pipelined rows, so advisory layer-wise rows are
+        // suppressed unless the request pins the layer-wise mechanism.
+        struct LwScored {
+            step_time_s: f64,
+            strategy: Strategy,
+            mem: MemoryEstimate,
+            microbatches: Option<usize>,
+            note: String,
+        }
+        let mut lw_scored: BTreeMap<usize, LwScored> = BTreeMap::new();
+        if req.mechanism == PlanMechanism::Layerwise || !req.pipeline_only {
+            let (fps, launch) = self.cost.op_time_params();
+            let lw_opts = LayerwiseOptions {
+                flops_per_sec: fps,
+                launch_overhead_s: launch,
+                ..Default::default()
+            };
+            for &m in &degrees {
+                let sol = match layerwise::solve(&prof.dfg, &hw, m,
+                                                 &lw_opts) {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                let nd =
+                    if req.devices % m == 0 { req.devices / m } else { 0 };
+                let fallback = best_scored
+                    .get(&m)
+                    .filter(|b| b.est.step_time_s < sol.step_time_s);
+                let entry = match fallback {
+                    Some(b) => {
+                        let mb = b.est.microbatches.unwrap_or(2);
+                        let strategy =
+                            if b.est.mechanism == MpMechanism::Pipelined {
+                                Strategy::PipelinedHybrid {
+                                    stages: m,
+                                    microbatches: mb,
+                                    replicas: nd,
+                                }
+                            } else {
+                                Strategy::Hybrid { dp_workers: nd,
+                                                   microbatches: mb }
+                            };
+                        LwScored {
+                            step_time_s: b.est.step_time_s,
+                            strategy,
+                            mem: b.mem,
+                            microbatches: b.est.microbatches,
+                            note: format!(
+                                "layer-wise search fell back to the fixed \
+                                 {} candidate (mixed assignment priced \
+                                 {:.3} ms)",
+                                b.est.mechanism.as_str(),
+                                sol.step_time_s * 1e3),
+                        }
+                    }
+                    None => LwScored {
+                        step_time_s: sol.step_time_s,
+                        mem: memory::layerwise(mem_model, &sol.per_device),
+                        microbatches: None,
+                        note: format!(
+                            "{} per-op assignment at {} granularity",
+                            if sol.mixed { "mixed" } else { "uniform" },
+                            sol.granularity),
+                        strategy: Strategy::LayerWise {
+                            degree: m,
+                            dp_workers: nd,
+                            assignment: sol.assignment,
+                        },
+                    },
+                };
+                lw_scored.insert(m, entry);
+            }
+        }
+
         // Degrees whose best mechanism both estimated and fit in memory —
         // the ones Eq. 5 and the speedup curve may use.
         let feasible_degrees: Vec<usize> =
@@ -752,7 +888,7 @@ impl Planner {
             exec_ms.push(1);
         }
         exec_ms.extend(exec_net.mp_speedups.iter().map(|&(m, _)| m));
-        if exec_ms.is_empty() {
+        if exec_ms.is_empty() && req.mechanism == PlanMechanism::Auto {
             bail!(
                 "no runtime-executable strategy fits in {:.1} GB per \
                  device for '{}' (DP-only needs {:.1} GB){}",
@@ -766,53 +902,149 @@ impl Planner {
         }
 
         // --- selection ---------------------------------------------------
-        let (chosen_m, devices_used, chosen_score) = match req.objective {
-            Objective::TimeToConverge => {
-                match Self::best_among(&exec_net, &exec_ms, req.devices) {
-                    Some((m, su)) => (m, req.devices, su),
-                    None => self
-                        .back_off(&exec_net, &exec_ms, req.devices)
-                        .ok_or_else(|| anyhow!(
-                            "no strategy converges for '{}' at any device \
-                             count <= {}", prof.name, req.devices))?,
-                }
-            }
-            Objective::StepTime => {
-                // Step-rate score: SU^M × N_dp × SE(N_dp), no E(B) term.
-                let mut best: Option<(usize, usize, f64)> = None;
-                for &m in &exec_ms {
-                    if req.devices % m != 0 {
-                        continue;
+        // Under `--mechanism layerwise` the per-op search drives
+        // selection: the best feasible layer-wise candidate across the
+        // requested degrees wins, scored by the same objective math as
+        // the fixed family.  Layer-wise strategies are planner/sweep
+        // projections (the coordinator executes fixed strategies only),
+        // so the runtime M ∈ {1, 2} restriction does not apply.
+        let lw_chosen: Option<(usize, usize, f64)> =
+            if req.mechanism == PlanMechanism::Layerwise {
+                let lw_best_at = |budget: usize| {
+                    let mut best: Option<(usize, usize, f64)> = None;
+                    for (&m, lw) in &lw_scored {
+                        if budget % m != 0 || !lw.mem.fits(available) {
+                            continue;
+                        }
+                        let nd = budget / m;
+                        let su_m = serial / lw.step_time_s;
+                        let score = match req.objective {
+                            Objective::TimeToConverge => match net
+                                .epochs
+                                .efficiency_ratio(
+                                    (nd * prof.mini_batch) as f64)
+                            {
+                                Some(r) => {
+                                    su_m * net.se.at_mp(nd, m)
+                                        * nd as f64 * r
+                                }
+                                None => continue,
+                            },
+                            Objective::StepTime => {
+                                su_m * nd as f64 * net.se.at_mp(nd, m)
+                            }
+                        };
+                        if best.map_or(true, |(_, _, b)| score > b) {
+                            best = Some((m, budget, score));
+                        }
                     }
-                    let n_dp = req.devices / m;
-                    let su_m = net.su_m(m).unwrap_or(1.0);
-                    let score =
-                        su_m * n_dp as f64 * net.se.at_mp(n_dp, m);
-                    if best.map_or(true, |(_, _, b)| score > b) {
-                        best = Some((m, req.devices, score));
+                    best
+                };
+                // Same divergence back-off as the fixed family: halve
+                // the budget until some degree converges (the BigLSTM
+                // regime — the best configuration uses fewer devices
+                // than are available).
+                let mut found = lw_best_at(req.devices);
+                let mut budget = req.devices / 2;
+                while found.is_none() && budget >= 2 {
+                    found = lw_best_at(budget);
+                    budget /= 2;
+                }
+                Some(found.ok_or_else(|| anyhow!(
+                    "no layer-wise candidate is feasible for '{}' at {} \
+                     devices (requested degrees {:?} must divide the \
+                     budget, fit {:.1} GB per device, and converge)",
+                    prof.name, req.devices, degrees, available / 1e9))?)
+            } else {
+                None
+            };
+
+        let (chosen_m, devices_used, chosen_score) = match lw_chosen {
+            Some((m, d, score)) => (m, d, score),
+            None => match req.objective {
+                Objective::TimeToConverge => {
+                    match Self::best_among(&exec_net, &exec_ms,
+                                           req.devices) {
+                        Some((m, su)) => (m, req.devices, su),
+                        None => self
+                            .back_off(&exec_net, &exec_ms, req.devices)
+                            .ok_or_else(|| anyhow!(
+                                "no strategy converges for '{}' at any \
+                                 device count <= {}",
+                                prof.name, req.devices))?,
                     }
                 }
-                best.ok_or_else(|| anyhow!("no feasible strategy"))?
-            }
+                Objective::StepTime => {
+                    // Step-rate score: SU^M × N_dp × SE(N_dp), no E(B)
+                    // term.
+                    let mut best: Option<(usize, usize, f64)> = None;
+                    for &m in &exec_ms {
+                        if req.devices % m != 0 {
+                            continue;
+                        }
+                        let n_dp = req.devices / m;
+                        let su_m = net.su_m(m).unwrap_or(1.0);
+                        let score =
+                            su_m * n_dp as f64 * net.se.at_mp(n_dp, m);
+                        if best.map_or(true, |(_, _, b)| score > b) {
+                            best = Some((m, req.devices, score));
+                        }
+                    }
+                    best.ok_or_else(|| anyhow!("no feasible strategy"))?
+                }
+            },
         };
         let n_dp = devices_used / chosen_m.max(1);
         let global_batch = n_dp * prof.mini_batch;
-        let chosen_su_m = net.su_m(chosen_m).unwrap_or(1.0);
+        // The chosen candidate's artifacts: the layer-wise winner carries
+        // its own step time, footprint and strategy; fixed winners keep
+        // the cost-model estimate's.
+        let lw_row = if lw_chosen.is_some() {
+            lw_scored.get(&chosen_m)
+        } else {
+            None
+        };
+        let chosen_su_m = match lw_row {
+            Some(lw) => serial / lw.step_time_s,
+            None => net.su_m(chosen_m).unwrap_or(1.0),
+        };
         let step_worker = serial * time_factor / chosen_su_m;
         let predicted_step_s =
             step_worker / net.se.at_mp(n_dp, chosen_m).max(1e-12);
         let predicted_epochs = net.epochs.epochs(global_batch as f64);
 
-        let chosen_est = best_scored.get(&chosen_m).map(|s| &s.est);
-        let chosen_mem = if chosen_m == 1 {
-            Some(serial_mem)
+        let chosen_est = if lw_row.is_some() {
+            None
         } else {
-            best_scored.get(&chosen_m).map(|s| s.mem)
+            best_scored.get(&chosen_m).map(|s| &s.est)
         };
-        let mechanism = chosen_est
-            .map(|e| e.mechanism)
-            .unwrap_or(MpMechanism::None);
-        let strategy = if devices_used == 1 {
+        let chosen_mem = match lw_row {
+            Some(lw) => Some(lw.mem),
+            None if chosen_m == 1 => Some(serial_mem),
+            None => best_scored.get(&chosen_m).map(|s| s.mem),
+        };
+        let mechanism_str = match lw_row {
+            Some(_) => "layerwise".to_string(),
+            None => chosen_est
+                .map(|e| e.mechanism)
+                .unwrap_or(MpMechanism::None)
+                .as_str()
+                .to_string(),
+        };
+        let strategy = if let Some(lw) = lw_row {
+            // Scorecard rows price the full budget; a backed-off plan
+            // re-derives the DP width from the devices actually used.
+            let mut s = lw.strategy.clone();
+            match &mut s {
+                Strategy::LayerWise { dp_workers, .. } => *dp_workers = n_dp,
+                Strategy::Hybrid { dp_workers, .. } => *dp_workers = n_dp,
+                Strategy::PipelinedHybrid { replicas, .. } => {
+                    *replicas = n_dp;
+                }
+                _ => {}
+            }
+            s
+        } else if devices_used == 1 {
             Strategy::Single
         } else if chosen_m <= 1 {
             Strategy::DataParallel { workers: devices_used,
@@ -823,7 +1055,9 @@ impl Planner {
             // runtime pipeline is degenerate — default to 2.
             let microbatches =
                 chosen_est.and_then(|e| e.microbatches).unwrap_or(2);
-            if mechanism == MpMechanism::Pipelined {
+            if chosen_est.map(|e| e.mechanism)
+                == Some(MpMechanism::Pipelined)
+            {
                 Strategy::PipelinedHybrid {
                     stages: chosen_m,
                     microbatches,
@@ -832,6 +1066,10 @@ impl Planner {
             } else {
                 Strategy::Hybrid { dp_workers: n_dp, microbatches }
             }
+        };
+        let chosen_microbatches = match lw_row {
+            Some(lw) => lw.microbatches,
+            None => chosen_est.and_then(|e| e.microbatches),
         };
 
         // --- scorecard ---------------------------------------------------
@@ -843,7 +1081,8 @@ impl Planner {
         let mut scorecard = Vec::new();
         let mut push_row = |m: usize, su_row: f64,
                             est: Option<&MpEstimate>,
-                            mem: Option<&MemoryEstimate>| {
+                            mem: Option<&MemoryEstimate>,
+                            lw: Option<&LwScored>| {
             let feasibility = mem
                 .map(|e| Feasibility::check(e, available))
                 .unwrap_or(Feasibility::Feasible);
@@ -872,7 +1111,15 @@ impl Planner {
             };
             let row_mechanism =
                 est.map(|e| e.mechanism).unwrap_or(MpMechanism::None);
-            let microbatches = est.and_then(|e| e.microbatches);
+            let mechanism_label = if lw.is_some() {
+                "layerwise".to_string()
+            } else {
+                row_mechanism.as_str().to_string()
+            };
+            let microbatches = match lw {
+                Some(l) => l.microbatches,
+                None => est.and_then(|e| e.microbatches),
+            };
             // Algorithm pricing this row's N_dp-way exchange of M-wide
             // ranks ("none" when nothing is exchanged or communication
             // is free).
@@ -884,7 +1131,9 @@ impl Planner {
             } else {
                 "none".to_string()
             };
-            let strategy = if m == 1 {
+            let strategy = if let Some(l) = lw {
+                l.strategy.clone()
+            } else if m == 1 {
                 if req.devices == 1 {
                     Strategy::Single
                 } else {
@@ -911,6 +1160,8 @@ impl Planner {
                         req.devices)
             } else if epochs.is_none() {
                 format!("E(B) diverges at global batch {b}")
+            } else if let Some(l) = lw {
+                l.note.clone()
             } else {
                 String::new()
             };
@@ -923,7 +1174,7 @@ impl Planner {
                 step_time_s,
                 speedup,
                 feasible: speedup.is_some(),
-                mechanism: row_mechanism.as_str().to_string(),
+                mechanism: mechanism_label,
                 microbatches,
                 strategy,
                 memory: mem.copied(),
@@ -932,13 +1183,21 @@ impl Planner {
                 note,
             });
         };
-        push_row(1, 1.0, None, Some(&serial_mem));
-        for (&m, best) in &best_scored {
-            push_row(m, serial / best.est.step_time_s, Some(&best.est),
-                     Some(&best.mem));
-            if let Some(alt) = alt_scored.get(&m) {
-                push_row(m, serial / alt.est.step_time_s, Some(&alt.est),
-                         Some(&alt.mem));
+        push_row(1, 1.0, None, Some(&serial_mem), None);
+        let row_ms: BTreeSet<usize> =
+            best_scored.keys().chain(lw_scored.keys()).copied().collect();
+        for &m in &row_ms {
+            if let Some(best) = best_scored.get(&m) {
+                push_row(m, serial / best.est.step_time_s, Some(&best.est),
+                         Some(&best.mem), None);
+                if let Some(alt) = alt_scored.get(&m) {
+                    push_row(m, serial / alt.est.step_time_s,
+                             Some(&alt.est), Some(&alt.mem), None);
+                }
+            }
+            if let Some(lw) = lw_scored.get(&m) {
+                push_row(m, serial / lw.step_time_s, None, Some(&lw.mem),
+                         Some(lw));
             }
         }
 
@@ -975,8 +1234,8 @@ impl Planner {
             strategy,
             mp_degree: chosen_m,
             dp_workers: n_dp,
-            mechanism: mechanism.as_str().to_string(),
-            microbatches: chosen_est.and_then(|e| e.microbatches),
+            mechanism: mechanism_str,
+            microbatches: chosen_microbatches,
             predicted_step_s,
             predicted_epochs,
             predicted_speedup: chosen_score,
@@ -1094,36 +1353,51 @@ fn opt_usize_arr(j: &Json, key: &str) -> Result<Option<Vec<usize>>> {
 /// [`Strategy::kind`], shared with the sweep CSV).
 pub fn strategy_to_json(s: &Strategy) -> Json {
     let kind = Json::Str(s.kind().into());
-    match *s {
+    match s {
         Strategy::Single => jobj(vec![("kind", kind)]),
         Strategy::DataParallel { workers, delayed_factor } => jobj(vec![
             ("kind", kind),
-            ("workers", junum(workers)),
-            ("delayed_factor", junum(delayed_factor)),
+            ("workers", junum(*workers)),
+            ("delayed_factor", junum(*delayed_factor)),
         ]),
         Strategy::Hybrid { dp_workers, microbatches } => jobj(vec![
             ("kind", kind),
-            ("dp_workers", junum(dp_workers)),
-            ("microbatches", junum(microbatches)),
+            ("dp_workers", junum(*dp_workers)),
+            ("microbatches", junum(*microbatches)),
         ]),
         Strategy::PipelinedHybrid { stages, microbatches, replicas } => {
             jobj(vec![
                 ("kind", kind),
-                ("stages", junum(stages)),
-                ("microbatches", junum(microbatches)),
-                ("replicas", junum(replicas)),
+                ("stages", junum(*stages)),
+                ("microbatches", junum(*microbatches)),
+                ("replicas", junum(*replicas)),
             ])
         }
         Strategy::AsyncPs { workers, staleness } => jobj(vec![
             ("kind", kind),
-            ("workers", junum(workers)),
-            ("staleness", junum(staleness)),
+            ("workers", junum(*workers)),
+            ("staleness", junum(*staleness)),
         ]),
         Strategy::LocalSgd { workers, sync_every } => jobj(vec![
             ("kind", kind),
-            ("workers", junum(workers)),
-            ("sync_every", junum(sync_every)),
+            ("workers", junum(*workers)),
+            ("sync_every", junum(*sync_every)),
         ]),
+        Strategy::LayerWise { degree, dp_workers, assignment } => {
+            jobj(vec![
+                ("kind", kind),
+                ("degree", junum(*degree)),
+                ("dp_workers", junum(*dp_workers)),
+                ("assignment",
+                 Json::Arr(assignment
+                     .iter()
+                     .map(|(op, cfg)| Json::Arr(vec![
+                         Json::Str(op.clone()),
+                         Json::Str(cfg.clone()),
+                     ]))
+                     .collect())),
+            ])
+        }
     }
 }
 
@@ -1152,6 +1426,24 @@ pub fn strategy_from_json(j: &Json) -> Result<Strategy> {
         "local-sgd" => Strategy::LocalSgd {
             workers: j.get("workers")?.as_usize()?,
             sync_every: j.get("sync_every")?.as_usize()?,
+        },
+        "layerwise" => Strategy::LayerWise {
+            degree: j.get("degree")?.as_usize()?,
+            dp_workers: j.get("dp_workers")?.as_usize()?,
+            assignment: j
+                .get("assignment")?
+                .as_arr()?
+                .iter()
+                .map(|pair| {
+                    let p = pair.as_arr()?;
+                    if p.len() != 2 {
+                        bail!("assignment entries are [op, config] pairs, \
+                               got {} elements", p.len());
+                    }
+                    Ok((p[0].as_str()?.to_string(),
+                        p[1].as_str()?.to_string()))
+                })
+                .collect::<Result<Vec<_>>>()?,
         },
         other => bail!("unknown strategy kind '{other}'"),
     })
@@ -1518,13 +1810,19 @@ mod tests {
         let rows: Vec<&CandidateScore> = plan
             .scorecard
             .iter()
-            .filter(|c| c.mp_degree == 2)
+            .filter(|c| c.mp_degree == 2 && c.mechanism != "layerwise")
             .collect();
         assert_eq!(rows.len(), 2,
                    "branchy graph: placed + pipelined rows expected");
         assert!(rows[0].su_m >= rows[1].su_m,
                 "best-first ordering violated: {} < {}",
                 rows[0].su_m, rows[1].su_m);
+        // The fixed mechanisms are followed by the degree's layer-wise row.
+        assert!(plan
+            .scorecard
+            .iter()
+            .any(|c| c.mp_degree == 2 && c.mechanism == "layerwise"),
+            "every scored degree also carries a layer-wise row");
     }
 
     #[test]
@@ -1746,6 +2044,14 @@ mod tests {
                                         replicas: 16 },
             Strategy::AsyncPs { workers: 3, staleness: 2 },
             Strategy::LocalSgd { workers: 4, sync_every: 16 },
+            Strategy::LayerWise {
+                degree: 2,
+                dp_workers: 4,
+                assignment: vec![
+                    ("embed".into(), "replicate".into()),
+                    ("lstm0".into(), "split-feature".into()),
+                ],
+            },
         ] {
             let j = strategy_to_json(&s);
             let text = j.to_string();
@@ -1775,6 +2081,7 @@ mod tests {
         assert_eq!(req.mp_degrees, d.mp_degrees);
         assert_eq!(req.curve_max_devices, d.curve_max_devices);
         assert_eq!(req.memory, d.memory);
+        assert_eq!(req.mechanism, PlanMechanism::Auto);
         assert_eq!(cost, None);
         // Every field parses.
         let (req, cost) = plan_request_from_json(&Json::parse(
@@ -1782,7 +2089,8 @@ mod tests {
                 "nodes":4,"collective":"ring","device_mem_gb":16,
                 "objective":"step-time","mp_degrees":[4,2],
                 "pipeline_only":true,"curve_max_devices":64,
-                "batch":32,"memory":{"recompute":true},"cost":"sim"}"#)
+                "batch":32,"memory":{"recompute":true},
+                "mechanism":"layerwise","cost":"sim"}"#)
             .unwrap()).unwrap();
         assert_eq!(req.model, "biglstm");
         assert_eq!(req.topology, "dgx1-pod");
@@ -1796,6 +2104,7 @@ mod tests {
         assert_eq!(req.curve_max_devices, 64);
         assert_eq!(req.batch, Some(32));
         assert!(req.memory.recompute);
+        assert_eq!(req.mechanism, PlanMechanism::Layerwise);
         assert_eq!(cost.as_deref(), Some("sim"));
         // "auto" collective and explicit nulls mean default.
         let (req, _) = plan_request_from_json(&Json::parse(
@@ -1808,6 +2117,7 @@ mod tests {
         for bad in [r#"{"model":"gnmt","modle":1}"#,
                     r#"{"topology":"dgx1"}"#,
                     r#"{"model":"gnmt","pipeline_only":3}"#,
+                    r#"{"model":"gnmt","mechanism":"oracle"}"#,
                     r#"{"model":"gnmt","collective":"pigeon"}"#] {
             assert!(plan_request_from_json(&Json::parse(bad).unwrap())
                         .is_err(), "{bad}");
@@ -1863,6 +2173,11 @@ mod tests {
             .device_mem_gb(32.0);
         assert_ne!(key(&a, "analytical"), key(&d, "analytical"));
         assert_ne!(key(&a, "analytical"), key(&a, "simulator"));
+        // The mechanism is part of the cache identity: a layer-wise plan
+        // must never be served from an auto-mechanism cache entry.
+        let h = PlanRequest::new("inception", "dgx1")
+            .mechanism(PlanMechanism::Layerwise);
+        assert_ne!(key(&a, "analytical"), key(&h, "analytical"));
         // Canonical keys are themselves sorted-key JSON (BTreeMap), so
         // re-parsing and re-printing is identity.
         let k = key(&a, "analytical");

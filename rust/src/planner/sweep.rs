@@ -52,7 +52,7 @@ use crate::models::ModelProfile;
 use crate::parallel::ScalingEfficiency;
 use crate::util::json::Json;
 
-use super::{jobj, Objective, Plan, PlanRequest, Planner};
+use super::{jobj, Objective, Plan, PlanMechanism, PlanRequest, Planner};
 
 // ==========================================================================
 // Work-sharing parallel evaluator
@@ -197,6 +197,12 @@ impl CostModel for MemoCost {
                step_compute_s: f64, devices: usize) -> ScalingEfficiency {
         self.inner.scaling(prof, hw, step_compute_s, devices)
     }
+
+    fn op_time_params(&self) -> (f64, f64) {
+        // The layer-wise search prices per-op compute with these; masking
+        // the inner model's Δ(k) parameters would silently change sweeps.
+        self.inner.op_time_params()
+    }
 }
 
 // ==========================================================================
@@ -270,6 +276,10 @@ pub enum StrategyFamily {
     /// Pipelined hybrids only — every M > 1 candidate is a GPipe pipeline,
     /// the DLPlacer mechanism is skipped.
     Pipelined,
+    /// The PaSE-style per-op configuration search
+    /// ([`crate::layerwise`]): selection is driven by the mixed
+    /// layer-wise candidates instead of the fixed family.
+    Layerwise,
 }
 
 impl StrategyFamily {
@@ -278,6 +288,7 @@ impl StrategyFamily {
             StrategyFamily::DpOnly => "dp",
             StrategyFamily::Hybrid => "hybrid",
             StrategyFamily::Pipelined => "pipelined",
+            StrategyFamily::Layerwise => "layerwise",
         }
     }
 
@@ -286,8 +297,9 @@ impl StrategyFamily {
             "dp" | "dp-only" | "data-parallel" => StrategyFamily::DpOnly,
             "hybrid" | "all" => StrategyFamily::Hybrid,
             "pipelined" | "pipeline" => StrategyFamily::Pipelined,
+            "layerwise" | "layer-wise" | "pase" => StrategyFamily::Layerwise,
             other => bail!("unknown strategy family '{other}' \
-                            (known: dp, hybrid, pipelined)"),
+                            (known: dp, hybrid, pipelined, layerwise)"),
         })
     }
 }
@@ -631,6 +643,11 @@ fn plan_request(planner: &Planner, spec: &SweepSpec, sc: &Scenario)
         StrategyFamily::Pipelined => {
             req = req.mp_degrees(&spec.mp_degrees).pipeline_only(true);
         }
+        StrategyFamily::Layerwise => {
+            req = req
+                .mp_degrees(&spec.mp_degrees)
+                .mechanism(PlanMechanism::Layerwise);
+        }
     }
     // Batch tables are keyed off canonical model names; aliases resolve
     // through the registry (unknown models keep their spelling and fail
@@ -910,9 +927,11 @@ mod tests {
                    StrategyFamily::Hybrid);
         assert_eq!(StrategyFamily::parse("pipelined").unwrap(),
                    StrategyFamily::Pipelined);
+        assert_eq!(StrategyFamily::parse("pase").unwrap(),
+                   StrategyFamily::Layerwise);
         assert!(StrategyFamily::parse("magic").is_err());
         for f in [StrategyFamily::DpOnly, StrategyFamily::Hybrid,
-                  StrategyFamily::Pipelined] {
+                  StrategyFamily::Pipelined, StrategyFamily::Layerwise] {
             assert_eq!(StrategyFamily::parse(f.as_str()).unwrap(), f);
         }
     }

@@ -19,7 +19,7 @@ fn net_from_plan(plan: &Plan) -> NetworkModel {
     let mp_speedups: Vec<(usize, f64)> = plan
         .scorecard
         .iter()
-        .filter(|c| c.mp_degree > 1)
+        .filter(|c| c.mp_degree > 1 && c.mechanism != "layerwise")
         .map(|c| (c.mp_degree, c.su_m))
         .collect();
     NetworkModel {

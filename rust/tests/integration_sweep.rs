@@ -11,7 +11,7 @@
 use hybridpar::coordinator::Strategy;
 use hybridpar::planner::sweep::{run_sweep, BatchSpec, StrategyFamily,
                                 SweepSpec};
-use hybridpar::planner::{PlanRequest, Planner};
+use hybridpar::planner::{PlanMechanism, PlanRequest, Planner};
 
 fn small_grid() -> SweepSpec {
     SweepSpec {
@@ -19,7 +19,8 @@ fn small_grid() -> SweepSpec {
         topologies: vec!["dgx1".into()],
         devices: vec![8, 64],
         batches: vec![BatchSpec::Default],
-        families: vec![StrategyFamily::DpOnly, StrategyFamily::Pipelined],
+        families: vec![StrategyFamily::DpOnly, StrategyFamily::Pipelined,
+                       StrategyFamily::Layerwise],
         mp_degrees: vec![2],
         curve_max_devices: 64,
         threads: 1,
@@ -47,16 +48,16 @@ fn sweep_output_is_byte_identical_across_thread_counts() {
 fn sweep_covers_the_grid_in_canonical_order() {
     let spec = small_grid();
     let r = run_sweep(&spec).unwrap();
-    // 2 models × 1 topology × 2 budgets × 1 batch × 2 families.
-    assert_eq!(r.len(), 8);
+    // 2 models × 1 topology × 2 budgets × 1 batch × 3 families.
+    assert_eq!(r.len(), 12);
     let first = &r.results[0].scenario;
     assert_eq!(first.model, "gnmt");
     assert_eq!(first.devices, 8);
     assert_eq!(first.family, StrategyFamily::DpOnly);
-    let last = &r.results[7].scenario;
+    let last = &r.results[11].scenario;
     assert_eq!(last.model, "biglstm");
     assert_eq!(last.devices, 64);
-    assert_eq!(last.family, StrategyFamily::Pipelined);
+    assert_eq!(last.family, StrategyFamily::Layerwise);
     // Every scenario of this grid plans successfully.
     for sr in &r.results {
         assert!(sr.plan.is_some(), "{:?}: {:?}", sr.scenario, sr.error);
@@ -78,6 +79,9 @@ fn sweep_matches_direct_planner_calls() {
             StrategyFamily::Hybrid => req.mp_degrees(&[2]),
             StrategyFamily::Pipelined => {
                 req.mp_degrees(&[2]).pipeline_only(true)
+            }
+            StrategyFamily::Layerwise => {
+                req.mp_degrees(&[2]).mechanism(PlanMechanism::Layerwise)
             }
         };
         let direct = planner.plan(&req).unwrap();
