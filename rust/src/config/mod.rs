@@ -216,6 +216,23 @@ impl Toml {
         }
     }
 
+    /// Float list: `key = [1.0, 0.25]`.  Integers coerce to floats; a
+    /// scalar number is read as a one-element list; a missing key yields
+    /// `default`.  Mistyped elements are dropped — an all-bad list comes
+    /// back empty, which downstream axis validation rejects loudly.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(key) {
+            Some(TomlValue::Array(items)) => {
+                items.iter().filter_map(|v| v.as_f64().ok()).collect()
+            }
+            Some(v) => match v.as_f64() {
+                Ok(f) => vec![f],
+                Err(_) => default.to_vec(),
+            },
+            None => default.to_vec(),
+        }
+    }
+
     /// Integer list: `key = [8, 64]`.  A scalar integer is read as a
     /// one-element list; a missing key yields `default`.  Mistyped or
     /// negative elements are dropped (the scalar `*_or` accessors are
@@ -327,6 +344,10 @@ pub struct SweepConfig {
     pub batches: Vec<String>,
     /// "dp" | "hybrid" | "pipelined", per axis entry.
     pub families: Vec<String>,
+    /// Gradient-exchange overlap bucket budgets (1 = serial exchange).
+    pub overlap: Vec<usize>,
+    /// Gradient-compression byte factors in `(0, 1]` (1.0 = off).
+    pub compression: Vec<f64>,
     pub mp_degrees: Vec<usize>,
     pub objective: String,
     pub cost_model: String,
@@ -350,6 +371,8 @@ impl Default for SweepConfig {
             batches: vec!["default".into()],
             families: vec!["dp".into(), "hybrid".into(),
                            "pipelined".into()],
+            overlap: vec![1],
+            compression: vec![1.0],
             mp_degrees: vec![2],
             objective: "time-to-converge".into(),
             cost_model: "analytical".into(),
@@ -357,6 +380,26 @@ impl Default for SweepConfig {
             threads: 0,
             curve_max_devices: 256,
         }
+    }
+}
+
+/// `[overlap]` section: the comm/compute overlap model `plan` and
+/// `sweep` apply when the CLI does not override it.  Values are
+/// range-checked here but uncapped, so the config layer does not depend
+/// on [`crate::parallel`]; the planner re-validates through
+/// `OverlapModel::validate`, which also enforces the bucket cap.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OverlapConfig {
+    /// Gradient-exchange bucket budget (1 = the paper's serial charge).
+    pub buckets: usize,
+    /// Gradient-compression byte factor in `(0, 1]` (1.0 = off).  The α
+    /// latency terms are never scaled.
+    pub compression: f64,
+}
+
+impl Default for OverlapConfig {
+    fn default() -> Self {
+        OverlapConfig { buckets: 1, compression: 1.0 }
     }
 }
 
@@ -388,7 +431,8 @@ impl Default for ServiceConfig {
 }
 
 /// Top-level run configuration (config file `[run]`, `[cluster]`,
-/// `[train]`, `[planner]`, `[sweep]` sections).
+/// `[train]`, `[planner]`, `[sweep]`, `[memory]`, `[overlap]`,
+/// `[service]` sections).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub artifacts_dir: String,
@@ -410,6 +454,8 @@ pub struct RunConfig {
     pub sweep: Option<SweepConfig>,
     /// Present iff the config has a `[memory]` section.
     pub memory: Option<MemoryConfig>,
+    /// Present iff the config has an `[overlap]` section.
+    pub overlap: Option<OverlapConfig>,
     /// Present iff the config has a `[service]` section.
     pub service: Option<ServiceConfig>,
 }
@@ -429,6 +475,7 @@ impl Default for RunConfig {
             planner: None,
             sweep: None,
             memory: None,
+            overlap: None,
             service: None,
         }
     }
@@ -543,6 +590,9 @@ impl RunConfig {
                 batches: t.str_list_or("sweep.batches", &dstr(&d.batches)),
                 families: t
                     .str_list_or("sweep.families", &dstr(&d.families)),
+                overlap: t.usize_list_or("sweep.overlap", &d.overlap),
+                compression: t.f64_list_or("sweep.compression",
+                                           &d.compression),
                 mp_degrees: t
                     .usize_list_or("sweep.mp_degrees", &d.mp_degrees),
                 objective: t.str_or("sweep.objective", &d.objective),
@@ -587,6 +637,32 @@ impl RunConfig {
                 reserved_gb,
                 device_mem_gb,
             });
+        }
+        if t.values.keys().any(|k| k.starts_with("overlap.")) {
+            let d = OverlapConfig::default();
+            let buckets = match t.get("overlap.buckets") {
+                None => d.buckets,
+                Some(v) => {
+                    let b = v.as_i64()?;
+                    if b <= 0 {
+                        bail!("overlap.buckets must be a positive \
+                               integer (1 = overlap off), got {b}");
+                    }
+                    b as usize
+                }
+            };
+            let compression = match t.get("overlap.compression") {
+                None => d.compression,
+                Some(v) => v.as_f64()?,
+            };
+            if !compression.is_finite()
+                || compression <= 0.0
+                || compression > 1.0
+            {
+                bail!("overlap.compression must be a finite factor in \
+                       (0, 1], got {compression}");
+            }
+            c.overlap = Some(OverlapConfig { buckets, compression });
         }
         if t.values.keys().any(|k| k.starts_with("service.")) {
             let d = ServiceConfig::default();
@@ -748,7 +824,8 @@ sizes = [1, 2, 3]
             "[sweep]\nmodels = [\"gnmt\", \"biglstm\"]\n\
              topologies = [\"dgx1\", \"dgx2\"]\ndevices = [8, 64]\n\
              batches = [\"paper\"]\nfamilies = [\"dp\", \"pipelined\"]\n\
-             mp_degrees = [2, 4]\nthreads = 4\ncost = \"simulator\"\n")
+             mp_degrees = [2, 4]\nthreads = 4\ncost = \"simulator\"\n\
+             overlap = [1, 8]\ncompression = [1.0, 0.25]\n")
             .unwrap();
         let s = RunConfig::from_toml(&t).unwrap().sweep.unwrap();
         assert_eq!(s.models, vec!["gnmt", "biglstm"]);
@@ -756,12 +833,45 @@ sizes = [1, 2, 3]
         assert_eq!(s.devices, vec![8, 64]);
         assert_eq!(s.batches, vec!["paper"]);
         assert_eq!(s.families, vec!["dp", "pipelined"]);
+        assert_eq!(s.overlap, vec![1, 8]);
+        assert_eq!(s.compression, vec![1.0, 0.25]);
         assert_eq!(s.mp_degrees, vec![2, 4]);
         assert_eq!(s.threads, 4);
         assert_eq!(s.cost_model, "simulator");
         // Unset keys default.
         assert_eq!(s.objective, "time-to-converge");
         assert_eq!(s.curve_max_devices, 256);
+        // Missing axes keep the overlap-off singletons.
+        let t = Toml::parse("[sweep]\ndevices = [8]\n").unwrap();
+        let s = RunConfig::from_toml(&t).unwrap().sweep.unwrap();
+        assert_eq!(s.overlap, vec![1]);
+        assert_eq!(s.compression, vec![1.0]);
+    }
+
+    #[test]
+    fn overlap_section_parses() {
+        let t = Toml::parse(
+            "[overlap]\nbuckets = 8\ncompression = 0.25\n")
+            .unwrap();
+        let o = RunConfig::from_toml(&t).unwrap().overlap.unwrap();
+        assert_eq!(o.buckets, 8);
+        assert_eq!(o.compression, 0.25);
+        // Absent by default; partial sections get defaults for the rest.
+        let t = Toml::parse(DOC).unwrap();
+        assert!(RunConfig::from_toml(&t).unwrap().overlap.is_none());
+        let t = Toml::parse("[overlap]\nbuckets = 4\n").unwrap();
+        let o = RunConfig::from_toml(&t).unwrap().overlap.unwrap();
+        assert_eq!(o.buckets, 4);
+        assert_eq!(o.compression, 1.0);
+        // Out-of-range knobs are rejected loudly.
+        for doc in ["[overlap]\nbuckets = 0\n",
+                    "[overlap]\nbuckets = -2\n",
+                    "[overlap]\ncompression = 0\n",
+                    "[overlap]\ncompression = 1.5\n",
+                    "[overlap]\ncompression = \"half\"\n"] {
+            let t = Toml::parse(doc).unwrap();
+            assert!(RunConfig::from_toml(&t).is_err(), "{doc}");
+        }
     }
 
     #[test]

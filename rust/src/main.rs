@@ -51,6 +51,7 @@ COMMANDS:
              [--mechanism auto|layerwise] [--pipeline-only] [--max-curve N]
              [--device-mem-gb G] [--optimizer sgd|momentum|adam]
              [--recompute] [--act-factor F] [--reserved-gb G]
+             [--overlap-buckets K] [--compression F]
              [--config cfg.toml] [--out-json path]
              (emits the typed Plan as JSON on stdout; memory-infeasible
               candidates appear in the scorecard as infeasible rows, and
@@ -62,6 +63,7 @@ COMMANDS:
              [--families dp,hybrid,pipelined,layerwise]
              [--mp-degrees 2,4] [--threads N] [--objective ...] [--cost ...]
              [--optimizer ...] [--recompute] [--max-curve N]
+             [--overlap 1,8,...] [--compression 1.0,0.25,...]
              [--config cfg.toml] [--out-json p] [--out-csv p]
              (parallel grid evaluation; JSON on stdout, deterministic
               ordering — --threads N output is byte-identical to --threads 1)
@@ -150,8 +152,8 @@ fn memory_model_from(args: &Args, base: &MemoryConfig)
 /// `plan`: one typed query against the unified planner.  Prints the JSON
 /// [`hybridpar::planner::Plan`] on stdout (human summary on stderr).
 fn cmd_plan(args: &Args) -> Result<()> {
-    // Defaults come from the optional `[planner]` / `[memory]` config
-    // sections.
+    // Defaults come from the optional `[planner]` / `[memory]` /
+    // `[overlap]` config sections.
     let cfg = match args.get("config") {
         Some(path) => {
             RunConfig::from_toml(&Toml::load(&PathBuf::from(path))?)?
@@ -160,6 +162,12 @@ fn cmd_plan(args: &Args) -> Result<()> {
     };
     let base = cfg.planner.unwrap_or_default();
     let mem_base = cfg.memory.unwrap_or_default();
+    // --overlap-buckets / --compression: CLI > [overlap] > off.  Range
+    // validation happens inside the planner (OverlapModel::validate).
+    let ov_base = cfg.overlap.unwrap_or_default();
+    let overlap_buckets =
+        args.get_usize("overlap-buckets", ov_base.buckets)?;
+    let compression = args.get_f64("compression", ov_base.compression)?;
     let model = args.get_or("model", &base.model);
     let topo_default = args.get_or("topology", &base.topology);
     let topo = args.get_or("topo", &topo_default);
@@ -196,6 +204,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
         .pipeline_only(args.has_flag("pipeline-only"))
         .mechanism(mechanism)
         .memory(mem_model)
+        .overlap_buckets(overlap_buckets)
+        .compression(compression)
         .curve_to(args.get_usize("max-curve", 256)?);
     if let Some(n) = nodes {
         req = req.nodes(n);
@@ -267,8 +277,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// ordering is canonical, so `--threads N` is byte-identical to
 /// `--threads 1` — only faster.
 fn cmd_sweep(args: &Args) -> Result<()> {
-    // Defaults come from the optional `[sweep]` / `[memory]` config
-    // sections.
+    // Defaults come from the optional `[sweep]` / `[memory]` /
+    // `[overlap]` config sections.
     let cfg = match args.get("config") {
         Some(path) => {
             RunConfig::from_toml(&Toml::load(&PathBuf::from(path))?)?
@@ -287,6 +297,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         csv_list(s)
             .iter()
             .map(|x| x.parse::<usize>().map_err(|e| anyhow::anyhow!("{e}")))
+            .collect()
+    };
+    let f64_list = |s: &str| -> Result<Vec<f64>> {
+        csv_list(s)
+            .iter()
+            .map(|x| x.parse::<f64>().map_err(|e| anyhow::anyhow!("{e}")))
             .collect()
     };
     let models = args.get("models").map(csv_list).unwrap_or(base.models);
@@ -314,6 +330,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .get("device-mem-gb")
         .map(csv_list)
         .unwrap_or(base.device_mem_gb);
+    // Overlap axes: CLI > non-default [sweep] axes > the [overlap]
+    // section's singleton > off.  Range validation happens in
+    // SweepSpec::validate (shared with the wire surface).
+    let ov = cfg.overlap.clone().unwrap_or_default();
+    let overlap = match args.get("overlap") {
+        Some(s) => usize_list(s)?,
+        None if base.overlap != vec![1] => base.overlap,
+        None => vec![ov.buckets],
+    };
+    let compression = match args.get("compression") {
+        Some(s) => f64_list(s)?,
+        None if base.compression != vec![1.0] => base.compression,
+        None => vec![ov.compression],
+    };
 
     // --collective: CLI > [sweep] > [cluster].
     let collective_spec = args.get_or(
@@ -337,6 +367,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .iter()
             .map(|s| StrategyFamily::parse(s))
             .collect::<Result<_>>()?,
+        overlap,
+        compression,
         mp_degrees,
         objective: Objective::parse(
             &args.get_or("objective", &base.objective))?,

@@ -18,6 +18,10 @@ use crate::collective::{best_allreduce_on, ring_cost, Algorithm,
                         TopoProfile};
 use crate::statistical::EpochModel;
 
+pub mod overlap;
+
+use overlap::{overlapped_step, OverlapBreakdown, OverlapModel};
+
 /// Where SE_N comes from.
 #[derive(Clone, Debug)]
 pub enum ScalingEfficiency {
@@ -55,6 +59,10 @@ pub enum ScalingEfficiency {
         /// `Some(a)` prices every N with algorithm `a` instead of the
         /// cheapest one.
         force: Option<Algorithm>,
+        /// Bucketed-overlap/compression axes.  The default (`buckets=1`,
+        /// `compression=1.0`) charges the serial exchange verbatim, so
+        /// pre-overlap numbers are bit-for-bit stable.
+        overlap: OverlapModel,
     },
 }
 
@@ -90,21 +98,61 @@ impl ScalingEfficiency {
                 alpha,
                 topo,
                 force,
+                overlap,
             } => {
                 if n <= 1 {
                     return 1.0;
                 }
                 let topo = topo.for_worker_width(width);
-                let comm = match force {
-                    Some(a) => topo.cost(*a, n, *grad_bytes, *alpha),
+                if overlap.is_off() {
+                    // Legacy serial charge, kept verbatim so the default
+                    // path is bit-for-bit identical to pre-overlap
+                    // planners.
+                    let comm = match force {
+                        Some(a) => topo.cost(*a, n, *grad_bytes, *alpha),
+                        None => {
+                            best_allreduce_on(n, *grad_bytes, &topo, *alpha)
+                                .cost_s
+                        }
+                    };
+                    return step_compute_s / (step_compute_s + comm);
+                }
+                let price = |bytes: f64| match force {
+                    Some(a) => topo.cost(*a, n, bytes, *alpha),
                     None => {
-                        best_allreduce_on(n, *grad_bytes, &topo, *alpha)
-                            .cost_s
+                        best_allreduce_on(n, bytes, &topo, *alpha).cost_s
                     }
                 };
-                step_compute_s / (step_compute_s + comm)
+                let bd = overlapped_step(*step_compute_s, *grad_bytes,
+                                         overlap, price);
+                step_compute_s / bd.step_s
             }
         }
+    }
+
+    /// What the overlapped exchange charged at `(n, width)`: the step,
+    /// its exposed tail, the serial exchange at the same compression and
+    /// the schedule the simulator needs to replay it.  `None` under SE
+    /// models that do not price collectives, and for `n ≤ 1` (nothing to
+    /// exchange).  With overlap off this is the serial charge expressed
+    /// as a one-bucket schedule (`tail == exchange`).
+    pub fn exchange_breakdown_mp(&self, n: usize, width: usize)
+                                 -> Option<OverlapBreakdown> {
+        if n <= 1 {
+            return None;
+        }
+        let ScalingEfficiency::Collective {
+            step_compute_s, grad_bytes, alpha, topo, force, overlap,
+        } = self
+        else {
+            return None;
+        };
+        let topo = topo.for_worker_width(width);
+        let price = |bytes: f64| match force {
+            Some(a) => topo.cost(*a, n, bytes, *alpha),
+            None => best_allreduce_on(n, bytes, &topo, *alpha).cost_s,
+        };
+        Some(overlapped_step(*step_compute_s, *grad_bytes, overlap, price))
     }
 
     /// The algorithm pricing an `n`-worker exchange under this SE model:
@@ -140,6 +188,18 @@ impl ScalingEfficiency {
             if algorithm.is_some() {
                 *force = algorithm;
             }
+        }
+        self
+    }
+
+    /// Set the overlap/compression axes (no-op on SE models that do not
+    /// price collectives: `Perfect` charges no exchange so there is
+    /// nothing to hide, and the flat-ring ablation is kept serial on
+    /// purpose) — the `PlanRequest::{overlap_buckets, compression}`
+    /// override, mirroring [`ScalingEfficiency::with_forced`].
+    pub fn with_overlap(mut self, model: OverlapModel) -> Self {
+        if let ScalingEfficiency::Collective { ref mut overlap, .. } = self {
+            *overlap = model;
         }
         self
     }
@@ -397,6 +457,7 @@ mod tests {
             alpha: 5e-6,
             topo: topo.clone(),
             force: None,
+            overlap: OverlapModel::default(),
         };
         assert_eq!(se.at(1), 1.0);
         assert!(se.collective_algorithm(1).is_none());
@@ -432,6 +493,7 @@ mod tests {
             alpha: 5e-6,
             topo: TopoProfile::of(&multi_node(4, 8)),
             force: None,
+            overlap: OverlapModel::default(),
         };
         assert!(se.at_mp(4, 1) > se.at_mp(4, 8),
                 "8-wide ranks must pay the inter-node fabric: {} vs {}",
@@ -452,6 +514,48 @@ mod tests {
                    Some(Algorithm::Ring));
         assert_eq!(se.collective_algorithm_mp(16, 2),
                    Some(Algorithm::Hierarchical));
+    }
+
+    #[test]
+    fn overlap_raises_se_and_defaults_stay_serial() {
+        use crate::cluster::multi_node;
+        let base = ScalingEfficiency::Collective {
+            step_compute_s: 0.1,
+            grad_bytes: 640e6,
+            alpha: 5e-6,
+            topo: TopoProfile::of(&multi_node(4, 8)),
+            force: None,
+            overlap: OverlapModel::default(),
+        };
+        // with_overlap(default) is the identity charge.
+        let same = base.clone().with_overlap(OverlapModel::default());
+        assert_eq!(base.at(32), same.at(32));
+        // Buckets alone strictly help whenever the exchange is nonzero.
+        let bucketed = base.clone()
+            .with_overlap(OverlapModel { buckets: 8, compression: 1.0 });
+        assert!(bucketed.at(32) > base.at(32),
+                "bucketed overlap must raise SE: {} vs {}",
+                bucketed.at(32), base.at(32));
+        assert!(bucketed.at(32) <= 1.0);
+        // Compression on top helps again, and never past perfect.
+        let compressed = base.clone()
+            .with_overlap(OverlapModel { buckets: 8, compression: 0.25 });
+        assert!(compressed.at(32) > bucketed.at(32));
+        assert!(compressed.at(32) <= 1.0);
+        // Breakdown: tail == exchange when off, tail < exchange when on.
+        let off = base.exchange_breakdown_mp(32, 1).unwrap();
+        assert!((off.tail_s - off.exchange_s).abs() < 1e-15);
+        let on = bucketed.exchange_breakdown_mp(32, 1).unwrap();
+        assert!(on.tail_s < on.exchange_s);
+        assert!(on.buckets_used >= 2 && on.buckets_used <= 8);
+        // No breakdown where nothing is exchanged.
+        assert!(base.exchange_breakdown_mp(1, 1).is_none());
+        assert!(ScalingEfficiency::Perfect
+            .exchange_breakdown_mp(8, 1).is_none());
+        // with_overlap is a no-op on non-collective SE models.
+        let p = ScalingEfficiency::Perfect
+            .with_overlap(OverlapModel { buckets: 4, compression: 0.5 });
+        assert!(matches!(p, ScalingEfficiency::Perfect));
     }
 
     #[test]

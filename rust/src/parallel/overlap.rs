@@ -1,0 +1,260 @@
+//! Comm/compute overlap for the gradient exchange (ROADMAP item 4).
+//!
+//! The paper's Eq. 1–6 charge the all-reduce serially after the backward
+//! pass.  Production DP stacks instead split the gradient into buckets and
+//! launch each bucket's all-reduce as soon as its backward slice finishes,
+//! hiding exchange under the remaining backward compute; only the
+//! un-hidden tail lands on the step time.  Scale-out studies (PAPERS.md,
+//! Intel arXiv 1801.08030) add gradient compression on top, which shrinks
+//! the bandwidth term of every bucket but — like
+//! [`crate::collective::compress::ring_cost_bf16`] — must leave the α
+//! latency terms alone (a latency floor: quantization does not shorten
+//! wire hops or software launch overhead).
+//!
+//! # The analytic model
+//!
+//! Let `C` be the per-step compute time and `w = BACKWARD_FRACTION × C`
+//! the hiding window (gradients only become ready during the backward
+//! pass; with the repo-wide fwd:bwd = 1:2 split of
+//! [`crate::models::TRAIN_FACTOR`], that window is the last two thirds of
+//! the step).  With `k` equal buckets of a payload `B` (already
+//! compression-scaled), bucket `i` becomes ready at
+//! `r_i = (C − w) + i·w/k` and costs `c_k = price(B/k)` on the wire.  The
+//! collectives run back-to-back on one network resource, so the finish
+//! time follows the pipeline recursion `f_i = max(f_{i−1}, r_i) + c_k`,
+//! whose closed form is
+//!
+//! ```text
+//! T_k = max( C + c_k,  (C − w) + w/k + k·c_k )
+//! ```
+//!
+//! — either the last bucket's all-reduce is the only exposed piece
+//! (well-hidden regime) or the wire is saturated from the first bucket's
+//! ready time onwards (bandwidth-bound regime).
+//!
+//! `buckets` is a **cap**, not an exact count: real frameworks auto-tune
+//! the bucket size, so the model charges `min over k ∈ 1..=buckets` of
+//! `T_k`.  That keeps the overlapped step monotone non-increasing in the
+//! bucket budget even though the α term of `k·c_k` grows with `k`
+//! (asserted by property tests), and makes `buckets = 1` reproduce the
+//! serial charge `C + price(B)` exactly — which is why the default
+//! [`OverlapModel`] is bit-for-bit identical to the pre-overlap planner.
+//!
+//! The closed form is cross-checked end-to-end against
+//! [`crate::sim::simulate`] *executing* the bucket pipeline as a DFG
+//! (`tests/integration_overlap.rs`).
+
+use anyhow::{bail, Result};
+
+/// Fraction of the per-step compute during which gradients become ready
+/// for exchange: the backward share of fwd + bwd, with the repo-wide
+/// fwd:bwd = 1:2 cost split (`models::TRAIN_FACTOR` = 3 = 1 fwd + 2 fwd
+/// of backward).
+pub const BACKWARD_FRACTION: f64 = 2.0 / 3.0;
+
+/// Hard cap on the bucket budget accepted from any surface (CLI, config,
+/// wire).  Far above any real framework default (PyTorch DDP buckets a
+/// multi-GB model into dozens of buckets, not hundreds).
+pub const MAX_BUCKETS: usize = 1024;
+
+/// The overlap/compression axes threaded through the planner, the sweep
+/// engine and the service wire format.  `Default` is overlap **off**:
+/// one bucket, no compression — the paper's serial-exchange charge.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverlapModel {
+    /// Maximum number of gradient buckets the runtime may split the
+    /// exchange into (the model minimises over `1..=buckets`).  `1` =
+    /// serial exchange after the step (the paper's assumption).
+    pub buckets: usize,
+    /// Factor applied to the gradient payload's **bytes** (bandwidth
+    /// term) before pricing, in `(0, 1]`.  α/latency terms are never
+    /// scaled — the latency floor.  `1.0` = no compression.
+    pub compression: f64,
+}
+
+impl Default for OverlapModel {
+    fn default() -> Self {
+        OverlapModel { buckets: 1, compression: 1.0 }
+    }
+}
+
+impl OverlapModel {
+    /// True when the model charges exactly the legacy serial exchange
+    /// (the planner then runs the pre-overlap arithmetic verbatim, so
+    /// defaults are bit-for-bit stable).
+    pub fn is_off(&self) -> bool {
+        self.buckets <= 1 && self.compression == 1.0
+    }
+
+    /// Loud validation shared by the CLI, the `[overlap]` config section
+    /// and the wire parsers.
+    pub fn validate(&self) -> Result<()> {
+        if self.buckets == 0 {
+            bail!("overlap buckets must be >= 1 (1 = overlap off)");
+        }
+        if self.buckets > MAX_BUCKETS {
+            bail!("overlap buckets {} exceeds the cap {MAX_BUCKETS}",
+                  self.buckets);
+        }
+        if !self.compression.is_finite()
+            || self.compression <= 0.0
+            || self.compression > 1.0
+        {
+            bail!("compression must be a finite factor in (0, 1], got {}",
+                  self.compression);
+        }
+        Ok(())
+    }
+}
+
+/// What the overlap model charged for one step, for scorecards, docs and
+/// the simulator cross-check.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverlapBreakdown {
+    /// The overlapped step time `min_k T_k` (seconds).
+    pub step_s: f64,
+    /// The exposed exchange tail `step_s − compute` (seconds) — the only
+    /// part of the exchange the step actually pays.
+    pub tail_s: f64,
+    /// The *serial* exchange `price(B)` at the same compression
+    /// (seconds): what a one-bucket charge would pay.  The sandwich bound
+    /// `max(compute, exchange) ≤ step ≤ compute + exchange` is stated
+    /// against this value.
+    pub exchange_s: f64,
+    /// The arg-min bucket count `k ∈ 1..=buckets`.
+    pub buckets_used: usize,
+    /// The hiding window `BACKWARD_FRACTION × compute` (seconds).
+    pub window_s: f64,
+    /// The per-bucket wire cost `price(B / buckets_used)` (seconds) —
+    /// with `window_s` and `buckets_used`, everything the simulator
+    /// needs to *execute* the same schedule.
+    pub bucket_cost_s: f64,
+}
+
+/// Price one overlapped gradient exchange.
+///
+/// * `compute_s` — the worker's per-step compute time (fwd + bwd).
+/// * `grad_bytes` — the uncompressed gradient payload.
+/// * `price(bytes)` — all-reduce cost for a payload of `bytes` over the
+///   caller's topology/algorithm (the `best_allreduce` / `TopoProfile`
+///   layer; must be affine non-decreasing in `bytes` with a non-negative
+///   latency intercept, which every ring/tree/hierarchical α-β cost is —
+///   that affinity is what makes the sandwich bound below hold).
+///
+/// Guarantees (property-tested in `tests/properties.rs`):
+/// * `max(compute_s, exchange_s) ≤ step_s ≤ compute_s + exchange_s`;
+/// * `step_s` is monotone non-increasing in `model.buckets`;
+/// * `buckets = 1, compression = 1.0` gives
+///   `step_s == compute_s + price(grad_bytes)` exactly.
+pub fn overlapped_step<F>(compute_s: f64, grad_bytes: f64,
+                          model: &OverlapModel, price: F)
+                          -> OverlapBreakdown
+where
+    F: Fn(f64) -> f64,
+{
+    let bytes = grad_bytes * model.compression;
+    let exchange_s = price(bytes);
+    let window_s = BACKWARD_FRACTION * compute_s;
+    let buckets = model.buckets.clamp(1, MAX_BUCKETS);
+
+    let mut best_step = f64::INFINITY;
+    let mut best_k = 1usize;
+    let mut best_c = exchange_s;
+    for k in 1..=buckets {
+        let c_k = price(bytes / k as f64);
+        let hidden = compute_s + c_k;
+        let saturated =
+            (compute_s - window_s) + window_s / k as f64 + k as f64 * c_k;
+        let t_k = hidden.max(saturated);
+        if t_k < best_step {
+            best_step = t_k;
+            best_k = k;
+            best_c = c_k;
+        }
+    }
+    OverlapBreakdown {
+        step_s: best_step,
+        tail_s: best_step - compute_s,
+        exchange_s,
+        buckets_used: best_k,
+        window_s,
+        bucket_cost_s: best_c,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn affine_price(alpha: f64, inv_bw: f64) -> impl Fn(f64) -> f64 {
+        move |bytes| alpha + bytes * inv_bw
+    }
+
+    #[test]
+    fn default_is_off_and_serial() {
+        let m = OverlapModel::default();
+        assert!(m.is_off());
+        let price = affine_price(10e-6, 1.0 / 10e9);
+        let bd = overlapped_step(0.1, 640e6, &m, &price);
+        assert_eq!(bd.step_s, 0.1 + price(640e6), "k=1 must be serial");
+        assert_eq!(bd.buckets_used, 1);
+        assert_eq!(bd.exchange_s, price(640e6));
+    }
+
+    #[test]
+    fn sandwich_bound_and_monotone_in_buckets() {
+        let price = affine_price(50e-6, 1.0 / 1.24e9);
+        let compute = 0.3;
+        let mut prev = f64::INFINITY;
+        for buckets in [1usize, 2, 4, 8, 16, 64, 256] {
+            let m = OverlapModel { buckets, compression: 1.0 };
+            let bd = overlapped_step(compute, 640e6, &m, &price);
+            assert!(bd.step_s <= prev + 1e-15,
+                    "buckets {buckets}: {} > {prev}", bd.step_s);
+            assert!(bd.step_s >= compute.max(bd.exchange_s) - 1e-12);
+            assert!(bd.step_s <= compute + bd.exchange_s + 1e-12);
+            prev = bd.step_s;
+        }
+    }
+
+    #[test]
+    fn compression_scales_bytes_not_latency() {
+        let alpha = 1e-3; // dominant latency so the floor is visible
+        let price = affine_price(alpha, 1.0 / 25e9);
+        let m = OverlapModel { buckets: 1, compression: 0.25 };
+        let bd = overlapped_step(0.05, 100e6, &m, &price);
+        // bytes shrink 4x, alpha survives untouched.
+        assert!((bd.exchange_s - (alpha + 25e6 / 25e9)).abs() < 1e-15);
+        // Compression can never make the exchange cheaper than alpha.
+        assert!(bd.exchange_s >= alpha);
+    }
+
+    #[test]
+    fn bandwidth_bound_regime_saturates_the_wire() {
+        // Exchange far bigger than compute: buckets cannot hide it; the
+        // step tends to (C - w) + w/k + E, strictly above exchange alone.
+        let price = affine_price(1e-6, 1.0 / 1e9);
+        let compute = 0.01;
+        let m = OverlapModel { buckets: 8, compression: 1.0 };
+        let bd = overlapped_step(compute, 1e9, &m, &price);
+        assert!(bd.step_s >= bd.exchange_s);
+        assert!(bd.step_s < compute + bd.exchange_s,
+                "some of the exchange must still hide under compute");
+    }
+
+    #[test]
+    fn validation_rejects_bad_axes() {
+        assert!(OverlapModel { buckets: 0, compression: 1.0 }
+            .validate().is_err());
+        assert!(OverlapModel { buckets: MAX_BUCKETS + 1, compression: 1.0 }
+            .validate().is_err());
+        assert!(OverlapModel { buckets: 1, compression: 0.0 }
+            .validate().is_err());
+        assert!(OverlapModel { buckets: 1, compression: 1.5 }
+            .validate().is_err());
+        assert!(OverlapModel { buckets: 1, compression: f64::NAN }
+            .validate().is_err());
+        assert!(OverlapModel { buckets: 8, compression: 0.25 }
+            .validate().is_ok());
+    }
+}

@@ -31,6 +31,7 @@ use crate::cluster::HwGraph;
 use crate::collective::TopoProfile;
 use crate::memory::{self, MemoryEstimate, MemoryModel};
 use crate::models::ModelProfile;
+use crate::parallel::overlap::OverlapModel;
 use crate::parallel::ScalingEfficiency;
 use crate::pipeline::{self, PipeConfig};
 use crate::placer::{self, PlacerOptions};
@@ -357,11 +358,15 @@ impl CostModel for AnalyticalCost {
 /// tolerances); the SE_N term assumes bandwidth-optimal chunked
 /// collectives over store-and-forward link paths, exact for exchanges
 /// that fit the physical box and conservative (NIC-path effective
-/// bandwidth) once a projection spills across nodes.  It does not model
-/// overlap of gradient exchange with backprop, so SE_N is a lower bound
-/// for frameworks that overlap.  `PlanRequest::collective` can pin one
-/// algorithm for ablations (`--collective ring` recovers the old
-/// flat-ring pricing).
+/// bandwidth) once a projection spills across nodes.  By default the
+/// exchange is charged serially after the step (the paper's assumption);
+/// `PlanRequest::{overlap_buckets, compression}` switch SE_N to the
+/// bucketed comm/compute-overlap charge of
+/// [`crate::parallel::overlap::overlapped_step`], which hides each
+/// bucket's all-reduce under the remaining backward time and prices only
+/// the exposed tail (compression scales bytes, never the α latency
+/// floor).  `PlanRequest::collective` can pin one algorithm for
+/// ablations (`--collective ring` recovers the old flat-ring pricing).
 #[derive(Clone, Debug)]
 pub struct AlphaBetaCost {
     pub inner: AnalyticalCost,
@@ -398,6 +403,7 @@ impl CostModel for AlphaBetaCost {
             alpha: self.alpha,
             topo: TopoProfile::for_budget(hw, devices),
             force: None,
+            overlap: OverlapModel::default(),
         }
     }
 
@@ -739,6 +745,25 @@ mod tests {
         let s = SimulatorCost::default();
         let ss = s.scaling(&prof, &hw, 0.1, 256);
         assert!((ss.at(256) - beyond.at(256)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_threads_through_alpha_beta_scaling() {
+        // The planner applies PlanRequest::{overlap_buckets, compression}
+        // via with_overlap on whatever scaling() returned — the default
+        // construction must be overlap-off and the override must help.
+        let c = AlphaBetaCost::default();
+        let prof = models::gnmt(128);
+        let hw = cluster::multi_node(4, 8);
+        let off = c.scaling(&prof, &hw, 0.1, 32);
+        let on = off.clone().with_overlap(
+            OverlapModel { buckets: 8, compression: 0.25 });
+        assert!(on.at(32) > off.at(32),
+                "overlap+compression must raise SE: {} vs {}",
+                on.at(32), off.at(32));
+        // Defaults are the identity — the fig5 floors depend on this.
+        let same = off.clone().with_overlap(OverlapModel::default());
+        assert_eq!(off.at(32), same.at(32));
     }
 
     #[test]

@@ -68,6 +68,7 @@ use crate::collective::Algorithm;
 use crate::coordinator::Strategy;
 use crate::layerwise::{self, LayerwiseOptions};
 use crate::memory::{self, Feasibility, MemoryEstimate, MemoryModel};
+use crate::parallel::overlap::OverlapModel;
 use crate::parallel::NetworkModel;
 use crate::util::json::Json;
 
@@ -182,6 +183,16 @@ pub struct PlanRequest {
     /// the per-op search; the default `auto` keeps fixed-candidate
     /// selection with layer-wise rows as scorecard analysis).
     pub mechanism: PlanMechanism,
+    /// Bucket budget for comm/compute overlap of the gradient exchange
+    /// (`--overlap-buckets`): the SE model hides each bucket's
+    /// all-reduce under the remaining backward time and charges only
+    /// the exposed tail ([`crate::parallel::overlap::overlapped_step`]).
+    /// `1` (the default) is the paper's serial charge, bit-for-bit.
+    pub overlap_buckets: usize,
+    /// Gradient-compression factor in `(0, 1]` applied to the exchanged
+    /// *bytes* before pricing (`--compression`); α latency terms are
+    /// never scaled.  `1.0` (the default) is uncompressed.
+    pub compression: f64,
 }
 
 impl PlanRequest {
@@ -200,6 +211,8 @@ impl PlanRequest {
             nodes: None,
             collective: None,
             mechanism: PlanMechanism::Auto,
+            overlap_buckets: 1,
+            compression: 1.0,
         }
     }
 
@@ -263,14 +276,36 @@ impl PlanRequest {
         self
     }
 
+    /// Allow up to `n` gradient buckets for comm/compute overlap.
+    pub fn overlap_buckets(mut self, n: usize) -> Self {
+        self.overlap_buckets = n;
+        self
+    }
+
+    /// Compress exchanged gradient bytes by `factor` ∈ (0, 1].
+    pub fn compression(mut self, factor: f64) -> Self {
+        self.compression = factor;
+        self
+    }
+
+    /// The request's overlap axes as one [`OverlapModel`] (what
+    /// [`Planner::plan`] validates and threads into the SE model).
+    pub fn overlap_model(&self) -> OverlapModel {
+        OverlapModel {
+            buckets: self.overlap_buckets,
+            compression: self.compression,
+        }
+    }
+
     /// Wire-format keys accepted by [`plan_request_from_json`] (the
     /// service's `POST /plan` body).  `"cost"` selects the cost model
     /// and is returned separately by the parser — it configures the
     /// [`Planner`], not the request.
-    pub const WIRE_KEYS: [&'static str; 14] = [
+    pub const WIRE_KEYS: [&'static str; 16] = [
         "model", "topology", "devices", "batch", "objective", "mp_degrees",
         "pipeline_only", "curve_max_devices", "device_mem_gb", "memory",
-        "nodes", "collective", "mechanism", "cost",
+        "nodes", "collective", "mechanism", "cost", "overlap",
+        "compression",
     ];
 
     /// The cache-canonical form of this request: a sorted-key JSON
@@ -287,7 +322,11 @@ impl PlanRequest {
     /// * `mp_degrees` is sorted, deduplicated and filtered to `> 1` —
     ///   exactly what [`Planner::plan`] does before scoring;
     /// * `recompute_overhead` normalises to the default when recompute
-    ///   is off ([`MemoryModel::time_factor`] is 1.0 either way).
+    ///   is off ([`MemoryModel::time_factor`] is 1.0 either way);
+    /// * `overlap`/`compression` serialise their values outright
+    ///   (defaults 1 / 1.0), so an explicit overlap-off spelling shares
+    ///   the default's cache entry while any real overlap setting gets
+    ///   its own — the service cache distinguishes overlap settings.
     ///
     /// NOT collapsed, because they echo verbatim into the plan JSON:
     /// the topology spelling (`Plan.topology`), `nodes` `None` vs
@@ -338,6 +377,8 @@ impl PlanRequest {
                  .unwrap_or(Json::Null)),
             ("mechanism", Json::Str(self.mechanism.as_str().into())),
             ("cost", Json::Str(cost_model.to_string())),
+            ("overlap", junum(self.overlap_buckets)),
+            ("compression", jnum(self.compression)),
         ])
     }
 }
@@ -439,6 +480,15 @@ pub fn plan_request_from_json(j: &Json)
     if let Some(m) = j.opt("mechanism").filter(|v| **v != Json::Null) {
         req.mechanism = PlanMechanism::parse(m.as_str()?)?;
     }
+    if let Some(n) = opt_wire_int(j, "overlap", MAX_WIRE_INT)? {
+        req.overlap_buckets = n;
+    }
+    if let Some(c) = opt_f64(j, "compression")? {
+        req.compression = c;
+    }
+    // Loud validation at the wire (the planner re-checks, but a typo'd
+    // body should fail parse, not plan).
+    req.overlap_model().validate()?;
     let cost = match j.opt("cost") {
         None | Some(Json::Null) => None,
         Some(v) => Some(v.as_str()?.to_string()),
@@ -491,6 +541,13 @@ pub struct CandidateScore {
     /// does not divide the budget, or under the SE = 1 analytical model
     /// where communication is free).
     pub collective: String,
+    /// Exposed gradient-exchange tail this row's step actually pays
+    /// (seconds) under the request's overlap model — equal to the full
+    /// serial exchange when overlap is off, smaller when buckets hide
+    /// part of it under backward compute.  `None` when nothing is
+    /// exchanged (N_dp ≤ 1, M does not divide the budget) or the SE
+    /// model prices no communication (analytical SE = 1).
+    pub exchange_tail_s: Option<f64>,
     pub note: String,
 }
 
@@ -556,6 +613,13 @@ pub struct Plan {
     /// Collective algorithm pricing the chosen strategy's gradient
     /// exchange (see [`CandidateScore::collective`]).
     pub collective: String,
+    /// The request's overlap bucket budget (1 = overlap off).
+    pub overlap_buckets: usize,
+    /// The request's gradient-compression factor (1.0 = off).
+    pub compression: f64,
+    /// Exposed exchange tail of the chosen strategy (see
+    /// [`CandidateScore::exchange_tail_s`]).
+    pub exchange_tail_s: Option<f64>,
     pub scorecard: Vec<CandidateScore>,
     pub curve: Vec<CurvePoint>,
 }
@@ -638,6 +702,7 @@ impl Planner {
         if req.nodes == Some(0) {
             bail!("node count must be >= 1");
         }
+        req.overlap_model().validate()?;
         let prof = self.models.build(&req.model, req.batch)?;
         let mut hw = match req.nodes {
             Some(n) if n > 1 => {
@@ -852,11 +917,15 @@ impl Planner {
         // SE_N sees the recompute-inflated compute time: the extra
         // forward overlaps nothing, so it (slightly) improves the
         // compute/communication ratio.  A `--collective` override pins
-        // the algorithm the SE model prices with.
+        // the algorithm the SE model prices with; the request's overlap
+        // axes switch the charge from serial to bucketed-overlapped
+        // (a no-op at the defaults and under SE models that price no
+        // communication).
         let se = self
             .cost
             .scaling(&prof, &hw, serial * time_factor, req.devices)
-            .with_forced(req.collective);
+            .with_forced(req.collective)
+            .with_overlap(req.overlap_model());
         let net = NetworkModel {
             name: prof.name.clone(),
             epochs: prof.epochs.clone(),
@@ -1131,6 +1200,13 @@ impl Planner {
             } else {
                 "none".to_string()
             };
+            // Exposed exchange tail under the request's overlap model
+            // (None when nothing is exchanged or communication is free).
+            let exchange_tail_s = if divides && nd > 1 {
+                net.se.exchange_breakdown_mp(nd, m).map(|b| b.tail_s)
+            } else {
+                None
+            };
             let strategy = if let Some(l) = lw {
                 l.strategy.clone()
             } else if m == 1 {
@@ -1180,6 +1256,7 @@ impl Planner {
                 memory: mem.copied(),
                 feasibility,
                 collective,
+                exchange_tail_s,
                 note,
             });
         };
@@ -1256,6 +1333,15 @@ impl Planner {
                     .unwrap_or_else(|| "none".into())
             } else {
                 "none".to_string()
+            },
+            overlap_buckets: req.overlap_buckets,
+            compression: req.compression,
+            exchange_tail_s: if n_dp > 1 {
+                net.se
+                    .exchange_breakdown_mp(n_dp, chosen_m)
+                    .map(|b| b.tail_s)
+            } else {
+                None
             },
             scorecard,
             curve,
@@ -1470,6 +1556,7 @@ impl CandidateScore {
                  .unwrap_or(Json::Null)),
             ("feasibility", self.feasibility.to_json()),
             ("collective", Json::Str(self.collective.clone())),
+            ("exchange_tail_s", jonum(self.exchange_tail_s)),
             ("note", Json::Str(self.note.clone())),
         ])
     }
@@ -1501,6 +1588,7 @@ impl CandidateScore {
                 None | Some(Json::Null) => "none".to_string(),
                 Some(v) => v.as_str()?.to_string(),
             },
+            exchange_tail_s: opt_f64(j, "exchange_tail_s")?,
             note: j.get("note")?.as_str()?.to_string(),
         })
     }
@@ -1566,6 +1654,9 @@ impl Plan {
             ("recompute", Json::Bool(self.recompute)),
             ("nodes", jounum(self.nodes)),
             ("collective", Json::Str(self.collective.clone())),
+            ("overlap_buckets", junum(self.overlap_buckets)),
+            ("compression", jnum(self.compression)),
+            ("exchange_tail_s", jonum(self.exchange_tail_s)),
             ("memory",
              self.memory
                  .as_ref()
@@ -1620,6 +1711,9 @@ impl Plan {
                 None | Some(Json::Null) => "none".to_string(),
                 Some(v) => v.as_str()?.to_string(),
             },
+            overlap_buckets: opt_usize(j, "overlap_buckets")?.unwrap_or(1),
+            compression: opt_f64(j, "compression")?.unwrap_or(1.0),
+            exchange_tail_s: opt_f64(j, "exchange_tail_s")?,
             memory: match j.opt("memory") {
                 None | Some(Json::Null) => None,
                 Some(v) => Some(MemoryEstimate::from_json(v)?),
@@ -1663,6 +1757,14 @@ impl Plan {
             s.push_str(&format!(
                 "  gradient exchange: {} all-reduce across {} workers\n",
                 self.collective, self.dp_workers));
+        }
+        if self.overlap_buckets > 1 || self.compression != 1.0 {
+            s.push_str(&format!(
+                "  overlap: up to {} buckets, compression {:.2}{}\n",
+                self.overlap_buckets, self.compression,
+                self.exchange_tail_s
+                    .map(|t| format!(", exposed tail {:.3} ms", t * 1e3))
+                    .unwrap_or_default()));
         }
         if let Some(m) = &self.memory {
             s.push_str(&format!(
@@ -2090,7 +2192,8 @@ mod tests {
                 "objective":"step-time","mp_degrees":[4,2],
                 "pipeline_only":true,"curve_max_devices":64,
                 "batch":32,"memory":{"recompute":true},
-                "mechanism":"layerwise","cost":"sim"}"#)
+                "mechanism":"layerwise","cost":"sim",
+                "overlap":8,"compression":0.25}"#)
             .unwrap()).unwrap();
         assert_eq!(req.model, "biglstm");
         assert_eq!(req.topology, "dgx1-pod");
@@ -2106,6 +2209,8 @@ mod tests {
         assert!(req.memory.recompute);
         assert_eq!(req.mechanism, PlanMechanism::Layerwise);
         assert_eq!(cost.as_deref(), Some("sim"));
+        assert_eq!(req.overlap_buckets, 8);
+        assert_eq!(req.compression, 0.25);
         // "auto" collective and explicit nulls mean default.
         let (req, _) = plan_request_from_json(&Json::parse(
             r#"{"model":"gnmt","collective":"auto","batch":null,
@@ -2140,6 +2245,22 @@ mod tests {
         let (req, _) = plan_request_from_json(&Json::parse(
             r#"{"model":"gnmt","devices":65536}"#).unwrap()).unwrap();
         assert_eq!(req.devices, MAX_WIRE_DEVICES, "the cap is inclusive");
+        // The overlap axes validate at the wire: zero buckets, a bucket
+        // budget past the cap, and out-of-range compression all reject.
+        for bad in [r#"{"model":"gnmt","overlap":0}"#,
+                    r#"{"model":"gnmt","overlap":2048}"#,
+                    r#"{"model":"gnmt","compression":0}"#,
+                    r#"{"model":"gnmt","compression":1.5}"#,
+                    r#"{"model":"gnmt","compression":-0.5}"#] {
+            assert!(plan_request_from_json(&Json::parse(bad).unwrap())
+                        .is_err(), "{bad}");
+        }
+        // Explicit nulls default the overlap axes like every other key.
+        let (req, _) = plan_request_from_json(&Json::parse(
+            r#"{"model":"gnmt","overlap":null,"compression":null}"#)
+            .unwrap()).unwrap();
+        assert_eq!(req.overlap_buckets, 1);
+        assert_eq!(req.compression, 1.0);
     }
 
     #[test]
@@ -2178,10 +2299,73 @@ mod tests {
         let h = PlanRequest::new("inception", "dgx1")
             .mechanism(PlanMechanism::Layerwise);
         assert_ne!(key(&a, "analytical"), key(&h, "analytical"));
+        // Explicit overlap-off spellings collapse onto the default entry;
+        // any real overlap/compression setting gets its own entry, so the
+        // service cache can never serve an overlapped plan from a serial
+        // one (or vice versa).
+        let off = PlanRequest::new("inception", "dgx1")
+            .overlap_buckets(1)
+            .compression(1.0);
+        assert_eq!(key(&a, "analytical"), key(&off, "analytical"));
+        let bucketed =
+            PlanRequest::new("inception", "dgx1").overlap_buckets(8);
+        assert_ne!(key(&a, "analytical"), key(&bucketed, "analytical"));
+        let squeezed =
+            PlanRequest::new("inception", "dgx1").compression(0.5);
+        assert_ne!(key(&a, "analytical"), key(&squeezed, "analytical"));
+        assert_ne!(key(&bucketed, "analytical"),
+                   key(&squeezed, "analytical"));
         // Canonical keys are themselves sorted-key JSON (BTreeMap), so
         // re-parsing and re-printing is identity.
         let k = key(&a, "analytical");
         assert_eq!(Json::parse(&k).unwrap().to_string(), k);
+    }
+
+    #[test]
+    fn overlap_request_shrinks_the_exchange_tail() {
+        use crate::planner::cost::AlphaBetaCost;
+        let planner =
+            Planner::with_cost(Box::new(AlphaBetaCost::default()));
+        let base = PlanRequest::new("gnmt", "dgx1").devices(8);
+        let off = planner.plan(&base.clone()).unwrap();
+        // Explicit defaults are byte-identical to the bare request.
+        let explicit = planner
+            .plan(&base.clone().overlap_buckets(1).compression(1.0))
+            .unwrap();
+        assert_eq!(off.to_json_string(), explicit.to_json_string());
+        assert_eq!(off.overlap_buckets, 1);
+        assert_eq!(off.compression, 1.0);
+        // Overlap off: the DP row's tail is the full serial exchange.
+        let dp_off = off
+            .scorecard.iter().find(|c| c.mp_degree == 1).unwrap();
+        let tail_off = dp_off.exchange_tail_s.unwrap();
+        assert!(tail_off > 0.0);
+        // Overlap + compression on: the exposed tail shrinks and the
+        // step prediction improves (or at worst ties).
+        let on = planner
+            .plan(&base.overlap_buckets(8).compression(0.25))
+            .unwrap();
+        assert_eq!(on.overlap_buckets, 8);
+        assert_eq!(on.compression, 0.25);
+        let dp_on =
+            on.scorecard.iter().find(|c| c.mp_degree == 1).unwrap();
+        let tail_on = dp_on.exchange_tail_s.unwrap();
+        assert!(tail_on < tail_off,
+                "overlap must shrink the tail: {tail_on} vs {tail_off}");
+        assert!(dp_on.step_time_s.unwrap() < dp_off.step_time_s.unwrap());
+        // An invalid overlap request fails loudly.
+        assert!(planner
+            .plan(&PlanRequest::new("gnmt", "dgx1").compression(0.0))
+            .is_err());
+        // Analytical SE = 1 prices no exchange: no tail either way.
+        let ana = Planner::new()
+            .plan(&PlanRequest::new("gnmt", "dgx1")
+                .devices(8)
+                .overlap_buckets(8))
+            .unwrap();
+        assert!(ana.exchange_tail_s.is_none());
+        assert!(ana.scorecard.iter()
+            .all(|c| c.exchange_tail_s.is_none()));
     }
 
     #[test]

@@ -49,6 +49,7 @@ use crate::cluster::HwGraph;
 use crate::collective::Algorithm;
 use crate::memory::MemoryModel;
 use crate::models::ModelProfile;
+use crate::parallel::overlap::OverlapModel;
 use crate::parallel::ScalingEfficiency;
 use crate::util::json::Json;
 
@@ -128,6 +129,15 @@ where
 /// stage partitions, and the `nodes` axis rebuilds it with different
 /// chassis counts), the mechanism family (structural default vs explicit
 /// pipeline) and M.
+///
+/// The `overlap`/`compression` axes deliberately contribute **no** key
+/// bits: the memoised quantity is the MP step-time estimate, which prices
+/// model-parallel compute and activation traffic only.  The overlapped
+/// gradient exchange is charged in `ScalingEfficiency` (which
+/// [`CostModel::scaling`] rebuilds per scenario, un-memoised), so two
+/// scenarios differing only in overlap share their MP estimates *and*
+/// still get distinct step times — asserted by the
+/// `overlap_axes_expand_the_grid` test below.
 type MemoKey = (String, usize, String, usize, usize, u64, bool, usize);
 
 /// A memoised evaluation outcome (errors stringified so the cell clones).
@@ -321,6 +331,14 @@ pub struct SweepSpec {
     pub device_mem_gb: Vec<Option<f64>>,
     pub batches: Vec<BatchSpec>,
     pub families: Vec<StrategyFamily>,
+    /// Gradient-exchange overlap axis: bucket budgets (1 = the paper's
+    /// serial charge, the default).  Each value becomes
+    /// [`PlanRequest::overlap_buckets`](super::PlanRequest) on the
+    /// scenario's request.
+    pub overlap: Vec<usize>,
+    /// Gradient-compression axis: byte factors in `(0, 1]` (1.0 = off,
+    /// the default).  The α latency floor is never scaled.
+    pub compression: Vec<f64>,
     /// Candidate MP degrees for the hybrid/pipelined families.
     pub mp_degrees: Vec<usize>,
     pub objective: Objective,
@@ -351,6 +369,8 @@ impl Default for SweepSpec {
             batches: vec![BatchSpec::Default],
             families: vec![StrategyFamily::DpOnly, StrategyFamily::Hybrid,
                            StrategyFamily::Pipelined],
+            overlap: vec![1],
+            compression: vec![1.0],
             mp_degrees: vec![2],
             objective: Objective::TimeToConverge,
             cost_model: "analytical".into(),
@@ -396,6 +416,10 @@ pub struct Scenario {
     pub device_mem_gb: Option<f64>,
     pub batch: BatchSpec,
     pub family: StrategyFamily,
+    /// Overlap bucket budget (1 = serial exchange).
+    pub overlap: usize,
+    /// Gradient-compression byte factor (1.0 = off).
+    pub compression: f64,
 }
 
 impl SweepSpec {
@@ -410,15 +434,22 @@ impl SweepSpec {
                         for &device_mem_gb in &self.device_mem_gb {
                             for batch in &self.batches {
                                 for &family in &self.families {
-                                    out.push(Scenario {
-                                        model: model.clone(),
-                                        topology: topology.clone(),
-                                        devices,
-                                        nodes,
-                                        device_mem_gb,
-                                        batch: batch.clone(),
-                                        family,
-                                    });
+                                    for &overlap in &self.overlap {
+                                        for &compression in &self.compression
+                                        {
+                                            out.push(Scenario {
+                                                model: model.clone(),
+                                                topology: topology.clone(),
+                                                devices,
+                                                nodes,
+                                                device_mem_gb,
+                                                batch: batch.clone(),
+                                                family,
+                                                overlap,
+                                                compression,
+                                            });
+                                        }
+                                    }
                                 }
                             }
                         }
@@ -442,20 +473,30 @@ impl SweepSpec {
             ("device_mem_gb", self.device_mem_gb.is_empty()),
             ("batches", self.batches.is_empty()),
             ("families", self.families.is_empty()),
+            ("overlap", self.overlap.is_empty()),
+            ("compression", self.compression.is_empty()),
         ] {
             if empty {
                 bail!("sweep axis '{axis}' is empty");
             }
+        }
+        // Axis values get the same loud validation as the /plan wire.
+        for &buckets in &self.overlap {
+            (OverlapModel { buckets, compression: 1.0 }).validate()?;
+        }
+        for &compression in &self.compression {
+            (OverlapModel { buckets: 1, compression }).validate()?;
         }
         Ok(())
     }
 
     /// Wire-format keys accepted by [`SweepSpec::from_json`] (the
     /// service's `POST /sweep` body).
-    pub const WIRE_KEYS: [&'static str; 14] = [
+    pub const WIRE_KEYS: [&'static str; 16] = [
         "models", "topologies", "devices", "nodes", "device_mem_gb",
-        "batches", "families", "mp_degrees", "objective", "cost", "memory",
-        "collective", "curve_max_devices", "threads",
+        "batches", "families", "overlap", "compression", "mp_degrees",
+        "objective", "cost", "memory", "collective", "curve_max_devices",
+        "threads",
     ];
 
     /// Parse the service wire format for a sweep: a JSON object with any
@@ -465,7 +506,10 @@ impl SweepSpec {
     /// cannot silently widen the grid to its default.  Axis entries
     /// mirror the CLI spellings: `batches` takes `"default"` / `"paper"`
     /// / integers, `device_mem_gb` takes `"default"` / positive GB
-    /// numbers, `collective` takes `"auto"` or an algorithm name.
+    /// numbers, `collective` takes `"auto"` or an algorithm name,
+    /// `overlap` takes bucket budgets (validated against
+    /// [`crate::parallel::overlap::MAX_BUCKETS`]) and `compression`
+    /// takes byte factors in `(0, 1]`.
     /// Integer entries are strict and capped like the `/plan` wire
     /// ([`super::MAX_WIRE_DEVICES`]) — fractions and negatives are
     /// errors, never truncated.
@@ -544,6 +588,35 @@ impl SweepSpec {
                 .map(|x| StrategyFamily::parse(x.as_str()?))
                 .collect::<Result<_>>()?,
         };
+        let overlap = match j.opt("overlap") {
+            None | Some(Json::Null) => d.overlap,
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|x| {
+                    let buckets =
+                        super::wire_int(x, "overlap", super::MAX_WIRE_INT)?;
+                    (OverlapModel { buckets, compression: 1.0 }).validate()?;
+                    Ok(buckets)
+                })
+                .collect::<Result<_>>()?,
+        };
+        let compression = match j.opt("compression") {
+            None | Some(Json::Null) => d.compression,
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|x| match x {
+                    Json::Num(c) => {
+                        (OverlapModel { buckets: 1, compression: *c })
+                            .validate()?;
+                        Ok(*c)
+                    }
+                    _ => bail!("compression entries must be numbers \
+                                in (0, 1]"),
+                })
+                .collect::<Result<_>>()?,
+        };
         let objective = match j.opt("objective") {
             None | Some(Json::Null) => d.objective,
             Some(v) => Objective::parse(v.as_str()?)?,
@@ -578,6 +651,8 @@ impl SweepSpec {
             device_mem_gb,
             batches,
             families,
+            overlap,
+            compression,
             mp_degrees: usizes(j, "mp_degrees", super::MAX_WIRE_INT,
                                d.mp_degrees)?,
             objective,
@@ -596,7 +671,7 @@ impl SweepSpec {
     pub fn cardinality(&self) -> usize {
         [self.models.len(), self.topologies.len(), self.devices.len(),
          self.nodes.len(), self.device_mem_gb.len(), self.batches.len(),
-         self.families.len()]
+         self.families.len(), self.overlap.len(), self.compression.len()]
             .iter()
             .fold(1usize, |acc, &n| acc.saturating_mul(n))
     }
@@ -637,6 +712,10 @@ fn plan_request(planner: &Planner, spec: &SweepSpec, sc: &Scenario)
     if let Some(gb) = sc.device_mem_gb {
         req = req.device_mem_gb(gb);
     }
+    // Unconditional: the request defaults match the axis defaults, and
+    // canonical_json always serialises both keys, so off-spellings still
+    // share one service-cache entry.
+    req = req.overlap_buckets(sc.overlap).compression(sc.compression);
     match sc.family {
         StrategyFamily::DpOnly => req = req.mp_degrees(&[]),
         StrategyFamily::Hybrid => req = req.mp_degrees(&spec.mp_degrees),
@@ -774,6 +853,8 @@ impl ScenarioResult {
             ("batch", Json::Str(self.scenario.batch.label())),
             ("family",
              Json::Str(self.scenario.family.as_str().to_string())),
+            ("overlap", Json::Num(self.scenario.overlap as f64)),
+            ("compression", Json::Num(self.scenario.compression)),
             ("plan",
              self.plan.as_ref().map(|p| p.to_json()).unwrap_or(Json::Null)),
             ("error",
@@ -824,6 +905,7 @@ impl SweepResult {
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "model,topology,devices,nodes,device_mem_gb,batch,family,\
+             overlap,compression,\
              status,strategy,mp_degree,mechanism,collective,devices_used,\
              dp_workers,microbatches,global_batch,step_time_s,epochs,\
              speedup,peak_mem_gb,error\n");
@@ -837,6 +919,8 @@ impl SweepResult {
                 mem_gb_label(sc.device_mem_gb),
                 sc.batch.label(),
                 sc.family.as_str().to_string(),
+                sc.overlap.to_string(),
+                format!("{}", sc.compression),
             ];
             match (&r.plan, &r.error) {
                 (Some(p), _) => {
@@ -1153,6 +1237,67 @@ mod tests {
     }
 
     #[test]
+    fn overlap_axes_expand_the_grid() {
+        let base = SweepSpec {
+            models: vec!["gnmt".into()],
+            topologies: vec!["dgx1-pod".into()],
+            devices: vec![32],
+            nodes: vec![4],
+            families: vec![StrategyFamily::DpOnly],
+            cost_model: "alpha-beta".into(),
+            curve_max_devices: 32,
+            threads: 1,
+            ..Default::default()
+        };
+        let r = run_sweep(&SweepSpec {
+            overlap: vec![1, 8],
+            compression: vec![1.0, 0.25],
+            ..base.clone()
+        })
+        .unwrap();
+        assert_eq!(r.len(), 4, "2 overlap x 2 compression grid points");
+        let step = |i: usize| {
+            r.results[i].plan.as_ref().unwrap().predicted_step_s
+        };
+        // Canonical order: overlap-major, compression innermost.
+        assert_eq!((r.results[0].scenario.overlap,
+                    r.results[0].scenario.compression), (1, 1.0));
+        assert_eq!((r.results[3].scenario.overlap,
+                    r.results[3].scenario.compression), (8, 0.25));
+        // Each axis strictly helps a 4x8 DP exchange on its own, and the
+        // plan echoes the scenario's settings.
+        assert!(step(1) < step(0), "compression must shrink the exchange");
+        assert!(step(2) < step(0), "bucketed overlap must hide exchange");
+        assert!(step(3) <= step(1).min(step(2)) + 1e-15);
+        for res in &r.results {
+            let p = res.plan.as_ref().unwrap();
+            assert_eq!(p.overlap_buckets, res.scenario.overlap);
+            assert_eq!(p.compression, res.scenario.compression);
+        }
+        // The default-off row is the same plan a sweep without the axes
+        // produces (MemoCost sharing MP estimates across overlap values
+        // cannot leak overlap between scenarios).
+        let plain = run_sweep(&base).unwrap();
+        assert_eq!(plain.results[0].plan, r.results[0].plan);
+        // Both serialisations carry the axes.
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"overlap\":8"));
+        assert!(json.contains("\"compression\":0.25"));
+        let csv = r.to_csv();
+        assert!(csv.contains("family,overlap,compression,status"));
+        assert!(csv.contains("\"8\"") && csv.contains("\"0.25\""));
+        // Empty axes are rejected like every other axis.
+        for bad in [
+            SweepSpec { overlap: vec![], ..base.clone() },
+            SweepSpec { compression: vec![], ..base.clone() },
+            SweepSpec { overlap: vec![0], ..base.clone() },
+            SweepSpec { compression: vec![2.0], ..base },
+        ] {
+            assert!(run_sweep(&bad).is_err());
+        }
+    }
+
+    #[test]
     fn empty_mem_axis_rejected() {
         let spec = SweepSpec {
             device_mem_gb: vec![],
@@ -1223,6 +1368,7 @@ mod tests {
             r#"{"models":["gnmt"],"topologies":["dgx1-pod"],
                 "devices":[16],"nodes":[2],"device_mem_gb":["default",80],
                 "batches":["paper",64],"families":["dp"],
+                "overlap":[1,8],"compression":[1.0,0.25],
                 "mp_degrees":[2,4],"objective":"step-time",
                 "cost":"alpha-beta","collective":"ring",
                 "memory":{"recompute":true},"curve_max_devices":16,
@@ -1235,6 +1381,8 @@ mod tests {
         assert_eq!(spec.batches,
                    vec![BatchSpec::Paper, BatchSpec::Fixed(64)]);
         assert_eq!(spec.families, vec![StrategyFamily::DpOnly]);
+        assert_eq!(spec.overlap, vec![1, 8]);
+        assert_eq!(spec.compression, vec![1.0, 0.25]);
         assert_eq!(spec.mp_degrees, vec![2, 4]);
         assert_eq!(spec.objective, Objective::StepTime);
         assert_eq!(spec.cost_model, "alpha-beta");
@@ -1255,6 +1403,12 @@ mod tests {
                     r#"{"devices":[2.5]}"#,
                     r#"{"devices":[1000000000000000]}"#,
                     r#"{"nodes":[100000]}"#,
+                    r#"{"overlap":[0]}"#,
+                    r#"{"overlap":[2048]}"#,
+                    r#"{"overlap":[2.5]}"#,
+                    r#"{"compression":[0]}"#,
+                    r#"{"compression":[1.5]}"#,
+                    r#"{"compression":["lots"]}"#,
                     r#"{"threads":-2}"#] {
             assert!(SweepSpec::from_json(&Json::parse(bad).unwrap())
                         .is_err(), "{bad}");

@@ -261,6 +261,71 @@ pub fn simulate(dfg: &Dfg, hw: &HwGraph, placement: &[usize],
     Ok(SimResult { makespan, device_busy, link_busy, op_start, op_finish })
 }
 
+/// Execute one bucketed-overlap DP step as a DAG (the cross-check behind
+/// `crate::parallel::overlap`): the analytic closed form
+/// `T_k = max(C + c_k, (C − w) + w/k + k·c_k)` is a pipeline recursion
+/// `f_i = max(f_{i−1}, r_i) + c_k`, and this function *runs* that
+/// pipeline through the discrete-event machinery instead of evaluating
+/// the formula — `tests/integration_overlap.rs` asserts the two agree.
+///
+/// Construction, on the first two compute devices of `hw`:
+///
+/// * `fwd` on device 0: the pre-window compute `C − w`;
+/// * `bwd_i` (i = 1..=k) on device 0, chained: the hiding window in `k`
+///   equal slices — bucket i's gradients are ready when `bwd_i` finishes;
+/// * `ar_i` on device 1 with op time `c_k`: bucket i's all-reduce.  One
+///   compute resource runs them back-to-back — the same
+///   one-network-resource serialisation the closed form assumes.
+///
+/// The `bwd_i → ar_i` edges carry **zero** bytes: `c_k` already prices
+/// the whole collective, so the only extra cost a cross-device edge adds
+/// is `cfg.transfer_overhead_s` plus the hop latency — the µs-scale
+/// discrepancy the integration test's tolerance documents.
+pub fn simulate_bucketed_overlap(hw: &HwGraph, compute_s: f64,
+                                 buckets: usize, bucket_cost_s: f64,
+                                 window_s: f64, cfg: SimConfig)
+                                 -> Result<SimResult> {
+    if buckets == 0 {
+        bail!("bucketed overlap needs at least one bucket");
+    }
+    if !(compute_s.is_finite() && window_s.is_finite()
+         && bucket_cost_s.is_finite())
+        || compute_s < 0.0
+        || bucket_cost_s < 0.0
+        || window_s < 0.0
+        || window_s > compute_s
+    {
+        bail!("bad bucketed-overlap parameters: compute {compute_s}, \
+               window {window_s}, bucket cost {bucket_cost_s}");
+    }
+    let devs = hw.devices();
+    if devs.len() < 2 {
+        bail!("bucketed overlap needs two compute devices (worker + \
+               network stand-in), topology '{}' has {}",
+              hw.name, devs.len());
+    }
+    let (worker, wire) = (devs[0], devs[1]);
+    let mut g = Dfg::new("bucketed-overlap");
+    let mut placement = Vec::new();
+    let mut times = Vec::new();
+    let fwd = g.add_op("fwd", 0.0, 0.0, 0.0);
+    placement.push(worker);
+    times.push(compute_s - window_s);
+    let mut prev = fwd;
+    for i in 1..=buckets {
+        let bwd = g.add_op(&format!("bwd{i}"), 0.0, 0.0, 0.0);
+        placement.push(worker);
+        times.push(window_s / buckets as f64);
+        g.add_edge_bytes(prev, bwd, 0.0);
+        let ar = g.add_op(&format!("ar{i}"), 0.0, 0.0, 0.0);
+        placement.push(wire);
+        times.push(bucket_cost_s);
+        g.add_edge_bytes(bwd, ar, 0.0);
+        prev = bwd;
+    }
+    simulate(&g, hw, &placement, &times, cfg)
+}
+
 /// Convenience: simulate with Δ(k) derived from device FLOP rates.
 pub fn simulate_auto(dfg: &Dfg, hw: &HwGraph, placement: &[usize],
                      launch_overhead_s: f64, cfg: SimConfig)
@@ -360,6 +425,38 @@ mod tests {
         let spread = simulate(&g, &hw, &[0, 1, 2, 3, 0, 1], &t,
                               SimConfig::ideal()).unwrap();
         assert!(spread.makespan >= one.makespan, "chain can't speed up");
+    }
+
+    #[test]
+    fn bucketed_overlap_executes_the_pipeline_recursion() {
+        let hw = dgx1(2);
+        let (compute, window, c_k) = (0.09, 0.06, 0.004);
+        for k in [1usize, 2, 4, 8] {
+            let r = simulate_bucketed_overlap(&hw, compute, k, c_k, window,
+                                              SimConfig::ideal())
+                .unwrap();
+            // Closed form for exactly k buckets; the sim only adds hop
+            // latency on the zero-byte ready edges (µs scale).
+            let want = (compute + c_k).max(
+                (compute - window) + window / k as f64 + k as f64 * c_k);
+            assert!((r.makespan - want).abs() < 5e-5,
+                    "k={k}: sim {} vs analytic {want}", r.makespan);
+        }
+        // Serial identity: one bucket is compute + exchange.
+        let r = simulate_bucketed_overlap(&hw, compute, 1, c_k, window,
+                                          SimConfig::ideal())
+            .unwrap();
+        assert!((r.makespan - (compute + c_k)).abs() < 5e-5);
+        // Loud rejection of malformed schedules and 1-device topologies.
+        assert!(simulate_bucketed_overlap(&dgx1(1), compute, 2, c_k,
+                                          window, SimConfig::ideal())
+            .is_err());
+        assert!(simulate_bucketed_overlap(&hw, compute, 0, c_k, window,
+                                          SimConfig::ideal())
+            .is_err());
+        assert!(simulate_bucketed_overlap(&hw, 0.01, 2, c_k, 0.02,
+                                          SimConfig::ideal())
+            .is_err(), "window larger than compute must be rejected");
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Integration: the overlap-aware exchange model, cross-checked three
+//! ways.
+//!
+//! * **Simulator vs analytic** — `sim::simulate_bucketed_overlap`
+//!   *executes* the bucketed backward/all-reduce pipeline as a discrete
+//!   -event schedule; its makespan must agree with the closed-form
+//!   charge of `parallel::overlap::overlapped_step` across the full
+//!   model × topology registry grid.  Documented tolerance: the sim
+//!   pays one per-edge route latency per bucket hand-off (µs-scale,
+//!   1.3 µs NvLink … 20 µs 25 GbE) that the analytic model folds into
+//!   the all-reduce α terms, so agreement is asserted to 1% relative
+//!   plus 1 ms absolute on steps that are tens of milliseconds or more.
+//! * **Verdict flip** — on a thin-link registry scenario the paper's
+//!   no-overlap assumption is load-bearing: with the serial-exchange
+//!   charge the planner prefers the hybrid (its exchange has fewer,
+//!   narrower-packed participants), and once bucketed overlap + 4×
+//!   compression hide the gradient exchange the very same scenario
+//!   flips to plain data parallelism.  Asserted end-to-end through
+//!   `Planner::plan`.
+//! * **fig5 stability** — the analytical cost model (SE_N = 1, the
+//!   paper's §4.3 assumption behind the fig5 headline gains) prices no
+//!   exchange, so the overlap axes must not move a single fig5 number:
+//!   plans are bit-for-bit identical with overlap off and on.
+
+use hybridpar::parallel::overlap::OverlapModel;
+use hybridpar::planner::sweep::{run_sweep, BatchSpec, StrategyFamily,
+                                SweepSpec};
+use hybridpar::planner::{AlphaBetaCost, CostModel, ModelRegistry,
+                         Objective, PlanRequest, Planner,
+                         TopologyRegistry};
+use hybridpar::sim::{simulate_bucketed_overlap, SimConfig};
+
+#[test]
+fn sim_executed_overlap_matches_the_analytic_charge_on_the_registry_grid()
+{
+    let models = ModelRegistry::builtin();
+    let topos = TopologyRegistry::builtin();
+    let cost = AlphaBetaCost::default();
+    let overlap = OverlapModel { buckets: 16, compression: 0.5 };
+    for model in models.names() {
+        let prof = models.build(model, None).unwrap();
+        for topo in topos.names() {
+            let devices = topos.max_devices(topo).unwrap().min(16);
+            let hw = topos.build(topo, devices).unwrap();
+            let compute = cost
+                .mp_step_time(&prof, &hw, 1)
+                .unwrap()
+                .step_time_s;
+            let se = cost
+                .scaling(&prof, &hw, compute, devices)
+                .with_overlap(overlap);
+            let bd = se
+                .exchange_breakdown_mp(devices, 1)
+                .expect("alpha-beta scaling must price an exchange");
+            let sim = simulate_bucketed_overlap(
+                &hw, compute, bd.buckets_used, bd.bucket_cost_s,
+                bd.window_s, SimConfig::ideal())
+                .unwrap();
+            // Documented tolerance (see module doc): per-bucket route
+            // latency is the only term the analytic charge does not
+            // model.
+            let tol = 0.01 * bd.step_s + 1e-3;
+            assert!((sim.makespan - bd.step_s).abs() <= tol,
+                    "{model} x {topo}: sim {} vs analytic {} \
+                     (k={}, c_k={}, window={})",
+                    sim.makespan, bd.step_s, bd.buckets_used,
+                    bd.bucket_cost_s, bd.window_s);
+            // The executed schedule obeys the same lower bound the
+            // analytic sandwich states.
+            assert!(sim.makespan >= compute - 1e-9,
+                    "{model} x {topo}: sim ran faster than compute");
+        }
+    }
+}
+
+/// Search one thin-link scenario family for a batch size where the
+/// DP-vs-hybrid verdict flips once overlap + compression are switched
+/// on.  The statistical-efficiency curve (log-log interpolated) moves
+/// the DP/hybrid score ratio in ~1% steps along the batch axis while
+/// the serial-exchange gap between the two strategies is several
+/// percent, so the flip window spans multiple tested batch sizes.
+fn find_flip(planner: &Planner, topo: &str, devices: usize)
+             -> Option<(usize, hybridpar::planner::Plan,
+                        hybridpar::planner::Plan)> {
+    let b_hi = (65536 / devices).max(64);
+    let mut b = 32;
+    while b <= b_hi {
+        let base = PlanRequest::new("gnmt", topo)
+            .devices(devices)
+            .batch(b)
+            .curve_to(2);
+        let planned = (planner.plan(&base.clone()),
+                       planner.plan(&base
+                           .overlap_buckets(64)
+                           .compression(0.25)));
+        if let (Ok(off), Ok(on)) = planned {
+            if off.devices_used == devices
+                && on.devices_used == devices
+                && off.mp_degree == 2
+                && on.mp_degree == 1
+            {
+                return Some((b, off, on));
+            }
+        }
+        b += 4;
+    }
+    None
+}
+
+#[test]
+fn compression_plus_overlap_flips_a_dp_vs_hybrid_verdict() {
+    let planner = Planner::with_cost(Box::new(AlphaBetaCost::default()));
+    let mut flip = None;
+    'search: for topo in ["cloud-25gbe", "dgx1-pod"] {
+        for devices in [256usize, 128, 64, 32] {
+            if let Some((b, off, on)) = find_flip(&planner, topo, devices)
+            {
+                flip = Some((topo, devices, b, off, on));
+                break 'search;
+            }
+        }
+    }
+    let (topo, devices, b, off, on) = flip.expect(
+        "some registry scenario must flip its DP-vs-hybrid verdict once \
+         bucketed overlap + 4x compression hide the gradient exchange");
+    println!("verdict flip: gnmt on {topo}, {devices} devices, \
+              batch {b}/GPU — serial exchange picks M=2 hybrid, \
+              overlapped+compressed exchange picks plain DP");
+
+    // End-to-end plan surfaces carry the axes that produced the flip.
+    assert_eq!(off.mp_degree, 2);
+    assert_eq!(on.mp_degree, 1);
+    assert_eq!((off.overlap_buckets, off.compression), (1, 1.0));
+    assert_eq!((on.overlap_buckets, on.compression), (64, 0.25));
+
+    // The flip is the exchange hiding, not noise: the DP candidate's
+    // exposed tail collapses and its step prediction improves.
+    let dp_off =
+        off.scorecard.iter().find(|c| c.mp_degree == 1).unwrap();
+    let dp_on = on.scorecard.iter().find(|c| c.mp_degree == 1).unwrap();
+    let (tail_off, tail_on) = (dp_off.exchange_tail_s.unwrap(),
+                               dp_on.exchange_tail_s.unwrap());
+    assert!(tail_on < tail_off,
+            "overlap must shrink the DP tail: {tail_on} vs {tail_off}");
+    assert!(dp_on.step_time_s.unwrap() < dp_off.step_time_s.unwrap(),
+            "overlap must speed up the DP step");
+    // Same devices, same batch: turning overlap on never slows the
+    // chosen plan down.
+    assert!(on.predicted_step_s <= off.predicted_step_s + 1e-12,
+            "overlapped plan slower than serial plan: {} vs {}",
+            on.predicted_step_s, off.predicted_step_s);
+}
+
+#[test]
+fn fig5_numbers_are_untouched_by_the_overlap_axes() {
+    // The fig5 headline gains ride on the analytical cost model, whose
+    // SE source is Perfect (no exchange priced).  Sweeping the overlap
+    // axes must reproduce every plan bit-for-bit — the headline floors
+    // asserted by `benches/fig5_hybrid_projection.rs` therefore hold
+    // with overlap off (the default) *and* on.
+    let spec = SweepSpec {
+        models: vec!["inception-v3".into(), "gnmt".into(),
+                     "biglstm".into()],
+        topologies: vec!["dgx1".into()],
+        devices: vec![64],
+        batches: vec![BatchSpec::Paper],
+        families: vec![StrategyFamily::Hybrid],
+        mp_degrees: vec![2],
+        objective: Objective::TimeToConverge,
+        cost_model: "analytical".into(),
+        curve_max_devices: 64,
+        threads: 1,
+        ..Default::default()
+    };
+    let plain = run_sweep(&spec).unwrap();
+    let on = run_sweep(&SweepSpec {
+        overlap: vec![8],
+        compression: vec![0.25],
+        ..spec.clone()
+    })
+    .unwrap();
+    assert_eq!(plain.len(), on.len());
+    for (a, b) in plain.results.iter().zip(on.results.iter()) {
+        let pa = a.plan.as_ref().unwrap();
+        let pb = b.plan.as_ref().unwrap();
+        assert_eq!(pa.predicted_step_s.to_bits(),
+                   pb.predicted_step_s.to_bits(),
+                   "{}: analytical fig5 step moved under overlap",
+                   a.scenario.model);
+        assert_eq!(pa.strategy, pb.strategy);
+        assert_eq!(pa.devices_used, pb.devices_used);
+        assert_eq!(pa.mp_degree, pb.mp_degree);
+        // No exchange is priced, so no tail is exposed either way.
+        assert!(pa.exchange_tail_s.is_none());
+        assert!(pb.exchange_tail_s.is_none());
+        // The output rows still record the axes they ran under.
+        assert_eq!(pb.overlap_buckets, 8);
+        assert_eq!(pb.compression, 0.25);
+    }
+}

@@ -92,6 +92,50 @@ fn sweep_matches_direct_planner_calls() {
 }
 
 #[test]
+fn overlap_axes_map_onto_direct_planner_requests() {
+    use hybridpar::planner::AlphaBetaCost;
+    let spec = SweepSpec {
+        models: vec!["gnmt".into()],
+        topologies: vec!["dgx1-pod".into()],
+        devices: vec![16],
+        families: vec![StrategyFamily::DpOnly, StrategyFamily::Hybrid],
+        cost_model: "alpha-beta".into(),
+        overlap: vec![1, 8],
+        compression: vec![1.0, 0.25],
+        curve_max_devices: 16,
+        threads: 1,
+        ..Default::default()
+    };
+    let r = run_sweep(&spec).unwrap();
+    // 2 families × 2 overlap × 2 compression.
+    assert_eq!(r.len(), 8);
+    let planner = Planner::with_cost(Box::new(AlphaBetaCost::default()));
+    for sr in &r.results {
+        let sc = &sr.scenario;
+        let mut req = PlanRequest::new(&sc.model, &sc.topology)
+            .devices(sc.devices)
+            .curve_to(16)
+            .overlap_buckets(sc.overlap)
+            .compression(sc.compression);
+        req = match sc.family {
+            StrategyFamily::DpOnly => req.mp_degrees(&[]),
+            _ => req.mp_degrees(&[2]),
+        };
+        let direct = planner.plan(&req).unwrap();
+        assert_eq!(sr.plan.as_ref().unwrap(), &direct,
+                   "sweep and direct plan diverge for {sc:?}");
+    }
+    // Byte-determinism with the overlap axes in play, threads 1 vs 4.
+    let mut par = spec.clone();
+    par.threads = 4;
+    let r4 = run_sweep(&par).unwrap();
+    assert_eq!(r4.to_json().to_string(), r.to_json().to_string(),
+               "JSON diverged at threads=4 with overlap axes");
+    assert_eq!(r4.to_csv(), r.to_csv(),
+               "CSV diverged at threads=4 with overlap axes");
+}
+
+#[test]
 fn pipelined_family_goes_hybrid_at_scale() {
     // BigLSTM at 64 devices: DP diverges statistically, the pipelined
     // family must fall over to a PipelinedHybrid (or back off) — and its

@@ -10,6 +10,7 @@ use hybridpar::memory::{self, MemoryModel, Optimizer};
 use hybridpar::milp::{solve_lp, solve_milp, BnbConfig, LpOutcome,
                       MilpOutcome, Problem};
 use hybridpar::models;
+use hybridpar::parallel::overlap::{overlapped_step, OverlapModel};
 use hybridpar::parallel::{eq6_consistent, NetworkModel, ScalingEfficiency};
 use hybridpar::pipeline;
 use hybridpar::placer;
@@ -149,6 +150,100 @@ fn prop_best_allreduce_never_worse_than_any_fixed_algorithm() {
         // And the reported cost is the chosen algorithm's own.
         let own = p.cost(best.algorithm, n, bytes, alpha);
         assert!((best.cost_s - own).abs() < 1e-15);
+    });
+}
+
+#[test]
+fn prop_overlap_sandwich_and_bucket_monotonicity() {
+    // The overlap bound, against the real best_allreduce pricing on every
+    // registry topology family: the overlapped step always sits in
+    // `max(compute, exchange) <= step <= compute + exchange` (exchange =
+    // the serial charge at the same compression), is monotone
+    // non-increasing in the bucket budget (cap semantics), and
+    // `buckets = 1` reproduces the serial charge bit-for-bit.
+    run_cases(40, 0x0EA1, |g| {
+        let hw = match g.usize_in(0, 3) {
+            0 => dgx1(g.usize_in(2, 8)),
+            1 => multi_node(g.usize_in(2, 4), g.usize_in(2, 8)),
+            2 => dgx1_pod(g.usize_in(2, 4)),
+            _ => cloud_25gbe(g.usize_in(1, 3)),
+        };
+        let p = TopoProfile::of(&hw);
+        let n = g.usize_in(2, hw.n_devices().max(2));
+        let alpha = g.f64_in(0.0, 1e-4);
+        let compute = g.f64_in(0.01, 1.0);
+        let grad_bytes = g.f64_in(1e6, 1e9);
+        let compression = g.f64_in(0.05, 1.0);
+        let price =
+            |bytes: f64| best_allreduce_on(n, bytes, &p, alpha).cost_s;
+        let mut prev = f64::INFINITY;
+        for buckets in [1usize, 2, 3, 4, 8, 16, 32] {
+            let m = OverlapModel { buckets, compression };
+            let bd = overlapped_step(compute, grad_bytes, &m, price);
+            assert!(bd.step_s >= compute.max(bd.exchange_s) - 1e-12,
+                    "{} n={n} k={buckets}: step {} below \
+                     max(compute {compute}, exchange {})",
+                    hw.name, bd.step_s, bd.exchange_s);
+            assert!(bd.step_s <= compute + bd.exchange_s + 1e-12,
+                    "{} n={n} k={buckets}: step {} above the serial \
+                     charge", hw.name, bd.step_s);
+            assert!(bd.step_s <= prev + 1e-12,
+                    "{} n={n}: budget {buckets} worsened the step \
+                     ({} > {prev})", hw.name, bd.step_s);
+            prev = bd.step_s;
+            assert!((bd.step_s - compute - bd.tail_s).abs() < 1e-12);
+            assert!(bd.buckets_used >= 1 && bd.buckets_used <= buckets);
+        }
+        // One bucket is today's serial number, bit-for-bit.
+        let serial = overlapped_step(
+            compute, grad_bytes,
+            &OverlapModel { buckets: 1, compression }, price);
+        assert_eq!(serial.step_s.to_bits(),
+                   (compute + price(grad_bytes * compression)).to_bits());
+        assert_eq!(serial.tail_s.to_bits(), serial.exchange_s.to_bits());
+    });
+}
+
+#[test]
+fn prop_overlap_defaults_reproduce_serial_se_bitwise() {
+    // At the ScalingEfficiency layer: the explicit off-spelling
+    // `{buckets: 1, compression: 1.0}` takes the legacy serial path, so
+    // SE_N is bit-for-bit what the pre-overlap planner computed; turning
+    // overlap on can only raise SE, never past 1.
+    run_cases(30, 0x0FF5E, |g| {
+        let hw = match g.usize_in(0, 2) {
+            0 => multi_node(g.usize_in(2, 4), g.usize_in(2, 8)),
+            1 => dgx1_pod(g.usize_in(2, 4)),
+            _ => cloud_25gbe(g.usize_in(1, 3)),
+        };
+        let se = ScalingEfficiency::Collective {
+            step_compute_s: g.f64_in(0.01, 1.0),
+            grad_bytes: g.f64_in(1e6, 1e9),
+            alpha: g.f64_in(0.0, 1e-4),
+            topo: TopoProfile::of(&hw),
+            force: None,
+            overlap: OverlapModel::default(),
+        };
+        let n = g.usize_in(1, 64);
+        let width = 1usize << g.usize_in(0, 2);
+        let base = se.at_mp(n, width);
+        let spelled = se
+            .clone()
+            .with_overlap(OverlapModel { buckets: 1, compression: 1.0 })
+            .at_mp(n, width);
+        assert_eq!(base.to_bits(), spelled.to_bits(),
+                   "{} n={n}x{width}: off-spelling drifted", hw.name);
+        let on = se
+            .clone()
+            .with_overlap(OverlapModel {
+                buckets: g.usize_in(2, 32),
+                compression: g.f64_in(0.1, 1.0),
+            })
+            .at_mp(n, width);
+        assert!(on >= base - 1e-15,
+                "{} n={n}x{width}: overlap lowered SE ({on} < {base})",
+                hw.name);
+        assert!(on <= 1.0 + 1e-12);
     });
 }
 
