@@ -276,8 +276,12 @@ pub struct PlannerConfig {
     /// "ring" | "tree" | "hierarchical" pin (None = the `[cluster]`
     /// section's `collective`, itself defaulting to "auto").
     pub collective: Option<String>,
-    /// "auto" | "layerwise" — which search mechanism drives selection.
+    /// "auto" | "layerwise" | "tensor" — which search mechanism drives
+    /// selection.
     pub mechanism: String,
+    /// Tensor-parallel (Megatron intra-layer) widths to price alongside
+    /// the fixed candidates (empty = tensor rows off).
+    pub tensor_degrees: Vec<usize>,
 }
 
 impl Default for PlannerConfig {
@@ -292,6 +296,7 @@ impl Default for PlannerConfig {
             cost_model: "analytical".into(),
             collective: None,
             mechanism: "auto".into(),
+            tensor_degrees: vec![],
         }
     }
 }
@@ -312,6 +317,9 @@ pub struct MemoryConfig {
     pub reserved_gb: f64,
     /// Per-device capacity override for `plan` (GB; None = topology).
     pub device_mem_gb: Option<f64>,
+    /// "off" | "optimizer" | "gradients" | "weights" — ZeRO sharding of
+    /// replicated training state across data-parallel ranks.
+    pub zero: String,
 }
 
 impl Default for MemoryConfig {
@@ -322,6 +330,7 @@ impl Default for MemoryConfig {
             act_factor: 2.0,
             reserved_gb: 0.75,
             device_mem_gb: None,
+            zero: "off".into(),
         }
     }
 }
@@ -342,12 +351,16 @@ pub struct SweepConfig {
     pub device_mem_gb: Vec<String>,
     /// "default" | "paper" | an integer, per axis entry.
     pub batches: Vec<String>,
-    /// "dp" | "hybrid" | "pipelined", per axis entry.
+    /// "dp" | "hybrid" | "pipelined" | "layerwise" | "tensor", per axis
+    /// entry.
     pub families: Vec<String>,
     /// Gradient-exchange overlap bucket budgets (1 = serial exchange).
     pub overlap: Vec<usize>,
     /// Gradient-compression byte factors in `(0, 1]` (1.0 = off).
     pub compression: Vec<f64>,
+    /// ZeRO sharding modes, per axis entry ("off" keeps the `[memory]`
+    /// section's mode).
+    pub zero: Vec<String>,
     pub mp_degrees: Vec<usize>,
     pub objective: String,
     pub cost_model: String,
@@ -373,6 +386,7 @@ impl Default for SweepConfig {
                            "pipelined".into()],
             overlap: vec![1],
             compression: vec![1.0],
+            zero: vec!["off".into()],
             mp_degrees: vec![2],
             objective: "time-to-converge".into(),
             cost_model: "analytical".into(),
@@ -572,6 +586,8 @@ impl RunConfig {
                     .and_then(|v| v.as_str().ok())
                     .map(|s| s.to_string()),
                 mechanism: t.str_or("planner.mechanism", &d.mechanism),
+                tensor_degrees: t.usize_list_or("planner.tensor_degrees",
+                                                &d.tensor_degrees),
             });
         }
         if t.values.keys().any(|k| k.starts_with("sweep.")) {
@@ -593,6 +609,7 @@ impl RunConfig {
                 overlap: t.usize_list_or("sweep.overlap", &d.overlap),
                 compression: t.f64_list_or("sweep.compression",
                                            &d.compression),
+                zero: t.str_list_or("sweep.zero", &dstr(&d.zero)),
                 mp_degrees: t
                     .usize_list_or("sweep.mp_degrees", &d.mp_degrees),
                 objective: t.str_or("sweep.objective", &d.objective),
@@ -636,6 +653,7 @@ impl RunConfig {
                 act_factor,
                 reserved_gb,
                 device_mem_gb,
+                zero: t.str_or("memory.zero", &d.zero),
             });
         }
         if t.values.keys().any(|k| k.starts_with("overlap.")) {
@@ -799,11 +817,20 @@ sizes = [1, 2, 3]
         assert_eq!(p.objective, "step-time");
         assert_eq!(p.cost_model, "simulator");
         assert_eq!(p.mechanism, "auto", "mechanism defaults to auto");
+        assert!(p.tensor_degrees.is_empty(),
+                "tensor rows are opt-in by default");
         let t = Toml::parse(
             "[planner]\nmodel = \"gnmt\"\nmechanism = \"layerwise\"\n")
             .unwrap();
         let p = RunConfig::from_toml(&t).unwrap().planner.unwrap();
         assert_eq!(p.mechanism, "layerwise");
+        let t = Toml::parse(
+            "[planner]\nmodel = \"gnmt\"\nmechanism = \"tensor\"\n\
+             tensor_degrees = [8, 2]\n")
+            .unwrap();
+        let p = RunConfig::from_toml(&t).unwrap().planner.unwrap();
+        assert_eq!(p.mechanism, "tensor");
+        assert_eq!(p.tensor_degrees, vec![8, 2]);
     }
 
     #[test]
@@ -825,7 +852,8 @@ sizes = [1, 2, 3]
              topologies = [\"dgx1\", \"dgx2\"]\ndevices = [8, 64]\n\
              batches = [\"paper\"]\nfamilies = [\"dp\", \"pipelined\"]\n\
              mp_degrees = [2, 4]\nthreads = 4\ncost = \"simulator\"\n\
-             overlap = [1, 8]\ncompression = [1.0, 0.25]\n")
+             overlap = [1, 8]\ncompression = [1.0, 0.25]\n\
+             zero = [\"off\", \"weights\"]\n")
             .unwrap();
         let s = RunConfig::from_toml(&t).unwrap().sweep.unwrap();
         assert_eq!(s.models, vec!["gnmt", "biglstm"]);
@@ -835,17 +863,19 @@ sizes = [1, 2, 3]
         assert_eq!(s.families, vec!["dp", "pipelined"]);
         assert_eq!(s.overlap, vec![1, 8]);
         assert_eq!(s.compression, vec![1.0, 0.25]);
+        assert_eq!(s.zero, vec!["off", "weights"]);
         assert_eq!(s.mp_degrees, vec![2, 4]);
         assert_eq!(s.threads, 4);
         assert_eq!(s.cost_model, "simulator");
         // Unset keys default.
         assert_eq!(s.objective, "time-to-converge");
         assert_eq!(s.curve_max_devices, 256);
-        // Missing axes keep the overlap-off singletons.
+        // Missing axes keep the overlap-off / ZeRO-off singletons.
         let t = Toml::parse("[sweep]\ndevices = [8]\n").unwrap();
         let s = RunConfig::from_toml(&t).unwrap().sweep.unwrap();
         assert_eq!(s.overlap, vec![1]);
         assert_eq!(s.compression, vec![1.0]);
+        assert_eq!(s.zero, vec!["off"]);
     }
 
     #[test]
@@ -886,6 +916,10 @@ sizes = [1, 2, 3]
         assert_eq!(m.act_factor, 1.5);
         assert_eq!(m.reserved_gb, 1.0);
         assert_eq!(m.device_mem_gb, Some(16.0));
+        assert_eq!(m.zero, "off", "zero defaults to off");
+        let t = Toml::parse("[memory]\nzero = \"weights\"\n").unwrap();
+        let m = RunConfig::from_toml(&t).unwrap().memory.unwrap();
+        assert_eq!(m.zero, "weights");
         // Absent by default; partial sections get defaults for the rest.
         let t = Toml::parse(DOC).unwrap();
         assert!(RunConfig::from_toml(&t).unwrap().memory.is_none());

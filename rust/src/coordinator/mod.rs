@@ -26,7 +26,11 @@
 //!   (paper §7.3, implemented in [`alt`]);
 //! * [`Strategy::LayerWise`] — a mixed per-op assignment from the
 //!   layer-wise search ([`crate::layerwise`]); planner/sweep projection
-//!   only (the AOT artifacts execute the fixed strategies above).
+//!   only (the AOT artifacts execute the fixed strategies above);
+//! * [`Strategy::TensorParallel`] — Megatron-style intra-layer split:
+//!   every op's weights and activations feature-sharded across a
+//!   `degree`-device group, with per-layer activation all-reduces in
+//!   forward and backward; planner/sweep projection only.
 
 pub mod alt;
 
@@ -77,6 +81,26 @@ pub enum Strategy {
         dp_workers: usize,
         assignment: Vec<(String, String)>,
     },
+    /// `dp_workers`-way DP of `degree`-device Megatron-style
+    /// tensor-parallel groups: every layer's weights and activations are
+    /// feature-sharded 1/degree across the group, and each layer pays an
+    /// activation all-reduce in forward *and* backward (the
+    /// allreduce-per-layer comm pattern, priced per layer through
+    /// [`crate::collective::best_allreduce_on`]).  A planner/sweep
+    /// projection — the AOT artifacts execute only the fixed strategies
+    /// above.
+    ///
+    /// ```
+    /// use hybridpar::coordinator::Strategy;
+    ///
+    /// // TP=8 groups, 4 data-parallel replicas: 32 devices, and the
+    /// // global batch scales only with the DP dimension.
+    /// let s = Strategy::TensorParallel { degree: 8, dp_workers: 4 };
+    /// assert_eq!(s.kind(), "tensor-parallel");
+    /// assert_eq!(s.devices(), 32);
+    /// assert_eq!(s.global_batch(4, 1), 16);
+    /// ```
+    TensorParallel { degree: usize, dp_workers: usize },
 }
 
 impl Strategy {
@@ -91,6 +115,7 @@ impl Strategy {
             Strategy::AsyncPs { .. } => "async-ps",
             Strategy::LocalSgd { .. } => "local-sgd",
             Strategy::LayerWise { .. } => "layerwise",
+            Strategy::TensorParallel { .. } => "tensor-parallel",
         }
     }
 
@@ -106,6 +131,9 @@ impl Strategy {
             Strategy::AsyncPs { workers, .. } => *workers,
             Strategy::LocalSgd { workers, .. } => *workers,
             Strategy::LayerWise { degree, dp_workers, .. } => {
+                degree * dp_workers
+            }
+            Strategy::TensorParallel { degree, dp_workers } => {
                 degree * dp_workers
             }
         }
@@ -138,6 +166,11 @@ impl Strategy {
             // Each group processes one mini-batch per step (replicated and
             // split ops alike see the full batch), DP-scaled by workers.
             Strategy::LayerWise { dp_workers, .. } => {
+                engine_batch * dp_workers
+            }
+            // Every rank of a TP group sees the full mini-batch (the
+            // split is along features, not batch); only DP scales it.
+            Strategy::TensorParallel { dp_workers, .. } => {
                 engine_batch * dp_workers
             }
         }
@@ -218,6 +251,11 @@ impl Coordinator {
             Strategy::LayerWise { degree, .. } => {
                 bail!("the AOT artifacts execute fixed strategies only; a \
                        {degree}-wide layer-wise assignment is a \
+                       planner/sweep projection")
+            }
+            Strategy::TensorParallel { degree, .. } => {
+                bail!("the AOT artifacts execute fixed strategies only; a \
+                       {degree}-way tensor-parallel split is a \
                        planner/sweep projection")
             }
             Strategy::PipelinedHybrid { stages, microbatches, replicas } => {
@@ -581,6 +619,9 @@ mod tests {
             }
             .devices(),
             8);
+        assert_eq!(
+            Strategy::TensorParallel { degree: 8, dp_workers: 4 }.devices(),
+            32);
     }
 
     #[test]
@@ -609,6 +650,11 @@ mod tests {
         };
         assert_eq!(lw.global_batch(8, 4), 16);
         assert_eq!(lw.kind(), "layerwise");
+        // A TP group also consumes one full mini-batch per step: the
+        // feature split leaves the statistics to the DP dimension.
+        let tp = Strategy::TensorParallel { degree: 8, dp_workers: 2 };
+        assert_eq!(tp.global_batch(8, 4), 16);
+        assert_eq!(tp.kind(), "tensor-parallel");
     }
 
     #[test]

@@ -22,7 +22,7 @@ use hybridpar::collective;
 use hybridpar::config::{MemoryConfig, RunConfig, SweepConfig, Toml};
 use hybridpar::coordinator::{Coordinator, Strategy};
 use hybridpar::data::Corpus;
-use hybridpar::memory::{MemoryModel, Optimizer};
+use hybridpar::memory::{MemoryModel, Optimizer, ZeroMode};
 use hybridpar::parallel::{NetworkModel, ScalingEfficiency};
 use hybridpar::placer;
 use hybridpar::planner::sweep::{effective_threads, parse_mem_gb,
@@ -48,9 +48,11 @@ COMMANDS:
              [--collective auto|ring|tree|hierarchical]
              [--batch B] [--objective time-to-converge|step-time]
              [--cost analytical|alpha-beta|simulator] [--mp-degrees 2,4]
-             [--mechanism auto|layerwise] [--pipeline-only] [--max-curve N]
+             [--mechanism auto|layerwise|tensor] [--tensor-degrees 8,2]
+             [--pipeline-only] [--max-curve N]
              [--device-mem-gb G] [--optimizer sgd|momentum|adam]
              [--recompute] [--act-factor F] [--reserved-gb G]
+             [--zero off|optimizer|gradients|weights]
              [--overlap-buckets K] [--compression F]
              [--config cfg.toml] [--out-json path]
              (emits the typed Plan as JSON on stdout; memory-infeasible
@@ -60,10 +62,11 @@ COMMANDS:
              [--nodes 1,2,4] [--collective auto|ring|tree|hierarchical]
              [--device-mem-gb default|G,...]
              [--batches default|paper|N,...]
-             [--families dp,hybrid,pipelined,layerwise]
+             [--families dp,hybrid,pipelined,layerwise,tensor]
              [--mp-degrees 2,4] [--threads N] [--objective ...] [--cost ...]
              [--optimizer ...] [--recompute] [--max-curve N]
              [--overlap 1,8,...] [--compression 1.0,0.25,...]
+             [--zero off,weights,...]
              [--config cfg.toml] [--out-json p] [--out-csv p]
              (parallel grid evaluation; JSON on stdout, deterministic
               ordering — --threads N output is byte-identical to --threads 1)
@@ -145,6 +148,9 @@ fn memory_model_from(args: &Args, base: &MemoryConfig)
         recompute: args.has_flag("recompute") || base.recompute,
         act_factor,
         reserved_bytes: reserved_gb * 1e9,
+        // `--zero` is handled per-subcommand (plan: a mode; sweep: an
+        // axis), so only the `[memory]` section lands here.
+        zero: ZeroMode::parse(&base.zero)?,
         ..MemoryModel::default()
     })
 }
@@ -179,7 +185,10 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let objective =
         Objective::parse(&args.get_or("objective", &base.objective))?;
     let cost = cost_by_name(&args.get_or("cost", &base.cost_model))?;
-    let mem_model = memory_model_from(args, &mem_base)?;
+    let mut mem_model = memory_model_from(args, &mem_base)?;
+    if let Some(z) = args.get("zero") {
+        mem_model.zero = ZeroMode::parse(z)?;
+    }
     let device_mem_gb = match args.get("device-mem-gb") {
         Some(s) => parse_mem_gb(s)?,
         None => mem_base.device_mem_gb,
@@ -225,6 +234,17 @@ fn cmd_plan(args: &Args) -> Result<()> {
             .map(|s| s.trim().parse::<usize>())
             .collect::<std::result::Result<_, _>>()?;
         req = req.mp_degrees(&degrees);
+    }
+    // --tensor-degrees: CLI > [planner] tensor_degrees > off (empty).
+    let tensor_degrees: Vec<usize> = match args.get("tensor-degrees") {
+        Some(ts) => ts
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<std::result::Result<_, _>>()?,
+        None => base.tensor_degrees.clone(),
+    };
+    if !tensor_degrees.is_empty() {
+        req = req.tensor_degrees(&tensor_degrees);
     }
 
     let planner = Planner::with_cost(cost);
@@ -344,6 +364,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         None if base.compression != vec![1.0] => base.compression,
         None => vec![ov.compression],
     };
+    // ZeRO axis: CLI > [sweep] zero.  "off" entries keep the `[memory]`
+    // section's mode (already resolved into spec.memory), so the default
+    // singleton composes with a config-level `memory.zero`.
+    let zero: Vec<ZeroMode> = match args.get("zero") {
+        Some(s) => csv_list(s)
+            .iter()
+            .map(|x| ZeroMode::parse(x))
+            .collect::<Result<_>>()?,
+        None => base
+            .zero
+            .iter()
+            .map(|x| ZeroMode::parse(x))
+            .collect::<Result<_>>()?,
+    };
 
     // --collective: CLI > [sweep] > [cluster].
     let collective_spec = args.get_or(
@@ -369,6 +403,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .collect::<Result<_>>()?,
         overlap,
         compression,
+        zero,
         mp_degrees,
         objective: Objective::parse(
             &args.get_or("objective", &base.objective))?,

@@ -26,7 +26,13 @@
 //!   only checkpoints (raw op outputs / stage boundaries) stay resident
 //!   and intermediates are recomputed during backward, trading footprint
 //!   for one extra forward pass
-//!   ([`MemoryModel::time_factor`] ≈ 4/3 of the fwd+bwd step).
+//!   ([`MemoryModel::time_factor`] ≈ 4/3 of the fwd+bwd step);
+//! * **ZeRO sharding** ([`MemoryModel::zero`], [`zero_sharded`]) —
+//!   optimizer state / gradients / weights partitioned across the DP
+//!   ranks (ZeRO-1/2/3, FSDP), which makes DP feasibility *N-dependent*:
+//!   the per-replica footprint shrinks as the data-parallel group grows,
+//!   at the price of extra allgather traffic on the exchange
+//!   ([`ZeroMode::allgather_volume_factor`]).
 //!
 //! Estimators mirror the planner's three candidate layouts:
 //! [`single_device`] (DP replicas and the M = 1 baseline), [`placed`]
@@ -81,6 +87,83 @@ impl Optimizer {
     }
 }
 
+/// ZeRO / FSDP sharding stage — which training-state components are
+/// partitioned across the data-parallel ranks instead of replicated.
+///
+/// Each stage subsumes the previous one (ZeRO-2 shards gradients *and*
+/// optimizer state; ZeRO-3 shards all three).  Sharding trades footprint
+/// for exchange traffic: the sharded components must be re-materialised
+/// on demand, and [`ZeroMode::allgather_volume_factor`] is the extra
+/// weight-sized allgather volume the gradient exchange is charged per
+/// step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ZeroMode {
+    /// No sharding: every DP rank replicates the full training state
+    /// (the paper's assumption — feasibility independent of N).
+    Off,
+    /// ZeRO-1: optimizer state sharded across DP ranks.
+    Optimizer,
+    /// ZeRO-2: optimizer state + gradient buffers sharded.
+    Gradients,
+    /// ZeRO-3 / FSDP: optimizer state + gradients + weights sharded.
+    Weights,
+}
+
+impl ZeroMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ZeroMode::Off => "off",
+            ZeroMode::Optimizer => "optimizer",
+            ZeroMode::Gradients => "gradients",
+            ZeroMode::Weights => "weights",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "off" | "none" => ZeroMode::Off,
+            "optimizer" | "os" | "zero1" | "zero-1" | "stage1" => {
+                ZeroMode::Optimizer
+            }
+            "gradients" | "grads" | "zero2" | "zero-2" | "stage2" => {
+                ZeroMode::Gradients
+            }
+            "weights" | "params" | "zero3" | "zero-3" | "stage3"
+            | "fsdp" | "full" => ZeroMode::Weights,
+            other => bail!("unknown zero mode '{other}' \
+                            (known: off, optimizer, gradients, weights)"),
+        })
+    }
+
+    /// Does this stage shard the optimizer state?  (All stages ≥ ZeRO-1.)
+    pub fn shards_optimizer(self) -> bool {
+        self >= ZeroMode::Optimizer
+    }
+
+    /// Does this stage shard the gradient buffers?  (ZeRO-2 and up.)
+    pub fn shards_gradients(self) -> bool {
+        self >= ZeroMode::Gradients
+    }
+
+    /// Does this stage shard the weights themselves?  (ZeRO-3 / FSDP.)
+    pub fn shards_weights(self) -> bool {
+        self == ZeroMode::Weights
+    }
+
+    /// Extra per-step exchange volume, in units of the model's weight
+    /// bytes, charged on top of the gradient all-reduce: ZeRO-1/2 pay
+    /// one weight-sized allgather (the updated parameter shards),
+    /// ZeRO-3 pays two (parameters re-gathered for forward *and*
+    /// backward).
+    pub fn allgather_volume_factor(self) -> f64 {
+        match self {
+            ZeroMode::Off => 0.0,
+            ZeroMode::Optimizer | ZeroMode::Gradients => 1.0,
+            ZeroMode::Weights => 2.0,
+        }
+    }
+}
+
 /// The accounting knobs of the footprint model.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MemoryModel {
@@ -99,6 +182,10 @@ pub struct MemoryModel {
     /// Step-time inflation of recompute, as a fraction of the fwd+bwd
     /// step.  One extra forward ≈ 1/3 of a 3×-forward training step.
     pub recompute_overhead: f64,
+    /// ZeRO / FSDP sharding stage applied across the DP ranks (see
+    /// [`zero_sharded`]).  `Off` keeps the paper's replicated-state
+    /// accounting bit-for-bit.
+    pub zero: ZeroMode,
 }
 
 impl Default for MemoryModel {
@@ -109,6 +196,7 @@ impl Default for MemoryModel {
             act_factor: 2.0,
             reserved_bytes: 0.75e9,
             recompute_overhead: 1.0 / 3.0,
+            zero: ZeroMode::Off,
         }
     }
 }
@@ -132,6 +220,7 @@ impl MemoryModel {
             ("act_factor", Json::Num(self.act_factor)),
             ("reserved_bytes", Json::Num(self.reserved_bytes)),
             ("recompute_overhead", Json::Num(self.recompute_overhead)),
+            ("zero", Json::Str(self.zero.as_str().into())),
         ])
     }
 
@@ -140,8 +229,9 @@ impl MemoryModel {
     /// typoed knob cannot silently fall back to a default.
     pub fn from_json(j: &Json) -> Result<Self> {
         let d = MemoryModel::default();
-        const KEYS: [&str; 5] = ["optimizer", "recompute", "act_factor",
-                                 "reserved_bytes", "recompute_overhead"];
+        const KEYS: [&str; 6] = ["optimizer", "recompute", "act_factor",
+                                 "reserved_bytes", "recompute_overhead",
+                                 "zero"];
         for key in j.as_obj()?.keys() {
             if !KEYS.contains(&key.as_str()) {
                 bail!("unknown memory key '{key}' (known: {})",
@@ -171,6 +261,10 @@ impl MemoryModel {
             recompute_overhead: match j.opt("recompute_overhead") {
                 None | Some(Json::Null) => d.recompute_overhead,
                 Some(v) => v.as_f64()?,
+            },
+            zero: match j.opt("zero") {
+                None | Some(Json::Null) => d.zero,
+                Some(v) => ZeroMode::parse(v.as_str()?)?,
             },
         })
     }
@@ -327,6 +421,74 @@ pub fn single_device(prof: &ModelProfile, model: &MemoryModel)
     let weights: f64 = prof.dfg.ops.iter().map(op_weight_bytes).sum();
     let raw_out: f64 = prof.dfg.ops.iter().map(op_activation_bytes).sum();
     MemoryEstimate::from_parts(model, weights, act_resident(model, raw_out))
+}
+
+/// Re-account a per-replica footprint under ZeRO sharding across
+/// `dp_ranks` data-parallel ranks: the components
+/// [`MemoryModel::zero`] shards are divided by the rank count and the
+/// total is rebuilt.  Identity when the mode is [`ZeroMode::Off`] or the
+/// group has a single rank — so every pre-ZeRO number in the repo is
+/// reproduced bit-for-bit.  Activations are *never* sharded (each rank
+/// still runs its full per-device mini-batch), which is why ZeRO alone
+/// cannot rescue an activation-bound model.
+///
+/// ```
+/// use hybridpar::memory::{self, MemoryModel, ZeroMode};
+/// use hybridpar::models;
+///
+/// let prof = models::transformer_70b(4);
+/// let mm = MemoryModel { zero: ZeroMode::Weights, ..Default::default() };
+/// let whole = memory::single_device(&prof, &mm);
+/// // ZeRO-3 over 64 ranks shards weights, gradients and optimizer state…
+/// let sharded = memory::zero_sharded(&whole, &mm, 64);
+/// assert!(sharded.weight_bytes < whole.weight_bytes / 63.0);
+/// assert!(sharded.total_bytes < whole.total_bytes);
+/// // …but the activations stay whole: ZeRO alone still misses 80 GB.
+/// assert_eq!(sharded.activation_bytes, whole.activation_bytes);
+/// assert!(!sharded.fits(80e9));
+/// ```
+pub fn zero_sharded(est: &MemoryEstimate, model: &MemoryModel,
+                    dp_ranks: usize) -> MemoryEstimate {
+    if model.zero == ZeroMode::Off || dp_ranks <= 1 {
+        return *est;
+    }
+    let n = dp_ranks as f64;
+    let w = if model.zero.shards_weights() {
+        est.weight_bytes / n
+    } else {
+        est.weight_bytes
+    };
+    let g = if model.zero.shards_gradients() {
+        est.grad_bytes / n
+    } else {
+        est.grad_bytes
+    };
+    let o = if model.zero.shards_optimizer() {
+        est.optimizer_bytes / n
+    } else {
+        est.optimizer_bytes
+    };
+    MemoryEstimate {
+        weight_bytes: w,
+        grad_bytes: g,
+        optimizer_bytes: o,
+        total_bytes: w + g + o + est.activation_bytes + est.reserved_bytes,
+        ..*est
+    }
+}
+
+/// Footprint of one rank of a `degree`-way Megatron-style tensor-parallel
+/// group: every op's weights *and* activations are split 1/degree across
+/// the group (each rank computes a feature shard of every layer), unlike
+/// a pipeline stage which concentrates whole layers.  The M = 1 case is
+/// byte-identical to [`single_device`].
+pub fn tensor_sharded(prof: &ModelProfile, model: &MemoryModel,
+                      degree: usize) -> MemoryEstimate {
+    let d = degree.max(1) as f64;
+    let weights: f64 = prof.dfg.ops.iter().map(op_weight_bytes).sum();
+    let raw_out: f64 = prof.dfg.ops.iter().map(op_activation_bytes).sum();
+    MemoryEstimate::from_parts(model, weights / d,
+                               act_resident(model, raw_out / d))
 }
 
 /// Footprint of a DLPlacer placement: per-device weight/activation sums
@@ -601,6 +763,7 @@ mod tests {
             act_factor: 1.5,
             reserved_bytes: 1e9,
             recompute_overhead: 0.25,
+            zero: ZeroMode::Gradients,
         };
         let j = m.to_json().to_string();
         let back = MemoryModel::from_json(&Json::parse(&j).unwrap()).unwrap();
@@ -610,6 +773,12 @@ mod tests {
             &Json::parse(r#"{"optimizer":"sgd"}"#).unwrap()).unwrap();
         assert_eq!(partial.optimizer, Optimizer::Sgd);
         assert_eq!(partial.act_factor, MemoryModel::default().act_factor);
+        assert_eq!(partial.zero, ZeroMode::Off);
+        let z = MemoryModel::from_json(
+            &Json::parse(r#"{"zero":"zero3"}"#).unwrap()).unwrap();
+        assert_eq!(z.zero, ZeroMode::Weights);
+        assert!(MemoryModel::from_json(
+            &Json::parse(r#"{"zero":"zero4"}"#).unwrap()).is_err());
         assert!(MemoryModel::from_json(
             &Json::parse(r#"{"optimiser":"sgd"}"#).unwrap()).is_err());
         assert!(MemoryModel::from_json(
@@ -617,5 +786,77 @@ mod tests {
         // A mistyped recompute must error, not silently mean "off".
         assert!(MemoryModel::from_json(
             &Json::parse(r#"{"recompute":"true"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn zero_mode_parse_and_stage_nesting() {
+        for z in [ZeroMode::Off, ZeroMode::Optimizer, ZeroMode::Gradients,
+                  ZeroMode::Weights] {
+            assert_eq!(ZeroMode::parse(z.as_str()).unwrap(), z);
+        }
+        assert_eq!(ZeroMode::parse("zero1").unwrap(), ZeroMode::Optimizer);
+        assert_eq!(ZeroMode::parse("fsdp").unwrap(), ZeroMode::Weights);
+        assert!(ZeroMode::parse("zero0").is_err());
+        // Each stage subsumes the previous one.
+        assert!(!ZeroMode::Off.shards_optimizer());
+        assert!(ZeroMode::Optimizer.shards_optimizer()
+                && !ZeroMode::Optimizer.shards_gradients());
+        assert!(ZeroMode::Gradients.shards_gradients()
+                && !ZeroMode::Gradients.shards_weights());
+        assert!(ZeroMode::Weights.shards_weights()
+                && ZeroMode::Weights.shards_gradients());
+        // Allgather charge grows with the stage, zero when off.
+        assert_eq!(ZeroMode::Off.allgather_volume_factor(), 0.0);
+        assert_eq!(ZeroMode::Weights.allgather_volume_factor(), 2.0);
+    }
+
+    #[test]
+    fn zero_sharding_divides_state_but_not_activations() {
+        let prof = models::biglstm(64);
+        let mm = MemoryModel {
+            zero: ZeroMode::Weights,
+            ..Default::default()
+        };
+        let whole = single_device(&prof, &mm);
+        let sharded = zero_sharded(&whole, &mm, 8);
+        assert!((sharded.weight_bytes - whole.weight_bytes / 8.0).abs()
+                    < 1.0);
+        assert!((sharded.grad_bytes - whole.grad_bytes / 8.0).abs() < 1.0);
+        assert!((sharded.optimizer_bytes - whole.optimizer_bytes / 8.0)
+                    .abs() < 1.0);
+        assert_eq!(sharded.activation_bytes, whole.activation_bytes);
+        assert_eq!(sharded.reserved_bytes, whole.reserved_bytes);
+        assert!(sharded.total_bytes < whole.total_bytes);
+        // ZeRO-1 shards only the optimizer state.
+        let z1 = MemoryModel {
+            zero: ZeroMode::Optimizer,
+            ..Default::default()
+        };
+        let s1 = zero_sharded(&single_device(&prof, &z1), &z1, 8);
+        assert_eq!(s1.weight_bytes, whole.weight_bytes);
+        assert_eq!(s1.grad_bytes, whole.grad_bytes);
+        assert!((s1.optimizer_bytes - whole.optimizer_bytes / 8.0).abs()
+                    < 1.0);
+        // Identity when off or single-rank — bit-for-bit.
+        let off = MemoryModel::default();
+        let base = single_device(&prof, &off);
+        assert_eq!(zero_sharded(&base, &off, 8), base);
+        assert_eq!(zero_sharded(&whole, &mm, 1), whole);
+    }
+
+    #[test]
+    fn tensor_sharding_splits_weights_and_activations() {
+        let prof = models::gnmt(128);
+        let mm = MemoryModel::default();
+        let whole = single_device(&prof, &mm);
+        // Degree 1 is byte-identical to the single-device estimate.
+        assert_eq!(tensor_sharded(&prof, &mm, 1), whole);
+        let t8 = tensor_sharded(&prof, &mm, 8);
+        assert!((t8.weight_bytes - whole.weight_bytes / 8.0).abs() < 1.0);
+        assert!((t8.activation_bytes - whole.activation_bytes / 8.0).abs()
+                    < 1.0);
+        // Unlike ZeRO, TP shrinks the activation term — the combination
+        // is what unlocks activation-bound models.
+        assert!(t8.activation_bytes < whole.activation_bytes);
     }
 }

@@ -355,6 +355,27 @@ pub fn transformer_lm(n_layers: usize, d_model: f64, d_ff: f64, vocab: f64,
     }
 }
 
+/// A 70B-class transformer (88 × d_model 8192, d_ff 32768, 32k vocab,
+/// seq 4096 — ≈71B params, ≈286 GB of f32 weights).  Under Adam the
+/// replicated training state alone is ≈1.1 TB: infeasible on any 80 GB
+/// part without tensor parallelism × ZeRO sharding, which is exactly why
+/// it seeds the registry (see `docs/3d-parallelism.md`).
+pub fn transformer_70b(b: usize) -> ModelProfile {
+    let mut p = transformer_lm(88, 8192.0, 32768.0, 32_000.0, 4096.0, b);
+    p.name = "transformer-70b".into();
+    p
+}
+
+/// A 100B-class transformer (80 × d_model 10240, d_ff 40960, 32k vocab,
+/// seq 4096 — ≈101B params).  Even further past single-device
+/// feasibility than [`transformer_70b`]; exists so sweeps have a second
+/// point on the 3D-parallelism frontier.
+pub fn transformer_100b(b: usize) -> ModelProfile {
+    let mut p = transformer_lm(80, 10240.0, 40960.0, 32_000.0, 4096.0, b);
+    p.name = "transformer-100b".into();
+    p
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -424,5 +445,21 @@ mod tests {
         let large = transformer_lm(8, 128.0, 512.0, 512.0, 64.0, 8);
         assert!(large.dfg.total_flops() > 1.5 * small.dfg.total_flops());
         assert_eq!(large.dfg.n_ops(), 10);
+    }
+
+    #[test]
+    fn large_transformers_have_headline_param_counts() {
+        let p70 = transformer_70b(4);
+        let params70 = p70.grad_bytes / 4.0;
+        assert!(params70 > 65e9 && params70 < 80e9,
+                "70B-class: {params70:e}");
+        assert_eq!(p70.name, "transformer-70b");
+        let p100 = transformer_100b(4);
+        let params100 = p100.grad_bytes / 4.0;
+        assert!(params100 > 95e9 && params100 < 110e9,
+                "100B-class: {params100:e}");
+        assert_eq!(p100.name, "transformer-100b");
+        // f32 weights alone overflow an 80 GB part many times over.
+        assert!(p70.grad_bytes > 3.0 * 80e9);
     }
 }

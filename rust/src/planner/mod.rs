@@ -64,7 +64,8 @@ pub use cost::{cost_by_name, AlphaBetaCost, AnalyticalCost, CostModel,
 pub use registry::{ModelEntry, ModelRegistry, TopologyEntry,
                    TopologyRegistry};
 
-use crate::collective::Algorithm;
+use crate::collective::{best_allreduce_on, Algorithm, TopoProfile,
+                        DEFAULT_ALPHA};
 use crate::coordinator::Strategy;
 use crate::layerwise::{self, LayerwiseOptions};
 use crate::memory::{self, Feasibility, MemoryEstimate, MemoryModel};
@@ -108,7 +109,10 @@ impl Objective {
 /// layer-wise rows are analysis material in the scorecard.  Under
 /// [`PlanMechanism::Layerwise`] the per-op search
 /// ([`crate::layerwise::solve`]) drives selection: the chosen strategy is
-/// the best mixed assignment across the requested degrees.
+/// the best mixed assignment across the requested degrees.  Under
+/// [`PlanMechanism::Tensor`] a Megatron-style intra-layer split drives
+/// selection across the requested `tensor_degrees` (with DP workers
+/// layered on top of each split).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlanMechanism {
     /// Fixed-candidate selection (the default; layer-wise rows are
@@ -116,6 +120,8 @@ pub enum PlanMechanism {
     Auto,
     /// The layer-wise mixed assignment drives selection.
     Layerwise,
+    /// A tensor-parallel intra-layer split drives selection.
+    Tensor,
 }
 
 impl PlanMechanism {
@@ -123,6 +129,7 @@ impl PlanMechanism {
         match self {
             PlanMechanism::Auto => "auto",
             PlanMechanism::Layerwise => "layerwise",
+            PlanMechanism::Tensor => "tensor",
         }
     }
 
@@ -130,8 +137,11 @@ impl PlanMechanism {
         Ok(match s {
             "auto" | "fixed" => PlanMechanism::Auto,
             "layerwise" | "layer-wise" | "pase" => PlanMechanism::Layerwise,
+            "tensor" | "tensor-parallel" | "tp" | "megatron" => {
+                PlanMechanism::Tensor
+            }
             other => bail!("unknown plan mechanism '{other}' \
-                            (known: auto, layerwise)"),
+                            (known: auto, layerwise, tensor)"),
         })
     }
 }
@@ -154,6 +164,17 @@ pub struct PlanRequest {
     /// that is infeasible on the topology (more stages than ops or
     /// physical devices) drops out of the search rather than failing it.
     pub mp_degrees: Vec<usize>,
+    /// Candidate tensor-parallel widths T (> 1): Megatron-style
+    /// intra-layer splits where every op's compute divides by T and each
+    /// op pays 4 activation all-reduces per step (2 forward + 2
+    /// backward) over the T-rank group, priced through
+    /// [`crate::collective::best_allreduce_on`] on the topology's
+    /// profile.  Empty (the default) adds no tensor rows, keeping
+    /// existing plans byte-identical.  Tensor rows are scorecard
+    /// analysis under [`PlanMechanism::Auto`] unless no fixed candidate
+    /// fits in memory, in which case a feasible tensor split rescues
+    /// the plan instead of failing it.
+    pub tensor_degrees: Vec<usize>,
     /// Restrict M > 1 candidates to the pipelined mechanism (skip the
     /// structural DLPlacer default).  This is the sweep engine's
     /// "pipelined" strategy family; the default `false` scores both
@@ -204,6 +225,7 @@ impl PlanRequest {
             batch: None,
             objective: Objective::TimeToConverge,
             mp_degrees: vec![2],
+            tensor_degrees: vec![],
             pipeline_only: false,
             curve_max_devices: 256,
             device_mem_gb: None,
@@ -233,6 +255,12 @@ impl PlanRequest {
 
     pub fn mp_degrees(mut self, ms: &[usize]) -> Self {
         self.mp_degrees = ms.to_vec();
+        self
+    }
+
+    /// Candidate tensor-parallel (intra-layer split) widths.
+    pub fn tensor_degrees(mut self, ts: &[usize]) -> Self {
+        self.tensor_degrees = ts.to_vec();
         self
     }
 
@@ -301,11 +329,11 @@ impl PlanRequest {
     /// service's `POST /plan` body).  `"cost"` selects the cost model
     /// and is returned separately by the parser — it configures the
     /// [`Planner`], not the request.
-    pub const WIRE_KEYS: [&'static str; 16] = [
+    pub const WIRE_KEYS: [&'static str; 17] = [
         "model", "topology", "devices", "batch", "objective", "mp_degrees",
-        "pipeline_only", "curve_max_devices", "device_mem_gb", "memory",
-        "nodes", "collective", "mechanism", "cost", "overlap",
-        "compression",
+        "tensor_degrees", "pipeline_only", "curve_max_devices",
+        "device_mem_gb", "memory", "nodes", "collective", "mechanism",
+        "cost", "overlap", "compression",
     ];
 
     /// The cache-canonical form of this request: a sorted-key JSON
@@ -321,6 +349,7 @@ impl PlanRequest {
     ///   (`Plan.mini_batch` records the resolved batch);
     /// * `mp_degrees` is sorted, deduplicated and filtered to `> 1` —
     ///   exactly what [`Planner::plan`] does before scoring;
+    /// * `tensor_degrees` gets the same sort/dedup/filter treatment;
     /// * `recompute_overhead` normalises to the default when recompute
     ///   is off ([`MemoryModel::time_factor`] is 1.0 either way);
     /// * `overlap`/`compression` serialise their values outright
@@ -349,6 +378,14 @@ impl PlanRequest {
             .collect();
         degrees.sort_unstable();
         degrees.dedup();
+        let mut tensor: Vec<usize> = self
+            .tensor_degrees
+            .iter()
+            .copied()
+            .filter(|&t| t > 1)
+            .collect();
+        tensor.sort_unstable();
+        tensor.dedup();
         let memory = if self.memory.recompute {
             self.memory.clone()
         } else {
@@ -366,6 +403,8 @@ impl PlanRequest {
             ("objective", Json::Str(self.objective.as_str().into())),
             ("mp_degrees",
              Json::Arr(degrees.into_iter().map(junum).collect())),
+            ("tensor_degrees",
+             Json::Arr(tensor.into_iter().map(junum).collect())),
             ("pipeline_only", Json::Bool(self.pipeline_only)),
             ("curve_max_devices", junum(self.curve_max_devices)),
             ("device_mem_gb", jonum(self.device_mem_gb)),
@@ -457,6 +496,14 @@ pub fn plan_request_from_json(j: &Json)
             .map(|x| wire_int(x, "mp_degrees", MAX_WIRE_INT))
             .collect::<Result<_>>()?;
     }
+    if let Some(ts) = j.opt("tensor_degrees").filter(|v| **v != Json::Null)
+    {
+        req.tensor_degrees = ts
+            .as_arr()?
+            .iter()
+            .map(|x| wire_int(x, "tensor_degrees", MAX_WIRE_INT))
+            .collect::<Result<_>>()?;
+    }
     req.pipeline_only = match j.opt("pipeline_only") {
         None | Some(Json::Null) => false,
         Some(Json::Bool(b)) => *b,
@@ -520,7 +567,7 @@ pub struct CandidateScore {
     /// End-to-end speedup vs 1 device (Eq. 3/5; None = infeasible).
     pub speedup: Option<f64>,
     pub feasible: bool,
-    /// "none" | "placed" | "pipelined".
+    /// "none" | "placed" | "pipelined" | "layerwise" | "tensor".
     pub mechanism: String,
     /// Searched micro-batch count when pipelined.
     pub microbatches: Option<usize>,
@@ -580,7 +627,7 @@ pub struct Plan {
     /// M of the chosen strategy (1 = DP-only).
     pub mp_degree: usize,
     pub dp_workers: usize,
-    /// "none" | "placed" | "pipelined".
+    /// "none" | "placed" | "pipelined" | "layerwise" | "tensor".
     pub mechanism: String,
     pub microbatches: Option<usize>,
     /// Predicted per-step wall time of the chosen strategy (seconds).
@@ -755,9 +802,14 @@ impl Planner {
         let serial = serial_est.step_time_s;
         let serial_mem =
             self.cost.memory_estimate(&prof, &serial_est, mem_model)?;
-        // DP replicas all hold the whole model: M = 1 feasibility is the
-        // single-device footprint, independent of the DP width.
-        let dp_fits = serial_mem.fits(available);
+        // DP replicas all hold the whole model, so M = 1 feasibility is
+        // the single-device footprint — *unless* ZeRO sharding spreads
+        // optimizer state / gradients / weights across the DP ranks, in
+        // which case feasibility becomes N-dependent: the same model can
+        // be infeasible on 8 devices and feasible on 64.
+        let dp_mem =
+            memory::zero_sharded(&serial_mem, mem_model, req.devices);
+        let dp_fits = dp_mem.fits(available);
 
         struct Scored {
             est: MpEstimate,
@@ -798,9 +850,14 @@ impl Planner {
                 continue;
             }
             let mut scored: Vec<Scored> = Vec::with_capacity(cands.len());
+            // ZeRO shards each stage's state across the degree's DP
+            // replicas (a no-op at the default `zero = off`).
+            let zero_nd =
+                if req.devices % m == 0 { req.devices / m } else { 1 };
             for est in cands {
                 let mem =
                     self.cost.memory_estimate(&prof, &est, mem_model)?;
+                let mem = memory::zero_sharded(&mem, mem_model, zero_nd);
                 let fits = mem.fits(available);
                 scored.push(Scored { est, mem, fits });
             }
@@ -910,6 +967,66 @@ impl Planner {
             }
         }
 
+        // --- tensor-parallel candidates ----------------------------------
+        // One per requested degree T: a Megatron-style intra-layer split.
+        // Every op's compute divides by T, and every op pays 4 activation
+        // all-reduces per step (2 forward + 2 backward) over the T-rank
+        // group — allreduce-per-layer instead of allreduce-per-step, so
+        // the penalty grows with layer count while DP's gradient exchange
+        // stays flat.  Priced through the same best_allreduce/TopoProfile
+        // layer as the DP exchange, so a TP group spanning chassis costs
+        // what the topology says.  The footprint combines the 1/T tensor
+        // shard with ZeRO sharding across the DP ranks stacked on top.
+        let mut tensor_degrees: Vec<usize> = req
+            .tensor_degrees
+            .iter()
+            .copied()
+            .filter(|&t| t > 1)
+            .collect();
+        tensor_degrees.sort_unstable();
+        tensor_degrees.dedup();
+        let mut tp_scored: BTreeMap<usize, LwScored> = BTreeMap::new();
+        if !tensor_degrees.is_empty() {
+            let tp_topo = TopoProfile::for_budget(&hw, req.devices);
+            for &t in &tensor_degrees {
+                if t > req.devices {
+                    continue;
+                }
+                let allreduce_s: f64 = prof
+                    .dfg
+                    .ops
+                    .iter()
+                    .map(|op| {
+                        4.0 * best_allreduce_on(t, op.out_bytes, &tp_topo,
+                                                DEFAULT_ALPHA)
+                            .cost_s
+                    })
+                    .sum();
+                let step = serial / t as f64 + allreduce_s;
+                let nd =
+                    if req.devices % t == 0 { req.devices / t } else { 1 };
+                let mem = memory::zero_sharded(
+                    &memory::tensor_sharded(&prof, mem_model, t),
+                    mem_model, nd);
+                tp_scored.insert(t, LwScored {
+                    step_time_s: step,
+                    strategy: Strategy::TensorParallel { degree: t,
+                                                         dp_workers: nd },
+                    mem,
+                    microbatches: None,
+                    note: format!(
+                        "Megatron {t}-way intra-layer split: 4 activation \
+                         all-reduces x {} ops per step",
+                        prof.dfg.n_ops()),
+                });
+            }
+        }
+        if req.mechanism == PlanMechanism::Tensor && tp_scored.is_empty() {
+            bail!("--mechanism tensor needs at least one tensor-parallel \
+                   degree > 1 (pass --tensor-degrees, e.g. \
+                   --tensor-degrees 8)");
+        }
+
         // Degrees whose best mechanism both estimated and fit in memory —
         // the ones Eq. 5 and the speedup curve may use.
         let feasible_degrees: Vec<usize> =
@@ -920,10 +1037,23 @@ impl Planner {
         // the algorithm the SE model prices with; the request's overlap
         // axes switch the charge from serial to bucketed-overlapped
         // (a no-op at the defaults and under SE models that price no
-        // communication).
+        // communication).  ZeRO sharding re-materialises the sharded
+        // state on demand, so the exchange payload grows by
+        // `allgather_volume_factor × weight bytes` per step (0 extra at
+        // the default `zero = off` — the paper's pricing, bit-for-bit).
+        let zero_extra =
+            mem_model.zero.allgather_volume_factor() * prof.grad_bytes;
+        let se_prof = if zero_extra > 0.0 {
+            let mut p = prof.clone();
+            p.grad_bytes += zero_extra;
+            Some(p)
+        } else {
+            None
+        };
         let se = self
             .cost
-            .scaling(&prof, &hw, serial * time_factor, req.devices)
+            .scaling(se_prof.as_ref().unwrap_or(&prof), &hw,
+                     serial * time_factor, req.devices)
             .with_forced(req.collective)
             .with_overlap(req.overlap_model());
         let net = NetworkModel {
@@ -957,16 +1087,87 @@ impl Planner {
             exec_ms.push(1);
         }
         exec_ms.extend(exec_net.mp_speedups.iter().map(|&(m, _)| m));
-        if exec_ms.is_empty() && req.mechanism == PlanMechanism::Auto {
+
+        // Best feasible tensor-parallel candidate at a given device
+        // budget, scored by the same objective math as the fixed family.
+        // Footprints are re-derived per budget because the ZeRO shard
+        // count (the DP width) changes with it.
+        let tp_best_at = |budget: usize| {
+            let mut best: Option<(usize, usize, f64)> = None;
+            for (&t, tp) in &tp_scored {
+                if budget % t != 0 {
+                    continue;
+                }
+                let nd = budget / t;
+                let mem = memory::zero_sharded(
+                    &memory::tensor_sharded(&prof, mem_model, t),
+                    mem_model, nd);
+                if !mem.fits(available) {
+                    continue;
+                }
+                let su_m = serial / tp.step_time_s;
+                let score = match req.objective {
+                    Objective::TimeToConverge => match net
+                        .epochs
+                        .efficiency_ratio((nd * prof.mini_batch) as f64)
+                    {
+                        Some(r) => {
+                            su_m * net.se.at_mp(nd, t) * nd as f64 * r
+                        }
+                        None => continue,
+                    },
+                    Objective::StepTime => {
+                        su_m * nd as f64 * net.se.at_mp(nd, t)
+                    }
+                };
+                if best.map_or(true, |(_, _, b)| score > b) {
+                    best = Some((t, budget, score));
+                }
+            }
+            best
+        };
+        let tp_search = |start: usize| {
+            let mut found = tp_best_at(start);
+            let mut budget = start / 2;
+            while found.is_none() && budget >= 2 {
+                found = tp_best_at(budget);
+                budget /= 2;
+            }
+            found
+        };
+        // Under `--mechanism tensor` the intra-layer split drives
+        // selection outright.  Under `auto`, a feasible tensor split
+        // steps in only when *no* fixed candidate fits in memory — the
+        // 70B-at-80-GB regime where TP × ZeRO is the difference between
+        // a plan and an error.
+        let tp_chosen: Option<(usize, usize, f64)> = match req.mechanism {
+            PlanMechanism::Tensor => {
+                Some(tp_search(req.devices).ok_or_else(|| anyhow!(
+                    "no tensor-parallel candidate is feasible for '{}' at \
+                     {} devices (requested degrees {:?} must divide the \
+                     budget, fit {:.1} GB per device, and converge; \
+                     consider ZeRO sharding, e.g. --zero weights)",
+                    prof.name, req.devices, tensor_degrees,
+                    available / 1e9))?)
+            }
+            PlanMechanism::Auto if exec_ms.is_empty() => {
+                tp_search(req.devices)
+            }
+            _ => None,
+        };
+        if exec_ms.is_empty() && tp_chosen.is_none()
+            && req.mechanism == PlanMechanism::Auto
+        {
             bail!(
                 "no runtime-executable strategy fits in {:.1} GB per \
                  device for '{}' (DP-only needs {:.1} GB){}",
-                available / 1e9, prof.name, serial_mem.total_bytes / 1e9,
+                available / 1e9, prof.name, dp_mem.total_bytes / 1e9,
                 if mem_model.recompute {
                     ""
                 } else {
-                    "; consider recompute, a smaller batch, or a larger \
-                     device"
+                    "; consider recompute, a smaller batch, tensor \
+                     parallelism with ZeRO sharding (--tensor-degrees 8 \
+                     --zero weights), or a larger device"
                 });
         }
 
@@ -1028,7 +1229,8 @@ impl Planner {
                 None
             };
 
-        let (chosen_m, devices_used, chosen_score) = match lw_chosen {
+        let (chosen_m, devices_used, chosen_score) =
+            match tp_chosen.or(lw_chosen) {
             Some((m, d, score)) => (m, d, score),
             None => match req.objective {
                 Objective::TimeToConverge => {
@@ -1065,42 +1267,64 @@ impl Planner {
         };
         let n_dp = devices_used / chosen_m.max(1);
         let global_batch = n_dp * prof.mini_batch;
-        // The chosen candidate's artifacts: the layer-wise winner carries
-        // its own step time, footprint and strategy; fixed winners keep
-        // the cost-model estimate's.
-        let lw_row = if lw_chosen.is_some() {
+        // The chosen candidate's artifacts: tensor-parallel and
+        // layer-wise winners carry their own step time, footprint and
+        // strategy; fixed winners keep the cost-model estimate's.
+        let tp_row = if tp_chosen.is_some() {
+            tp_scored.get(&chosen_m)
+        } else {
+            None
+        };
+        let lw_row = if lw_chosen.is_some() && tp_row.is_none() {
             lw_scored.get(&chosen_m)
         } else {
             None
         };
-        let chosen_su_m = match lw_row {
-            Some(lw) => serial / lw.step_time_s,
-            None => net.su_m(chosen_m).unwrap_or(1.0),
+        let chosen_su_m = match (tp_row, lw_row) {
+            (Some(tp), _) => serial / tp.step_time_s,
+            (None, Some(lw)) => serial / lw.step_time_s,
+            (None, None) => net.su_m(chosen_m).unwrap_or(1.0),
         };
         let step_worker = serial * time_factor / chosen_su_m;
         let predicted_step_s =
             step_worker / net.se.at_mp(n_dp, chosen_m).max(1e-12);
         let predicted_epochs = net.epochs.epochs(global_batch as f64);
 
-        let chosen_est = if lw_row.is_some() {
+        let chosen_est = if lw_row.is_some() || tp_row.is_some() {
             None
         } else {
             best_scored.get(&chosen_m).map(|s| &s.est)
         };
-        let chosen_mem = match lw_row {
-            Some(lw) => Some(lw.mem),
-            None if chosen_m == 1 => Some(serial_mem),
-            None => best_scored.get(&chosen_m).map(|s| s.mem),
+        let chosen_mem = if tp_row.is_some() {
+            // Re-derive at the devices actually used: a backed-off
+            // budget changes the ZeRO shard count.
+            Some(memory::zero_sharded(
+                &memory::tensor_sharded(&prof, mem_model, chosen_m),
+                mem_model, n_dp))
+        } else {
+            match lw_row {
+                Some(lw) => Some(lw.mem),
+                None if chosen_m == 1 => Some(memory::zero_sharded(
+                    &serial_mem, mem_model, n_dp)),
+                None => best_scored.get(&chosen_m).map(|s| s.mem),
+            }
         };
-        let mechanism_str = match lw_row {
-            Some(_) => "layerwise".to_string(),
-            None => chosen_est
-                .map(|e| e.mechanism)
-                .unwrap_or(MpMechanism::None)
-                .as_str()
-                .to_string(),
+        let mechanism_str = if tp_row.is_some() {
+            "tensor".to_string()
+        } else {
+            match lw_row {
+                Some(_) => "layerwise".to_string(),
+                None => chosen_est
+                    .map(|e| e.mechanism)
+                    .unwrap_or(MpMechanism::None)
+                    .as_str()
+                    .to_string(),
+            }
         };
-        let strategy = if let Some(lw) = lw_row {
+        let strategy = if tp_row.is_some() {
+            Strategy::TensorParallel { degree: chosen_m,
+                                       dp_workers: n_dp }
+        } else if let Some(lw) = lw_row {
             // Scorecard rows price the full budget; a backed-off plan
             // re-derives the DP width from the devices actually used.
             let mut s = lw.strategy.clone();
@@ -1151,7 +1375,7 @@ impl Planner {
         let mut push_row = |m: usize, su_row: f64,
                             est: Option<&MpEstimate>,
                             mem: Option<&MemoryEstimate>,
-                            lw: Option<&LwScored>| {
+                            lw: Option<(&LwScored, &'static str)>| {
             let feasibility = mem
                 .map(|e| Feasibility::check(e, available))
                 .unwrap_or(Feasibility::Feasible);
@@ -1180,13 +1404,12 @@ impl Planner {
             };
             let row_mechanism =
                 est.map(|e| e.mechanism).unwrap_or(MpMechanism::None);
-            let mechanism_label = if lw.is_some() {
-                "layerwise".to_string()
-            } else {
-                row_mechanism.as_str().to_string()
+            let mechanism_label = match lw {
+                Some((_, label)) => label.to_string(),
+                None => row_mechanism.as_str().to_string(),
             };
             let microbatches = match lw {
-                Some(l) => l.microbatches,
+                Some((l, _)) => l.microbatches,
                 None => est.and_then(|e| e.microbatches),
             };
             // Algorithm pricing this row's N_dp-way exchange of M-wide
@@ -1207,7 +1430,7 @@ impl Planner {
             } else {
                 None
             };
-            let strategy = if let Some(l) = lw {
+            let strategy = if let Some((l, _)) = lw {
                 l.strategy.clone()
             } else if m == 1 {
                 if req.devices == 1 {
@@ -1236,7 +1459,7 @@ impl Planner {
                         req.devices)
             } else if epochs.is_none() {
                 format!("E(B) diverges at global batch {b}")
-            } else if let Some(l) = lw {
+            } else if let Some((l, _)) = lw {
                 l.note.clone()
             } else {
                 String::new()
@@ -1260,9 +1483,13 @@ impl Planner {
                 note,
             });
         };
-        push_row(1, 1.0, None, Some(&serial_mem), None);
-        let row_ms: BTreeSet<usize> =
-            best_scored.keys().chain(lw_scored.keys()).copied().collect();
+        push_row(1, 1.0, None, Some(&dp_mem), None);
+        let row_ms: BTreeSet<usize> = best_scored
+            .keys()
+            .chain(lw_scored.keys())
+            .chain(tp_scored.keys())
+            .copied()
+            .collect();
         for &m in &row_ms {
             if let Some(best) = best_scored.get(&m) {
                 push_row(m, serial / best.est.step_time_s, Some(&best.est),
@@ -1274,7 +1501,11 @@ impl Planner {
             }
             if let Some(lw) = lw_scored.get(&m) {
                 push_row(m, serial / lw.step_time_s, None, Some(&lw.mem),
-                         Some(lw));
+                         Some((lw, "layerwise")));
+            }
+            if let Some(tp) = tp_scored.get(&m) {
+                push_row(m, serial / tp.step_time_s, None, Some(&tp.mem),
+                         Some((tp, "tensor")));
             }
         }
 
@@ -1469,6 +1700,11 @@ pub fn strategy_to_json(s: &Strategy) -> Json {
             ("workers", junum(*workers)),
             ("sync_every", junum(*sync_every)),
         ]),
+        Strategy::TensorParallel { degree, dp_workers } => jobj(vec![
+            ("kind", kind),
+            ("degree", junum(*degree)),
+            ("dp_workers", junum(*dp_workers)),
+        ]),
         Strategy::LayerWise { degree, dp_workers, assignment } => {
             jobj(vec![
                 ("kind", kind),
@@ -1512,6 +1748,10 @@ pub fn strategy_from_json(j: &Json) -> Result<Strategy> {
         "local-sgd" => Strategy::LocalSgd {
             workers: j.get("workers")?.as_usize()?,
             sync_every: j.get("sync_every")?.as_usize()?,
+        },
+        "tensor-parallel" => Strategy::TensorParallel {
+            degree: j.get("degree")?.as_usize()?,
+            dp_workers: j.get("dp_workers")?.as_usize()?,
         },
         "layerwise" => Strategy::LayerWise {
             degree: j.get("degree")?.as_usize()?,
@@ -2146,6 +2386,7 @@ mod tests {
                                         replicas: 16 },
             Strategy::AsyncPs { workers: 3, staleness: 2 },
             Strategy::LocalSgd { workers: 4, sync_every: 16 },
+            Strategy::TensorParallel { degree: 8, dp_workers: 4 },
             Strategy::LayerWise {
                 degree: 2,
                 dp_workers: 4,
@@ -2161,6 +2402,109 @@ mod tests {
                 strategy_from_json(&Json::parse(&text).unwrap()).unwrap();
             assert_eq!(s, back);
         }
+    }
+
+    #[test]
+    fn tensor_rows_are_opt_in_scorecard_analysis() {
+        // No tensor degrees requested: no tensor rows, selection exactly
+        // as before the axis existed.
+        let plain = Planner::new()
+            .plan(&PlanRequest::new("gnmt", "dgx1").devices(8))
+            .unwrap();
+        assert!(plain.scorecard.iter().all(|c| c.mechanism != "tensor"));
+        // Requested: a "tensor" row appears for the degree, but Auto
+        // selection still picks among the fixed candidates when they fit.
+        let with_tp = Planner::new()
+            .plan(&PlanRequest::new("gnmt", "dgx1")
+                .devices(8)
+                .tensor_degrees(&[2]))
+            .unwrap();
+        let row = with_tp
+            .scorecard
+            .iter()
+            .find(|c| c.mechanism == "tensor")
+            .expect("a tensor scorecard row");
+        assert_eq!(row.mp_degree, 2);
+        assert_eq!(row.dp_workers, 4);
+        assert!(matches!(
+            row.strategy,
+            Strategy::TensorParallel { degree: 2, dp_workers: 4 }));
+        assert!(row.su_m > 1.0, "an intra-layer split beats serial");
+        assert_eq!(with_tp.strategy.kind(), plain.strategy.kind());
+        assert_eq!(with_tp.mechanism, plain.mechanism);
+    }
+
+    #[test]
+    fn tensor_mechanism_drives_selection() {
+        let plan = Planner::new()
+            .plan(&PlanRequest::new("gnmt", "dgx1")
+                .devices(8)
+                .tensor_degrees(&[2])
+                .mechanism(PlanMechanism::Tensor))
+            .unwrap();
+        assert_eq!(plan.mechanism, "tensor");
+        assert_eq!(plan.mp_degree, 2);
+        assert_eq!(plan.dp_workers, 4);
+        assert!(matches!(
+            plan.strategy,
+            Strategy::TensorParallel { degree: 2, dp_workers: 4 }));
+        assert!(plan.microbatches.is_none());
+        assert!(plan.predicted_step_s > 0.0);
+        // The mechanism with no degree to drive it fails loudly instead
+        // of silently planning something else.
+        assert!(Planner::new()
+            .plan(&PlanRequest::new("gnmt", "dgx1")
+                .mechanism(PlanMechanism::Tensor))
+            .is_err());
+    }
+
+    #[test]
+    fn zero_sharding_makes_dp_feasibility_n_dependent() {
+        use crate::memory::ZeroMode;
+        use crate::planner::cost::AlphaBetaCost;
+        let dp = |p: &Plan| {
+            let c =
+                p.scorecard.iter().find(|c| c.mp_degree == 1).unwrap();
+            (c.feasible, c.memory.unwrap().total_bytes)
+        };
+        // BigLSTM's Adam state overflows 16 GB parts when every DP
+        // replica holds the whole model…
+        let base = PlanRequest::new("biglstm", "dgx1")
+            .devices(8)
+            .device_mem_gb(16.0);
+        let replicated = Planner::new().plan(&base.clone()).unwrap();
+        let (fits_rep, bytes_rep) = dp(&replicated);
+        assert!(!fits_rep);
+        // …and ZeRO-3 sharding across the 8 DP ranks makes the same
+        // model fit the same parts: feasibility is now N-dependent.
+        let mut sharded_req = base.clone();
+        sharded_req.memory.zero = ZeroMode::Weights;
+        let sharded = Planner::new().plan(&sharded_req).unwrap();
+        let (fits_shard, bytes_shard) = dp(&sharded);
+        assert!(fits_shard);
+        assert!(bytes_shard < bytes_rep);
+        // With one device there is nothing to shard across, so the same
+        // request fails outright.
+        let mut single = sharded_req.clone();
+        single.devices = 1;
+        single.curve_max_devices = 1;
+        assert!(Planner::new().plan(&single).is_err());
+        // ZeRO is not a free lunch under a priced exchange: sharded
+        // state is re-gathered every step, so the predicted step slows.
+        let priced = |zero: ZeroMode| {
+            let mut r = PlanRequest::new("gnmt", "dgx1").devices(8);
+            r.memory.zero = zero;
+            let p = Planner::with_cost(Box::new(AlphaBetaCost::default()))
+                .plan(&r)
+                .unwrap();
+            p.scorecard
+                .iter()
+                .find(|c| c.mp_degree == 1)
+                .unwrap()
+                .step_time_s
+                .unwrap()
+        };
+        assert!(priced(ZeroMode::Weights) > priced(ZeroMode::Off));
     }
 
     #[test]
@@ -2181,6 +2525,7 @@ mod tests {
         assert_eq!(req.devices, d.devices);
         assert_eq!(req.batch, None);
         assert_eq!(req.mp_degrees, d.mp_degrees);
+        assert!(req.tensor_degrees.is_empty());
         assert_eq!(req.curve_max_devices, d.curve_max_devices);
         assert_eq!(req.memory, d.memory);
         assert_eq!(req.mechanism, PlanMechanism::Auto);
@@ -2190,6 +2535,7 @@ mod tests {
             r#"{"model":"biglstm","topology":"dgx1-pod","devices":32,
                 "nodes":4,"collective":"ring","device_mem_gb":16,
                 "objective":"step-time","mp_degrees":[4,2],
+                "tensor_degrees":[8,2],
                 "pipeline_only":true,"curve_max_devices":64,
                 "batch":32,"memory":{"recompute":true},
                 "mechanism":"layerwise","cost":"sim",
@@ -2203,6 +2549,7 @@ mod tests {
         assert_eq!(req.device_mem_gb, Some(16.0));
         assert_eq!(req.objective, Objective::StepTime);
         assert_eq!(req.mp_degrees, vec![4, 2]);
+        assert_eq!(req.tensor_degrees, vec![8, 2]);
         assert!(req.pipeline_only);
         assert_eq!(req.curve_max_devices, 64);
         assert_eq!(req.batch, Some(32));
@@ -2235,6 +2582,7 @@ mod tests {
                     r#"{"model":"gnmt","devices":1000000000000000}"#,
                     r#"{"model":"gnmt","nodes":100000}"#,
                     r#"{"model":"gnmt","mp_degrees":[2.5]}"#,
+                    r#"{"model":"gnmt","tensor_degrees":[2.5]}"#,
                     r#"{"model":"gnmt","batch":-1}"#] {
             let err = plan_request_from_json(&Json::parse(bad).unwrap())
                 .unwrap_err()
@@ -2274,8 +2622,22 @@ mod tests {
         let a = PlanRequest::new("inception", "dgx1");
         let b = PlanRequest::new("inception-v3", "dgx1")
             .batch(32)
-            .mp_degrees(&[2, 2, 1]);
+            .mp_degrees(&[2, 2, 1])
+            .tensor_degrees(&[1]);
         assert_eq!(key(&a, "analytical"), key(&b, "analytical"));
+        // A real tensor-degree list is cache-distinct (it adds scorecard
+        // rows), and duplicate spellings of it collapse.
+        let t1 = PlanRequest::new("inception", "dgx1")
+            .tensor_degrees(&[8, 2]);
+        let t2 = PlanRequest::new("inception", "dgx1")
+            .tensor_degrees(&[2, 8, 8, 1]);
+        assert_ne!(key(&a, "analytical"), key(&t1, "analytical"));
+        assert_eq!(key(&t1, "analytical"), key(&t2, "analytical"));
+        // The ZeRO mode rides in the embedded memory model, so a sharded
+        // request can never share a replicated request's cache entry.
+        let mut z = PlanRequest::new("inception", "dgx1");
+        z.memory.zero = crate::memory::ZeroMode::Weights;
+        assert_ne!(key(&a, "analytical"), key(&z, "analytical"));
         // recompute_overhead is invisible while recompute is off…
         let mut e = PlanRequest::new("inception", "dgx1");
         e.memory.recompute_overhead = 0.9;

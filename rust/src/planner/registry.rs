@@ -79,6 +79,21 @@ impl ModelRegistry {
             default_batch: 8,
             build: build_transformer,
         });
+        // 70B/100B-class entries: infeasible under every replicated-state
+        // candidate at 80 GB/device — the scenarios that need the
+        // TensorParallel × ZeRO axes (docs/3d-parallelism.md).
+        r.register(ModelEntry {
+            name: "transformer-70b",
+            aliases: &["70b", "transformer70b"],
+            default_batch: 4,
+            build: models::transformer_70b,
+        });
+        r.register(ModelEntry {
+            name: "transformer-100b",
+            aliases: &["100b", "transformer100b"],
+            default_batch: 4,
+            build: models::transformer_100b,
+        });
         r
     }
 
@@ -336,6 +351,10 @@ mod tests {
         assert_eq!(r.build("biglstm", None).unwrap().mini_batch, 64);
         assert_eq!(r.build("transformer", None).unwrap().name,
                    "transformer-lm");
+        let p70 = r.build("70b", None).unwrap();
+        assert_eq!(p70.name, "transformer-70b");
+        assert_eq!(p70.mini_batch, 4);
+        assert_eq!(r.build("100b", None).unwrap().name, "transformer-100b");
     }
 
     #[test]

@@ -47,7 +47,7 @@ use anyhow::{anyhow, bail, Result};
 use super::cost::{cost_by_name, CostModel, MpEstimate};
 use crate::cluster::HwGraph;
 use crate::collective::Algorithm;
-use crate::memory::MemoryModel;
+use crate::memory::{MemoryModel, ZeroMode};
 use crate::models::ModelProfile;
 use crate::parallel::overlap::OverlapModel;
 use crate::parallel::ScalingEfficiency;
@@ -290,6 +290,11 @@ pub enum StrategyFamily {
     /// ([`crate::layerwise`]): selection is driven by the mixed
     /// layer-wise candidates instead of the fixed family.
     Layerwise,
+    /// Megatron-style tensor-parallel intra-layer splits
+    /// ([`crate::coordinator::Strategy::TensorParallel`]): the spec's
+    /// `mp_degrees` feed the TP widths and selection is driven by the
+    /// tensor candidates.
+    Tensor,
 }
 
 impl StrategyFamily {
@@ -299,6 +304,7 @@ impl StrategyFamily {
             StrategyFamily::Hybrid => "hybrid",
             StrategyFamily::Pipelined => "pipelined",
             StrategyFamily::Layerwise => "layerwise",
+            StrategyFamily::Tensor => "tensor",
         }
     }
 
@@ -308,8 +314,10 @@ impl StrategyFamily {
             "hybrid" | "all" => StrategyFamily::Hybrid,
             "pipelined" | "pipeline" => StrategyFamily::Pipelined,
             "layerwise" | "layer-wise" | "pase" => StrategyFamily::Layerwise,
+            "tensor" | "tensor-parallel" | "tp" => StrategyFamily::Tensor,
             other => bail!("unknown strategy family '{other}' \
-                            (known: dp, hybrid, pipelined, layerwise)"),
+                            (known: dp, hybrid, pipelined, layerwise, \
+                             tensor)"),
         })
     }
 }
@@ -339,7 +347,15 @@ pub struct SweepSpec {
     /// Gradient-compression axis: byte factors in `(0, 1]` (1.0 = off,
     /// the default).  The α latency floor is never scaled.
     pub compression: Vec<f64>,
-    /// Candidate MP degrees for the hybrid/pipelined families.
+    /// ZeRO-sharding axis: per-scenario [`ZeroMode`]s
+    /// (`[ZeroMode::Off]`, the default, keeps the paper's replicated
+    /// accounting).  A non-off entry overrides the spec memory model's
+    /// own `zero` mode for that scenario; an `off` entry leaves it
+    /// alone, so a sharded `memory` model without the axis still
+    /// shards.
+    pub zero: Vec<ZeroMode>,
+    /// Candidate MP degrees for the hybrid/pipelined families (and the
+    /// TP widths of the tensor family).
     pub mp_degrees: Vec<usize>,
     pub objective: Objective,
     /// Resolved per worker via [`cost_by_name`].
@@ -371,6 +387,7 @@ impl Default for SweepSpec {
                            StrategyFamily::Pipelined],
             overlap: vec![1],
             compression: vec![1.0],
+            zero: vec![ZeroMode::Off],
             mp_degrees: vec![2],
             objective: Objective::TimeToConverge,
             cost_model: "analytical".into(),
@@ -420,6 +437,9 @@ pub struct Scenario {
     pub overlap: usize,
     /// Gradient-compression byte factor (1.0 = off).
     pub compression: f64,
+    /// ZeRO sharding mode for this scenario ([`ZeroMode::Off`] = leave
+    /// the spec memory model's mode alone).
+    pub zero: ZeroMode,
 }
 
 impl SweepSpec {
@@ -437,17 +457,21 @@ impl SweepSpec {
                                     for &overlap in &self.overlap {
                                         for &compression in &self.compression
                                         {
-                                            out.push(Scenario {
-                                                model: model.clone(),
-                                                topology: topology.clone(),
-                                                devices,
-                                                nodes,
-                                                device_mem_gb,
-                                                batch: batch.clone(),
-                                                family,
-                                                overlap,
-                                                compression,
-                                            });
+                                            for &zero in &self.zero {
+                                                out.push(Scenario {
+                                                    model: model.clone(),
+                                                    topology:
+                                                        topology.clone(),
+                                                    devices,
+                                                    nodes,
+                                                    device_mem_gb,
+                                                    batch: batch.clone(),
+                                                    family,
+                                                    overlap,
+                                                    compression,
+                                                    zero,
+                                                });
+                                            }
                                         }
                                     }
                                 }
@@ -475,6 +499,7 @@ impl SweepSpec {
             ("families", self.families.is_empty()),
             ("overlap", self.overlap.is_empty()),
             ("compression", self.compression.is_empty()),
+            ("zero", self.zero.is_empty()),
         ] {
             if empty {
                 bail!("sweep axis '{axis}' is empty");
@@ -492,11 +517,11 @@ impl SweepSpec {
 
     /// Wire-format keys accepted by [`SweepSpec::from_json`] (the
     /// service's `POST /sweep` body).
-    pub const WIRE_KEYS: [&'static str; 16] = [
+    pub const WIRE_KEYS: [&'static str; 17] = [
         "models", "topologies", "devices", "nodes", "device_mem_gb",
-        "batches", "families", "overlap", "compression", "mp_degrees",
-        "objective", "cost", "memory", "collective", "curve_max_devices",
-        "threads",
+        "batches", "families", "overlap", "compression", "zero",
+        "mp_degrees", "objective", "cost", "memory", "collective",
+        "curve_max_devices", "threads",
     ];
 
     /// Parse the service wire format for a sweep: a JSON object with any
@@ -617,6 +642,14 @@ impl SweepSpec {
                 })
                 .collect::<Result<_>>()?,
         };
+        let zero = match j.opt("zero") {
+            None | Some(Json::Null) => d.zero,
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|x| ZeroMode::parse(x.as_str()?))
+                .collect::<Result<_>>()?,
+        };
         let objective = match j.opt("objective") {
             None | Some(Json::Null) => d.objective,
             Some(v) => Objective::parse(v.as_str()?)?,
@@ -653,6 +686,7 @@ impl SweepSpec {
             families,
             overlap,
             compression,
+            zero,
             mp_degrees: usizes(j, "mp_degrees", super::MAX_WIRE_INT,
                                d.mp_degrees)?,
             objective,
@@ -671,7 +705,8 @@ impl SweepSpec {
     pub fn cardinality(&self) -> usize {
         [self.models.len(), self.topologies.len(), self.devices.len(),
          self.nodes.len(), self.device_mem_gb.len(), self.batches.len(),
-         self.families.len(), self.overlap.len(), self.compression.len()]
+         self.families.len(), self.overlap.len(), self.compression.len(),
+         self.zero.len()]
             .iter()
             .fold(1usize, |acc, &n| acc.saturating_mul(n))
     }
@@ -727,6 +762,18 @@ fn plan_request(planner: &Planner, spec: &SweepSpec, sc: &Scenario)
                 .mp_degrees(&spec.mp_degrees)
                 .mechanism(PlanMechanism::Layerwise);
         }
+        StrategyFamily::Tensor => {
+            req = req
+                .mp_degrees(&[])
+                .tensor_degrees(&spec.mp_degrees)
+                .mechanism(PlanMechanism::Tensor);
+        }
+    }
+    // The scenario's ZeRO axis shadows the spec memory model's mode;
+    // `off` (the axis default) leaves it alone, so a sharded spec-level
+    // `memory` model without the axis still shards.
+    if sc.zero != ZeroMode::Off {
+        req.memory.zero = sc.zero;
     }
     // Batch tables are keyed off canonical model names; aliases resolve
     // through the registry (unknown models keep their spelling and fail
@@ -855,6 +902,7 @@ impl ScenarioResult {
              Json::Str(self.scenario.family.as_str().to_string())),
             ("overlap", Json::Num(self.scenario.overlap as f64)),
             ("compression", Json::Num(self.scenario.compression)),
+            ("zero", Json::Str(self.scenario.zero.as_str().to_string())),
             ("plan",
              self.plan.as_ref().map(|p| p.to_json()).unwrap_or(Json::Null)),
             ("error",
@@ -905,7 +953,7 @@ impl SweepResult {
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "model,topology,devices,nodes,device_mem_gb,batch,family,\
-             overlap,compression,\
+             overlap,compression,zero,\
              status,strategy,mp_degree,mechanism,collective,devices_used,\
              dp_workers,microbatches,global_batch,step_time_s,epochs,\
              speedup,peak_mem_gb,error\n");
@@ -921,6 +969,7 @@ impl SweepResult {
                 sc.family.as_str().to_string(),
                 sc.overlap.to_string(),
                 format!("{}", sc.compression),
+                sc.zero.as_str().to_string(),
             ];
             match (&r.plan, &r.error) {
                 (Some(p), _) => {
@@ -1013,9 +1062,12 @@ mod tests {
                    StrategyFamily::Pipelined);
         assert_eq!(StrategyFamily::parse("pase").unwrap(),
                    StrategyFamily::Layerwise);
+        assert_eq!(StrategyFamily::parse("tp").unwrap(),
+                   StrategyFamily::Tensor);
         assert!(StrategyFamily::parse("magic").is_err());
         for f in [StrategyFamily::DpOnly, StrategyFamily::Hybrid,
-                  StrategyFamily::Pipelined, StrategyFamily::Layerwise] {
+                  StrategyFamily::Pipelined, StrategyFamily::Layerwise,
+                  StrategyFamily::Tensor] {
             assert_eq!(StrategyFamily::parse(f.as_str()).unwrap(), f);
         }
     }
@@ -1284,7 +1336,7 @@ mod tests {
         assert!(json.contains("\"overlap\":8"));
         assert!(json.contains("\"compression\":0.25"));
         let csv = r.to_csv();
-        assert!(csv.contains("family,overlap,compression,status"));
+        assert!(csv.contains("family,overlap,compression,zero,status"));
         assert!(csv.contains("\"8\"") && csv.contains("\"0.25\""));
         // Empty axes are rejected like every other axis.
         for bad in [
@@ -1369,6 +1421,7 @@ mod tests {
                 "devices":[16],"nodes":[2],"device_mem_gb":["default",80],
                 "batches":["paper",64],"families":["dp"],
                 "overlap":[1,8],"compression":[1.0,0.25],
+                "zero":["off","zero3"],
                 "mp_degrees":[2,4],"objective":"step-time",
                 "cost":"alpha-beta","collective":"ring",
                 "memory":{"recompute":true},"curve_max_devices":16,
@@ -1383,6 +1436,7 @@ mod tests {
         assert_eq!(spec.families, vec![StrategyFamily::DpOnly]);
         assert_eq!(spec.overlap, vec![1, 8]);
         assert_eq!(spec.compression, vec![1.0, 0.25]);
+        assert_eq!(spec.zero, vec![ZeroMode::Off, ZeroMode::Weights]);
         assert_eq!(spec.mp_degrees, vec![2, 4]);
         assert_eq!(spec.objective, Objective::StepTime);
         assert_eq!(spec.cost_model, "alpha-beta");
@@ -1409,10 +1463,58 @@ mod tests {
                     r#"{"compression":[0]}"#,
                     r#"{"compression":[1.5]}"#,
                     r#"{"compression":["lots"]}"#,
+                    r#"{"zero":["stage9"]}"#,
                     r#"{"threads":-2}"#] {
             assert!(SweepSpec::from_json(&Json::parse(bad).unwrap())
                         .is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn tensor_family_and_zero_axis_sweep() {
+        // The tensor family drives selection through the intra-layer
+        // split, reusing mp_degrees as the TP widths.
+        let tp = run_sweep(&SweepSpec {
+            models: vec!["gnmt".into()],
+            devices: vec![8],
+            families: vec![StrategyFamily::Tensor],
+            mp_degrees: vec![2],
+            curve_max_devices: 8,
+            threads: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let plan = tp.results[0].plan.as_ref().unwrap();
+        assert_eq!(plan.mechanism, "tensor");
+        assert_eq!(plan.strategy.kind(), "tensor-parallel");
+        assert_eq!(plan.mp_degree, 2);
+        // The zero axis flips per-scenario feasibility: BigLSTM's Adam
+        // state overflows 16 GB parts replicated, fits ZeRO-3-sharded
+        // across the 8 DP ranks.
+        let z = run_sweep(&SweepSpec {
+            models: vec!["biglstm".into()],
+            devices: vec![8],
+            device_mem_gb: vec![Some(16.0)],
+            families: vec![StrategyFamily::DpOnly],
+            zero: vec![ZeroMode::Off, ZeroMode::Weights],
+            curve_max_devices: 8,
+            threads: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(z.len(), 2);
+        assert_eq!(z.results[0].scenario.zero, ZeroMode::Off);
+        assert!(z.results[0].plan.is_none(),
+                "replicated DP-only must overflow 16 GB parts");
+        assert_eq!(z.results[1].scenario.zero, ZeroMode::Weights);
+        let sharded = z.results[1].plan.as_ref().unwrap();
+        assert_eq!(sharded.mp_degree, 1);
+        // Both serialisations carry the axis.
+        let json = z.to_json().to_string();
+        assert!(json.contains("\"zero\":\"weights\""));
+        let csv = z.to_csv();
+        assert!(csv.contains(",zero,"));
+        assert!(csv.contains("\"weights\""));
     }
 
     #[test]

@@ -17,6 +17,7 @@
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 
+use hybridpar::memory::{MemoryModel, ZeroMode};
 use hybridpar::planner::sweep::{run_sweep, StrategyFamily, SweepSpec};
 use hybridpar::planner::{PlanRequest, Planner};
 use hybridpar::service::{self, ServiceHandle, ServiceOptions};
@@ -295,6 +296,49 @@ fn sweep_stream_concatenates_to_the_cli_document() {
     let capped = request(addr, "POST", "/sweep", &too_big);
     assert_eq!(capped.status, 400);
     assert!(capped.text().contains("cap"), "{}", capped.text());
+
+    handle.stop();
+}
+
+#[test]
+fn tensor_zero_plan_over_the_wire_matches_the_cli_and_shares_a_cache_entry() {
+    let handle = spawn_service(2, 16);
+    let addr = handle.addr();
+
+    // The 3D-parallelism acceptance query, served over HTTP: the body
+    // must be byte-identical to the plan CLI's stdout for the same
+    // request (one shared Plan::to_json_string writer).
+    let want = Planner::new()
+        .plan(&PlanRequest::new("transformer-70b", "dgx-a100")
+            .devices(64)
+            .mp_degrees(&[])
+            .tensor_degrees(&[8])
+            .memory(MemoryModel { zero: ZeroMode::Weights,
+                                  ..Default::default() }))
+        .unwrap()
+        .to_json_string();
+    let cold = request(
+        addr, "POST", "/plan",
+        r#"{"model":"transformer-70b","topology":"dgx-a100",
+            "devices":64,"mp_degrees":[],"tensor_degrees":[8],
+            "memory":{"zero":"weights"}}"#);
+    assert_eq!(cold.status, 200, "{}", cold.text());
+    assert_eq!(cold.text(), want,
+               "POST /plan must match the plan CLI for tensor x ZeRO");
+    assert!(cold.text().contains("\"kind\":\"tensor-parallel\""));
+
+    // An equivalent spelling — the model alias and the ZeRO stage alias
+    // — canonicalises to the same cache entry.
+    let hot = request(
+        addr, "POST", "/plan",
+        r#"{"model":"70b","topology":"dgx-a100","devices":64,
+            "mp_degrees":[],"tensor_degrees":[8],
+            "memory":{"zero":"zero3"}}"#);
+    assert_eq!(hot.status, 200);
+    assert_eq!(hot.body, cold.body);
+    let cache = handle.service().cache();
+    assert_eq!(cache.misses(), 1, "aliases must share one entry");
+    assert_eq!(cache.hits(), 1);
 
     handle.stop();
 }
