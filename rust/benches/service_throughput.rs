@@ -2,10 +2,16 @@
 //! with a mixed hot/cold request stream and report p50/p99 latency plus
 //! the cache hit rate.
 //!
-//! Asserts the tentpole speedup claim: a warm-cache hit is served at
-//! least 10× faster than a cold plan (the cold path pays a full planner
-//! evaluation — DLPlacer ILP included for branchy models — where the
-//! warm path pays one canonicalisation and an LRU lookup).
+//! Two phases:
+//!
+//! 1. **connect-per-request** (the original stream): asserts the
+//!    tentpole speedup claim — a warm-cache hit is served at least 10×
+//!    faster than a cold plan (the cold path pays a full planner
+//!    evaluation, DLPlacer ILP included for branchy models; the warm
+//!    path pays one canonicalisation and an LRU lookup);
+//! 2. **keep-alive load**: 10 000 requests over a pool of persistent
+//!    connections (plus an army of parked idle keep-alives the event
+//!    loop must poll around), mixed hot/cold, gating the warm p99.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -15,13 +21,16 @@ use hybridpar::bench::{f2, Table};
 use hybridpar::service::{self, ServiceOptions};
 use hybridpar::util::{fmt_secs, percentile};
 
-/// POST /plan and time the full request (connect → last byte).
+/// POST /plan on a fresh connection and time the full request
+/// (connect → last byte).  `Connection: close` keeps `read_to_end`
+/// well-defined against the keep-alive server.
 fn timed_plan(addr: SocketAddr, body: &str) -> (u16, f64) {
     let t0 = Instant::now();
     let mut stream = TcpStream::connect(addr).expect("connect");
     let raw = format!(
         "POST /plan HTTP/1.1\r\nHost: bench\r\n\
-         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+         Content-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
         body.len());
     stream.write_all(raw.as_bytes()).unwrap();
     let mut response = Vec::new();
@@ -33,6 +42,44 @@ fn timed_plan(addr: SocketAddr, body: &str) -> (u16, f64) {
         .unwrap()
         .parse()
         .unwrap();
+    (status, t0.elapsed().as_secs_f64())
+}
+
+/// POST /plan on a *kept-alive* connection: write the request, read
+/// exactly one `Content-Length`-framed response, leave the socket open.
+fn keepalive_plan(stream: &mut TcpStream, body: &str) -> (u16, f64) {
+    let t0 = Instant::now();
+    let raw = format!(
+        "POST /plan HTTP/1.1\r\nHost: bench\r\n\
+         Content-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len());
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p + 4;
+        }
+        let n = stream.read(&mut tmp).expect("read head");
+        assert!(n > 0, "server closed a keep-alive connection");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).unwrap();
+    let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let content_length: usize = head
+        .split("\r\n")
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length")
+                .then(|| v.trim().parse().unwrap())
+        })
+        .expect("keep-alive response carries Content-Length");
+    while buf.len() < head_end + content_length {
+        let n = stream.read(&mut tmp).expect("read body");
+        assert!(n > 0, "server closed mid-body");
+        buf.extend_from_slice(&tmp[..n]);
+    }
     (status, t0.elapsed().as_secs_f64())
 }
 
@@ -107,6 +154,101 @@ fn main() {
     assert_eq!(misses, 25, "every cold request must be a fresh fill");
     assert_eq!(hits, 96, "every hot repeat must hit");
     assert!(hit_rate > 0.75);
+
+    // ---- phase 2: keep-alive mixed load --------------------------------
+    // 10k requests over a pool of persistent connections, with an army
+    // of parked idle keep-alives the event loop has to poll around
+    // (they exercise the cold-connection tier).  Every ~100th request
+    // per connection is a fresh cold key; the rest are pure hits.
+    const TOTAL_REQUESTS: usize = 10_000;
+    const ACTIVE_CONNS: usize = 64;
+    const IDLE_ARMY: usize = 256;
+    const COLD_EVERY: usize = 100;
+    const WARM_P99_BOUND_S: f64 = 0.5;
+
+    let mut idle = Vec::new();
+    for _ in 0..IDLE_ARMY {
+        // Degrade gracefully under tight fd limits — the army's size is
+        // incidental, its presence is the point.
+        match TcpStream::connect(addr) {
+            Ok(s) => idle.push(s),
+            Err(_) => break,
+        }
+    }
+
+    let per_conn = TOTAL_REQUESTS / ACTIVE_CONNS;
+    let t_load = Instant::now();
+    let per_conn_results: Vec<(Vec<f64>, Vec<f64>)> =
+        std::thread::scope(|scope| {
+            let workers: Vec<_> = (0..ACTIVE_CONNS)
+                .map(|c| {
+                    scope.spawn(move || {
+                        let mut stream =
+                            TcpStream::connect(addr).expect("connect");
+                        let mut warm = Vec::new();
+                        let mut cold = Vec::new();
+                        for i in 0..per_conn {
+                            let fresh = i % COLD_EVERY == 0;
+                            let body = if fresh {
+                                // A unique canonical key per (conn,
+                                // round) — batch echoes into the plan,
+                                // so each is a guaranteed fill without
+                                // growing the device graph.
+                                format!(
+                                    r#"{{"model":"gnmt","devices":8,
+                                         "batch":{}}}"#,
+                                    256 + c * per_conn + i)
+                            } else {
+                                r#"{"model":"inception-v3","devices":8}"#
+                                    .to_string()
+                            };
+                            let (status, dt) =
+                                keepalive_plan(&mut stream, &body);
+                            assert_eq!(status, 200,
+                                       "request {i} on conn {c}");
+                            if fresh {
+                                cold.push(dt);
+                            } else {
+                                warm.push(dt);
+                            }
+                        }
+                        (warm, cold)
+                    })
+                })
+                .collect();
+            workers.into_iter().map(|w| w.join().unwrap()).collect()
+        });
+    let load_wall = t_load.elapsed().as_secs_f64();
+    let idle_count = idle.len();
+    drop(idle);
+
+    let ka_warm: Vec<f64> = per_conn_results
+        .iter()
+        .flat_map(|(w, _)| w.iter().copied())
+        .collect();
+    let ka_cold: Vec<f64> = per_conn_results
+        .iter()
+        .flat_map(|(_, c)| c.iter().copied())
+        .collect();
+    let served = ka_warm.len() + ka_cold.len();
+    let mut table = Table::new(&["stream", "requests", "p50", "p99"]);
+    for (name, xs) in [("keep-alive warm", &ka_warm),
+                       ("keep-alive cold", &ka_cold)] {
+        table.row(&[name.to_string(), xs.len().to_string(),
+                    fmt_secs(percentile(xs, 50.0)),
+                    fmt_secs(percentile(xs, 99.0))]);
+    }
+    table.print(&format!(
+        "service /plan keep-alive load ({ACTIVE_CONNS} active + \
+         {idle_count} idle conns)"));
+    println!("keep-alive load: {served} requests in {} \
+              ({:.0} req/s wall)",
+             fmt_secs(load_wall), served as f64 / load_wall);
+
+    let warm_p99 = percentile(&ka_warm, 99.0);
+    assert!(warm_p99 <= WARM_P99_BOUND_S,
+            "warm keep-alive p99 must hold {WARM_P99_BOUND_S}s, \
+             got {warm_p99}s");
 
     handle.stop();
     println!("service_throughput OK");

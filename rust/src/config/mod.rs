@@ -431,6 +431,20 @@ pub struct ServiceConfig {
     pub cache_entries: usize,
     /// Cost model used when a request omits `"cost"`.
     pub cost_model: String,
+    /// Admission-control bound: outstanding planner jobs past this get
+    /// 503 + `Retry-After`.
+    pub max_pending: usize,
+    /// Connection cap; new connections past it are shed with a 503.
+    pub max_connections: usize,
+    /// Per-request head deadline in milliseconds (slow-loris defence).
+    pub head_timeout_ms: u64,
+    /// Keep-alive idle-between-requests timeout in milliseconds.
+    pub idle_timeout_ms: u64,
+    /// Optional plan-cache snapshot file (loaded at start, rewritten
+    /// periodically and at shutdown).
+    pub persist: Option<String>,
+    /// Replica daemon addresses for sharded `POST /sweep` fan-out.
+    pub replicas: Vec<String>,
 }
 
 impl Default for ServiceConfig {
@@ -440,6 +454,12 @@ impl Default for ServiceConfig {
             threads: 0,
             cache_entries: 128,
             cost_model: "analytical".into(),
+            max_pending: 128,
+            max_connections: 10_240,
+            head_timeout_ms: 10_000,
+            idle_timeout_ms: 60_000,
+            persist: None,
+            replicas: Vec::new(),
         }
     }
 }
@@ -688,12 +708,28 @@ impl RunConfig {
             if !addr.contains(':') {
                 bail!("service.addr must be host:port, got '{addr}'");
             }
+            let persist = t
+                .get("service.persist")
+                .and_then(|v| v.as_str().ok())
+                .map(|s| s.to_string());
             c.service = Some(ServiceConfig {
                 addr,
                 threads: t.usize_or("service.threads", d.threads),
                 cache_entries: t.usize_or("service.cache_entries",
                                           d.cache_entries),
                 cost_model: t.str_or("service.cost", &d.cost_model),
+                max_pending: t.usize_or("service.max_pending",
+                                        d.max_pending),
+                max_connections: t.usize_or("service.max_connections",
+                                            d.max_connections),
+                head_timeout_ms: t.usize_or("service.head_timeout_ms",
+                                            d.head_timeout_ms as usize)
+                    as u64,
+                idle_timeout_ms: t.usize_or("service.idle_timeout_ms",
+                                            d.idle_timeout_ms as usize)
+                    as u64,
+                persist,
+                replicas: t.str_list_or("service.replicas", &[]),
             });
         }
         Ok(c)
@@ -1029,13 +1065,23 @@ sizes = [1, 2, 3]
     fn service_section_parses() {
         let t = Toml::parse(
             "[service]\naddr = \"0.0.0.0:9000\"\nthreads = 4\n\
-             cache_entries = 64\ncost = \"alpha-beta\"\n")
+             cache_entries = 64\ncost = \"alpha-beta\"\n\
+             max_pending = 16\nmax_connections = 256\n\
+             head_timeout_ms = 2500\nidle_timeout_ms = 15000\n\
+             persist = \"/tmp/plans.cache\"\n\
+             replicas = [\"10.0.0.1:8080\", \"10.0.0.2:8080\"]\n")
             .unwrap();
         let s = RunConfig::from_toml(&t).unwrap().service.unwrap();
         assert_eq!(s.addr, "0.0.0.0:9000");
         assert_eq!(s.threads, 4);
         assert_eq!(s.cache_entries, 64);
         assert_eq!(s.cost_model, "alpha-beta");
+        assert_eq!(s.max_pending, 16);
+        assert_eq!(s.max_connections, 256);
+        assert_eq!(s.head_timeout_ms, 2500);
+        assert_eq!(s.idle_timeout_ms, 15_000);
+        assert_eq!(s.persist.as_deref(), Some("/tmp/plans.cache"));
+        assert_eq!(s.replicas, vec!["10.0.0.1:8080", "10.0.0.2:8080"]);
         // Absent by default; partial sections get defaults for the rest.
         let t = Toml::parse(DOC).unwrap();
         assert!(RunConfig::from_toml(&t).unwrap().service.is_none());
@@ -1043,6 +1089,12 @@ sizes = [1, 2, 3]
         let s = RunConfig::from_toml(&t).unwrap().service.unwrap();
         assert_eq!(s.addr, "127.0.0.1:8080");
         assert_eq!(s.cache_entries, 128);
+        assert_eq!(s.max_pending, 128);
+        assert_eq!(s.max_connections, 10_240);
+        assert_eq!(s.head_timeout_ms, 10_000);
+        assert_eq!(s.idle_timeout_ms, 60_000);
+        assert_eq!(s.persist, None);
+        assert!(s.replicas.is_empty());
         // A port-less address is rejected loudly.
         let t = Toml::parse("[service]\naddr = \"localhost\"\n").unwrap();
         assert!(RunConfig::from_toml(&t).is_err());

@@ -14,6 +14,7 @@
 //! default, so bare invocations work.
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -72,10 +73,14 @@ COMMANDS:
               ordering — --threads N output is byte-identical to --threads 1)
   serve      [--addr 127.0.0.1:8080] [--threads N] [--cache-entries N]
              [--cost analytical|alpha-beta|simulator] [--config cfg.toml]
-             (planner-as-a-service HTTP daemon: POST /plan and /sweep,
-              GET /models /topologies /healthz /metrics; /plan responses
-              are byte-identical to the plan subcommand and cached in a
-              single-flight LRU — see docs/service.md)
+             [--max-pending N] [--max-connections N]
+             [--head-timeout-ms MS] [--idle-timeout-ms MS]
+             [--cache-persist path] [--replicas host:port,...]
+             (planner-as-a-service HTTP daemon: keep-alive event loop,
+              POST /plan and /sweep, GET /models /topologies /healthz
+              /metrics; /plan responses are byte-identical to the plan
+              subcommand and cached in a single-flight LRU; --replicas
+              shards POST /sweep across peer daemons — docs/service.md)
   train      --config cfg.toml |
              --strategy single|dp|hybrid|pipelined|async|local-sgd
              --workers N --steps N --lr F --dp-workers N --microbatches N
@@ -275,10 +280,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let base = cfg.service.unwrap_or_default();
     let addr = args.get_or("addr", &base.addr);
+    let persist_path = args
+        .get("cache-persist")
+        .map(|s| s.to_string())
+        .or(base.persist)
+        .map(PathBuf::from);
+    let replicas: Vec<String> = match args.get("replicas") {
+        Some(list) => list
+            .split(',')
+            .map(|x| x.trim().to_string())
+            .filter(|x| !x.is_empty())
+            .collect(),
+        None => base.replicas,
+    };
     let opts = ServiceOptions {
         threads: args.get_usize("threads", base.threads)?,
         cache_entries: args.get_usize("cache-entries", base.cache_entries)?,
         default_cost: args.get_or("cost", &base.cost_model),
+        max_pending: args.get_usize("max-pending", base.max_pending)?,
+        max_connections: args.get_usize("max-connections",
+                                        base.max_connections)?,
+        head_timeout: Duration::from_millis(args.get_usize(
+            "head-timeout-ms", base.head_timeout_ms as usize)? as u64),
+        idle_timeout: Duration::from_millis(args.get_usize(
+            "idle-timeout-ms", base.idle_timeout_ms as usize)? as u64),
+        persist_path,
+        replicas,
     };
     let bound = service::bind(&addr, opts)?;
     eprintln!("serving planner on http://{} \

@@ -47,6 +47,48 @@ impl Counter {
     }
 }
 
+/// A point-in-time value that can move both ways (Prometheus `gauge`) —
+/// open connections, queue depth.  Lock-free, like [`Counter`].
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement — a stray extra `dec` must not wrap a
+    /// "connections open" gauge to 2^64.
+    pub fn dec(&self) {
+        let _ = self.value.fetch_update(
+            Ordering::Relaxed, Ordering::Relaxed,
+            |v| Some(v.saturating_sub(1)));
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    /// One Prometheus exposition line, like [`Counter::render`].
+    pub fn render(&self, name: &str, labels: &str) -> String {
+        if labels.is_empty() {
+            format!("{name} {}\n", self.get())
+        } else {
+            format!("{name}{{{labels}}} {}\n", self.get())
+        }
+    }
+}
+
 /// Latency bucket upper bounds (seconds) shared by every service
 /// endpoint histogram: 100 µs to 10 s on a 1-2.5-5 ladder, wide enough
 /// for a cache hit (~sub-ms) and a cold DLPlacer ILP (~seconds) to land
@@ -267,6 +309,22 @@ mod tests {
         assert_eq!(c.render("reqs", ""), "reqs 5\n");
         assert_eq!(c.render("reqs", "endpoint=\"plan\""),
                    "reqs{endpoint=\"plan\"} 5\n");
+    }
+
+    #[test]
+    fn gauge_moves_both_ways_and_saturates() {
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), 0, "dec saturates at zero");
+        g.set(42);
+        assert_eq!(g.render("depth", ""), "depth 42\n");
+        assert_eq!(g.render("depth", "q=\"pending\""),
+                   "depth{q=\"pending\"} 42\n");
     }
 
     #[test]

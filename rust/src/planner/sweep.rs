@@ -799,7 +799,24 @@ fn plan_request(planner: &Planner, spec: &SweepSpec, sc: &Scenario)
 /// the collected result for any `threads`.  A sink error stops the
 /// sweep early: no new scenarios are handed out, in-flight ones finish
 /// and are discarded, and the sink's error is returned.
-pub fn stream_sweep<F>(spec: &SweepSpec, mut sink: F) -> Result<()>
+pub fn stream_sweep<F>(spec: &SweepSpec, sink: F) -> Result<()>
+where
+    F: FnMut(ScenarioResult) -> Result<()>,
+{
+    stream_sweep_indices(spec, None, sink)
+}
+
+/// [`stream_sweep`] over a subset of the grid: evaluate only the
+/// scenarios at `indices` (positions into the canonical
+/// [`scenarios`](SweepSpec::scenarios) order, strictly increasing),
+/// delivering them to `sink` in that order.  `None` means the whole
+/// grid.  This is the replica side of the service's sharded
+/// `POST /sweep`: each daemon evaluates its consistent-hash share, and
+/// because every replica emits in canonical-order-restricted-to-subset,
+/// the coordinator can splice the streams back into the exact
+/// single-replica byte sequence.
+pub fn stream_sweep_indices<F>(spec: &SweepSpec, indices: Option<&[usize]>,
+                               mut sink: F) -> Result<()>
 where
     F: FnMut(ScenarioResult) -> Result<()>,
 {
@@ -807,24 +824,40 @@ where
     let cost: Arc<dyn CostModel> = Arc::from(cost_by_name(&spec.cost_model)?);
     let planner = Planner::with_cost(Box::new(MemoCost::new(cost)));
     let scenarios = spec.scenarios();
+    let picked: Vec<usize> = match indices {
+        None => (0..scenarios.len()).collect(),
+        Some(idx) => {
+            if idx.windows(2).any(|w| w[0] >= w[1]) {
+                bail!("shard indices must be strictly increasing");
+            }
+            if let Some(&out) = idx.iter().find(|&&i| i >= scenarios.len()) {
+                bail!("shard index {out} is outside the {}-scenario grid",
+                      scenarios.len());
+            }
+            idx.to_vec()
+        }
+    };
     let eval = |sc: &Scenario| {
         match planner.plan(&plan_request(&planner, spec, sc)) {
             Ok(plan) => (Some(plan), None),
             Err(e) => (None, Some(format!("{e:#}"))),
         }
     };
-    let n_workers = effective_threads(spec.threads, scenarios.len());
+    let n_workers = effective_threads(spec.threads, picked.len());
     if n_workers <= 1 {
-        for scenario in scenarios {
+        for &i in &picked {
+            let scenario = scenarios[i].clone();
             let (plan, error) = eval(&scenario);
             sink(ScenarioResult { scenario, plan, error })?;
         }
         return Ok(());
     }
+    // `next`/`slots` index into `picked`, not the full grid, so the
+    // reorder buffer stays proportional to this shard's share.
     let next = AtomicUsize::new(0);
     let (tx, rx) = mpsc::channel::<(usize, (Option<Plan>, Option<String>))>();
     let mut slots: Vec<Option<(Option<Plan>, Option<String>)>> = Vec::new();
-    slots.resize_with(scenarios.len(), || None);
+    slots.resize_with(picked.len(), || None);
     let mut sink_result: Result<()> = Ok(());
     std::thread::scope(|scope| {
         for _ in 0..n_workers {
@@ -832,25 +865,26 @@ where
             let next = &next;
             let eval = &eval;
             let scenarios = &scenarios;
+            let picked = &picked;
             scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= scenarios.len() {
+                let j = next.fetch_add(1, Ordering::Relaxed);
+                if j >= picked.len() {
                     break;
                 }
-                let r = eval(&scenarios[i]);
-                if tx.send((i, r)).is_err() {
+                let r = eval(&scenarios[picked[j]]);
+                if tx.send((j, r)).is_err() {
                     break;
                 }
             });
         }
         drop(tx);
         let mut flushed = 0usize;
-        'recv: for (i, r) in rx.iter() {
-            slots[i] = Some(r);
+        'recv: for (j, r) in rx.iter() {
+            slots[j] = Some(r);
             while flushed < slots.len() && slots[flushed].is_some() {
                 let (plan, error) = slots[flushed].take().unwrap();
                 let res = ScenarioResult {
-                    scenario: scenarios[flushed].clone(),
+                    scenario: scenarios[picked[flushed]].clone(),
                     plan,
                     error,
                 };
@@ -860,7 +894,7 @@ where
                     // Exhaust the work counter so the workers stop
                     // picking up scenarios (their in-flight item still
                     // completes and is discarded with the buffer).
-                    next.store(scenarios.len(), Ordering::Relaxed);
+                    next.store(picked.len(), Ordering::Relaxed);
                     break 'recv;
                 }
             }

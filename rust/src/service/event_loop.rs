@@ -1,0 +1,712 @@
+//! The readiness-polled event loop behind the planner daemon.
+//!
+//! One thread owns the listener and every connection; a small worker
+//! pool runs planner evaluations.  The split is the classic
+//! reactor-plus-executor shape (`mio`-style), built on nothing but
+//! non-blocking `std` sockets:
+//!
+//! * the **loop thread** accepts, reads request bytes into per-connection
+//!   buffers, parses incrementally ([`http::try_parse_request`]),
+//!   answers the cheap `GET` endpoints inline, and hands `POST
+//!   /plan`/`/sweep` bodies to the workers.  It also owns every write:
+//!   completed responses queue on the connection and drain as the
+//!   socket accepts them, so a slow reader never parks a worker;
+//! * the **worker threads** only ever compute: a plan evaluation
+//!   (through the single-flight cache) or a sweep stream.  Sweep bytes
+//!   flow back to the loop through a bounded high-water-mark gate
+//!   ([`ConnGate`]) — if the client cannot drain the stream, the worker
+//!   waits instead of buffering without bound, and cancels outright if
+//!   the client is gone.
+//!
+//! Without `epoll` (std-only), readiness is emulated by polling:
+//! non-blocking reads/writes that return `WouldBlock` cost one syscall,
+//! and connections idle for more than [`COLD_AFTER`] are only polled on
+//! the [`FULL_SCAN_EVERY`] cadence, so a large keep-alive herd costs
+//! O(conns) syscalls per *scan interval*, not per tick.  The loop
+//! sleeps on the completion channel when nothing is ready, so worker
+//! results still wake it instantly.
+//!
+//! Production-traffic policies, all surfaced in `/metrics`:
+//!
+//! * **keep-alive** — HTTP/1.1 connections persist across requests
+//!   (`Connection: close`, parse failures, timeouts and chunked sweep
+//!   responses close);
+//! * **admission control** — when [`ServiceOptions::max_pending`]
+//!   planner jobs are outstanding, new `POST`s are refused with a 503 +
+//!   `Retry-After` instead of queueing without bound; past
+//!   [`ServiceOptions::max_connections`], new connections get the same
+//!   treatment;
+//! * **per-request deadlines** — a head that does not complete within
+//!   [`ServiceOptions::head_timeout`] is a 408 (slow-loris defence); a
+//!   connection idle *between* requests past
+//!   [`ServiceOptions::idle_timeout`] is closed silently; a client that
+//!   stops reading its response for [`WRITE_STALL`] is dropped.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::http::{self, ParseStatus};
+use super::{error_body, PlannerService, ServiceOptions, SweepOutcome,
+            CONTENT_JSON, CONTENT_PROM};
+
+/// New connections accepted per tick (bounds time-to-first-read under
+/// an accept storm).
+const ACCEPT_BATCH: usize = 128;
+/// Per-connection bytes read per tick (fairness under pipelining).
+const READ_BATCH: usize = 64 * 1024;
+/// Hard cap on a connection's unparsed input: one maximal request head
+/// plus body, with slack for pipelined follow-ups.  Reads pause (TCP
+/// backpressure) once the buffer is full.
+const IN_BUF_CAP: usize = http::MAX_HEAD_BYTES + http::MAX_BODY_BYTES + 4096;
+/// High-water mark on sweep bytes in flight between a worker and the
+/// socket; past it the worker waits for the client to drain.
+const STREAM_HIGH_WATER: usize = 1024 * 1024;
+/// A connection with no pending work that has been quiet this long is
+/// "cold": it is only polled on the full-scan cadence.
+const COLD_AFTER: Duration = Duration::from_millis(500);
+/// Cold connections and timeouts are scanned this often.
+const FULL_SCAN_EVERY: Duration = Duration::from_millis(25);
+/// Drop a connection whose response bytes have made no progress into
+/// the socket for this long (client stopped reading).
+const WRITE_STALL: Duration = Duration::from_secs(30);
+/// Idle-sleep granularity when no socket and no completion is ready.
+const IDLE_TICK: Duration = Duration::from_millis(1);
+/// Cache snapshot cadence when persistence is configured.
+const PERSIST_EVERY: Duration = Duration::from_secs(60);
+
+/// Shared flow-control state between the loop and one sweep-streaming
+/// worker.  `alive` flips off when the connection dies so the worker
+/// cancels its sweep; `buffered` approximates the stream bytes the
+/// loop has not yet written to the socket.
+pub(super) struct ConnGate {
+    alive: AtomicBool,
+    buffered: AtomicUsize,
+}
+
+impl ConnGate {
+    fn new() -> Self {
+        ConnGate { alive: AtomicBool::new(true),
+                   buffered: AtomicUsize::new(0) }
+    }
+}
+
+/// Work handed from the loop to the worker pool.
+enum Job {
+    Plan { conn: u64, body: Vec<u8> },
+    Sweep { conn: u64, body: Vec<u8>, gate: Arc<ConnGate> },
+}
+
+/// Results handed back from workers to the loop (which owns all
+/// sockets, so it alone encodes connection framing and writes).
+enum Completion {
+    /// A complete fixed-length response body.
+    Respond {
+        conn: u64,
+        endpoint: &'static str,
+        code: u16,
+        body: Arc<String>,
+    },
+    /// Pre-encoded wire bytes of a chunked sweep stream.
+    StreamBytes { conn: u64, bytes: Vec<u8> },
+    /// The sweep finished (or died mid-stream); record and close.
+    StreamDone { conn: u64, code: u16 },
+}
+
+enum ConnState {
+    /// Reading/parsing; no request outstanding.
+    Idle,
+    /// A `POST /plan` is with a worker; reads pause until it answers.
+    Busy,
+    /// A `POST /sweep` is streaming through this connection.
+    Streaming,
+}
+
+struct Conn {
+    stream: TcpStream,
+    state: ConnState,
+    in_buf: Vec<u8>,
+    /// Encoded response bytes awaiting the socket, from `out_pos`.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Sweep wire bytes admitted from the worker but not yet moved to
+    /// `out` (kept separate so `out` stays bounded by the high-water
+    /// mark).
+    pending_stream: VecDeque<Vec<u8>>,
+    stream_done: bool,
+    gate: Arc<ConnGate>,
+    /// Set when the first byte of a request head arrives; cleared when
+    /// its response is queued.  Drives both the head deadline and the
+    /// latency histograms.
+    req_start: Option<Instant>,
+    last_activity: Instant,
+    last_write_progress: Instant,
+    requests_served: u64,
+    /// Whether the in-flight worker response may keep the connection.
+    keep_alive: bool,
+    close_after_flush: bool,
+    read_eof: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, now: Instant) -> Self {
+        Conn {
+            stream,
+            state: ConnState::Idle,
+            in_buf: Vec::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            pending_stream: VecDeque::new(),
+            stream_done: false,
+            gate: Arc::new(ConnGate::new()),
+            req_start: None,
+            last_activity: now,
+            last_write_progress: now,
+            requests_served: 0,
+            keep_alive: true,
+            close_after_flush: false,
+            read_eof: false,
+        }
+    }
+
+    fn has_backlog(&self) -> bool {
+        self.out_pos < self.out.len() || !self.pending_stream.is_empty()
+    }
+
+    /// Cold connections are parked keep-alives: nothing buffered in
+    /// either direction, no request in flight, quiet for a while.
+    fn is_cold(&self, now: Instant) -> bool {
+        matches!(self.state, ConnState::Idle)
+            && !self.has_backlog()
+            && self.in_buf.is_empty()
+            && now.duration_since(self.last_activity) > COLD_AFTER
+    }
+
+    /// Queue a complete response and the resulting connection fate.
+    fn push_response(&mut self, code: u16, content_type: &str, body: &[u8],
+                     keep_alive: bool, extra: &[(&str, &str)]) {
+        self.out.extend_from_slice(&http::encode_response(
+            code, content_type, body, keep_alive, extra));
+        if !keep_alive {
+            self.close_after_flush = true;
+        }
+        self.requests_served += 1;
+        self.req_start = None;
+        self.state = ConnState::Idle;
+    }
+}
+
+fn saturating_sub(counter: &AtomicUsize, n: usize) {
+    let _ = counter.fetch_update(Ordering::Relaxed, Ordering::Relaxed,
+                                 |v| Some(v.saturating_sub(n)));
+}
+
+/// Send pre-encoded sweep bytes toward the loop, honouring the
+/// high-water mark.  Fails once the client (or the loop) is gone — the
+/// error propagates into `stream_sweep`'s sink and cancels the sweep.
+fn send_stream_bytes(gate: &ConnGate, done: &mpsc::Sender<Completion>,
+                     conn: u64, bytes: Vec<u8>) -> Result<()> {
+    loop {
+        if !gate.alive.load(Ordering::Relaxed) {
+            bail!("client disconnected mid-stream");
+        }
+        if gate.buffered.load(Ordering::Relaxed) <= STREAM_HIGH_WATER {
+            break;
+        }
+        std::thread::sleep(IDLE_TICK);
+    }
+    gate.buffered.fetch_add(bytes.len(), Ordering::Relaxed);
+    done.send(Completion::StreamBytes { conn, bytes })
+        .map_err(|_| anyhow!("event loop stopped"))
+}
+
+/// One request-worker: pull jobs, compute, post completions.  Exits
+/// when the loop drops the job channel.
+fn run_worker(service: Arc<PlannerService>,
+              jobs: Arc<Mutex<mpsc::Receiver<Job>>>,
+              done: mpsc::Sender<Completion>) {
+    loop {
+        // Hold the receiver lock only for the dequeue.
+        let job = jobs.lock().unwrap().recv();
+        let Ok(job) = job else { break };
+        match job {
+            Job::Plan { conn, body } => {
+                let (code, doc) = service.handle_plan(&body);
+                service.stats().queue_depth.dec();
+                if done
+                    .send(Completion::Respond {
+                        conn, endpoint: "plan", code, body: doc })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Job::Sweep { conn, body, gate } => {
+                let mut first = true;
+                let mut emit = |payload: &[u8]| -> Result<()> {
+                    let mut bytes = Vec::new();
+                    if first {
+                        first = false;
+                        bytes.extend_from_slice(
+                            &http::encode_chunked_head(200, CONTENT_JSON));
+                    }
+                    bytes.extend_from_slice(&http::encode_chunk(payload));
+                    send_stream_bytes(&gate, &done, conn, bytes)
+                };
+                let outcome = service.respond_sweep(&body, &mut emit);
+                service.stats().queue_depth.dec();
+                let sent = match outcome {
+                    SweepOutcome::Plain { code, body } => done
+                        .send(Completion::Respond {
+                            conn, endpoint: "sweep", code, body })
+                        .is_ok(),
+                    SweepOutcome::Streamed { code } => {
+                        if code == 200 {
+                            let _ = send_stream_bytes(
+                                &gate, &done, conn,
+                                http::CHUNK_END.to_vec());
+                        }
+                        done.send(Completion::StreamDone { conn, code })
+                            .is_ok()
+                    }
+                };
+                if !sent {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// The event loop proper.  Runs on the calling thread until `shutdown`
+/// flips; owns the listener, every connection, and (via
+/// [`ServiceOptions::persist_path`]) the periodic cache snapshot.
+pub(super) fn serve_event_loop(listener: &TcpListener,
+                               service: &Arc<PlannerService>,
+                               opts: &ServiceOptions,
+                               shutdown: &AtomicBool) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let n_workers = if opts.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        opts.threads
+    }
+    .max(1);
+    let max_pending = opts.max_pending.max(1);
+
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let (done_tx, done_rx) = mpsc::channel::<Completion>();
+    let workers: Vec<_> = (0..n_workers)
+        .map(|_| {
+            let service = service.clone();
+            let jobs = job_rx.clone();
+            let done = done_tx.clone();
+            std::thread::spawn(move || run_worker(service, jobs, done))
+        })
+        .collect();
+
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_id: u64 = 0;
+    let mut last_full_scan = Instant::now();
+    let mut last_persist = Instant::now();
+    let stats = service.stats();
+
+    while !shutdown.load(Ordering::Relaxed) {
+        let now = Instant::now();
+        let mut progress = false;
+
+        // --- worker completions --------------------------------------
+        while let Ok(c) = done_rx.try_recv() {
+            progress = true;
+            handle_completion(&mut conns, c, service);
+        }
+
+        // --- accept --------------------------------------------------
+        for _ in 0..ACCEPT_BATCH {
+            match listener.accept() {
+                Ok((mut stream, _)) => {
+                    progress = true;
+                    if conns.len() >= opts.max_connections.max(1) {
+                        // Best-effort shed: the daemon is at its
+                        // connection cap, tell the client to back off.
+                        stats.rejected.inc();
+                        let _ = stream.set_nonblocking(true);
+                        let _ = stream.write_all(&http::encode_response(
+                            503, CONTENT_JSON,
+                            error_body("connection limit reached")
+                                .as_bytes(),
+                            false, &[("Retry-After", "1")]));
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    next_id += 1;
+                    conns.insert(next_id, Conn::new(stream, now));
+                    stats.connections.inc();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => break, // client reset mid-handshake
+            }
+        }
+
+        // --- per-connection I/O --------------------------------------
+        let full_scan =
+            now.duration_since(last_full_scan) >= FULL_SCAN_EVERY;
+        if full_scan {
+            last_full_scan = now;
+        }
+        let ids: Vec<u64> = conns.keys().copied().collect();
+        let mut dead: Vec<u64> = Vec::new();
+        for id in ids {
+            let conn = conns.get_mut(&id).expect("ids snapshot is live");
+            if !full_scan && conn.is_cold(now) {
+                continue;
+            }
+            if tick_conn(conn, id, service, opts, &job_tx, max_pending,
+                         now, &mut progress)
+                .is_err()
+            {
+                dead.push(id);
+            }
+        }
+        for id in dead {
+            remove_conn(&mut conns, id, service);
+        }
+
+        // --- cache persistence ---------------------------------------
+        if let Some(path) = &opts.persist_path {
+            if now.duration_since(last_persist) >= PERSIST_EVERY {
+                last_persist = now;
+                if let Err(e) = service.cache().persist(path) {
+                    eprintln!("warning: cache persist failed: {e:#}");
+                }
+            }
+        }
+
+        // --- idle wait -----------------------------------------------
+        // Sleep on the completion channel so worker results wake the
+        // loop instantly; the timeout keeps shutdown/timeout scans
+        // ticking.
+        if !progress {
+            if let Ok(c) = done_rx.recv_timeout(IDLE_TICK) {
+                handle_completion(&mut conns, c, service);
+            }
+        }
+    }
+
+    // Shutdown: cancel in-flight streams, retire the workers, snapshot
+    // the cache.
+    for (_, conn) in conns.drain() {
+        conn.gate.alive.store(false, Ordering::Relaxed);
+        stats.connections.dec();
+    }
+    drop(job_tx);
+    drop(done_rx);
+    drop(done_tx);
+    for w in workers {
+        let _ = w.join();
+    }
+    if let Some(path) = &opts.persist_path {
+        if let Err(e) = service.cache().persist(path) {
+            eprintln!("warning: cache persist failed: {e:#}");
+        }
+    }
+    Ok(())
+}
+
+fn remove_conn(conns: &mut HashMap<u64, Conn>, id: u64,
+               service: &PlannerService) {
+    if let Some(conn) = conns.remove(&id) {
+        conn.gate.alive.store(false, Ordering::Relaxed);
+        service.stats().connections.dec();
+    }
+}
+
+fn handle_completion(conns: &mut HashMap<u64, Conn>, c: Completion,
+                     service: &Arc<PlannerService>) {
+    match c {
+        Completion::Respond { conn, endpoint, code, body } => {
+            let Some(cn) = conns.get_mut(&conn) else { return };
+            let keep = cn.keep_alive && !cn.close_after_flush;
+            record(service, cn, endpoint, code);
+            cn.push_response(code, CONTENT_JSON, body.as_bytes(), keep, &[]);
+        }
+        Completion::StreamBytes { conn, bytes } => {
+            let Some(cn) = conns.get_mut(&conn) else { return };
+            cn.pending_stream.push_back(bytes);
+        }
+        Completion::StreamDone { conn, code } => {
+            let Some(cn) = conns.get_mut(&conn) else { return };
+            record(service, cn, "sweep", code);
+            cn.requests_served += 1;
+            cn.req_start = None;
+            cn.stream_done = true;
+            // Chunked responses advertise `Connection: close`; a sweep
+            // that died before its 200 head was committed has nothing
+            // queued and closes through the same flush path.
+            cn.close_after_flush = true;
+        }
+    }
+}
+
+fn record(service: &PlannerService, conn: &Conn, endpoint: &'static str,
+          code: u16) {
+    let elapsed = conn
+        .req_start
+        .map(|t| t.elapsed().as_secs_f64())
+        .unwrap_or(0.0);
+    service.record_request(endpoint, code, elapsed);
+}
+
+/// Advance one connection: admit stream bytes, write, read, parse,
+/// dispatch, and (on full scans) enforce deadlines.  `Err` means the
+/// connection is finished — flushed-and-closing or dead.
+#[allow(clippy::too_many_arguments)]
+fn tick_conn(conn: &mut Conn, id: u64, service: &Arc<PlannerService>,
+             opts: &ServiceOptions, job_tx: &mpsc::Sender<Job>,
+             max_pending: usize, now: Instant, progress: &mut bool)
+             -> std::result::Result<(), ()> {
+    let stats = service.stats();
+
+    // Admit worker stream bytes into the write buffer up to the
+    // high-water mark, crediting the gate as they move.
+    while conn.out.len() - conn.out_pos < STREAM_HIGH_WATER {
+        match conn.pending_stream.pop_front() {
+            Some(bytes) => {
+                saturating_sub(&conn.gate.buffered, bytes.len());
+                conn.out.extend_from_slice(&bytes);
+                *progress = true;
+            }
+            None => break,
+        }
+    }
+
+    // Drain the write buffer as far as the socket allows.
+    while conn.out_pos < conn.out.len() {
+        match conn.stream.write(&conn.out[conn.out_pos..]) {
+            Ok(0) => return Err(()),
+            Ok(n) => {
+                conn.out_pos += n;
+                conn.last_write_progress = now;
+                conn.last_activity = now;
+                *progress = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return Err(()),
+        }
+    }
+    if conn.out_pos >= conn.out.len() && !conn.out.is_empty() {
+        conn.out.clear();
+        conn.out_pos = 0;
+    }
+
+    let flushed = !conn.has_backlog();
+    if flushed {
+        if matches!(conn.state, ConnState::Streaming) && conn.stream_done {
+            return Err(()); // sweep complete; chunked always closes
+        }
+        if conn.close_after_flush {
+            return Err(());
+        }
+        if conn.read_eof && conn.in_buf.is_empty() {
+            return Err(()); // peer hung up and nothing is owed
+        }
+    } else if now.duration_since(conn.last_write_progress) >= WRITE_STALL {
+        return Err(()); // client stopped reading its response
+    }
+
+    // Read while idle (a worker-busy connection gets TCP backpressure
+    // instead of an ever-growing pipeline buffer).
+    if matches!(conn.state, ConnState::Idle)
+        && !conn.read_eof
+        && !conn.close_after_flush
+        && conn.in_buf.len() < IN_BUF_CAP
+    {
+        let mut tmp = [0u8; 4096];
+        let mut read_this_tick = 0usize;
+        loop {
+            match conn.stream.read(&mut tmp) {
+                Ok(0) => {
+                    conn.read_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.in_buf.extend_from_slice(&tmp[..n]);
+                    conn.last_activity = now;
+                    *progress = true;
+                    read_this_tick += n;
+                    if read_this_tick >= READ_BATCH
+                        || conn.in_buf.len() >= IN_BUF_CAP
+                    {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return Err(()),
+            }
+        }
+    }
+
+    // Parse + dispatch at most one request per tick.
+    if matches!(conn.state, ConnState::Idle)
+        && !conn.close_after_flush
+        && !conn.in_buf.is_empty()
+    {
+        if conn.req_start.is_none() {
+            conn.req_start = Some(now);
+        }
+        match http::try_parse_request(&conn.in_buf) {
+            Err(e) => {
+                // The byte stream is unrecoverable after a framing
+                // error: answer and close.
+                record(service, conn, "other", 400);
+                conn.push_response(400, CONTENT_JSON,
+                                   error_body(&format!("{e:#}")).as_bytes(),
+                                   false, &[]);
+                *progress = true;
+            }
+            Ok(ParseStatus::NeedMore) => {}
+            Ok(ParseStatus::Complete { req, consumed }) => {
+                conn.in_buf.drain(..consumed);
+                if conn.requests_served > 0 {
+                    stats.keepalive_reuses.inc();
+                }
+                dispatch(conn, id, &req, service, job_tx, max_pending);
+                *progress = true;
+            }
+        }
+    }
+
+    // Deadlines (evaluated on every tick this connection is scanned;
+    // cold connections see them on the full-scan cadence).
+    if matches!(conn.state, ConnState::Idle) && flushed {
+        match conn.req_start {
+            Some(t0) => {
+                if now.duration_since(t0) >= opts.head_timeout {
+                    // Slow-loris: the head never completed in time.
+                    stats.timeouts.inc();
+                    record(service, conn, "other", 408);
+                    conn.push_response(
+                        408, CONTENT_JSON,
+                        error_body("request head timed out").as_bytes(),
+                        false, &[]);
+                }
+            }
+            None => {
+                if now.duration_since(conn.last_activity)
+                    >= opts.idle_timeout
+                {
+                    return Err(()); // parked keep-alive expired
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Route one parsed request: cheap `GET`s answer inline on the loop
+/// thread; planner work goes to the pool behind admission control.
+fn dispatch(conn: &mut Conn, id: u64, req: &http::Request,
+            service: &Arc<PlannerService>, job_tx: &mpsc::Sender<Job>,
+            max_pending: usize) {
+    let stats = service.stats();
+    let endpoint = match req.path.as_str() {
+        "/plan" => "plan",
+        "/sweep" => "sweep",
+        "/models" => "models",
+        "/topologies" => "topologies",
+        "/healthz" => "healthz",
+        "/metrics" => "metrics",
+        _ => "other",
+    };
+    let keep = req.wants_keep_alive();
+    conn.keep_alive = keep;
+    match (endpoint, req.method.as_str()) {
+        (ep @ ("plan" | "sweep"), "POST") => {
+            if stats.queue_depth.get() >= max_pending as u64 {
+                // Backpressure: refuse instead of queueing unboundedly.
+                stats.rejected.inc();
+                record(service, conn, ep, 503);
+                conn.push_response(
+                    503, CONTENT_JSON,
+                    error_body("planner queue is full; retry shortly")
+                        .as_bytes(),
+                    false, &[("Retry-After", "1")]);
+                return;
+            }
+            stats.queue_depth.inc();
+            let job = if ep == "plan" {
+                conn.state = ConnState::Busy;
+                Job::Plan { conn: id, body: req.body.clone() }
+            } else {
+                conn.state = ConnState::Streaming;
+                conn.stream_done = false;
+                conn.gate = Arc::new(ConnGate::new());
+                Job::Sweep {
+                    conn: id,
+                    body: req.body.clone(),
+                    gate: conn.gate.clone(),
+                }
+            };
+            if job_tx.send(job).is_err() {
+                // Shutdown race: workers are gone.
+                stats.queue_depth.dec();
+                record(service, conn, ep, 503);
+                conn.push_response(
+                    503, CONTENT_JSON,
+                    error_body("service is shutting down").as_bytes(),
+                    false, &[("Retry-After", "1")]);
+            }
+        }
+        ("models", "GET") => {
+            record(service, conn, "models", 200);
+            conn.push_response(200, CONTENT_JSON,
+                               service.models_doc().as_bytes(), keep, &[]);
+        }
+        ("topologies", "GET") => {
+            record(service, conn, "topologies", 200);
+            conn.push_response(200, CONTENT_JSON,
+                               service.topologies_doc().as_bytes(), keep,
+                               &[]);
+        }
+        ("healthz", "GET") => {
+            record(service, conn, "healthz", 200);
+            conn.push_response(200, CONTENT_JSON, b"{\"status\":\"ok\"}\n",
+                               keep, &[]);
+        }
+        ("metrics", "GET") => {
+            record(service, conn, "metrics", 200);
+            conn.push_response(200, CONTENT_PROM,
+                               service.metrics_doc().as_bytes(), keep, &[]);
+        }
+        ("other", _) => {
+            record(service, conn, "other", 404);
+            conn.push_response(
+                404, CONTENT_JSON,
+                error_body(&format!(
+                    "no endpoint '{}' (known: /plan, /sweep, /models, \
+                     /topologies, /healthz, /metrics)", req.path))
+                    .as_bytes(),
+                keep, &[]);
+        }
+        (_, method) => {
+            record(service, conn, endpoint, 405);
+            conn.push_response(
+                405, CONTENT_JSON,
+                error_body(&format!("{} does not support {method}",
+                                    req.path))
+                    .as_bytes(),
+                keep, &[]);
+        }
+    }
+}

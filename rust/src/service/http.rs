@@ -1,18 +1,29 @@
 //! Minimal HTTP/1.1 framing for the planner service (hyper unavailable
 //! offline; see DESIGN.md substitutions).
 //!
-//! Covers exactly what the service needs: request-line + header parsing
-//! with size caps, `Content-Length` bodies, fixed-length responses, and
-//! a chunked-transfer writer for the streamed `POST /sweep` endpoint.
-//! Every response carries `Connection: close` — the service is
-//! one-request-per-connection by design (the expensive path is the
-//! planner evaluation, not the TCP handshake, and closing keeps the
-//! worker pool's accounting trivial).
+//! Covers exactly what the event-loop service needs:
+//!
+//! * an **incremental request parser** ([`try_parse_request`]) that
+//!   works over an accumulating byte buffer — it reports "need more
+//!   bytes" instead of blocking, which is what lets one thread poll
+//!   thousands of keep-alive connections;
+//! * response **encoders** ([`encode_response`], [`encode_chunked_head`],
+//!   [`encode_chunk`], [`CHUNK_END`]) that produce complete wire bytes
+//!   for the loop to write as the socket drains;
+//! * a small **blocking client** ([`post_and_stream_chunks`]) used by
+//!   the sweep-shard coordinator to fan a grid out to replica daemons
+//!   and read their chunk streams frame-by-frame.
+//!
+//! Responses carry `Connection: keep-alive` or `Connection: close`
+//! explicitly; the service keeps connections open across requests
+//! unless the client asked to close, the response has no length
+//! framing, or the server is shedding load.
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 /// Parsed request line + headers + body.
 #[derive(Clone, Debug)]
@@ -35,37 +46,75 @@ impl Request {
             .find(|(k, _)| k == name)
             .map(|(_, v)| v.as_str())
     }
+
+    /// Whether the client asked for the connection to stay open after
+    /// this request (HTTP/1.1 default yes, overridden by
+    /// `Connection: close`).
+    pub fn wants_keep_alive(&self) -> bool {
+        !matches!(self.header("connection"),
+                  Some(v) if v.eq_ignore_ascii_case("close"))
+    }
 }
 
-/// Cap on the request line + headers (pre-body) section.
-const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Cap on the request line + headers (pre-body) section.  Public so the
+/// event loop can reject a head that grew past the cap *before* a
+/// terminator arrives — a slow-loris trickling header bytes must not
+/// hold buffer space until some larger limit trips.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
 /// Cap on the request body (a `SweepSpec` is well under this).
 pub const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
 
-/// Read one request off the stream.  Fails loudly on malformed framing,
-/// oversized heads/bodies, or EOF mid-request; the caller maps parse
-/// failures to a 400 where a response is still possible.
-pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
-    let mut reader = BufReader::new(stream);
-    let mut head = String::new();
-    let mut line = String::new();
-    loop {
-        line.clear();
-        let n = reader.read_line(&mut line)?;
-        if n == 0 {
-            bail!("connection closed mid-request");
+/// Outcome of one incremental parse attempt over the connection's
+/// accumulated read buffer.
+pub enum ParseStatus {
+    /// No complete request yet — keep the buffer, read more bytes.
+    NeedMore,
+    /// One complete request; `consumed` bytes of the buffer belong to
+    /// it (the remainder is pipelined input for the next request).
+    Complete { req: Request, consumed: usize },
+}
+
+/// Find the end of the head section (the byte *after* the blank line),
+/// accepting both CRLF and bare-LF line endings.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            if buf.get(i + 1) == Some(&b'\n') {
+                return Some(i + 2);
+            }
+            if buf.get(i + 1) == Some(&b'\r')
+                && buf.get(i + 2) == Some(&b'\n')
+            {
+                return Some(i + 3);
+            }
         }
-        head.push_str(&line);
-        if head.len() > MAX_HEAD_BYTES {
+        i += 1;
+    }
+    None
+}
+
+/// Try to parse one request from the front of `buf`.  Returns
+/// [`ParseStatus::NeedMore`] while the head or declared body is still
+/// incomplete; fails loudly on malformed framing or oversized
+/// heads/bodies (the caller maps a failure to a 400 and closes — the
+/// byte stream is unrecoverable after a framing error).
+pub fn try_parse_request(buf: &[u8]) -> Result<ParseStatus> {
+    let Some(head_len) = head_end(buf) else {
+        if buf.len() > MAX_HEAD_BYTES {
             bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
         }
-        if line == "\r\n" || line == "\n" {
-            break;
-        }
+        return Ok(ParseStatus::NeedMore);
+    };
+    if head_len > MAX_HEAD_BYTES {
+        bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
     }
+    let head = std::str::from_utf8(&buf[..head_len])
+        .context("request head is not UTF-8")?;
     let mut lines = head.lines();
     let request_line = lines
         .next()
+        .filter(|l| !l.is_empty())
         .ok_or_else(|| anyhow!("empty request"))?;
     let mut parts = request_line.split_whitespace();
     let method = parts
@@ -94,8 +143,7 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
         let (k, v) = l
             .split_once(':')
             .ok_or_else(|| anyhow!("malformed header line '{l}'"))?;
-        headers.push((k.trim().to_ascii_lowercase(),
-                      v.trim().to_string()));
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
     }
     let content_length = match headers
         .iter()
@@ -110,106 +158,213 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
         bail!("request body of {content_length} bytes exceeds the \
                {MAX_BODY_BYTES}-byte cap");
     }
-    let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
-    Ok(Request { method, path, headers, body })
+    if buf.len() < head_len + content_length {
+        return Ok(ParseStatus::NeedMore);
+    }
+    let body = buf[head_len..head_len + content_length].to_vec();
+    Ok(ParseStatus::Complete {
+        req: Request { method, path, headers, body },
+        consumed: head_len + content_length,
+    })
 }
 
-fn reason(status: u16) -> &'static str {
+/// Status-line reason phrases for every code the service can emit.
+pub fn reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Unknown",
     }
 }
 
-/// Write a complete fixed-length response (`Content-Length` framing,
-/// `Connection: close`).
-pub fn write_response(stream: &mut TcpStream, status: u16,
-                      content_type: &str, body: &[u8]) -> Result<()> {
-    let head = format!(
+/// Encode a complete fixed-length response (`Content-Length` framing).
+/// `extra_headers` lets load-shedding responses carry `Retry-After`.
+pub fn encode_response(status: u16, content_type: &str, body: &[u8],
+                       keep_alive: bool,
+                       extra_headers: &[(&str, &str)]) -> Vec<u8> {
+    let mut head = format!(
         "HTTP/1.1 {status} {}\r\n\
          Content-Type: {content_type}\r\n\
          Content-Length: {}\r\n\
+         Connection: {}\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" });
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    let mut out = head.into_bytes();
+    out.extend_from_slice(body);
+    out
+}
+
+/// Encode the head of a chunked-transfer response.  Chunked responses
+/// always close the connection: the stream may legitimately end
+/// truncated (a sweep failing after the 200 head is committed), and a
+/// truncated chunk stream on a kept-alive connection would desync the
+/// client's framing.
+pub fn encode_chunked_head(status: u16, content_type: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {status} {}\r\n\
+         Content-Type: {content_type}\r\n\
+         Transfer-Encoding: chunked\r\n\
          Connection: close\r\n\
          \r\n",
-        reason(status),
+        reason(status))
+    .into_bytes()
+}
+
+/// Encode one chunk frame (empty input encodes nothing — a zero-length
+/// chunk would terminate the stream).
+pub fn encode_chunk(data: &[u8]) -> Vec<u8> {
+    if data.is_empty() {
+        return Vec::new();
+    }
+    let mut out = format!("{:x}\r\n", data.len()).into_bytes();
+    out.extend_from_slice(data);
+    out.extend_from_slice(b"\r\n");
+    out
+}
+
+/// The chunk-stream terminator.  *Not* writing it leaves the client
+/// with a truncated stream — exactly right when a sweep fails
+/// mid-flight, since the committed 200 head cannot be taken back.
+pub const CHUNK_END: &[u8] = b"0\r\n\r\n";
+
+// ==========================================================================
+// Blocking client (sweep-shard coordinator side)
+// ==========================================================================
+
+/// Read from `stream` until `buf` satisfies `done`, in `step`-byte
+/// reads.  Fails on EOF before `done`.
+fn read_until<F>(stream: &mut TcpStream, buf: &mut Vec<u8>, step: usize,
+                 mut done: F) -> Result<()>
+where
+    F: FnMut(&[u8]) -> bool,
+{
+    let mut tmp = vec![0u8; step];
+    while !done(buf) {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            bail!("peer closed mid-response");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    Ok(())
+}
+
+/// POST `body` to `http://{addr}{path}` and stream the chunked response
+/// back one frame at a time: `on_chunk` sees exactly the payloads the
+/// replica's writer emitted, in order, which is what lets the shard
+/// coordinator splice replica streams without re-framing.  Returns the
+/// response status.  `on_chunk` only runs for 200 responses — an error
+/// document is consumed and discarded, leaving the status to speak.
+pub fn post_and_stream_chunks<F>(addr: &str, path: &str, body: &[u8],
+                                 timeout: Duration, on_chunk: &mut F)
+                                 -> Result<u16>
+where
+    F: FnMut(&[u8]) -> Result<()>,
+{
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting replica {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.set_nodelay(true)?;
+    let head = format!(
+        "POST {path} HTTP/1.1\r\n\
+         Host: {addr}\r\n\
+         Content-Type: application/json\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\
+         \r\n",
         body.len());
     stream.write_all(head.as_bytes())?;
     stream.write_all(body)?;
     stream.flush()?;
-    Ok(())
-}
 
-/// Chunked-transfer response writer for the streamed `POST /sweep`
-/// endpoint: the head commits the status before the sweep runs, then
-/// each completed scenario goes out as its own chunk.  Concatenating
-/// the chunks reproduces the `sweep` CLI's JSON document byte-for-byte.
-pub struct ChunkedWriter<'a> {
-    stream: &'a mut TcpStream,
-}
-
-impl<'a> ChunkedWriter<'a> {
-    /// Write the response head and return the chunk writer.
-    pub fn start(stream: &'a mut TcpStream, status: u16,
-                 content_type: &str) -> Result<Self> {
-        let head = format!(
-            "HTTP/1.1 {status} {}\r\n\
-             Content-Type: {content_type}\r\n\
-             Transfer-Encoding: chunked\r\n\
-             Connection: close\r\n\
-             \r\n",
-            reason(status));
-        stream.write_all(head.as_bytes())?;
-        Ok(ChunkedWriter { stream })
-    }
-
-    /// Write one chunk (empty input writes nothing — a zero-length
-    /// chunk would terminate the stream).
-    pub fn chunk(&mut self, data: &[u8]) -> Result<()> {
-        if data.is_empty() {
-            return Ok(());
+    let mut buf = Vec::new();
+    read_until(&mut stream, &mut buf, 4096, |b| head_end(b).is_some())?;
+    let head_len = head_end(&buf).expect("read_until guaranteed a head");
+    let head_text = std::str::from_utf8(&buf[..head_len])
+        .context("replica response head is not UTF-8")?;
+    let mut lines = head_text.lines();
+    let status_line = lines
+        .next()
+        .ok_or_else(|| anyhow!("empty replica response"))?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow!("malformed status line '{status_line}'"))?
+        .parse()
+        .with_context(|| format!("status in '{status_line}'"))?;
+    let mut chunked = false;
+    let mut content_length = 0usize;
+    for l in lines {
+        if let Some((k, v)) = l.split_once(':') {
+            let (k, v) = (k.trim().to_ascii_lowercase(),
+                          v.trim().to_ascii_lowercase());
+            if k == "transfer-encoding" && v.contains("chunked") {
+                chunked = true;
+            } else if k == "content-length" {
+                content_length = v.parse().with_context(|| {
+                    format!("replica content-length '{v}'")
+                })?;
+            }
         }
-        write!(self.stream, "{:x}\r\n", data.len())?;
-        self.stream.write_all(data)?;
-        self.stream.write_all(b"\r\n")?;
-        self.stream.flush()?;
-        Ok(())
     }
+    buf.drain(..head_len);
 
-    /// Terminate the chunk stream.  Dropping the writer *without*
-    /// calling this leaves the client with a truncated chunk stream —
-    /// exactly right when a sweep fails mid-flight, since the committed
-    /// 200 head cannot be taken back.
-    pub fn finish(self) -> Result<()> {
-        self.stream.write_all(b"0\r\n\r\n")?;
-        self.stream.flush()?;
-        Ok(())
+    if !chunked {
+        read_until(&mut stream, &mut buf, 4096,
+                   |b| b.len() >= content_length)?;
+        if status == 200 {
+            on_chunk(&buf[..content_length])?;
+        }
+        return Ok(status);
+    }
+    loop {
+        // Chunk-size line, then payload + CRLF.
+        read_until(&mut stream, &mut buf, 4096, |b| {
+            b.windows(2).any(|w| w == b"\r\n")
+        })?;
+        let nl = buf
+            .windows(2)
+            .position(|w| w == b"\r\n")
+            .expect("read_until guaranteed a CRLF");
+        let size_text = std::str::from_utf8(&buf[..nl])
+            .context("chunk size is not UTF-8")?;
+        let size = usize::from_str_radix(size_text.trim(), 16)
+            .with_context(|| format!("chunk size '{size_text}'"))?;
+        buf.drain(..nl + 2);
+        if size == 0 {
+            return Ok(status);
+        }
+        read_until(&mut stream, &mut buf, 4096, |b| b.len() >= size + 2)?;
+        if status == 200 {
+            on_chunk(&buf[..size])?;
+        }
+        buf.drain(..size + 2);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::net::{TcpListener, TcpStream};
 
-    /// Round-trip helper: write `raw` into a socket, parse it off the
-    /// other end.
     fn parse(raw: &[u8]) -> Result<Request> {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let raw = raw.to_vec();
-        let client = std::thread::spawn(move || {
-            let mut s = TcpStream::connect(addr).unwrap();
-            s.write_all(&raw).unwrap();
-        });
-        let (mut conn, _) = listener.accept().unwrap();
-        let req = read_request(&mut conn);
-        client.join().unwrap();
-        req
+        match try_parse_request(raw)? {
+            ParseStatus::Complete { req, .. } => Ok(req),
+            ParseStatus::NeedMore => bail!("incomplete"),
+        }
     }
 
     #[test]
@@ -225,6 +380,7 @@ mod tests {
         assert_eq!(req.path, "/plan", "query string must be stripped");
         assert_eq!(req.header("content-type"), Some("application/json"));
         assert_eq!(req.body, b"{\"model\":\"gnmt\"}");
+        assert!(req.wants_keep_alive(), "HTTP/1.1 defaults to keep-alive");
     }
 
     #[test]
@@ -236,6 +392,33 @@ mod tests {
     }
 
     #[test]
+    fn connection_close_is_honoured() {
+        let req = parse(
+            b"GET /healthz HTTP/1.1\r\nConnection: Close\r\n\r\n").unwrap();
+        assert!(!req.wants_keep_alive());
+    }
+
+    #[test]
+    fn incremental_parse_reports_need_more_then_pipelined_leftover() {
+        let full = b"POST /plan HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET ";
+        // Every strict prefix of the complete request is NeedMore.
+        for cut in 0..full.len() - 5 {
+            assert!(matches!(try_parse_request(&full[..cut]).unwrap(),
+                             ParseStatus::NeedMore),
+                    "cut at {cut}");
+        }
+        // The full buffer parses one request and reports the consumed
+        // length, leaving the pipelined "GET " for the next round.
+        match try_parse_request(full).unwrap() {
+            ParseStatus::Complete { req, consumed } => {
+                assert_eq!(req.body, b"hi");
+                assert_eq!(&full[consumed..], b"GET ");
+            }
+            ParseStatus::NeedMore => panic!("complete request not parsed"),
+        }
+    }
+
+    #[test]
     fn rejects_malformed_requests() {
         assert!(parse(b"\r\n\r\n").is_err());
         assert!(parse(b"GET /x\r\n\r\n").is_err(), "missing version");
@@ -243,15 +426,56 @@ mod tests {
         assert!(parse(b"GET /x HTTP/1.1\r\nbroken header\r\n\r\n").is_err());
         assert!(parse(b"POST /x HTTP/1.1\r\nContent-Length: oops\r\n\r\n")
                     .is_err());
-        // Declared body longer than what arrives.
-        assert!(parse(b"POST /x HTTP/1.1\r\nContent-Length: 99\r\n\r\nhi")
-                    .is_err());
+    }
+
+    #[test]
+    fn oversized_head_is_rejected_even_without_a_terminator() {
+        // A slow-loris head: no blank line, just bytes past the cap.
+        let mut raw = b"GET /x HTTP/1.1\r\n".to_vec();
+        while raw.len() <= MAX_HEAD_BYTES {
+            raw.extend_from_slice(b"X-Padding: aaaaaaaaaaaaaaaa\r\n");
+        }
+        assert!(try_parse_request(&raw).is_err());
     }
 
     #[test]
     fn rejects_oversized_bodies() {
         let head = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
                            MAX_BODY_BYTES + 1);
-        assert!(parse(head.as_bytes()).is_err());
+        assert!(try_parse_request(head.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn response_encoding_carries_connection_and_extras() {
+        let ok = encode_response(200, "application/json", b"{}\n", true, &[]);
+        let text = String::from_utf8(ok).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 3\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}\n"), "{text}");
+
+        let shed = encode_response(503, "application/json", b"{}\n", false,
+                                   &[("Retry-After", "1")]);
+        let text = String::from_utf8(shed).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"),
+                "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+
+        assert_eq!(reason(408), "Request Timeout");
+    }
+
+    #[test]
+    fn chunk_frames_round_trip() {
+        assert!(encode_chunk(b"").is_empty(),
+                "empty chunk must not terminate the stream");
+        let frame = encode_chunk(b"hello");
+        assert_eq!(frame, b"5\r\nhello\r\n");
+        let head =
+            String::from_utf8(encode_chunked_head(200, "application/json"))
+                .unwrap();
+        assert!(head.contains("Transfer-Encoding: chunked\r\n"), "{head}");
+        assert!(head.contains("Connection: close\r\n"), "{head}");
+        assert_eq!(CHUNK_END, b"0\r\n\r\n");
     }
 }

@@ -2,9 +2,11 @@
 //! unified planner, so repeated `PlanRequest → Plan` and
 //! `SweepSpec → SweepResult` queries amortise across callers instead of
 //! paying a fresh CLI invocation each (the deployment shape of Kahira et
-//! al.'s training oracle).  Everything is `std` — `TcpListener` plus a
-//! scoped worker-thread pool in the style of
-//! [`parallel_map`](crate::planner::sweep::parallel_map).
+//! al.'s training oracle).  Everything is `std`: a readiness-polled
+//! event loop over non-blocking sockets ([`event_loop`]) owns every
+//! connection, and a worker pool runs the planner evaluations — see the
+//! event-loop module docs for the keep-alive, admission-control and
+//! deadline policies.
 //!
 //! Endpoints:
 //!
@@ -15,7 +17,7 @@
 //! | `GET /models`     | —                   | model registry listing |
 //! | `GET /topologies` | —                   | topology registry listing |
 //! | `GET /healthz`    | —                   | `{"status":"ok"}` |
-//! | `GET /metrics`    | —                   | Prometheus text: request counts, cache hits/misses, per-endpoint latency histograms |
+//! | `GET /metrics`    | —                   | Prometheus text: request counts, cache hits/misses, queue depth, per-endpoint latency histograms |
 //!
 //! The heart is the **single-flight LRU plan cache** ([`cache`]):
 //! requests are canonicalised
@@ -23,9 +25,19 @@
 //! so equivalent spellings — model
 //! aliases, explicitly-spelled defaults, permuted degree lists — share
 //! one entry, and concurrent identical requests coalesce onto a single
-//! in-flight planner evaluation.  Cache *hits* are requests served
-//! without an evaluation; *misses* are fills.  Worked examples and the
-//! full canonicalisation rules live in `docs/service.md`.
+//! in-flight planner evaluation.  Cache *hits* are requests served an
+//! `Ok` plan without an evaluation; *misses* are fills; waiters served
+//! a cached error count as *error hits*.  Eviction is O(1) and never
+//! touches an in-flight cell; completed entries can persist across
+//! restarts ([`ServiceOptions::persist_path`]).  Worked examples and
+//! the full canonicalisation rules live in `docs/service.md`.
+//!
+//! When [`ServiceOptions::replicas`] names peer daemons, `POST /sweep`
+//! becomes a **sharded fan-out**: the grid is partitioned by consistent
+//! hashing on each scenario's memo-affinity key ([`shard`]), every
+//! replica evaluates its share, and the coordinator splices the chunk
+//! streams back in canonical order — the merged body stays
+//! byte-identical to a single daemon's (and to `sweep` CLI stdout).
 //!
 //! ```no_run
 //! use hybridpar::service::{self, ServiceOptions};
@@ -37,17 +49,21 @@
 //! ```
 
 pub mod cache;
+mod event_loop;
 pub mod http;
+pub mod shard;
 
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::metrics::{Counter, Histogram};
-use crate::planner::sweep::{stream_sweep, SweepSpec};
+use crate::metrics::{Counter, Gauge, Histogram};
+use crate::planner::sweep::{stream_sweep_indices, SweepSpec};
 use crate::planner::{cost_by_name, jobj, plan_request_from_json,
                      ModelRegistry, Planner, TopologyRegistry};
 use crate::util::json::Json;
@@ -67,14 +83,19 @@ const ENDPOINTS: [&str; 7] = ["plan", "sweep", "models", "topologies",
                               "healthz", "metrics", "other"];
 
 /// Status codes the service can emit (fixed label set, like
-/// [`ENDPOINTS`]).
-const CODES: [u16; 5] = [200, 400, 404, 405, 500];
+/// [`ENDPOINTS`]).  408 = request-head deadline, 503 = load shed.
+const CODES: [u16; 7] = [200, 400, 404, 405, 408, 500, 503];
 
 /// Cap on one `POST /sweep` grid.  A request describes its grid as a
 /// cartesian product, so a small body can demand an enormous amount of
 /// work; past this many scenarios the request is a 400, not a
 /// daemon-sized job.
 pub const MAX_SWEEP_SCENARIOS: usize = 4096;
+
+/// Socket timeout for one coordinator→replica read/write during a
+/// sharded sweep (generous: chunks may be minutes apart on a grid of
+/// slow cost models).
+const REPLICA_IO_TIMEOUT: Duration = Duration::from_secs(300);
 
 // ==========================================================================
 // Options
@@ -83,13 +104,34 @@ pub const MAX_SWEEP_SCENARIOS: usize = 4096;
 /// Daemon knobs (`serve` CLI flags / the `[service]` config section).
 #[derive(Clone, Debug)]
 pub struct ServiceOptions {
-    /// Request worker threads (0 = one per available core).
+    /// Planner worker threads (0 = one per available core).  The event
+    /// loop itself always runs on one dedicated thread.
     pub threads: usize,
     /// Plan-cache capacity in entries (clamped to ≥ 1).
     pub cache_entries: usize,
     /// Cost model used when a request omits `"cost"`; the same default
     /// as the `plan` CLI, so minimal bodies stay byte-compatible.
     pub default_cost: String,
+    /// Admission-control bound: when this many planner jobs are
+    /// outstanding, further `POST`s get 503 + `Retry-After` (clamped
+    /// to ≥ 1).
+    pub max_pending: usize,
+    /// Connection cap; past it new connections are shed with a 503.
+    pub max_connections: usize,
+    /// A request head must complete within this deadline (slow-loris
+    /// defence; expiry is a 408).
+    pub head_timeout: Duration,
+    /// Keep-alive connections idle *between* requests longer than this
+    /// are closed silently.
+    pub idle_timeout: Duration,
+    /// Optional plan-cache snapshot file: loaded at bind, rewritten
+    /// periodically and at shutdown, so a restart keeps its warm set.
+    pub persist_path: Option<PathBuf>,
+    /// Peer daemon addresses for sharded `POST /sweep` fan-out (empty =
+    /// evaluate every sweep locally).  Listing this daemon's own
+    /// address is allowed but requires `threads ≥ 2` (the coordinator
+    /// occupies one worker while its own shard needs another).
+    pub replicas: Vec<String>,
 }
 
 impl Default for ServiceOptions {
@@ -98,6 +140,12 @@ impl Default for ServiceOptions {
             threads: 0,
             cache_entries: 128,
             default_cost: "analytical".into(),
+            max_pending: 128,
+            max_connections: 10_240,
+            head_timeout: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(60),
+            persist_path: None,
+            replicas: Vec::new(),
         }
     }
 }
@@ -141,7 +189,7 @@ impl ServiceMetrics {
         self.latency[e].observe(seconds);
     }
 
-    fn render(&self, cache: &PlanCache) -> String {
+    fn render(&self, cache: &PlanCache, stats: &LoopStats) -> String {
         let p = METRIC_PREFIX;
         let mut s = String::new();
         s.push_str(&format!(
@@ -155,10 +203,16 @@ impl ServiceMetrics {
             }
         }
         s.push_str(&format!(
-            "# HELP {p}_plan_cache_hits_total Plan requests served \
-             without a planner evaluation (coalesced waiters included).\n\
+            "# HELP {p}_plan_cache_hits_total Plan requests served an Ok \
+             plan without a planner evaluation (coalesced waiters \
+             included).\n\
              # TYPE {p}_plan_cache_hits_total counter\n\
              {p}_plan_cache_hits_total {}\n", cache.hits()));
+        s.push_str(&format!(
+            "# HELP {p}_plan_cache_error_hits_total Plan requests served \
+             a cached error body without a planner evaluation.\n\
+             # TYPE {p}_plan_cache_error_hits_total counter\n\
+             {p}_plan_cache_error_hits_total {}\n", cache.error_hits()));
         s.push_str(&format!(
             "# HELP {p}_plan_cache_misses_total Plan-cache fills (actual \
              planner evaluations).\n\
@@ -169,6 +223,37 @@ impl ServiceMetrics {
              # TYPE {p}_plan_cache_entries gauge\n\
              {p}_plan_cache_entries {}\n", cache.len()));
         s.push_str(&format!(
+            "# HELP {p}_connections_open Connections currently held by \
+             the event loop.\n\
+             # TYPE {p}_connections_open gauge\n"));
+        s.push_str(&stats.connections.render(
+            &format!("{p}_connections_open"), ""));
+        s.push_str(&format!(
+            "# HELP {p}_queue_depth Planner jobs outstanding (queued or \
+             running); admission control refuses POSTs past the \
+             max-pending bound.\n\
+             # TYPE {p}_queue_depth gauge\n"));
+        s.push_str(&stats.queue_depth.render(
+            &format!("{p}_queue_depth"), ""));
+        s.push_str(&format!(
+            "# HELP {p}_rejected_total Requests shed with a 503 \
+             (admission control or the connection cap).\n\
+             # TYPE {p}_rejected_total counter\n"));
+        s.push_str(&stats.rejected.render(
+            &format!("{p}_rejected_total"), ""));
+        s.push_str(&format!(
+            "# HELP {p}_request_timeouts_total Request heads that missed \
+             their deadline (408s).\n\
+             # TYPE {p}_request_timeouts_total counter\n"));
+        s.push_str(&stats.timeouts.render(
+            &format!("{p}_request_timeouts_total"), ""));
+        s.push_str(&format!(
+            "# HELP {p}_keepalive_reuses_total Requests served on an \
+             already-used connection.\n\
+             # TYPE {p}_keepalive_reuses_total counter\n"));
+        s.push_str(&stats.keepalive_reuses.render(
+            &format!("{p}_keepalive_reuses_total"), ""));
+        s.push_str(&format!(
             "# HELP {p}_request_duration_seconds Request latency by \
              endpoint.\n\
              # TYPE {p}_request_duration_seconds histogram\n"));
@@ -178,6 +263,28 @@ impl ServiceMetrics {
                 &format!("endpoint=\"{endpoint}\"")));
         }
         s
+    }
+}
+
+/// Event-loop operational state, exported in `/metrics` alongside the
+/// request counters (fields are touched by the [`event_loop`] module).
+struct LoopStats {
+    connections: Gauge,
+    queue_depth: Gauge,
+    rejected: Counter,
+    timeouts: Counter,
+    keepalive_reuses: Counter,
+}
+
+impl LoopStats {
+    fn new() -> Self {
+        LoopStats {
+            connections: Gauge::new(),
+            queue_depth: Gauge::new(),
+            rejected: Counter::new(),
+            timeouts: Counter::new(),
+            keepalive_reuses: Counter::new(),
+        }
     }
 }
 
@@ -192,14 +299,26 @@ fn error_body(msg: &str) -> Arc<String> {
     Arc::new(s)
 }
 
+/// How a `POST /sweep` was answered: a plain fixed-length response
+/// (validation failures), or a chunk stream already emitted through the
+/// caller's sink (`code` 200 = complete with terminator due, 500 =
+/// truncated mid-stream).
+enum SweepOutcome {
+    Plain { code: u16, body: Arc<String> },
+    Streamed { code: u16 },
+}
+
 /// Request-handling state shared by every worker thread: the registries,
-/// the single-flight plan cache, and the metrics.
+/// the single-flight plan cache, the metrics, and the sweep-shard
+/// replica set.
 pub struct PlannerService {
     models: ModelRegistry,
     topologies: TopologyRegistry,
     cache: PlanCache,
     metrics: ServiceMetrics,
+    stats: LoopStats,
     default_cost: String,
+    replicas: Vec<String>,
 }
 
 impl PlannerService {
@@ -215,13 +334,25 @@ impl PlannerService {
             topologies: TopologyRegistry::builtin(),
             cache: PlanCache::new(opts.cache_entries),
             metrics: ServiceMetrics::new(),
+            stats: LoopStats::new(),
             default_cost,
+            replicas: opts.replicas.clone(),
         })
     }
 
     /// The plan cache (tests and benches read the hit/miss counters).
     pub fn cache(&self) -> &PlanCache {
         &self.cache
+    }
+
+    fn stats(&self) -> &LoopStats {
+        &self.stats
+    }
+
+    /// Record one served request in the metrics (the event loop calls
+    /// this when it queues the response bytes).
+    fn record_request(&self, endpoint: &str, code: u16, seconds: f64) {
+        self.metrics.record(endpoint, code, seconds);
     }
 
     /// `POST /plan`: parse → canonicalise → single-flight cache →
@@ -258,16 +389,37 @@ impl PlannerService {
     }
 
     /// `POST /sweep`: parse + validate, then stream the sweep document
-    /// as chunked transfer encoding — one chunk per completed scenario,
-    /// in canonical order, concatenating to the `sweep` CLI's JSON
-    /// byte-for-byte.  Validation failures are plain 400s; a failure
-    /// *after* the 200 head is committed truncates the chunk stream
-    /// (recorded as a 500 in the metrics).
-    fn handle_sweep(&self, body: &[u8], stream: &mut TcpStream) -> u16 {
-        let parsed = std::str::from_utf8(body)
+    /// through `emit` — one call per chunk payload, concatenating to
+    /// the `sweep` CLI's JSON byte-for-byte.  `emit` only runs after
+    /// validation succeeds (so the caller may commit a 200 head on the
+    /// first call); validation failures return
+    /// [`SweepOutcome::Plain`] 400s.  With a replica set configured,
+    /// markerless requests fan out ([`Self::coordinate_sweep`]); a
+    /// request carrying a `"shard"` marker always evaluates locally,
+    /// so fan-out cannot recurse.
+    fn respond_sweep(&self, body: &[u8],
+                     emit: &mut dyn FnMut(&[u8]) -> Result<()>)
+                     -> SweepOutcome {
+        let doc = match std::str::from_utf8(body)
             .map_err(anyhow::Error::from)
             .and_then(Json::parse)
-            .and_then(|j| SweepSpec::from_json(&j))
+        {
+            Ok(d) => d,
+            Err(e) => {
+                return SweepOutcome::Plain {
+                    code: 400, body: error_body(&format!("{e:#}")) };
+            }
+        };
+        let mut obj = match doc.as_obj() {
+            Ok(o) => o.clone(),
+            Err(e) => {
+                return SweepOutcome::Plain {
+                    code: 400, body: error_body(&format!("{e:#}")) };
+            }
+        };
+        let marker = obj.remove("shard");
+        let spec_obj = obj;
+        let validated = SweepSpec::from_json(&Json::Obj(spec_obj.clone()))
             .and_then(|mut spec| {
                 spec.validate()?;
                 cost_by_name(&spec.cost_model)?;
@@ -287,36 +439,145 @@ impl PlannerService {
                 }
                 Ok(spec)
             });
-        let spec = match parsed {
+        let spec = match validated {
             Ok(s) => s,
             Err(e) => {
-                let body = error_body(&format!("{e:#}"));
-                let _ = http::write_response(stream, 400, CONTENT_JSON,
-                                             body.as_bytes());
-                return 400;
+                return SweepOutcome::Plain {
+                    code: 400, body: error_body(&format!("{e:#}")) };
             }
         };
-        let Ok(mut writer) =
-            http::ChunkedWriter::start(stream, 200, CONTENT_JSON)
-        else {
-            return 500;
+        let indices = match &marker {
+            None => None,
+            Some(j) => match parse_shard_marker(j, spec.cardinality()) {
+                Ok(v) => Some(v),
+                Err(e) => {
+                    return SweepOutcome::Plain {
+                        code: 400, body: error_body(&format!("{e:#}")) };
+                }
+            },
         };
+        if indices.is_none() && !self.replicas.is_empty() {
+            return self.coordinate_sweep(&spec, &spec_obj, emit);
+        }
         let mut first = true;
-        let streamed = stream_sweep(&spec, |r| {
-            let mut chunk = String::new();
-            chunk.push_str(if first { "{\"scenarios\":[" } else { "," });
-            first = false;
-            chunk.push_str(&r.to_json().to_string());
-            writer.chunk(chunk.as_bytes())
-        });
+        let streamed =
+            stream_sweep_indices(&spec, indices.as_deref(), |r| {
+                let mut chunk = String::new();
+                chunk.push_str(if first { "{\"scenarios\":[" } else { "," });
+                first = false;
+                chunk.push_str(&r.to_json().to_string());
+                emit(chunk.as_bytes())
+            });
         if streamed.is_err() {
-            return 500;
+            return SweepOutcome::Streamed { code: 500 };
         }
-        let tail: &[u8] = if first { b"{\"scenarios\":[]}\n" } else { b"]}\n" };
-        if writer.chunk(tail).is_err() || writer.finish().is_err() {
-            return 500;
+        let tail: &[u8] =
+            if first { b"{\"scenarios\":[]}\n" } else { b"]}\n" };
+        if emit(tail).is_err() {
+            return SweepOutcome::Streamed { code: 500 };
         }
-        200
+        SweepOutcome::Streamed { code: 200 }
+    }
+
+    /// Fan a validated sweep out across [`ServiceOptions::replicas`]:
+    /// consistent-hash the canonical scenario list, POST each replica
+    /// its share (pinned by an explicit `"shard":{"indices":…}` marker
+    /// so both sides agree exactly), and splice the returned chunk
+    /// payloads back into canonical order through the same reorder
+    /// buffer the local sweep engine uses.  Because every replica
+    /// serialises scenarios with the one shared writer, the merged
+    /// stream is byte-identical to a single-daemon response.  A replica
+    /// failure truncates the stream (or, before anything was emitted,
+    /// returns a clean 500 document).
+    fn coordinate_sweep(&self, spec: &SweepSpec,
+                        client_obj: &BTreeMap<String, Json>,
+                        emit: &mut dyn FnMut(&[u8]) -> Result<()>)
+                        -> SweepOutcome {
+        let scenarios = spec.scenarios();
+        if scenarios.is_empty() {
+            return match emit(b"{\"scenarios\":[]}\n") {
+                Ok(()) => SweepOutcome::Streamed { code: 200 },
+                Err(_) => SweepOutcome::Streamed { code: 500 },
+            };
+        }
+        let ring = shard::HashRing::new(&self.replicas);
+        let owned = ring.assign(&scenarios);
+        type Delivery = std::result::Result<(usize, Vec<u8>), String>;
+        let (tx, rx) = mpsc::channel::<Delivery>();
+        let mut emitted_any = false;
+        let mut failed: Option<String> = None;
+        std::thread::scope(|scope| {
+            for (r, indices) in owned.iter().enumerate() {
+                if indices.is_empty() {
+                    continue;
+                }
+                let tx = tx.clone();
+                let addr = self.replicas[r].clone();
+                let mut body_obj = client_obj.clone();
+                body_obj.insert("shard".into(), jobj(vec![(
+                    "indices",
+                    Json::Arr(indices.iter()
+                        .map(|&i| Json::Num(i as f64))
+                        .collect()),
+                )]));
+                let body = Json::Obj(body_obj).to_string();
+                scope.spawn(move || {
+                    replica_reader(&addr, body.as_bytes(), indices, &tx);
+                });
+            }
+            drop(tx);
+            let mut slots: Vec<Option<Vec<u8>>> = Vec::new();
+            slots.resize_with(scenarios.len(), || None);
+            let mut flushed = 0usize;
+            'recv: for msg in rx.iter() {
+                match msg {
+                    Err(e) => {
+                        failed = Some(e);
+                        break 'recv;
+                    }
+                    Ok((i, payload)) => {
+                        slots[i] = Some(payload);
+                        while flushed < slots.len()
+                            && slots[flushed].is_some()
+                        {
+                            let payload = slots[flushed].take().unwrap();
+                            let mut chunk: Vec<u8> = if flushed == 0 {
+                                b"{\"scenarios\":[".to_vec()
+                            } else {
+                                vec![b',']
+                            };
+                            chunk.extend_from_slice(&payload);
+                            flushed += 1;
+                            if emit(&chunk).is_err() {
+                                failed = Some("client went away".into());
+                                break 'recv;
+                            }
+                            emitted_any = true;
+                        }
+                    }
+                }
+            }
+            // Dropping the receiver aborts any replica stream still in
+            // flight (its next delivery fails, cancelling the read).
+            drop(rx);
+        });
+        match failed {
+            None => {
+                if emit(b"]}\n").is_ok() {
+                    SweepOutcome::Streamed { code: 200 }
+                } else {
+                    SweepOutcome::Streamed { code: 500 }
+                }
+            }
+            Some(e) if emitted_any => {
+                eprintln!("warning: sharded sweep truncated: {e}");
+                SweepOutcome::Streamed { code: 500 }
+            }
+            Some(e) => SweepOutcome::Plain {
+                code: 500,
+                body: error_body(&format!("sharded sweep failed: {e}")),
+            },
+        }
     }
 
     /// `GET /models` document.
@@ -371,84 +632,90 @@ impl PlannerService {
 
     /// `GET /metrics` document (Prometheus text exposition).
     pub fn metrics_doc(&self) -> String {
-        self.metrics.render(&self.cache)
+        self.metrics.render(&self.cache, &self.stats)
     }
+}
 
-    /// Serve one connection: read a request, dispatch, record metrics.
-    /// One request per connection (every response is
-    /// `Connection: close`).
-    fn handle_conn(&self, mut stream: TcpStream) {
-        let t0 = Instant::now();
-        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-        // Per-write timeout: a client that stops reading its response
-        // fills the kernel send buffer and would otherwise park this
-        // worker in write_all forever — with a small fixed pool that is
-        // a trivial denial of service.  (Sweep compute time between
-        // chunks is unaffected; the clock only runs inside a write.)
-        let _ = stream.set_write_timeout(Some(Duration::from_secs(60)));
-        let _ = stream.set_nodelay(true);
-        let (endpoint, code) = match http::read_request(&mut stream) {
-            Err(e) => {
-                let body = error_body(&format!("{e:#}"));
-                let _ = http::write_response(&mut stream, 400, CONTENT_JSON,
-                                             body.as_bytes());
-                ("other", 400)
+/// Parse and validate a `"shard"` marker: `{"indices": [i, …]}` with
+/// strictly increasing indices inside the grid.
+fn parse_shard_marker(j: &Json, cardinality: usize) -> Result<Vec<usize>> {
+    let obj = j.as_obj().context("'shard' must be an object")?;
+    if let Some(k) = obj.keys().find(|k| k.as_str() != "indices") {
+        bail!("unknown shard key '{k}' (expected 'indices')");
+    }
+    let arr = obj
+        .get("indices")
+        .ok_or_else(|| anyhow!("'shard' lacks 'indices'"))?
+        .as_arr()?;
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        out.push(v.as_usize()?);
+    }
+    if out.windows(2).any(|w| w[0] >= w[1]) {
+        bail!("shard indices must be strictly increasing");
+    }
+    if let Some(&last) = out.last() {
+        if last >= cardinality {
+            bail!("shard index {last} is outside the \
+                   {cardinality}-scenario grid");
+        }
+    }
+    Ok(out)
+}
+
+/// Un-frame one replica chunk payload: strip the document prefix
+/// (first chunk) or the separator (later chunks) and return the bare
+/// scenario JSON; `None` for the document terminator.
+fn shard_payload(chunk: &[u8], k: usize) -> Result<Option<Vec<u8>>> {
+    if chunk == b"]}\n" || chunk == b"{\"scenarios\":[]}\n" {
+        return Ok(None);
+    }
+    let payload = if k == 0 {
+        chunk
+            .strip_prefix(b"{\"scenarios\":[" as &[u8])
+            .ok_or_else(|| anyhow!("first chunk lacks the document prefix"))?
+    } else {
+        chunk
+            .strip_prefix(b"," as &[u8])
+            .ok_or_else(|| anyhow!("chunk lacks the ',' separator"))?
+    };
+    Ok(Some(payload.to_vec()))
+}
+
+/// One coordinator→replica stream: POST the shard, map the replica's
+/// k-th scenario payload to its k-th owned global index, deliver in
+/// order.  Every failure mode becomes one `Err` delivery.
+fn replica_reader(addr: &str, body: &[u8], indices: &[usize],
+                  tx: &mpsc::Sender<std::result::Result<(usize, Vec<u8>),
+                                                        String>>) {
+    let mut k = 0usize;
+    let mut on_chunk = |payload: &[u8]| -> Result<()> {
+        let Some(json) = shard_payload(payload, k)? else {
+            return Ok(());
+        };
+        let &i = indices.get(k).ok_or_else(|| {
+            anyhow!("more scenarios than the {} assigned", indices.len())
+        })?;
+        k += 1;
+        tx.send(Ok((i, json)))
+            .map_err(|_| anyhow!("merge aborted"))
+    };
+    match http::post_and_stream_chunks(addr, "/sweep", body,
+                                       REPLICA_IO_TIMEOUT, &mut on_chunk) {
+        Ok(200) => {
+            if k != indices.len() {
+                let _ = tx.send(Err(format!(
+                    "replica {addr} streamed {k}/{} assigned scenarios",
+                    indices.len())));
             }
-            Ok(req) => self.dispatch(&req, &mut stream),
-        };
-        self.metrics.record(endpoint, code, t0.elapsed().as_secs_f64());
-    }
-
-    fn dispatch(&self, req: &http::Request, stream: &mut TcpStream)
-                -> (&'static str, u16) {
-        let endpoint = match req.path.as_str() {
-            "/plan" => "plan",
-            "/sweep" => "sweep",
-            "/models" => "models",
-            "/topologies" => "topologies",
-            "/healthz" => "healthz",
-            "/metrics" => "metrics",
-            _ => "other",
-        };
-        let (code, content_type, body): (u16, &str, Arc<String>) =
-            match (endpoint, req.method.as_str()) {
-                ("plan", "POST") => {
-                    let (code, body) = self.handle_plan(&req.body);
-                    (code, CONTENT_JSON, body)
-                }
-                // /sweep writes its own (chunked) response.
-                ("sweep", "POST") => {
-                    return (endpoint, self.handle_sweep(&req.body, stream));
-                }
-                ("models", "GET") => (200, CONTENT_JSON, self.models_doc()),
-                ("topologies", "GET") => {
-                    (200, CONTENT_JSON, self.topologies_doc())
-                }
-                ("healthz", "GET") => (
-                    200,
-                    CONTENT_JSON,
-                    Arc::new("{\"status\":\"ok\"}\n".to_string()),
-                ),
-                ("metrics", "GET") => {
-                    (200, CONTENT_PROM, Arc::new(self.metrics_doc()))
-                }
-                ("other", _) => (
-                    404,
-                    CONTENT_JSON,
-                    error_body(&format!(
-                        "no endpoint '{}' (known: /plan, /sweep, /models, \
-                         /topologies, /healthz, /metrics)", req.path)),
-                ),
-                (_, method) => (
-                    405,
-                    CONTENT_JSON,
-                    error_body(&format!(
-                        "{} does not support {method}", req.path)),
-                ),
-            };
-        let _ = http::write_response(stream, code, content_type,
-                                     body.as_bytes());
-        (endpoint, code)
+        }
+        Ok(code) => {
+            let _ = tx.send(Err(format!(
+                "replica {addr} answered HTTP {code}")));
+        }
+        Err(e) => {
+            let _ = tx.send(Err(format!("replica {addr}: {e:#}")));
+        }
     }
 }
 
@@ -457,68 +724,30 @@ impl PlannerService {
 // ==========================================================================
 
 /// A bound-but-not-yet-serving daemon: bind first so callers can learn
-/// the ephemeral port (tests bind `127.0.0.1:0`) before the accept loop
+/// the ephemeral port (tests bind `127.0.0.1:0`) before the event loop
 /// starts.
 pub struct BoundService {
     listener: TcpListener,
     service: Arc<PlannerService>,
-    threads: usize,
+    opts: ServiceOptions,
 }
 
-/// Bind `addr` with the given options.
+/// Bind `addr` with the given options.  If a cache snapshot is
+/// configured and present, the warm set loads here (corrupt or missing
+/// snapshots never stop a daemon from starting).
 pub fn bind(addr: &str, opts: ServiceOptions) -> Result<BoundService> {
     let service = Arc::new(PlannerService::new(&opts)?);
+    if let Some(path) = &opts.persist_path {
+        match service.cache().load(path) {
+            Ok(0) => {}
+            Ok(n) => eprintln!("plan cache: reloaded {n} entries from {}",
+                               path.display()),
+            Err(e) => eprintln!("warning: cache snapshot ignored: {e:#}"),
+        }
+    }
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("bind {addr}"))?;
-    Ok(BoundService { listener, service, threads: opts.threads })
-}
-
-/// Accept loop + worker pool, until `shutdown` flips (checked once per
-/// accepted connection; [`ServiceHandle::stop`] flips it and then dials
-/// the listener to unblock the acceptor).
-fn serve_on(listener: &TcpListener, service: &PlannerService,
-            threads: usize, shutdown: &AtomicBool) -> Result<()> {
-    let n_workers = if threads == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    } else {
-        threads
-    }
-    .max(1);
-    // parallel_map-style pool: scoped workers pull connections off one
-    // shared channel; the calling thread is the acceptor.
-    let (tx, rx) = mpsc::channel::<TcpStream>();
-    let rx = Mutex::new(rx);
-    std::thread::scope(|scope| {
-        for _ in 0..n_workers {
-            let rx = &rx;
-            scope.spawn(move || loop {
-                // Hold the receiver lock only for the dequeue: requests
-                // are handled concurrently across workers.
-                let conn = rx.lock().unwrap().recv();
-                match conn {
-                    Ok(stream) => service.handle_conn(stream),
-                    Err(_) => break, // acceptor hung up: drain complete
-                }
-            });
-        }
-        for conn in listener.incoming() {
-            if shutdown.load(Ordering::Relaxed) {
-                break;
-            }
-            match conn {
-                Ok(stream) => {
-                    if tx.send(stream).is_err() {
-                        break;
-                    }
-                }
-                // A failed accept (client reset mid-handshake) is not a
-                // daemon failure.
-                Err(_) => continue,
-            }
-        }
-        drop(tx);
-    });
-    Ok(())
+    Ok(BoundService { listener, service, opts })
 }
 
 impl BoundService {
@@ -534,7 +763,8 @@ impl BoundService {
     /// CLI path).
     pub fn serve_forever(self) -> Result<()> {
         let shutdown = AtomicBool::new(false);
-        serve_on(&self.listener, &self.service, self.threads, &shutdown)
+        event_loop::serve_event_loop(&self.listener, &self.service,
+                                     &self.opts, &shutdown)
     }
 
     /// Serve on a background thread; the returned handle stops the
@@ -544,10 +774,11 @@ impl BoundService {
         let shutdown = Arc::new(AtomicBool::new(false));
         let service = self.service.clone();
         let sd = shutdown.clone();
-        let threads = self.threads;
+        let opts = self.opts.clone();
         let listener = self.listener;
         let join = std::thread::spawn(move || {
-            let _ = serve_on(&listener, &service, threads, &sd);
+            let _ = event_loop::serve_event_loop(&listener, &service,
+                                                 &opts, &sd);
         });
         ServiceHandle { addr, service: self.service, shutdown, join }
     }
@@ -570,12 +801,12 @@ impl ServiceHandle {
         &self.service
     }
 
-    /// Flip the shutdown flag, unblock the acceptor with one last
-    /// connection, and join the serving thread (which drains in-flight
-    /// requests first).
+    /// Flip the shutdown flag and join the loop (which cancels
+    /// in-flight streams, drains the workers, and snapshots the cache
+    /// if persistence is configured).  The polling loop notices within
+    /// one idle tick — no wake-up connection needed.
     pub fn stop(self) {
         self.shutdown.store(true, Ordering::Relaxed);
-        let _ = TcpStream::connect(self.addr);
         let _ = self.join.join();
     }
 }
@@ -583,6 +814,7 @@ impl ServiceHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::planner::sweep::run_sweep;
 
     #[test]
     fn endpoint_index_is_total() {
@@ -598,13 +830,25 @@ mod tests {
         let svc =
             PlannerService::new(&ServiceOptions::default()).unwrap();
         svc.metrics.record("plan", 200, 0.001);
-        svc.metrics.record("plan", 400, 0.002);
+        svc.metrics.record("plan", 503, 0.002);
+        svc.stats.rejected.inc();
+        svc.stats.queue_depth.set(3);
         let doc = svc.metrics_doc();
         assert!(doc.contains(
             "hybridpar_service_requests_total{endpoint=\"plan\",\
              code=\"200\"} 1"), "{doc}");
+        assert!(doc.contains(
+            "hybridpar_service_requests_total{endpoint=\"plan\",\
+             code=\"503\"} 1"), "{doc}");
         assert!(doc.contains("hybridpar_service_plan_cache_hits_total 0"));
+        assert!(doc.contains(
+            "hybridpar_service_plan_cache_error_hits_total 0"));
         assert!(doc.contains("hybridpar_service_plan_cache_misses_total 0"));
+        assert!(doc.contains("hybridpar_service_connections_open 0"));
+        assert!(doc.contains("hybridpar_service_queue_depth 3"));
+        assert!(doc.contains("hybridpar_service_rejected_total 1"));
+        assert!(doc.contains("hybridpar_service_request_timeouts_total 0"));
+        assert!(doc.contains("hybridpar_service_keepalive_reuses_total 0"));
         assert!(doc.contains(
             "hybridpar_service_request_duration_seconds_bucket\
              {endpoint=\"plan\","), "{doc}");
@@ -647,13 +891,101 @@ mod tests {
             assert_eq!(code, 400, "{body}");
             assert!(body.starts_with("{\"error\":"), "{body}");
         }
-        // Unknown models are planner errors: 400, and cached.
+        // Unknown models are planner errors: 400, and cached — but the
+        // repeat is an *error hit*, not a plan hit (it was served a 400
+        // body).
         let (code, _) = svc.handle_plan(br#"{"model":"alexnet"}"#);
         assert_eq!(code, 400);
         let (code, _) = svc.handle_plan(br#"{"model":"alexnet"}"#);
         assert_eq!(code, 400);
-        assert_eq!(svc.cache().hits(), 1,
+        assert_eq!(svc.cache().error_hits(), 1,
                    "deterministic planner errors are cached");
+        assert_eq!(svc.cache().hits(), 0,
+                   "an error-served waiter must not count as a plan hit");
+    }
+
+    fn collect_sweep(svc: &PlannerService, body: &[u8])
+                     -> (Option<u16>, u16, Vec<Vec<u8>>) {
+        let mut chunks: Vec<Vec<u8>> = Vec::new();
+        let outcome = svc.respond_sweep(body, &mut |c: &[u8]| {
+            chunks.push(c.to_vec());
+            Ok(())
+        });
+        match outcome {
+            SweepOutcome::Plain { code, .. } => (Some(code), 0, chunks),
+            SweepOutcome::Streamed { code } => (None, code, chunks),
+        }
+    }
+
+    #[test]
+    fn respond_sweep_concatenates_to_the_cli_document() {
+        let svc =
+            PlannerService::new(&ServiceOptions::default()).unwrap();
+        let body = br#"{"models":["gnmt"],"devices":[4,8],
+                        "families":["dp"],"threads":1}"#;
+        let (plain, code, chunks) = collect_sweep(&svc, body);
+        assert_eq!(plain, None);
+        assert_eq!(code, 200);
+        let merged: Vec<u8> = chunks.concat();
+        let spec = SweepSpec {
+            models: vec!["gnmt".into()],
+            devices: vec![4, 8],
+            families: vec![crate::planner::sweep::StrategyFamily::DpOnly],
+            threads: 1,
+            ..Default::default()
+        };
+        let want = run_sweep(&spec).unwrap().to_json_string();
+        assert_eq!(String::from_utf8(merged).unwrap(), want,
+                   "chunk concatenation must be byte-identical to the CLI");
+    }
+
+    #[test]
+    fn respond_sweep_shard_marker_selects_a_subset() {
+        let svc =
+            PlannerService::new(&ServiceOptions::default()).unwrap();
+        let body = br#"{"models":["gnmt"],"devices":[4,8],
+                        "families":["dp"],"threads":1,
+                        "shard":{"indices":[1]}}"#;
+        let (plain, code, chunks) = collect_sweep(&svc, body);
+        assert_eq!(plain, None);
+        assert_eq!(code, 200);
+        let merged = String::from_utf8(chunks.concat()).unwrap();
+        let doc = Json::parse(&merged).unwrap();
+        let rows = doc.as_obj().unwrap()["scenarios"].as_arr().unwrap();
+        assert_eq!(rows.len(), 1, "{merged}");
+        assert_eq!(rows[0].as_obj().unwrap()["devices"].as_usize().unwrap(),
+                   8, "index 1 of the devices axis");
+    }
+
+    #[test]
+    fn respond_sweep_rejects_bad_shard_markers() {
+        let svc =
+            PlannerService::new(&ServiceOptions::default()).unwrap();
+        for marker in [r#"{"indices":[1,0]}"#,   // not increasing
+                       r#"{"indices":[99]}"#,    // outside the grid
+                       r#"{"bogus":[]}"#,        // unknown key
+                       r#"[]"#] {                // not an object
+            let body = format!(
+                r#"{{"models":["gnmt"],"devices":[4,8],
+                     "families":["dp"],"shard":{marker}}}"#);
+            let (plain, _, chunks) = collect_sweep(&svc, body.as_bytes());
+            assert_eq!(plain, Some(400), "marker {marker}");
+            assert!(chunks.is_empty(),
+                    "validation failures must not emit chunks");
+        }
+    }
+
+    #[test]
+    fn shard_payload_unframes_replica_chunks() {
+        assert_eq!(
+            shard_payload(b"{\"scenarios\":[{\"a\":1}", 0).unwrap(),
+            Some(b"{\"a\":1}".to_vec()));
+        assert_eq!(shard_payload(b",{\"b\":2}", 1).unwrap(),
+                   Some(b"{\"b\":2}".to_vec()));
+        assert_eq!(shard_payload(b"]}\n", 2).unwrap(), None);
+        assert_eq!(shard_payload(b"{\"scenarios\":[]}\n", 0).unwrap(), None);
+        assert!(shard_payload(b"{\"a\":1}", 1).is_err(),
+                "a later chunk without the separator is malformed");
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Consistent-hash sharding for `POST /sweep` fan-out.
+//!
+//! A sweep grid is a list of scenarios in canonical order; to spread it
+//! over N replica daemons the coordinator hashes each scenario's
+//! **memo-affinity key** — the fields that feed the sweep engine's
+//! `MemoKey` (model, topology, devices, nodes, device memory, batch) —
+//! onto a ring of virtual nodes.  Scenarios that share planner work
+//! (same model/topology/device point, different overlap or ZeRO
+//! spelling) therefore land on the same replica and hit its `MemoCost`
+//! memo, and adding or removing a replica only remaps ~1/N of the key
+//! space instead of reshuffling everything.
+//!
+//! Everything is deterministic (FNV-1a, no RNG, no clock): the same
+//! replica list and grid always produce the same assignment, which is
+//! what makes the sharded sweep's merged output byte-identical to a
+//! single-replica run.
+
+use crate::planner::sweep::Scenario;
+
+/// Virtual nodes per replica — enough to smooth the assignment across
+/// a handful of replicas without making ring construction noticeable.
+const VNODES: usize = 64;
+
+/// 64-bit FNV-1a: tiny, dependency-free, and stable across platforms —
+/// exactly what a deterministic ring needs (`std`'s `DefaultHasher` is
+/// documented as unstable across releases).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The memo-affinity shard key for one scenario: the axes that change
+/// which `MemoKey`s the evaluation touches.  Overlap/compression/ZeRO
+/// and the strategy family are deliberately *excluded* — they revisit
+/// the same memoised cost evaluations, so keeping them co-located is
+/// the whole point.
+pub fn shard_key(sc: &Scenario) -> String {
+    format!("{}|{}|{}|{}|{}|{}",
+            sc.model, sc.topology, sc.devices, sc.nodes,
+            sc.device_mem_gb.map(|g| g.to_bits()).unwrap_or(0),
+            sc.batch.label())
+}
+
+/// A consistent-hash ring over replica names (addresses).
+pub struct HashRing {
+    /// `(point, replica index)` sorted by point.
+    points: Vec<(u64, usize)>,
+    replicas: Vec<String>,
+}
+
+impl HashRing {
+    /// Build a ring with [`VNODES`] virtual nodes per replica.  An
+    /// empty replica list yields an empty ring ([`HashRing::owner`]
+    /// returns `None`).
+    pub fn new(replicas: &[String]) -> Self {
+        let mut points = Vec::with_capacity(replicas.len() * VNODES);
+        for (i, name) in replicas.iter().enumerate() {
+            for v in 0..VNODES {
+                points.push((fnv1a(format!("{name}#{v}").as_bytes()), i));
+            }
+        }
+        // Ties (hash collisions between replicas) break toward the
+        // lower replica index, deterministically.
+        points.sort_unstable();
+        HashRing { points, replicas: replicas.to_vec() }
+    }
+
+    pub fn replicas(&self) -> &[String] {
+        &self.replicas
+    }
+
+    /// Index of the replica owning `key`: the first ring point at or
+    /// clockwise-after the key's hash.
+    pub fn owner_index(&self, key: &str) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = fnv1a(key.as_bytes());
+        let at = self.points.partition_point(|&(p, _)| p < h);
+        let (_, idx) = self.points[at % self.points.len()];
+        Some(idx)
+    }
+
+    /// The replica name owning `key`.
+    pub fn owner(&self, key: &str) -> Option<&str> {
+        self.owner_index(key).map(|i| self.replicas[i].as_str())
+    }
+
+    /// Partition scenario indices `0..scenarios.len()` by owning
+    /// replica: `result[r]` is the strictly increasing list of global
+    /// indices assigned to replica `r`.
+    pub fn assign(&self, scenarios: &[Scenario]) -> Vec<Vec<usize>> {
+        let mut owned: Vec<Vec<usize>> =
+            self.replicas.iter().map(|_| Vec::new()).collect();
+        for (i, sc) in scenarios.iter().enumerate() {
+            if let Some(r) = self.owner_index(&shard_key(sc)) {
+                owned[r].push(i);
+            }
+        }
+        owned
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::sweep::SweepSpec;
+
+    fn ring(names: &[&str]) -> HashRing {
+        HashRing::new(&names.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn assignment_is_deterministic_and_total() {
+        let spec = SweepSpec::default();
+        let scenarios = spec.scenarios();
+        let r = ring(&["a:1", "b:2", "c:3"]);
+        let owned = r.assign(&scenarios);
+        assert_eq!(owned.len(), 3);
+        let total: usize = owned.iter().map(|v| v.len()).sum();
+        assert_eq!(total, scenarios.len(), "every scenario has one owner");
+        for indices in &owned {
+            assert!(indices.windows(2).all(|w| w[0] < w[1]),
+                    "per-replica indices are strictly increasing");
+        }
+        let again = ring(&["a:1", "b:2", "c:3"]).assign(&scenarios);
+        assert_eq!(owned, again, "same ring + grid → same assignment");
+    }
+
+    #[test]
+    fn memo_affine_scenarios_share_an_owner() {
+        // Scenarios differing only in family/overlap/compression/zero
+        // hash identically — they share memoised cost evaluations.
+        let spec = SweepSpec {
+            families: vec![crate::planner::sweep::StrategyFamily::DpOnly,
+                           crate::planner::sweep::StrategyFamily::Hybrid],
+            overlap: vec![1, 8],
+            ..Default::default()
+        };
+        let scenarios = spec.scenarios();
+        let r = ring(&["a:1", "b:2", "c:3", "d:4"]);
+        for pair in scenarios.windows(2) {
+            if shard_key(&pair[0]) == shard_key(&pair[1]) {
+                assert_eq!(r.owner(&shard_key(&pair[0])),
+                           r.owner(&shard_key(&pair[1])));
+            }
+        }
+        // And the key really does collapse the non-memo axes.
+        let keys: std::collections::HashSet<String> =
+            scenarios.iter().map(shard_key).collect();
+        assert!(keys.len() < scenarios.len(),
+                "family/overlap spellings must share shard keys");
+    }
+
+    #[test]
+    fn removing_a_replica_only_remaps_its_share() {
+        let spec = SweepSpec {
+            devices: vec![2, 4, 8, 16, 32, 64, 128, 256],
+            ..Default::default()
+        };
+        let scenarios = spec.scenarios();
+        let three = ring(&["a:1", "b:2", "c:3"]);
+        let two = ring(&["a:1", "b:2"]);
+        let mut moved = 0usize;
+        let mut total = 0usize;
+        for sc in &scenarios {
+            let key = shard_key(sc);
+            let before = three.owner(&key).unwrap();
+            let after = two.owner(&key).unwrap();
+            total += 1;
+            if before != "c:3" && before != after {
+                moved += 1;
+            }
+        }
+        assert_eq!(moved, 0,
+                   "keys not owned by the removed replica must not move \
+                    ({moved}/{total} moved)");
+    }
+
+    #[test]
+    fn empty_ring_owns_nothing() {
+        let r = HashRing::new(&[]);
+        assert!(r.owner("anything").is_none());
+        let spec = SweepSpec::default();
+        let owned = r.assign(&spec.scenarios());
+        assert!(owned.is_empty());
+    }
+}

@@ -12,10 +12,16 @@
 //! * equivalent request spellings (aliases, explicitly-spelled
 //!   defaults) share one cache entry;
 //! * `POST /sweep`'s chunk stream concatenates to the `sweep` CLI's
-//!   JSON document byte-for-byte.
+//!   JSON document byte-for-byte — including when the grid is sharded
+//!   across replica daemons;
+//! * keep-alive serves many requests per connection, slow request
+//!   heads are 408s, a saturated queue sheds with 503 + `Retry-After`,
+//!   cached planner errors count as error hits, and the plan cache
+//!   survives a restart when persistence is configured.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
 
 use hybridpar::memory::{MemoryModel, ZeroMode};
 use hybridpar::planner::sweep::{run_sweep, StrategyFamily, SweepSpec};
@@ -100,6 +106,8 @@ fn raw_request(addr: SocketAddr, raw: &[u8]) -> Response {
     Response { status, headers, body }
 }
 
+/// One-shot request: sends `Connection: close` so `read_to_end`
+/// terminates (the server keeps HTTP/1.1 connections alive otherwise).
 fn request(addr: SocketAddr, method: &str, path: &str, body: &str)
            -> Response {
     let raw = format!(
@@ -107,10 +115,54 @@ fn request(addr: SocketAddr, method: &str, path: &str, body: &str)
          Host: test\r\n\
          Content-Type: application/json\r\n\
          Content-Length: {}\r\n\
+         Connection: close\r\n\
          \r\n\
          {body}",
         body.len());
     raw_request(addr, raw.as_bytes())
+}
+
+/// Read exactly one `Content-Length`-framed response off a kept-alive
+/// connection, leaving the socket open for the next request.
+fn read_one_response(stream: &mut TcpStream) -> Response {
+    let mut bytes = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(p) = bytes.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p + 4;
+        }
+        let n = stream.read(&mut tmp).expect("read response head");
+        assert!(n > 0, "peer closed before a complete response head");
+        bytes.extend_from_slice(&tmp[..n]);
+    };
+    let head = std::str::from_utf8(&bytes[..head_end]).unwrap();
+    let mut lines = head.split("\r\n");
+    let status: u16 = lines
+        .next()
+        .unwrap()
+        .split_whitespace()
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap();
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    let content_length: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .expect("keep-alive responses carry Content-Length")
+        .1
+        .parse()
+        .unwrap();
+    while bytes.len() < head_end + content_length {
+        let n = stream.read(&mut tmp).expect("read response body");
+        assert!(n > 0, "peer closed mid-body");
+        bytes.extend_from_slice(&tmp[..n]);
+    }
+    let body = bytes[head_end..head_end + content_length].to_vec();
+    Response { status, headers, body }
 }
 
 fn get(addr: SocketAddr, path: &str) -> Response {
@@ -361,4 +413,240 @@ fn distinct_requests_fill_distinct_entries() {
     assert_eq!(cache.hits(), 0);
 
     handle.stop();
+}
+
+#[test]
+fn keep_alive_serves_many_requests_on_one_connection() {
+    let handle = spawn_service(2, 16);
+    let addr = handle.addr();
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let plan_body = r#"{"model":"gnmt","devices":8}"#;
+    let mut bodies = Vec::new();
+    for _ in 0..3 {
+        let raw = format!(
+            "POST /plan HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n\
+             {plan_body}",
+            plan_body.len());
+        stream.write_all(raw.as_bytes()).unwrap();
+        let r = read_one_response(&mut stream);
+        assert_eq!(r.status, 200);
+        assert_eq!(r.header("connection"), Some("keep-alive"),
+                   "HTTP/1.1 without Connection: close stays open");
+        bodies.push(r.body);
+    }
+    assert_eq!(bodies[1], bodies[0]);
+    assert_eq!(bodies[2], bodies[0]);
+    // A different endpoint rides the same connection.
+    stream.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+    let r = read_one_response(&mut stream);
+    assert_eq!(r.status, 200);
+    assert_eq!(r.text(), "{\"status\":\"ok\"}\n");
+
+    // 4 requests, 1 connection: 3 reuses; and the plan trio was 1 fill
+    // + 2 hits.
+    let cache = handle.service().cache();
+    assert_eq!((cache.misses(), cache.hits()), (1, 2));
+    let metrics = get(addr, "/metrics");
+    assert!(metrics.text().contains(
+        "hybridpar_service_keepalive_reuses_total 3"),
+        "{}", metrics.text());
+
+    handle.stop();
+}
+
+#[test]
+fn slow_request_heads_time_out_with_408() {
+    let handle = service::bind("127.0.0.1:0", ServiceOptions {
+        threads: 1,
+        head_timeout: Duration::from_millis(150),
+        ..Default::default()
+    })
+    .expect("bind")
+    .spawn();
+    let addr = handle.addr();
+
+    // A slow-loris client: the head never completes.
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(b"GET /healthz HT").unwrap();
+    let r = read_one_response(&mut stream);
+    assert_eq!(r.status, 408, "stalled head must be timed out");
+    assert_eq!(r.header("connection"), Some("close"));
+
+    let metrics = get(addr, "/metrics");
+    assert!(metrics.text().contains(
+        "hybridpar_service_request_timeouts_total 1"),
+        "{}", metrics.text());
+    assert!(metrics.text().contains(
+        "hybridpar_service_requests_total{endpoint=\"other\",\
+         code=\"408\"} 1"),
+        "{}", metrics.text());
+
+    handle.stop();
+}
+
+#[test]
+fn saturated_queue_sheds_posts_with_503_and_recovers() {
+    // One worker, one admission slot: a running sweep saturates the
+    // queue deterministically.
+    let handle = service::bind("127.0.0.1:0", ServiceOptions {
+        threads: 1,
+        max_pending: 1,
+        ..Default::default()
+    })
+    .expect("bind")
+    .spawn();
+    let addr = handle.addr();
+
+    // Occupy the worker with a wide grid (3 models x 8 devices x 3
+    // families, scaling curves to 256 devices each).
+    let sweep_body =
+        r#"{"devices":[2,4,8,16,32,64,128,256],"threads":1}"#;
+    let mut sweep_conn = TcpStream::connect(addr).expect("connect");
+    let raw = format!(
+        "POST /sweep HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+        sweep_body.len(), sweep_body);
+    sweep_conn.write_all(raw.as_bytes()).unwrap();
+    // The 200 head is committed with the first chunk — from here the
+    // worker is mid-sweep and the queue is full.
+    let mut first = [0u8; 1];
+    sweep_conn.read_exact(&mut first).unwrap();
+
+    // Admission control: the POST is refused, not queued.
+    let shed = request(addr, "POST", "/plan",
+                       r#"{"model":"gnmt","devices":8}"#);
+    assert_eq!(shed.status, 503, "{}", shed.text());
+    assert_eq!(shed.header("retry-after"), Some("1"));
+    assert!(shed.text().starts_with("{\"error\":"), "{}", shed.text());
+
+    // The sweep still completes, and afterwards the daemon recovers.
+    let mut rest = Vec::new();
+    sweep_conn.read_to_end(&mut rest).unwrap();
+    let ok = request(addr, "POST", "/plan",
+                     r#"{"model":"gnmt","devices":8}"#);
+    assert_eq!(ok.status, 200);
+
+    let metrics = get(addr, "/metrics");
+    assert!(metrics.text().contains("hybridpar_service_rejected_total 1"),
+            "{}", metrics.text());
+    assert!(metrics.text().contains(
+        "hybridpar_service_requests_total{endpoint=\"plan\",\
+         code=\"503\"} 1"),
+        "{}", metrics.text());
+
+    handle.stop();
+}
+
+#[test]
+fn cached_planner_errors_count_as_error_hits() {
+    let handle = spawn_service(2, 16);
+    let addr = handle.addr();
+
+    for _ in 0..2 {
+        let r = request(addr, "POST", "/plan", r#"{"model":"alexnet"}"#);
+        assert_eq!(r.status, 400);
+        assert!(r.text().starts_with("{\"error\":"), "{}", r.text());
+    }
+    // One fill, zero plan hits: the repeat was served a cached *error*.
+    let cache = handle.service().cache();
+    assert_eq!(cache.misses(), 1);
+    assert_eq!(cache.hits(), 0,
+               "an error-served request must not count as a plan hit");
+    assert_eq!(cache.error_hits(), 1);
+    let metrics = get(addr, "/metrics");
+    assert!(metrics.text().contains(
+        "hybridpar_service_plan_cache_error_hits_total 1"),
+        "{}", metrics.text());
+    assert!(metrics.text().contains(
+        "hybridpar_service_plan_cache_hits_total 0"),
+        "{}", metrics.text());
+
+    handle.stop();
+}
+
+#[test]
+fn plan_cache_persists_across_restarts() {
+    let path = std::env::temp_dir().join(format!(
+        "hybridpar-it-persist-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let opts = || ServiceOptions {
+        threads: 2,
+        persist_path: Some(path.clone()),
+        ..Default::default()
+    };
+
+    let handle = service::bind("127.0.0.1:0", opts()).unwrap().spawn();
+    let cold = request(handle.addr(), "POST", "/plan",
+                       r#"{"model":"gnmt","devices":8}"#);
+    assert_eq!(cold.status, 200);
+    handle.stop(); // snapshots the cache on shutdown
+    assert!(path.exists(), "shutdown must write the snapshot");
+
+    let handle = service::bind("127.0.0.1:0", opts()).unwrap().spawn();
+    let warm = request(handle.addr(), "POST", "/plan",
+                       r#"{"model":"gnmt","devices":8}"#);
+    assert_eq!(warm.status, 200);
+    assert_eq!(warm.body, cold.body);
+    let cache = handle.service().cache();
+    assert_eq!(cache.misses(), 0,
+               "the reloaded entry must serve without a planner fill");
+    assert_eq!(cache.hits(), 1);
+    handle.stop();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn sharded_sweep_merge_is_byte_identical_to_single_replica() {
+    let r1 = spawn_service(2, 16);
+    let r2 = spawn_service(2, 16);
+    let coord = service::bind("127.0.0.1:0", ServiceOptions {
+        threads: 2,
+        replicas: vec![r1.addr().to_string(), r2.addr().to_string()],
+        ..Default::default()
+    })
+    .expect("bind coordinator")
+    .spawn();
+
+    let body = r#"{"models":["gnmt","inception-v3"],
+                   "devices":[4,8,16,64],"families":["dp","hybrid"],
+                   "curve_max_devices":64,"threads":2}"#;
+    let merged = request(coord.addr(), "POST", "/sweep", body);
+    assert_eq!(merged.status, 200, "{}", merged.text());
+    assert_eq!(merged.header("transfer-encoding"), Some("chunked"));
+
+    let want = run_sweep(&SweepSpec {
+        models: vec!["gnmt".into(), "inception-v3".into()],
+        devices: vec![4, 8, 16, 64],
+        families: vec![StrategyFamily::DpOnly, StrategyFamily::Hybrid],
+        curve_max_devices: 64,
+        threads: 2,
+        ..Default::default()
+    })
+    .unwrap()
+    .to_json_string();
+    assert_eq!(merged.text(), want,
+               "sharded merge must be byte-identical to one replica's \
+                sweep (and the sweep CLI)");
+
+    // The work really went through the replicas (the coordinator never
+    // evaluates a markerless grid itself when replicas are configured).
+    let shares: u64 = [&r1, &r2]
+        .iter()
+        .map(|h| {
+            let m = get(h.addr(), "/metrics");
+            m.text()
+                .lines()
+                .find(|l| l.starts_with(
+                    "hybridpar_service_requests_total{endpoint=\"sweep\",\
+                     code=\"200\"}"))
+                .and_then(|l| l.rsplit(' ').next())
+                .and_then(|v| v.parse::<u64>().ok())
+                .unwrap_or(0)
+        })
+        .sum();
+    assert!(shares >= 1, "replicas must have served the shard requests");
+
+    coord.stop();
+    r1.stop();
+    r2.stop();
 }
