@@ -18,8 +18,21 @@ use std::net::{SocketAddr, TcpStream};
 use std::time::Instant;
 
 use hybridpar::bench::{f2, Table};
+use hybridpar::metrics::Histogram;
 use hybridpar::service::{self, ServiceOptions};
-use hybridpar::util::{fmt_secs, percentile};
+use hybridpar::util::fmt_secs;
+
+/// Fold a sample vector into the service latency ladder so percentiles
+/// come from the shared [`Histogram::percentile`] estimator — the same
+/// math a Prometheus `histogram_quantile` over `/metrics` would do —
+/// instead of a bench-local sort-and-index.
+fn latency_hist(xs: &[f64]) -> Histogram {
+    let h = Histogram::latency();
+    for &x in xs {
+        h.observe(x);
+    }
+    h
+}
 
 /// POST /plan on a fresh connection and time the full request
 /// (connect → last byte).  `Connection: close` keeps `read_to_end`
@@ -133,17 +146,18 @@ fn main() {
     let mut table = Table::new(&["stream", "requests", "p50", "p99"]);
     for (name, xs) in [("cold (fills)", &cold), ("warm (hits)", &warm),
                        ("mixed", &all)] {
+        let h = latency_hist(xs);
         table.row(&[name.to_string(), xs.len().to_string(),
-                    fmt_secs(percentile(xs, 50.0)),
-                    fmt_secs(percentile(xs, 99.0))]);
+                    fmt_secs(h.percentile(0.50).unwrap_or(0.0)),
+                    fmt_secs(h.percentile(0.99).unwrap_or(0.0))]);
     }
     table.print("service /plan latency (loopback, 4 workers)");
     println!("cache: {hits} hits / {misses} fills (hit rate {})",
              f2(hit_rate));
     println!("cold seed request: {}", fmt_secs(seed_latency));
 
-    let cold_p50 = percentile(&cold, 50.0);
-    let warm_p50 = percentile(&warm, 50.0);
+    let cold_p50 = latency_hist(&cold).percentile(0.50).unwrap();
+    let warm_p50 = latency_hist(&warm).percentile(0.50).unwrap();
     let speedup = cold_p50 / warm_p50;
     println!("warm-over-cold speedup: {}x (p50 {} -> {})",
              f2(speedup), fmt_secs(cold_p50), fmt_secs(warm_p50));
@@ -234,9 +248,10 @@ fn main() {
     let mut table = Table::new(&["stream", "requests", "p50", "p99"]);
     for (name, xs) in [("keep-alive warm", &ka_warm),
                        ("keep-alive cold", &ka_cold)] {
+        let h = latency_hist(xs);
         table.row(&[name.to_string(), xs.len().to_string(),
-                    fmt_secs(percentile(xs, 50.0)),
-                    fmt_secs(percentile(xs, 99.0))]);
+                    fmt_secs(h.percentile(0.50).unwrap_or(0.0)),
+                    fmt_secs(h.percentile(0.99).unwrap_or(0.0))]);
     }
     table.print(&format!(
         "service /plan keep-alive load ({ACTIVE_CONNS} active + \
@@ -245,7 +260,7 @@ fn main() {
               ({:.0} req/s wall)",
              fmt_secs(load_wall), served as f64 / load_wall);
 
-    let warm_p99 = percentile(&ka_warm, 99.0);
+    let warm_p99 = latency_hist(&ka_warm).percentile(0.99).unwrap();
     assert!(warm_p99 <= WARM_P99_BOUND_S,
             "warm keep-alive p99 must hold {WARM_P99_BOUND_S}s, \
              got {warm_p99}s");

@@ -445,6 +445,9 @@ pub struct ServiceConfig {
     pub persist: Option<String>,
     /// Replica daemon addresses for sharded `POST /sweep` fan-out.
     pub replicas: Vec<String>,
+    /// Access-log destination: a file path (JSON lines, appended) or
+    /// `"-"` for stderr; absent = no access log.
+    pub access_log: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -460,6 +463,7 @@ impl Default for ServiceConfig {
             idle_timeout_ms: 60_000,
             persist: None,
             replicas: Vec::new(),
+            access_log: None,
         }
     }
 }
@@ -712,6 +716,10 @@ impl RunConfig {
                 .get("service.persist")
                 .and_then(|v| v.as_str().ok())
                 .map(|s| s.to_string());
+            let access_log = t
+                .get("service.access_log")
+                .and_then(|v| v.as_str().ok())
+                .map(|s| s.to_string());
             c.service = Some(ServiceConfig {
                 addr,
                 threads: t.usize_or("service.threads", d.threads),
@@ -730,6 +738,7 @@ impl RunConfig {
                     as u64,
                 persist,
                 replicas: t.str_list_or("service.replicas", &[]),
+                access_log,
             });
         }
         Ok(c)
@@ -1069,6 +1078,7 @@ sizes = [1, 2, 3]
              max_pending = 16\nmax_connections = 256\n\
              head_timeout_ms = 2500\nidle_timeout_ms = 15000\n\
              persist = \"/tmp/plans.cache\"\n\
+             access_log = \"/tmp/access.jsonl\"\n\
              replicas = [\"10.0.0.1:8080\", \"10.0.0.2:8080\"]\n")
             .unwrap();
         let s = RunConfig::from_toml(&t).unwrap().service.unwrap();
@@ -1081,6 +1091,7 @@ sizes = [1, 2, 3]
         assert_eq!(s.head_timeout_ms, 2500);
         assert_eq!(s.idle_timeout_ms, 15_000);
         assert_eq!(s.persist.as_deref(), Some("/tmp/plans.cache"));
+        assert_eq!(s.access_log.as_deref(), Some("/tmp/access.jsonl"));
         assert_eq!(s.replicas, vec!["10.0.0.1:8080", "10.0.0.2:8080"]);
         // Absent by default; partial sections get defaults for the rest.
         let t = Toml::parse(DOC).unwrap();
@@ -1094,6 +1105,7 @@ sizes = [1, 2, 3]
         assert_eq!(s.head_timeout_ms, 10_000);
         assert_eq!(s.idle_timeout_ms, 60_000);
         assert_eq!(s.persist, None);
+        assert_eq!(s.access_log, None);
         assert!(s.replicas.is_empty());
         // A port-less address is rejected loudly.
         let t = Toml::parse("[service]\naddr = \"localhost\"\n").unwrap();

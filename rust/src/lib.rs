@@ -112,8 +112,21 @@
 //! identical requests coalesce onto one evaluation), `POST /sweep`
 //! streams grid results as they complete, and `GET /metrics` exports
 //! Prometheus counters and latency histograms.  See `docs/service.md`.
+//!
+//! ## Observability
+//!
+//! Every layer above can *show its work* through [`trace`] — a std-only
+//! span recorder with a Chrome trace-event / Perfetto writer.  `plan
+//! --trace-out timeline.json` exports the chosen candidate's simulated
+//! schedule (one track per device, one per network resource), `plan
+//! --explain` renders the cost waterfall behind the verdict (also
+//! embedded as `Plan.explain` JSON), and the service tags every request
+//! with an `X-Request-Id`, logs per-phase durations as JSON lines, and
+//! keeps a `GET /debug/trace` ring buffer of recent request span trees.
+//! See `docs/observability.md`.
 
 pub mod util;
+pub mod trace;
 pub mod dfg;
 pub mod cluster;
 pub mod sim;

@@ -26,9 +26,10 @@ use hybridpar::data::Corpus;
 use hybridpar::memory::{MemoryModel, Optimizer, ZeroMode};
 use hybridpar::parallel::{NetworkModel, ScalingEfficiency};
 use hybridpar::placer;
-use hybridpar::planner::sweep::{effective_threads, parse_mem_gb,
-                                run_sweep, BatchSpec, StrategyFamily,
-                                SweepSpec};
+use hybridpar::planner::sweep::{self, effective_threads, parse_mem_gb,
+                                run_sweep_observed, BatchSpec,
+                                StrategyFamily, SweepSpec};
+use hybridpar::planner::timeline::plan_timeline;
 use hybridpar::planner::{cost_by_name, AnalyticalCost, CostModel,
                          ModelRegistry, Objective, PlanMechanism,
                          PlanRequest, Planner};
@@ -55,10 +56,14 @@ COMMANDS:
              [--recompute] [--act-factor F] [--reserved-gb G]
              [--zero off|optimizer|gradients|weights]
              [--overlap-buckets K] [--compression F]
+             [--explain] [--trace-out timeline.json]
              [--config cfg.toml] [--out-json path]
              (emits the typed Plan as JSON on stdout; memory-infeasible
               candidates appear in the scorecard as infeasible rows, and
-              the collective pricing each exchange is recorded per row)
+              the collective pricing each exchange is recorded per row;
+              --explain prints the per-candidate cost waterfall on stderr
+              and embeds it in the Plan JSON; --trace-out writes a Chrome
+              trace-event / Perfetto timeline of the chosen plan)
   sweep      --models a,b --topos dgx1,dgx1-pod --devices 8,64,256
              [--nodes 1,2,4] [--collective auto|ring|tree|hierarchical]
              [--device-mem-gb default|G,...]
@@ -68,19 +73,25 @@ COMMANDS:
              [--optimizer ...] [--recompute] [--max-curve N]
              [--overlap 1,8,...] [--compression 1.0,0.25,...]
              [--zero off,weights,...]
+             [--progress] [--trace-dir DIR]
              [--config cfg.toml] [--out-json p] [--out-csv p]
              (parallel grid evaluation; JSON on stdout, deterministic
-              ordering — --threads N output is byte-identical to --threads 1)
+              ordering — --threads N output is byte-identical to --threads 1;
+              --progress prints a done/total heartbeat to stderr,
+              --trace-dir writes one Perfetto timeline per planned scenario)
   serve      [--addr 127.0.0.1:8080] [--threads N] [--cache-entries N]
              [--cost analytical|alpha-beta|simulator] [--config cfg.toml]
              [--max-pending N] [--max-connections N]
              [--head-timeout-ms MS] [--idle-timeout-ms MS]
              [--cache-persist path] [--replicas host:port,...]
+             [--access-log path|-]
              (planner-as-a-service HTTP daemon: keep-alive event loop,
               POST /plan and /sweep, GET /models /topologies /healthz
-              /metrics; /plan responses are byte-identical to the plan
-              subcommand and cached in a single-flight LRU; --replicas
-              shards POST /sweep across peer daemons — docs/service.md)
+              /metrics /debug/trace; /plan responses are byte-identical
+              to the plan subcommand and cached in a single-flight LRU;
+              --replicas shards POST /sweep across peer daemons;
+              --access-log appends one JSON line per request ("-" =
+              stderr) — docs/service.md, docs/observability.md)
   train      --config cfg.toml |
              --strategy single|dp|hybrid|pipelined|async|local-sgd
              --workers N --steps N --lr F --dp-workers N --microbatches N
@@ -104,7 +115,8 @@ fn main() {
 fn run() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_default();
     let args = Args::from_env(2, &["heuristic", "real-se", "verbose",
-                                   "pipeline-only", "recompute"]);
+                                   "pipeline-only", "recompute", "explain",
+                                   "progress"]);
     match cmd.as_str() {
         "plan" => cmd_plan(&args),
         "sweep" => cmd_sweep(&args),
@@ -216,6 +228,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
         .devices(devices)
         .objective(objective)
         .pipeline_only(args.has_flag("pipeline-only"))
+        .explain(args.has_flag("explain"))
         .mechanism(mechanism)
         .memory(mem_model)
         .overlap_buckets(overlap_buckets)
@@ -255,6 +268,16 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let planner = Planner::with_cost(cost);
     let plan = planner.plan(&req)?;
     eprint!("{}", plan.summary());
+    if args.has_flag("explain") {
+        eprint!("{}", plan.explain_text());
+    }
+    if let Some(path) = args.get("trace-out") {
+        // The timeline is a pure function of the request (virtual-clock
+        // timestamps come from the simulator, never the wall clock), so
+        // the same plan always writes byte-identical JSON.
+        std::fs::write(path, plan_timeline(&planner, &req, &plan)?)?;
+        eprintln!("wrote {path}");
+    }
     // One shared writer with the service's POST /plan (and the golden
     // fixtures): stdout, --out-json and the HTTP body are byte-identical.
     let doc = plan.to_json_string();
@@ -306,11 +329,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "idle-timeout-ms", base.idle_timeout_ms as usize)? as u64),
         persist_path,
         replicas,
+        access_log: args
+            .get("access-log")
+            .map(|s| s.to_string())
+            .or(base.access_log),
     };
     let bound = service::bind(&addr, opts)?;
     eprintln!("serving planner on http://{} \
                (POST /plan /sweep, GET /models /topologies /healthz \
-               /metrics; ctrl-c to stop)",
+               /metrics /debug/trace; ctrl-c to stop)",
               bound.local_addr());
     bound.serve_forever()
 }
@@ -445,7 +472,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let n = spec.scenarios().len();
     let workers = effective_threads(spec.threads, n);
     let t0 = std::time::Instant::now();
-    let result = run_sweep(&spec)?;
+    // --progress: heartbeat on stderr every ~5% of the grid (at least
+    // every completion on small grids).  stdout is untouched, so the
+    // byte-identical --threads contract holds with or without the flag.
+    let progress = args.has_flag("progress");
+    let stride = (n / 20).max(1);
+    let result = run_sweep_observed(&spec, |done, total| {
+        if progress && (done % stride == 0 || done == total) {
+            eprintln!("sweep progress: {done}/{total} scenarios \
+                       ({} elapsed)",
+                      fmt_secs(t0.elapsed().as_secs_f64()));
+        }
+    })?;
     let wall = t0.elapsed().as_secs_f64();
     let ok = result.results.iter().filter(|r| r.plan.is_some()).count();
     eprintln!("sweep: {n} scenarios on {workers} threads in {} \
@@ -469,6 +507,28 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 sc.batch.label(), sc.family.as_str(),
                 err.as_deref().unwrap_or("unknown")),
         }
+    }
+    // --trace-dir: serial post-pass rebuilding each planned scenario's
+    // request and rendering its Perfetto timeline.  Runs after the sweep
+    // (timelines re-simulate pipelines, so they stay off the hot path)
+    // and writes one file per scenario in canonical grid order.
+    if let Some(dir) = args.get("trace-dir") {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        let tracer = Planner::with_cost(cost_by_name(&spec.cost_model)?);
+        let mut written = 0usize;
+        for (i, r) in result.results.iter().enumerate() {
+            let Some(plan) = &r.plan else { continue };
+            let sc = &r.scenario;
+            let req = sweep::plan_request(&tracer, &spec, sc);
+            let name = format!("{i:04}_{}_{}_{}dev_{}.json", sc.model,
+                               sc.topology, sc.devices,
+                               sc.family.as_str());
+            std::fs::write(dir.join(&name),
+                           plan_timeline(&tracer, &req, plan)?)?;
+            written += 1;
+        }
+        eprintln!("wrote {written} timelines to {}", dir.display());
     }
     // One shared writer with the service's POST /sweep chunk stream.
     let doc = result.to_json_string();

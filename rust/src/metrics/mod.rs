@@ -159,6 +159,44 @@ impl Histogram {
         f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
     }
 
+    /// Estimate the `p`-quantile (`p` in `[0, 1]`) from the bucket
+    /// counts, the way Prometheus' `histogram_quantile` does: find the
+    /// bucket where the cumulative count crosses `p * total`, then
+    /// interpolate linearly inside it (the first bucket interpolates
+    /// from zero).  Observations beyond the last bound clamp to it —
+    /// a finite answer for a `+Inf` quantile is the standard convention.
+    /// Returns `None` on an empty histogram or `p` outside `[0, 1]`.
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        if !(0.0..=1.0).contains(&p) {
+            return None;
+        }
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let rank = p * total as f64;
+        let mut cum = 0u64;
+        for (i, (b, c)) in self.bounds.iter().zip(&self.counts).enumerate() {
+            let n = c.load(Ordering::Relaxed);
+            if n == 0 {
+                cum += n;
+                continue;
+            }
+            if (cum + n) as f64 >= rank {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let frac = ((rank - cum as f64) / n as f64).clamp(0.0, 1.0);
+                return Some(lo + (b - lo) * frac);
+            }
+            cum += n;
+        }
+        // Rank lands in the +Inf bucket: clamp to the last finite bound
+        // (or, with no finite bounds at all, fall back to mean).
+        match self.bounds.last() {
+            Some(&b) => Some(b),
+            None => Some(self.sum() / total as f64),
+        }
+    }
+
     /// Prometheus exposition lines: `name_bucket{labels,le="…"}`
     /// (cumulative), `name_sum`, `name_count`.  `labels` may be empty.
     pub fn render(&self, name: &str, labels: &str) -> String {
@@ -347,6 +385,53 @@ mod tests {
         let bare = h.render("lat", "");
         assert!(bare.contains("lat_bucket{le=\"1\"} 2"), "{bare}");
         assert!(bare.contains("lat_count 4"), "{bare}");
+    }
+
+    #[test]
+    fn inf_bucket_equals_count_in_every_render() {
+        // The +Inf cumulative bucket, _count, and the raw counter must
+        // agree no matter where observations land — including entirely
+        // beyond the last bound.
+        let h = Histogram::new(&[1e-3, 1.0]);
+        for v in [1e-4, 0.5, 2.0, 300.0, 1e9] {
+            h.observe(v);
+        }
+        let text = h.render("lat", "");
+        assert!(text.contains("lat_bucket{le=\"+Inf\"} 5"), "{text}");
+        assert!(text.contains("lat_count 5"), "{text}");
+        assert_eq!(h.count(), 5);
+        let want_sum: f64 = 1e-4 + 0.5 + 2.0 + 300.0 + 1e9;
+        assert!((h.sum() - want_sum).abs() < 1e-3, "{}", h.sum());
+        // _sum in the rendered text is the same f64, formatted by {}.
+        assert!(text.contains(&format!("lat_sum {want_sum}")), "{text}");
+    }
+
+    #[test]
+    fn percentile_interpolates_within_buckets() {
+        let h = Histogram::new(&[1.0, 2.0, 4.0]);
+        // 2 obs in (0,1], 2 in (1,2], none beyond.
+        for v in [0.5, 0.9, 1.5, 1.9] {
+            h.observe(v);
+        }
+        // p50 → rank 2.0, crossing at the end of the first bucket.
+        assert!((h.percentile(0.5).unwrap() - 1.0).abs() < 1e-12);
+        // p75 → rank 3.0, halfway through the (1,2] bucket.
+        assert!((h.percentile(0.75).unwrap() - 1.5).abs() < 1e-12);
+        // p100 → upper bound of the last occupied bucket.
+        assert!((h.percentile(1.0).unwrap() - 2.0).abs() < 1e-12);
+        // Out-of-range p and empty histograms answer None.
+        assert_eq!(h.percentile(1.5), None);
+        assert_eq!(Histogram::latency().percentile(0.5), None);
+    }
+
+    #[test]
+    fn percentile_clamps_overflow_to_last_bound() {
+        let h = Histogram::new(&[1.0, 2.0]);
+        h.observe(0.5);
+        h.observe(50.0); // +Inf bucket
+        // p99 lands in the +Inf bucket; answer clamps to the last finite
+        // bound rather than inventing a value.
+        assert!((h.percentile(0.99).unwrap() - 2.0).abs() < 1e-12);
     }
 
     #[test]

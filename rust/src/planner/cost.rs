@@ -215,6 +215,24 @@ fn stage_link(hw: &HwGraph) -> (f64, f64) {
     (25e9, 1.3e-6) // NVLink defaults
 }
 
+/// Rebuild the GPipe schedule behind a pipelined candidate so the trace
+/// layer ([`crate::planner::timeline`]) can replay it through the
+/// simulator: the memory-capped stage partition, the pipeline timing
+/// knobs, and the per-op Δ(k) times.  These are exactly the artifacts
+/// every cost model's pipelined estimate is built from — all three share
+/// the analytical Δ(k) derivation — so a timeline rendered from them
+/// shows the same schedule the estimate priced.
+pub fn gpipe_schedule(prof: &ModelProfile, hw: &HwGraph, stages: usize)
+                      -> Result<(pipeline::Partition, PipeConfig, Vec<f64>)>
+{
+    let a = AnalyticalCost::default();
+    let times =
+        prof.dfg.op_times(a.flops_per_sec, a.launch_overhead_s);
+    let cfg = a.pipe_cfg(prof, hw);
+    let p = stage_partition(prof, hw, &times, stages)?;
+    Ok((p, cfg, times))
+}
+
 // ==========================================================================
 // Analytical (Eq. 1–6, SE = 1)
 // ==========================================================================

@@ -54,6 +54,7 @@
 pub mod cost;
 pub mod registry;
 pub mod sweep;
+pub mod timeline;
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -214,6 +215,11 @@ pub struct PlanRequest {
     /// *bytes* before pricing (`--compression`); α latency terms are
     /// never scaled.  `1.0` (the default) is uncompressed.
     pub compression: f64,
+    /// Attach a [`PlanExplain`] cost waterfall to the plan
+    /// (`--explain`): per-candidate compute / MP-overhead / exchange
+    /// decomposition whose components sum to the reported step time.
+    /// Off by default so existing plan documents stay byte-identical.
+    pub explain: bool,
 }
 
 impl PlanRequest {
@@ -235,6 +241,7 @@ impl PlanRequest {
             mechanism: PlanMechanism::Auto,
             overlap_buckets: 1,
             compression: 1.0,
+            explain: false,
         }
     }
 
@@ -316,6 +323,12 @@ impl PlanRequest {
         self
     }
 
+    /// Attach the cost-waterfall explanation to the plan.
+    pub fn explain(mut self, on: bool) -> Self {
+        self.explain = on;
+        self
+    }
+
     /// The request's overlap axes as one [`OverlapModel`] (what
     /// [`Planner::plan`] validates and threads into the SE model).
     pub fn overlap_model(&self) -> OverlapModel {
@@ -329,11 +342,11 @@ impl PlanRequest {
     /// service's `POST /plan` body).  `"cost"` selects the cost model
     /// and is returned separately by the parser — it configures the
     /// [`Planner`], not the request.
-    pub const WIRE_KEYS: [&'static str; 17] = [
+    pub const WIRE_KEYS: [&'static str; 18] = [
         "model", "topology", "devices", "batch", "objective", "mp_degrees",
         "tensor_degrees", "pipeline_only", "curve_max_devices",
         "device_mem_gb", "memory", "nodes", "collective", "mechanism",
-        "cost", "overlap", "compression",
+        "cost", "overlap", "compression", "explain",
     ];
 
     /// The cache-canonical form of this request: a sorted-key JSON
@@ -418,6 +431,7 @@ impl PlanRequest {
             ("cost", Json::Str(cost_model.to_string())),
             ("overlap", junum(self.overlap_buckets)),
             ("compression", jnum(self.compression)),
+            ("explain", Json::Bool(self.explain)),
         ])
     }
 }
@@ -533,6 +547,11 @@ pub fn plan_request_from_json(j: &Json)
     if let Some(c) = opt_f64(j, "compression")? {
         req.compression = c;
     }
+    req.explain = match j.opt("explain") {
+        None | Some(Json::Null) => false,
+        Some(Json::Bool(b)) => *b,
+        Some(other) => bail!("explain must be a bool, got {other:?}"),
+    };
     // Loud validation at the wire (the planner re-checks, but a typo'd
     // body should fail parse, not plan).
     req.overlap_model().validate()?;
@@ -608,6 +627,120 @@ pub struct CurvePoint {
     pub hybrid: Option<f64>,
 }
 
+/// One candidate's additive cost waterfall.
+///
+/// `compute_s` is the ideal M-way split of the serial step (recompute
+/// inflation included); `mp_overhead_s` is what the mechanism actually
+/// loses on top of that — GPipe fill/drain bubble, placement
+/// communication; `exchange_s` is the DP gradient-exchange charge the
+/// SE model prices (0 under Eq. 1–6's SE = 1).  The three sum to
+/// `total_s`, the candidate's reported step time, *exactly* — the
+/// decomposition is algebraic, not re-measured.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExplainRow {
+    pub mp_degree: usize,
+    /// "none" | "placed" | "pipelined" | "layerwise" | "tensor".
+    pub mechanism: String,
+    pub compute_s: f64,
+    pub mp_overhead_s: f64,
+    pub exchange_s: f64,
+    /// `compute_s + mp_overhead_s + exchange_s` — the reported step time.
+    pub total_s: f64,
+    /// Algorithm pricing this row's exchange ("none" when free).
+    pub collective: String,
+}
+
+impl ExplainRow {
+    fn to_json(&self) -> Json {
+        jobj(vec![
+            ("mp_degree", junum(self.mp_degree)),
+            ("mechanism", Json::Str(self.mechanism.clone())),
+            ("compute_s", jnum(self.compute_s)),
+            ("mp_overhead_s", jnum(self.mp_overhead_s)),
+            ("exchange_s", jnum(self.exchange_s)),
+            ("total_s", jnum(self.total_s)),
+            ("collective", Json::Str(self.collective.clone())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ExplainRow {
+            mp_degree: j.get("mp_degree")?.as_usize()?,
+            mechanism: j.get("mechanism")?.as_str()?.to_string(),
+            compute_s: j.get("compute_s")?.as_f64()?,
+            mp_overhead_s: j.get("mp_overhead_s")?.as_f64()?,
+            exchange_s: j.get("exchange_s")?.as_f64()?,
+            total_s: j.get("total_s")?.as_f64()?,
+            collective: j.get("collective")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Why the plan chose what it chose: the chosen candidate's cost
+/// waterfall plus one row per scored scorecard candidate, the
+/// statistical-efficiency penalty, and the memory verdict.  Attached to
+/// [`Plan::explain`] when [`PlanRequest::explain`] is set (`plan
+/// --explain`); rendered as text by [`Plan::explain_text`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanExplain {
+    /// Single-device serial step time (seconds, before recompute).
+    pub serial_step_s: f64,
+    /// Recompute inflation factor folded into every time below.
+    pub time_factor: f64,
+    /// SE_N(n_dp, M) of the chosen candidate (1.0 under Eq. 1–6).
+    pub se: f64,
+    /// The chosen candidate's waterfall; `chosen.total_s` equals
+    /// [`Plan::predicted_step_s`].
+    pub chosen: ExplainRow,
+    /// One waterfall per scored (step-timed) scorecard row, scorecard
+    /// order.
+    pub candidates: Vec<ExplainRow>,
+    /// Statistical-efficiency penalty E(B₁)/E(B) at the chosen global
+    /// batch (None = divergent or unknown).
+    pub epochs_ratio: Option<f64>,
+    /// Memory verdict of the chosen candidate ("fits: … of … GB" /
+    /// "infeasible: …" / "unknown").
+    pub memory_verdict: String,
+}
+
+impl PlanExplain {
+    fn to_json(&self) -> Json {
+        jobj(vec![
+            ("serial_step_s", jnum(self.serial_step_s)),
+            ("time_factor", jnum(self.time_factor)),
+            ("se", jnum(self.se)),
+            ("chosen", self.chosen.to_json()),
+            ("candidates",
+             Json::Arr(self.candidates
+                 .iter()
+                 .map(|r| r.to_json())
+                 .collect())),
+            ("epochs_ratio", jonum(self.epochs_ratio)),
+            ("memory_verdict", Json::Str(self.memory_verdict.clone())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(PlanExplain {
+            serial_step_s: j.get("serial_step_s")?.as_f64()?,
+            time_factor: j.get("time_factor")?.as_f64()?,
+            se: j.get("se")?.as_f64()?,
+            chosen: ExplainRow::from_json(j.get("chosen")?)?,
+            candidates: j
+                .get("candidates")?
+                .as_arr()?
+                .iter()
+                .map(ExplainRow::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            epochs_ratio: opt_f64(j, "epochs_ratio")?,
+            memory_verdict: j
+                .get("memory_verdict")?
+                .as_str()?
+                .to_string(),
+        })
+    }
+}
+
 /// The planner's typed answer.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Plan {
@@ -667,6 +800,10 @@ pub struct Plan {
     /// Exposed exchange tail of the chosen strategy (see
     /// [`CandidateScore::exchange_tail_s`]).
     pub exchange_tail_s: Option<f64>,
+    /// Cost-waterfall explanation, present only when the request set
+    /// [`PlanRequest::explain`] — absent, the plan JSON is byte-identical
+    /// to pre-explain documents.
+    pub explain: Option<PlanExplain>,
     pub scorecard: Vec<CandidateScore>,
     pub curve: Vec<CurvePoint>,
 }
@@ -1530,6 +1667,69 @@ impl Planner {
             .first()
             .and_then(|&m| net.crossover_point(m, req.curve_max_devices));
 
+        // --- explain waterfall (opt-in) ----------------------------------
+        // Algebraic decomposition of each candidate's reported step time:
+        //   compute   = serial × tf / M          (ideal M-way split)
+        //   mp over.  = serial × tf / SU^M − compute   (bubble/placement)
+        //   exchange  = step − serial × tf / SU^M      (SE charge)
+        // The three sum to the reported step time exactly — the renderer
+        // never re-measures, so `--explain` cannot drift from the plan.
+        let chosen_collective = if n_dp > 1 {
+            net.se
+                .collective_algorithm_mp(n_dp, chosen_m)
+                .map(|a| a.as_str().to_string())
+                .unwrap_or_else(|| "none".into())
+        } else {
+            "none".to_string()
+        };
+        let explain = if req.explain {
+            let row = |m: usize, mech: &str, su: f64, total: f64,
+                       collective: &str| {
+                let worker = serial * time_factor / su;
+                let compute = serial * time_factor / m.max(1) as f64;
+                ExplainRow {
+                    mp_degree: m,
+                    mechanism: mech.to_string(),
+                    compute_s: compute,
+                    mp_overhead_s: worker - compute,
+                    exchange_s: total - worker,
+                    total_s: total,
+                    collective: collective.to_string(),
+                }
+            };
+            let chosen_row = row(chosen_m, &mechanism_str, chosen_su_m,
+                                 predicted_step_s, &chosen_collective);
+            let candidates = scorecard
+                .iter()
+                .filter_map(|c| {
+                    c.step_time_s.map(|t| row(c.mp_degree, &c.mechanism,
+                                              c.su_m, t, &c.collective))
+                })
+                .collect();
+            let memory_verdict = match &chosen_mem {
+                Some(m) if m.fits(available) => format!(
+                    "fits: {:.1} GB of {:.1} GB per device",
+                    m.total_bytes / 1e9, available / 1e9),
+                Some(m) => format!(
+                    "infeasible: needs {:.1} GB > {:.1} GB per device",
+                    m.total_bytes / 1e9, available / 1e9),
+                None => "unknown".to_string(),
+            };
+            Some(PlanExplain {
+                serial_step_s: serial,
+                time_factor,
+                se: net.se.at_mp(n_dp, chosen_m),
+                chosen: chosen_row,
+                candidates,
+                epochs_ratio: net
+                    .epochs
+                    .efficiency_ratio(global_batch as f64),
+                memory_verdict,
+            })
+        } else {
+            None
+        };
+
         Ok(Plan {
             model: prof.name.clone(),
             topology: req.topology.clone(),
@@ -1557,14 +1757,7 @@ impl Planner {
             recompute: mem_model.recompute,
             memory: chosen_mem,
             nodes: req.nodes,
-            collective: if n_dp > 1 {
-                net.se
-                    .collective_algorithm_mp(n_dp, chosen_m)
-                    .map(|a| a.as_str().to_string())
-                    .unwrap_or_else(|| "none".into())
-            } else {
-                "none".to_string()
-            },
+            collective: chosen_collective,
             overlap_buckets: req.overlap_buckets,
             compression: req.compression,
             exchange_tail_s: if n_dp > 1 {
@@ -1574,6 +1767,7 @@ impl Planner {
             } else {
                 None
             },
+            explain,
             scorecard,
             curve,
         })
@@ -1853,9 +2047,11 @@ impl CurvePoint {
 }
 
 impl Plan {
-    /// Serialise the full plan (scorecard and curve included).
+    /// Serialise the full plan (scorecard and curve included).  The
+    /// `explain` key is emitted only when present, so default plan
+    /// documents are byte-identical to pre-explain ones.
     pub fn to_json(&self) -> Json {
-        jobj(vec![
+        let mut pairs = vec![
             ("model", Json::Str(self.model.clone())),
             ("topology", Json::Str(self.topology.clone())),
             ("device_budget", junum(self.device_budget)),
@@ -1906,7 +2102,11 @@ impl Plan {
              Json::Arr(self.scorecard.iter().map(|c| c.to_json()).collect())),
             ("curve",
              Json::Arr(self.curve.iter().map(|c| c.to_json()).collect())),
-        ])
+        ];
+        if let Some(e) = &self.explain {
+            pairs.push(("explain", e.to_json()));
+        }
+        jobj(pairs)
     }
 
     /// The canonical serialised plan document: compact sorted-key JSON
@@ -1954,6 +2154,10 @@ impl Plan {
             overlap_buckets: opt_usize(j, "overlap_buckets")?.unwrap_or(1),
             compression: opt_f64(j, "compression")?.unwrap_or(1.0),
             exchange_tail_s: opt_f64(j, "exchange_tail_s")?,
+            explain: match j.opt("explain") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(PlanExplain::from_json(v)?),
+            },
             memory: match j.opt("memory") {
                 None | Some(Json::Null) => None,
                 Some(v) => Some(MemoryEstimate::from_json(v)?),
@@ -2034,6 +2238,55 @@ impl Plan {
         }
         s
     }
+
+    /// Render the attached [`PlanExplain`] as a human-readable cost
+    /// waterfall (what `plan --explain` prints to stderr).  Returns a
+    /// pointer at `--explain` when the plan carries no explanation.
+    pub fn explain_text(&self) -> String {
+        let e = match &self.explain {
+            Some(e) => e,
+            None => {
+                return "no explanation attached (re-plan with --explain)\n"
+                    .to_string()
+            }
+        };
+        let ms = |t: f64| format!("{:.3} ms", t * 1e3);
+        let mut s = String::new();
+        s.push_str(&format!(
+            "why M={} {} on {}@{} (cost {}):\n",
+            self.mp_degree, self.mechanism, self.model, self.topology,
+            self.cost_model));
+        s.push_str(&format!(
+            "  serial step {} (recompute x{:.2}), SE_N {:.4}\n",
+            ms(e.serial_step_s), e.time_factor, e.se));
+        s.push_str(&format!(
+            "  chosen waterfall (sums to predicted step {}):\n",
+            ms(self.predicted_step_s)));
+        s.push_str(&format!(
+            "    compute (ideal /{})   {}\n",
+            self.mp_degree.max(1), ms(e.chosen.compute_s)));
+        s.push_str(&format!(
+            "    mp overhead (bubble)  {}\n", ms(e.chosen.mp_overhead_s)));
+        s.push_str(&format!(
+            "    dp exchange ({})      {}\n",
+            e.chosen.collective, ms(e.chosen.exchange_s)));
+        s.push_str(&format!(
+            "  statistical efficiency: E(B1)/E(B) = {} at global batch \
+             {}\n",
+            e.epochs_ratio
+                .map(|r| format!("{r:.4}"))
+                .unwrap_or_else(|| "diverges".into()),
+            self.global_batch));
+        s.push_str(&format!("  memory: {}\n", e.memory_verdict));
+        for r in &e.candidates {
+            s.push_str(&format!(
+                "  candidate M={} {:<9}: step {} = {} compute + {} mp \
+                 + {} exchange\n",
+                r.mp_degree, r.mechanism, ms(r.total_s), ms(r.compute_s),
+                ms(r.mp_overhead_s), ms(r.exchange_s)));
+        }
+        s
+    }
 }
 
 #[cfg(test)]
@@ -2053,6 +2306,54 @@ mod tests {
                 "flat E(B) region: SU = N, got {}", plan.predicted_speedup);
         assert_eq!(plan.devices_used, 8);
         assert_eq!(plan.global_batch, 8 * 32);
+    }
+
+    #[test]
+    fn explain_waterfall_sums_to_the_reported_step_time() {
+        let planner = Planner::new();
+        let plan = planner
+            .plan(&PlanRequest::new("gnmt", "dgx1")
+                .devices(256)
+                .explain(true))
+            .unwrap();
+        let e = plan.explain.as_ref().expect("explain requested");
+        let sum = e.chosen.compute_s + e.chosen.mp_overhead_s
+            + e.chosen.exchange_s;
+        assert!((sum - plan.predicted_step_s).abs() <= 1e-12
+                    + 1e-9 * plan.predicted_step_s,
+                "chosen waterfall must sum exactly: {sum} vs {}",
+                plan.predicted_step_s);
+        assert_eq!(e.chosen.total_s, plan.predicted_step_s);
+        assert!(!e.candidates.is_empty());
+        for r in &e.candidates {
+            let s = r.compute_s + r.mp_overhead_s + r.exchange_s;
+            assert!((s - r.total_s).abs() <= 1e-12 + 1e-9 * r.total_s,
+                    "candidate M={} waterfall must sum: {s} vs {}",
+                    r.mp_degree, r.total_s);
+        }
+        assert!(plan.explain_text().contains("chosen waterfall"));
+    }
+
+    #[test]
+    fn explain_is_absent_by_default_and_round_trips() {
+        let planner = Planner::new();
+        let req = PlanRequest::new("gnmt", "dgx1").devices(8);
+        let bare = planner.plan(&req).unwrap();
+        assert!(bare.explain.is_none());
+        assert!(bare.to_json().opt("explain").is_none(),
+                "default plan documents must not grow an explain key");
+        let explained =
+            planner.plan(&req.clone().explain(true)).unwrap();
+        let j = explained.to_json();
+        assert!(j.opt("explain").is_some());
+        let back = Plan::from_json(&j).unwrap();
+        assert_eq!(back.explain, explained.explain,
+                   "Plan.explain must round-trip through JSON");
+        // Everything except the explain attachment matches the bare plan.
+        let mut stripped = explained.clone();
+        stripped.explain = None;
+        assert_eq!(stripped.to_json().to_string(),
+                   bare.to_json().to_string());
     }
 
     #[test]

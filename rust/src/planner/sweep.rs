@@ -731,8 +731,12 @@ pub struct SweepResult {
     pub results: Vec<ScenarioResult>,
 }
 
-fn plan_request(planner: &Planner, spec: &SweepSpec, sc: &Scenario)
-                -> PlanRequest {
+/// The [`PlanRequest`] a scenario evaluates — exposed so the trace layer
+/// (`sweep --trace-dir`) can rebuild per-scenario timelines from the
+/// exact request the sweep planned, and tests can cross-check a grid
+/// point against a direct [`Planner::plan`] call.
+pub fn plan_request(planner: &Planner, spec: &SweepSpec, sc: &Scenario)
+                    -> PlanRequest {
     let mut req = PlanRequest::new(&sc.model, &sc.topology)
         .devices(sc.devices)
         .objective(spec.objective)
@@ -907,9 +911,25 @@ where
 /// nothing-fits-in-memory) are captured per result; only a malformed spec
 /// fails the sweep itself.
 pub fn run_sweep(spec: &SweepSpec) -> Result<SweepResult> {
-    let mut results = Vec::with_capacity(spec.cardinality());
+    run_sweep_observed(spec, |_, _| ())
+}
+
+/// [`run_sweep`] with a completion heartbeat: `on_done(done, total)`
+/// fires after each scenario lands, in canonical order.  The callback
+/// sees delivery order (not worker completion order), so `done` counts
+/// monotonically from 1 to `total` for any thread count — the CLI's
+/// `--progress` stderr line hangs off this without touching the
+/// byte-identical stdout contract.
+pub fn run_sweep_observed<F>(spec: &SweepSpec, mut on_done: F)
+                             -> Result<SweepResult>
+where
+    F: FnMut(usize, usize),
+{
+    let total = spec.cardinality();
+    let mut results = Vec::with_capacity(total);
     stream_sweep(spec, |r| {
         results.push(r);
+        on_done(results.len(), total);
         Ok(())
     })?;
     Ok(SweepResult { results })
@@ -1128,6 +1148,26 @@ mod tests {
     fn empty_axes_rejected() {
         let spec = SweepSpec { devices: vec![], ..Default::default() };
         assert!(run_sweep(&spec).is_err());
+    }
+
+    #[test]
+    fn observed_sweep_counts_monotonically_to_the_cardinality() {
+        let spec = SweepSpec {
+            models: vec!["gnmt".into(), "inception-v3".into()],
+            devices: vec![4, 8],
+            families: vec![StrategyFamily::DpOnly],
+            curve_max_devices: 8,
+            threads: 2,
+            ..Default::default()
+        };
+        let mut seen = Vec::new();
+        let r = run_sweep_observed(&spec, |done, total| {
+            seen.push((done, total));
+        }).unwrap();
+        assert_eq!(r.len(), spec.cardinality());
+        let want: Vec<(usize, usize)> =
+            (1..=spec.cardinality()).map(|d| (d, spec.cardinality())).collect();
+        assert_eq!(seen, want);
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Plan → Perfetto timeline: replay the chosen strategy's schedule and
+//! serialise it as a Chrome trace-event document.
+//!
+//! `plan --trace-out timeline.json` (and `sweep --trace-dir DIR`) land
+//! here: [`plan_timeline`] rebuilds the schedule behind the chosen
+//! candidate — the GPipe stage×microbatch unroll for pipelined plans, the
+//! DLPlacer assignment for placed plans, the serial op chain for DP — runs
+//! it through the discrete-event simulator under [`SimConfig::ideal`]
+//! (the same idealised-link assumption the analytic estimates price), and
+//! records one track per device ([`PID_DEVICES`]) plus one per network
+//! resource ([`PID_NETWORK`]) on a virtual clock.  The document is a pure
+//! function of the plan, so identical requests produce byte-identical
+//! timelines — `tests/integration_trace.rs` byte-compares them.
+//!
+//! Times are scaled by the request's recompute `time_factor`, matching
+//! how [`super::Planner::plan`] inflates reported step times: on an
+//! SE = 1 cost model the device-track extent equals the plan's
+//! `predicted_step_s` (within the simulator-vs-analytic agreement on
+//! balanced chains, well under 1%).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::pipeline;
+use crate::sim::{self, SimConfig};
+use crate::trace::{TraceClock, TraceRecorder, PID_DEVICES, PID_NETWORK};
+use crate::util::json::Json;
+
+use super::cost;
+use super::{Plan, PlanRequest, Planner};
+
+/// Seconds → trace microseconds, under the recompute inflation factor.
+fn us(t_s: f64, time_factor: f64) -> f64 {
+    t_s * time_factor * 1e6
+}
+
+/// Render the chosen candidate's schedule as a Chrome trace-event JSON
+/// document (string includes the trailing newline, same framing as
+/// [`Plan::to_json_string`]).
+pub fn plan_timeline(planner: &Planner, req: &PlanRequest, plan: &Plan)
+                     -> Result<String> {
+    let prof =
+        planner.models().build(&plan.model, Some(plan.mini_batch))?;
+    let mut hw = match plan.nodes {
+        Some(n) if n > 1 => planner
+            .topologies()
+            .build_nodes(&req.topology, n, plan.device_budget)?,
+        _ => planner.topologies().build(&req.topology,
+                                        plan.device_budget)?,
+    };
+    if let Some(gb) = plan.device_mem_gb {
+        hw.set_device_mem(gb * 1e9);
+    }
+    let tf = req.memory.time_factor();
+    let rec = TraceRecorder::new(TraceClock::virtual_clock());
+
+    let device_extent_us = match plan.mechanism.as_str() {
+        "pipelined" => pipelined_tracks(&rec, &prof, &hw, plan, tf)?,
+        "placed" => placed_tracks(&rec, planner, &prof, &hw, plan, tf)?,
+        "tensor" | "layerwise" => coarse_tracks(&rec, planner, &prof, &hw,
+                                                plan, tf)?,
+        _ => serial_tracks(&rec, planner, &prof, plan, tf),
+    };
+
+    // The DP gradient exchange the step pays after compute (None under
+    // SE = 1 models, where communication is priced free).
+    if let Some(tail) = plan.exchange_tail_s.filter(|&t| t > 0.0) {
+        let tid = hw.links.len() as u64;
+        rec.track(PID_NETWORK, "network", tid, "gradient exchange");
+        rec.complete(
+            PID_NETWORK, tid,
+            &format!("{} all-reduce x{}", plan.collective,
+                     plan.dp_workers),
+            device_extent_us, tail * 1e6,
+            vec![("buckets".into(),
+                  Json::Num(plan.overlap_buckets as f64))]);
+    }
+    Ok(rec.to_chrome_string())
+}
+
+/// GPipe stage×microbatch unroll, replayed through the simulator.
+fn pipelined_tracks(rec: &TraceRecorder,
+                    prof: &crate::models::ModelProfile,
+                    hw: &crate::cluster::HwGraph, plan: &Plan, tf: f64)
+                    -> Result<f64> {
+    let stages = plan.mp_degree;
+    let m = plan.microbatches.unwrap_or(2);
+    let (p, cfg, _times) = cost::gpipe_schedule(prof, hw, stages)?;
+    let (pdfg, ptimes, stage_of) = pipeline::pipeline_dfg(&p, m, &cfg);
+    let devs = hw.devices();
+    if devs.len() < stages {
+        bail!("topology has {} devices, pipeline needs {stages}",
+              devs.len());
+    }
+    let placement: Vec<usize> =
+        stage_of.iter().map(|&st| devs[st]).collect();
+    let r = sim::simulate(&pdfg, hw, &placement, &ptimes,
+                          SimConfig::ideal())?;
+    for st in 0..stages {
+        rec.track(PID_DEVICES, "devices", devs[st] as u64,
+                  &format!("gpu{} (stage {st})", devs[st]));
+    }
+    for i in 0..pdfg.n_ops() {
+        rec.complete(
+            PID_DEVICES, placement[i] as u64, &pdfg.ops[i].name,
+            us(r.op_start[i], tf), us(r.op_finish[i] - r.op_start[i], tf),
+            vec![("stage".into(), Json::Num(stage_of[i] as f64))]);
+    }
+    transfer_tracks(rec, hw, &pdfg, &r.transfers, tf);
+    Ok(us(r.makespan, tf))
+}
+
+/// DLPlacer assignment, replayed op-for-op through the simulator.
+fn placed_tracks(rec: &TraceRecorder, planner: &Planner,
+                 prof: &crate::models::ModelProfile,
+                 hw: &crate::cluster::HwGraph, plan: &Plan, tf: f64)
+                 -> Result<f64> {
+    let placement = plan
+        .placement
+        .clone()
+        .ok_or_else(|| anyhow!("placed plan carries no placement"))?;
+    let (fps, launch) = planner.cost().op_time_params();
+    let times = prof.dfg.op_times(fps, launch);
+    let r = sim::simulate(&prof.dfg, hw, &placement, &times,
+                          SimConfig::ideal())?;
+    let mut devs: Vec<usize> = placement.clone();
+    devs.sort_unstable();
+    devs.dedup();
+    for &d in &devs {
+        rec.track(PID_DEVICES, "devices", d as u64, &format!("gpu{d}"));
+    }
+    for i in 0..prof.dfg.n_ops() {
+        rec.complete(PID_DEVICES, placement[i] as u64,
+                     &prof.dfg.ops[i].name, us(r.op_start[i], tf),
+                     us(r.op_finish[i] - r.op_start[i], tf), vec![]);
+    }
+    transfer_tracks(rec, hw, &prof.dfg, &r.transfers, tf);
+    Ok(us(r.makespan, tf))
+}
+
+/// Tensor-parallel / layer-wise strategies have no executable DFG
+/// schedule in the planner — one coarse worker-step span per rank, sized
+/// from the chosen candidate's SU^M, keeps their timelines honest about
+/// what the model actually priced.
+fn coarse_tracks(rec: &TraceRecorder, planner: &Planner,
+                 prof: &crate::models::ModelProfile,
+                 hw: &crate::cluster::HwGraph, plan: &Plan, tf: f64)
+                 -> Result<f64> {
+    let (fps, launch) = planner.cost().op_time_params();
+    let serial: f64 = prof.dfg.op_times(fps, launch).iter().sum();
+    let su_m = plan
+        .scorecard
+        .iter()
+        .find(|c| c.mp_degree == plan.mp_degree
+              && c.mechanism == plan.mechanism)
+        .map(|c| c.su_m)
+        .unwrap_or(1.0);
+    let step_worker = serial / su_m;
+    let devs = hw.devices();
+    for rank in 0..plan.mp_degree.min(devs.len()) {
+        let d = devs[rank];
+        rec.track(PID_DEVICES, "devices", d as u64,
+                  &format!("gpu{d} (rank {rank})"));
+        rec.complete(
+            PID_DEVICES, d as u64,
+            &format!("{} step (M={})", plan.mechanism, plan.mp_degree),
+            0.0, us(step_worker, tf),
+            vec![("su_m".into(), Json::Num(su_m))]);
+    }
+    Ok(us(step_worker, tf))
+}
+
+/// DP / single-device plans: the serial op chain on one representative
+/// replica (every DP worker runs the identical schedule).
+fn serial_tracks(rec: &TraceRecorder, planner: &Planner,
+                 prof: &crate::models::ModelProfile, plan: &Plan, tf: f64)
+                 -> f64 {
+    let (fps, launch) = planner.cost().op_time_params();
+    let times = prof.dfg.op_times(fps, launch);
+    let label = if plan.dp_workers > 1 {
+        format!("gpu0 (replica 0 of {})", plan.dp_workers)
+    } else {
+        "gpu0".to_string()
+    };
+    rec.track(PID_DEVICES, "devices", 0, &label);
+    let mut t = 0.0f64;
+    for (i, &dt) in times.iter().enumerate() {
+        rec.complete(PID_DEVICES, 0, &prof.dfg.ops[i].name, us(t, tf),
+                     us(dt, tf), vec![]);
+        t += dt;
+    }
+    us(t, tf)
+}
+
+/// One network track per link that carried a transfer slice.
+fn transfer_tracks(rec: &TraceRecorder, hw: &crate::cluster::HwGraph,
+                   dfg: &crate::dfg::Dfg,
+                   transfers: &[sim::Transfer], tf: f64) {
+    for t in transfers {
+        let l = &hw.links[t.link];
+        rec.track(PID_NETWORK, "network", t.link as u64,
+                  &format!("link{} ({}-{})", t.link, l.a, l.b));
+        rec.complete(
+            PID_NETWORK, t.link as u64,
+            &format!("{}->{}", dfg.ops[t.src_op].name,
+                     dfg.ops[t.dst_op].name),
+            us(t.start_s, tf), us(t.dur_s, tf),
+            vec![("bytes".into(), Json::Num(t.bytes))]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(doc: &str) -> Json {
+        Json::parse(doc.trim_end()).unwrap()
+    }
+
+    #[test]
+    fn pipelined_timeline_has_one_track_per_stage() {
+        let planner = Planner::new();
+        // 16 GB parts force BigLSTM off DP onto the 2-stage pipeline.
+        let req = PlanRequest::new("biglstm", "dgx1")
+            .devices(8)
+            .device_mem_gb(16.0);
+        let plan = planner.plan(&req).unwrap();
+        assert_eq!(plan.mechanism, "pipelined");
+        let doc = plan_timeline(&planner, &req, &plan).unwrap();
+        let j = parse(&doc);
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // One thread_name metadata row per stage on the devices pid.
+        let tracks = evs
+            .iter()
+            .filter(|e| {
+                e.get("ph").unwrap().as_str().unwrap() == "M"
+                    && e.get("name").unwrap().as_str().unwrap()
+                        == "thread_name"
+                    && e.get("pid").unwrap().as_usize().unwrap()
+                        == PID_DEVICES as usize
+            })
+            .count();
+        assert_eq!(tracks, plan.mp_degree);
+        // Every device track carries at least one span, and the extent
+        // matches the plan's predicted step time within 1% (SE = 1).
+        let spans: Vec<&Json> = evs
+            .iter()
+            .filter(|e| {
+                e.get("ph").unwrap().as_str().unwrap() == "X"
+                    && e.get("pid").unwrap().as_usize().unwrap()
+                        == PID_DEVICES as usize
+            })
+            .collect();
+        assert!(spans.len() >= plan.mp_degree);
+        let extent_us = spans
+            .iter()
+            .map(|e| {
+                e.get("ts").unwrap().as_f64().unwrap()
+                    + e.get("dur").unwrap().as_f64().unwrap()
+            })
+            .fold(0.0f64, f64::max);
+        let predicted_us = plan.predicted_step_s * 1e6;
+        assert!(
+            (extent_us - predicted_us).abs() / predicted_us < 0.01,
+            "extent {extent_us} µs vs predicted {predicted_us} µs");
+    }
+
+    #[test]
+    fn timelines_are_byte_identical_across_runs() {
+        let planner = Planner::new();
+        let req = PlanRequest::new("gnmt", "dgx1").devices(8);
+        let plan = planner.plan(&req).unwrap();
+        let a = plan_timeline(&planner, &req, &plan).unwrap();
+        let b = plan_timeline(&planner, &req, &plan).unwrap();
+        assert_eq!(a, b);
+        assert!(a.ends_with('\n'));
+    }
+
+    #[test]
+    fn dp_plan_renders_a_representative_replica() {
+        let planner = Planner::new();
+        let req = PlanRequest::new("inception-v3", "dgx1").devices(8);
+        let plan = planner.plan(&req).unwrap();
+        assert_eq!(plan.mp_degree, 1);
+        let doc = plan_timeline(&planner, &req, &plan).unwrap();
+        let j = parse(&doc);
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let n_spans = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "X")
+            .count();
+        // One span per DFG op on the representative replica.
+        assert!(n_spans >= 3);
+    }
+}

@@ -52,8 +52,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use super::http::{self, ParseStatus};
-use super::{error_body, PlannerService, ServiceOptions, SweepOutcome,
-            CONTENT_JSON, CONTENT_PROM};
+use super::{error_body, PlanPhases, PlannerService, ServiceOptions,
+            SweepOutcome, CONTENT_JSON, CONTENT_PROM};
 
 /// New connections accepted per tick (bounds time-to-first-read under
 /// an accept storm).
@@ -96,21 +96,25 @@ impl ConnGate {
     }
 }
 
-/// Work handed from the loop to the worker pool.
+/// Work handed from the loop to the worker pool.  `rid` is the
+/// request's `X-Request-Id` (echoed on the chunked sweep head, which
+/// the worker encodes itself).
 enum Job {
     Plan { conn: u64, body: Vec<u8> },
-    Sweep { conn: u64, body: Vec<u8>, gate: Arc<ConnGate> },
+    Sweep { conn: u64, body: Vec<u8>, gate: Arc<ConnGate>, rid: String },
 }
 
 /// Results handed back from workers to the loop (which owns all
 /// sockets, so it alone encodes connection framing and writes).
 enum Completion {
-    /// A complete fixed-length response body.
+    /// A complete fixed-length response body (`phases` carries the
+    /// plan-handler timings into the access log and debug ring).
     Respond {
         conn: u64,
         endpoint: &'static str,
         code: u16,
         body: Arc<String>,
+        phases: Option<PlanPhases>,
     },
     /// Pre-encoded wire bytes of a chunked sweep stream.
     StreamBytes { conn: u64, bytes: Vec<u8> },
@@ -151,6 +155,9 @@ struct Conn {
     keep_alive: bool,
     close_after_flush: bool,
     read_eof: bool,
+    /// `X-Request-Id` of the request in flight: the client's own header
+    /// echoed, or a generated id.  Empty until a request line parses.
+    request_id: String,
 }
 
 impl Conn {
@@ -171,6 +178,7 @@ impl Conn {
             keep_alive: true,
             close_after_flush: false,
             read_eof: false,
+            request_id: String::new(),
         }
     }
 
@@ -188,10 +196,15 @@ impl Conn {
     }
 
     /// Queue a complete response and the resulting connection fate.
+    /// Every response echoes the request's `X-Request-Id`.
     fn push_response(&mut self, code: u16, content_type: &str, body: &[u8],
                      keep_alive: bool, extra: &[(&str, &str)]) {
+        let mut headers: Vec<(&str, &str)> = extra.to_vec();
+        if !self.request_id.is_empty() {
+            headers.push(("X-Request-Id", self.request_id.as_str()));
+        }
         self.out.extend_from_slice(&http::encode_response(
-            code, content_type, body, keep_alive, extra));
+            code, content_type, body, keep_alive, &headers));
         if !keep_alive {
             self.close_after_flush = true;
         }
@@ -236,24 +249,26 @@ fn run_worker(service: Arc<PlannerService>,
         let Ok(job) = job else { break };
         match job {
             Job::Plan { conn, body } => {
-                let (code, doc) = service.handle_plan(&body);
+                let (code, doc, phases) = service.handle_plan_timed(&body);
                 service.stats().queue_depth.dec();
                 if done
                     .send(Completion::Respond {
-                        conn, endpoint: "plan", code, body: doc })
+                        conn, endpoint: "plan", code, body: doc,
+                        phases: Some(phases) })
                     .is_err()
                 {
                     break;
                 }
             }
-            Job::Sweep { conn, body, gate } => {
+            Job::Sweep { conn, body, gate, rid } => {
                 let mut first = true;
                 let mut emit = |payload: &[u8]| -> Result<()> {
                     let mut bytes = Vec::new();
                     if first {
                         first = false;
-                        bytes.extend_from_slice(
-                            &http::encode_chunked_head(200, CONTENT_JSON));
+                        bytes.extend_from_slice(&http::encode_chunked_head(
+                            200, CONTENT_JSON,
+                            &[("X-Request-Id", rid.as_str())]));
                     }
                     bytes.extend_from_slice(&http::encode_chunk(payload));
                     send_stream_bytes(&gate, &done, conn, bytes)
@@ -263,7 +278,8 @@ fn run_worker(service: Arc<PlannerService>,
                 let sent = match outcome {
                     SweepOutcome::Plain { code, body } => done
                         .send(Completion::Respond {
-                            conn, endpoint: "sweep", code, body })
+                            conn, endpoint: "sweep", code, body,
+                            phases: None })
                         .is_ok(),
                     SweepOutcome::Streamed { code } => {
                         if code == 200 {
@@ -433,10 +449,10 @@ fn remove_conn(conns: &mut HashMap<u64, Conn>, id: u64,
 fn handle_completion(conns: &mut HashMap<u64, Conn>, c: Completion,
                      service: &Arc<PlannerService>) {
     match c {
-        Completion::Respond { conn, endpoint, code, body } => {
+        Completion::Respond { conn, endpoint, code, body, phases } => {
             let Some(cn) = conns.get_mut(&conn) else { return };
             let keep = cn.keep_alive && !cn.close_after_flush;
-            record(service, cn, endpoint, code);
+            record_with(service, cn, endpoint, code, phases);
             cn.push_response(code, CONTENT_JSON, body.as_bytes(), keep, &[]);
         }
         Completion::StreamBytes { conn, bytes } => {
@@ -459,11 +475,20 @@ fn handle_completion(conns: &mut HashMap<u64, Conn>, c: Completion,
 
 fn record(service: &PlannerService, conn: &Conn, endpoint: &'static str,
           code: u16) {
+    record_with(service, conn, endpoint, code, None);
+}
+
+/// [`record`], threading plan-phase timings through to the access log
+/// and the `/debug/trace` ring.
+fn record_with(service: &PlannerService, conn: &Conn,
+               endpoint: &'static str, code: u16,
+               phases: Option<PlanPhases>) {
     let elapsed = conn
         .req_start
         .map(|t| t.elapsed().as_secs_f64())
         .unwrap_or(0.0);
     service.record_request(endpoint, code, elapsed);
+    service.log_request(&conn.request_id, endpoint, code, elapsed, phases);
 }
 
 /// Advance one connection: admit stream bytes, write, read, parse,
@@ -568,7 +593,9 @@ fn tick_conn(conn: &mut Conn, id: u64, service: &Arc<PlannerService>,
         match http::try_parse_request(&conn.in_buf) {
             Err(e) => {
                 // The byte stream is unrecoverable after a framing
-                // error: answer and close.
+                // error: answer and close.  No parsed head means no
+                // client id to echo — mint one so the 400 is traceable.
+                conn.request_id = service.next_request_id();
                 record(service, conn, "other", 400);
                 conn.push_response(400, CONTENT_JSON,
                                    error_body(&format!("{e:#}")).as_bytes(),
@@ -595,6 +622,7 @@ fn tick_conn(conn: &mut Conn, id: u64, service: &Arc<PlannerService>,
                 if now.duration_since(t0) >= opts.head_timeout {
                     // Slow-loris: the head never completed in time.
                     stats.timeouts.inc();
+                    conn.request_id = service.next_request_id();
                     record(service, conn, "other", 408);
                     conn.push_response(
                         408, CONTENT_JSON,
@@ -627,10 +655,17 @@ fn dispatch(conn: &mut Conn, id: u64, req: &http::Request,
         "/topologies" => "topologies",
         "/healthz" => "healthz",
         "/metrics" => "metrics",
+        "/debug/trace" => "debug",
         _ => "other",
     };
     let keep = req.wants_keep_alive();
     conn.keep_alive = keep;
+    // Echo the client's X-Request-Id, or mint one; every response path
+    // below carries it back out.
+    conn.request_id = match req.header("x-request-id") {
+        Some(v) if !v.is_empty() => v.to_string(),
+        _ => service.next_request_id(),
+    };
     match (endpoint, req.method.as_str()) {
         (ep @ ("plan" | "sweep"), "POST") => {
             if stats.queue_depth.get() >= max_pending as u64 {
@@ -656,6 +691,7 @@ fn dispatch(conn: &mut Conn, id: u64, req: &http::Request,
                     conn: id,
                     body: req.body.clone(),
                     gate: conn.gate.clone(),
+                    rid: conn.request_id.clone(),
                 }
             };
             if job_tx.send(job).is_err() {
@@ -689,13 +725,25 @@ fn dispatch(conn: &mut Conn, id: u64, req: &http::Request,
             conn.push_response(200, CONTENT_PROM,
                                service.metrics_doc().as_bytes(), keep, &[]);
         }
+        ("debug", "GET") => {
+            let n = req.query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("n="))
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(32);
+            record(service, conn, "debug", 200);
+            conn.push_response(200, CONTENT_JSON,
+                               service.debug_trace_doc(n).as_bytes(), keep,
+                               &[]);
+        }
         ("other", _) => {
             record(service, conn, "other", 404);
             conn.push_response(
                 404, CONTENT_JSON,
                 error_body(&format!(
                     "no endpoint '{}' (known: /plan, /sweep, /models, \
-                     /topologies, /healthz, /metrics)", req.path))
+                     /topologies, /healthz, /metrics, /debug/trace)",
+                    req.path))
                     .as_bytes(),
                 keep, &[]);
         }

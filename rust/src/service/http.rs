@@ -30,9 +30,11 @@ use anyhow::{anyhow, bail, Context, Result};
 pub struct Request {
     /// Uppercase method ("GET", "POST", …).
     pub method: String,
-    /// Path with any `?query` suffix stripped (the service's endpoints
-    /// take no query parameters).
+    /// Path with any `?query` suffix stripped.
     pub path: String,
+    /// The raw query string after `?` (empty when absent) —
+    /// `GET /debug/trace?n=16` reads its `n` from here.
+    pub query: String,
     /// Lowercased header names, values trimmed.
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
@@ -130,11 +132,10 @@ pub fn try_parse_request(buf: &[u8]) -> Result<ParseStatus> {
     if !version.starts_with("HTTP/1.") {
         bail!("unsupported protocol '{version}'");
     }
-    let path = raw_path
-        .split_once('?')
-        .map(|(p, _)| p)
-        .unwrap_or(raw_path)
-        .to_string();
+    let (path, query) = match raw_path.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (raw_path.to_string(), String::new()),
+    };
     let mut headers = Vec::new();
     for l in lines {
         if l.is_empty() {
@@ -163,7 +164,7 @@ pub fn try_parse_request(buf: &[u8]) -> Result<ParseStatus> {
     }
     let body = buf[head_len..head_len + content_length].to_vec();
     Ok(ParseStatus::Complete {
-        req: Request { method, path, headers, body },
+        req: Request { method, path, query, headers, body },
         consumed: head_len + content_length,
     })
 }
@@ -211,16 +212,23 @@ pub fn encode_response(status: u16, content_type: &str, body: &[u8],
 /// always close the connection: the stream may legitimately end
 /// truncated (a sweep failing after the 200 head is committed), and a
 /// truncated chunk stream on a kept-alive connection would desync the
-/// client's framing.
-pub fn encode_chunked_head(status: u16, content_type: &str) -> Vec<u8> {
-    format!(
+/// client's framing.  `extra_headers` carries `X-Request-Id`.
+pub fn encode_chunked_head(status: u16, content_type: &str,
+                           extra_headers: &[(&str, &str)]) -> Vec<u8> {
+    let mut head = format!(
         "HTTP/1.1 {status} {}\r\n\
          Content-Type: {content_type}\r\n\
          Transfer-Encoding: chunked\r\n\
-         Connection: close\r\n\
-         \r\n",
-        reason(status))
-    .into_bytes()
+         Connection: close\r\n",
+        reason(status));
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    head.into_bytes()
 }
 
 /// Encode one chunk frame (empty input encodes nothing — a zero-length
@@ -378,6 +386,7 @@ mod tests {
               {\"model\":\"gnmt\"}").unwrap();
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/plan", "query string must be stripped");
+        assert_eq!(req.query, "x=1", "query string must be kept aside");
         assert_eq!(req.header("content-type"), Some("application/json"));
         assert_eq!(req.body, b"{\"model\":\"gnmt\"}");
         assert!(req.wants_keep_alive(), "HTTP/1.1 defaults to keep-alive");
@@ -388,6 +397,7 @@ mod tests {
         let req = parse(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
         assert_eq!(req.method, "GET");
         assert_eq!(req.path, "/healthz");
+        assert!(req.query.is_empty());
         assert!(req.body.is_empty());
     }
 
@@ -471,11 +481,12 @@ mod tests {
                 "empty chunk must not terminate the stream");
         let frame = encode_chunk(b"hello");
         assert_eq!(frame, b"5\r\nhello\r\n");
-        let head =
-            String::from_utf8(encode_chunked_head(200, "application/json"))
-                .unwrap();
+        let head = String::from_utf8(encode_chunked_head(
+            200, "application/json", &[("X-Request-Id", "2a")])).unwrap();
         assert!(head.contains("Transfer-Encoding: chunked\r\n"), "{head}");
         assert!(head.contains("Connection: close\r\n"), "{head}");
+        assert!(head.contains("X-Request-Id: 2a\r\n"), "{head}");
+        assert!(head.ends_with("\r\n\r\n"), "{head}");
         assert_eq!(CHUNK_END, b"0\r\n\r\n");
     }
 }

@@ -17,7 +17,14 @@
 //! | `GET /models`     | —                   | model registry listing |
 //! | `GET /topologies` | —                   | topology registry listing |
 //! | `GET /healthz`    | —                   | `{"status":"ok"}` |
-//! | `GET /metrics`    | —                   | Prometheus text: request counts, cache hits/misses, queue depth, per-endpoint latency histograms |
+//! | `GET /metrics`    | —                   | Prometheus text: request counts, cache hits/misses, queue depth, per-endpoint latency and per-phase plan histograms |
+//! | `GET /debug/trace`| —                   | the last `?n=` served requests with per-phase timings (in-memory ring) |
+//!
+//! Every response carries an `X-Request-Id` header — the client's own
+//! id echoed back, or a generated one — and, when
+//! [`ServiceOptions::access_log`] is set, each served request appends
+//! one JSON line (id, endpoint, code, duration, plan phases) to the
+//! log.  Schema and worked examples: `docs/observability.md`.
 //!
 //! The heart is the **single-flight LRU plan cache** ([`cache`]):
 //! requests are canonicalised
@@ -53,12 +60,13 @@ mod event_loop;
 pub mod http;
 pub mod shard;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Write as _;
 use std::net::{SocketAddr, TcpListener};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -79,8 +87,17 @@ const METRIC_PREFIX: &str = "hybridpar_service";
 /// The endpoint label set (fixed, so `/metrics` output is deterministic
 /// and unbounded label cardinality is impossible — unknown paths all
 /// land on "other").
-const ENDPOINTS: [&str; 7] = ["plan", "sweep", "models", "topologies",
-                              "healthz", "metrics", "other"];
+const ENDPOINTS: [&str; 8] = ["plan", "sweep", "models", "topologies",
+                              "healthz", "metrics", "debug", "other"];
+
+/// Label set for the `POST /plan` per-phase histograms, in handling
+/// order: body parse, single-flight cache lookup, planner evaluation,
+/// plan serialisation (the last two are zero on cache hits).
+const PLAN_PHASES: [&str; 4] = ["parse", "cache_lookup", "plan",
+                                "serialize"];
+
+/// Entries retained by the `GET /debug/trace` request ring.
+const DEBUG_RING_CAP: usize = 256;
 
 /// Status codes the service can emit (fixed label set, like
 /// [`ENDPOINTS`]).  408 = request-head deadline, 503 = load shed.
@@ -132,6 +149,9 @@ pub struct ServiceOptions {
     /// address is allowed but requires `threads ≥ 2` (the coordinator
     /// occupies one worker while its own shard needs another).
     pub replicas: Vec<String>,
+    /// Access-log destination: a file path (appended, JSON lines) or
+    /// `"-"` for stderr.  `None` disables the log.
+    pub access_log: Option<String>,
 }
 
 impl Default for ServiceOptions {
@@ -146,6 +166,7 @@ impl Default for ServiceOptions {
             idle_timeout: Duration::from_secs(60),
             persist_path: None,
             replicas: Vec::new(),
+            access_log: None,
         }
     }
 }
@@ -162,6 +183,8 @@ struct ServiceMetrics {
     requests: Vec<Vec<Counter>>,
     /// `[endpoint]` request latency.
     latency: Vec<Histogram>,
+    /// `[phase]` `POST /plan` handling-phase latency ([`PLAN_PHASES`]).
+    plan_phase: Vec<Histogram>,
 }
 
 impl ServiceMetrics {
@@ -172,6 +195,10 @@ impl ServiceMetrics {
                 .map(|_| CODES.iter().map(|_| Counter::new()).collect())
                 .collect(),
             latency: ENDPOINTS.iter().map(|_| Histogram::latency()).collect(),
+            plan_phase: PLAN_PHASES
+                .iter()
+                .map(|_| Histogram::latency())
+                .collect(),
         }
     }
 
@@ -262,6 +289,16 @@ impl ServiceMetrics {
                 &format!("{p}_request_duration_seconds"),
                 &format!("endpoint=\"{endpoint}\"")));
         }
+        s.push_str(&format!(
+            "# HELP {p}_plan_phase_duration_seconds Time spent in each \
+             POST /plan handling phase (plan and serialize are zero on \
+             cache hits).\n\
+             # TYPE {p}_plan_phase_duration_seconds histogram\n"));
+        for (i, phase) in PLAN_PHASES.iter().enumerate() {
+            s.push_str(&self.plan_phase[i].render(
+                &format!("{p}_plan_phase_duration_seconds"),
+                &format!("phase=\"{phase}\"")));
+        }
         s
     }
 }
@@ -308,9 +345,38 @@ enum SweepOutcome {
     Streamed { code: u16 },
 }
 
+/// Wall-clock seconds spent in each `POST /plan` handling phase
+/// ([`PLAN_PHASES`] order).  On a cache hit, `plan` and `serialize`
+/// stay zero and `cache_lookup` absorbs the lookup (including any wait
+/// on a coalesced in-flight evaluation).
+#[derive(Clone, Copy, Debug, Default)]
+pub(super) struct PlanPhases {
+    parse_s: f64,
+    cache_s: f64,
+    plan_s: f64,
+    serialize_s: f64,
+}
+
+impl PlanPhases {
+    fn to_json(self) -> Json {
+        jobj(vec![
+            ("parse_s", Json::Num(self.parse_s)),
+            ("cache_lookup_s", Json::Num(self.cache_s)),
+            ("plan_s", Json::Num(self.plan_s)),
+            ("serialize_s", Json::Num(self.serialize_s)),
+        ])
+    }
+}
+
+/// The access-log destination, resolved once at startup.
+enum LogSink {
+    Stderr,
+    File(std::fs::File),
+}
+
 /// Request-handling state shared by every worker thread: the registries,
-/// the single-flight plan cache, the metrics, and the sweep-shard
-/// replica set.
+/// the single-flight plan cache, the metrics, the request-id counter,
+/// the debug ring, and the sweep-shard replica set.
 pub struct PlannerService {
     models: ModelRegistry,
     topologies: TopologyRegistry,
@@ -319,6 +385,12 @@ pub struct PlannerService {
     stats: LoopStats,
     default_cost: String,
     replicas: Vec<String>,
+    /// Source of generated `X-Request-Id`s (requests carrying their own
+    /// id keep it; everything else gets the next counter value).
+    request_counter: AtomicU64,
+    /// Last [`DEBUG_RING_CAP`] served requests, for `GET /debug/trace`.
+    debug_ring: Mutex<VecDeque<Json>>,
+    access_log: Option<Mutex<LogSink>>,
 }
 
 impl PlannerService {
@@ -329,6 +401,16 @@ impl PlannerService {
             .context("service default cost model")?
             .name()
             .to_string();
+        let access_log = match opts.access_log.as_deref() {
+            None => None,
+            Some("-") => Some(Mutex::new(LogSink::Stderr)),
+            Some(path) => Some(Mutex::new(LogSink::File(
+                std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(path)
+                    .with_context(|| format!("open access log {path}"))?))),
+        };
         Ok(PlannerService {
             models: ModelRegistry::builtin(),
             topologies: TopologyRegistry::builtin(),
@@ -337,6 +419,9 @@ impl PlannerService {
             stats: LoopStats::new(),
             default_cost,
             replicas: opts.replicas.clone(),
+            request_counter: AtomicU64::new(0),
+            debug_ring: Mutex::new(VecDeque::with_capacity(DEBUG_RING_CAP)),
+            access_log,
         })
     }
 
@@ -355,6 +440,74 @@ impl PlannerService {
         self.metrics.record(endpoint, code, seconds);
     }
 
+    /// The next generated request id (zero-padded hex, monotonic).
+    fn next_request_id(&self) -> String {
+        format!("{:016x}",
+                self.request_counter.fetch_add(1, Ordering::Relaxed) + 1)
+    }
+
+    /// Record one completed request in the debug ring and, if
+    /// configured, the access log (one compact JSON line).  Called by
+    /// the event loop when it queues the response bytes, so `seconds`
+    /// is the full request wall time.
+    fn log_request(&self, id: &str, endpoint: &str, code: u16,
+                   seconds: f64, phases: Option<PlanPhases>) {
+        let mut pairs = vec![
+            ("code", Json::Num(code as f64)),
+            ("duration_s", Json::Num(seconds)),
+            ("endpoint", Json::Str(endpoint.to_string())),
+            ("id", Json::Str(id.to_string())),
+        ];
+        if let Some(p) = phases {
+            pairs.push(("phases", p.to_json()));
+        }
+        let entry = jobj(pairs);
+        {
+            let mut ring = self.debug_ring.lock().unwrap();
+            if ring.len() >= DEBUG_RING_CAP {
+                ring.pop_front();
+            }
+            ring.push_back(entry.clone());
+        }
+        if let Some(sink) = &self.access_log {
+            // The log line adds a wall-clock stamp; the ring stays
+            // stamp-free so /debug/trace bodies are reproducible.
+            let ts = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs_f64())
+                .unwrap_or(0.0);
+            let mut line = match entry {
+                Json::Obj(mut o) => {
+                    o.insert("ts".into(), Json::Num(ts));
+                    Json::Obj(o).to_string()
+                }
+                other => other.to_string(),
+            };
+            line.push('\n');
+            let mut sink = sink.lock().unwrap();
+            let res = match &mut *sink {
+                LogSink::Stderr => std::io::stderr()
+                    .write_all(line.as_bytes()),
+                LogSink::File(f) => f.write_all(line.as_bytes()),
+            };
+            if let Err(e) = res {
+                eprintln!("warning: access log write failed: {e}");
+            }
+        }
+    }
+
+    /// `GET /debug/trace?n=` document: the most recent `n` ring entries
+    /// (default 32), oldest first, as `{"requests":[…]}`.
+    fn debug_trace_doc(&self, n: usize) -> Arc<String> {
+        let ring = self.debug_ring.lock().unwrap();
+        let take = n.min(ring.len());
+        let items: Vec<Json> =
+            ring.iter().skip(ring.len() - take).cloned().collect();
+        let mut s = jobj(vec![("requests", Json::Arr(items))]).to_string();
+        s.push('\n');
+        Arc::new(s)
+    }
+
     /// `POST /plan`: parse → canonicalise → single-flight cache →
     /// respond.  The 200 body is [`Plan::to_json_string`]
     /// (byte-identical to the `plan` CLI); planner and parse errors are
@@ -363,28 +516,66 @@ impl PlannerService {
     ///
     /// [`Plan::to_json_string`]: crate::planner::Plan::to_json_string
     fn handle_plan(&self, body: &[u8]) -> (u16, Arc<String>) {
+        let (code, doc, _) = self.handle_plan_timed(body);
+        (code, doc)
+    }
+
+    /// [`Self::handle_plan`] with per-phase wall times.  Phase
+    /// histograms are observed here (every call, hit or miss); the
+    /// caller threads the [`PlanPhases`] into the access log and the
+    /// debug ring.
+    fn handle_plan_timed(&self, body: &[u8])
+                         -> (u16, Arc<String>, PlanPhases) {
+        let mut phases = PlanPhases::default();
+        let observe = |m: &ServiceMetrics, p: &PlanPhases| {
+            m.plan_phase[0].observe(p.parse_s);
+            m.plan_phase[1].observe(p.cache_s);
+            m.plan_phase[2].observe(p.plan_s);
+            m.plan_phase[3].observe(p.serialize_s);
+        };
+        let t0 = Instant::now();
         let parsed = std::str::from_utf8(body)
             .map_err(anyhow::Error::from)
             .and_then(Json::parse)
             .and_then(|j| plan_request_from_json(&j));
-        let (req, cost_name) = match parsed {
+        let resolved = parsed.and_then(|(req, cost_name)| {
+            let cost = cost_by_name(
+                cost_name.as_deref().unwrap_or(&self.default_cost))?;
+            Ok((req, cost))
+        });
+        phases.parse_s = t0.elapsed().as_secs_f64();
+        let (req, cost) = match resolved {
             Ok(p) => p,
-            Err(e) => return (400, error_body(&format!("{e:#}"))),
-        };
-        let cost = match cost_by_name(
-            cost_name.as_deref().unwrap_or(&self.default_cost)) {
-            Ok(c) => c,
-            Err(e) => return (400, error_body(&format!("{e:#}"))),
+            Err(e) => {
+                observe(&self.metrics, &phases);
+                return (400, error_body(&format!("{e:#}")), phases);
+            }
         };
         let key = req.canonical_json(&self.models, cost.name()).to_string();
+        let t1 = Instant::now();
+        let mut plan_s = 0.0;
+        let mut serialize_s = 0.0;
         let (cached, _hit) = self.cache.get_or_compute(&key, || {
             let planner = Planner::with_parts(self.models.clone(),
                                               self.topologies.clone(), cost);
-            Ok(planner.plan(&req)?.to_json_string())
+            let tp = Instant::now();
+            let plan = planner.plan(&req)?;
+            plan_s = tp.elapsed().as_secs_f64();
+            let ts = Instant::now();
+            let doc = plan.to_json_string();
+            serialize_s = ts.elapsed().as_secs_f64();
+            Ok(doc)
         });
+        phases.plan_s = plan_s;
+        phases.serialize_s = serialize_s;
+        // The lookup phase is everything around the evaluation itself:
+        // key probe, single-flight coordination, LRU bookkeeping.
+        phases.cache_s = (t1.elapsed().as_secs_f64() - plan_s - serialize_s)
+            .max(0.0);
+        observe(&self.metrics, &phases);
         match cached {
-            Ok(doc) => (200, doc),
-            Err(e) => (400, error_body(&e)),
+            Ok(doc) => (200, doc, phases),
+            Err(e) => (400, error_body(&e), phases),
         }
     }
 
@@ -855,6 +1046,79 @@ mod tests {
         assert!(doc.contains(
             "hybridpar_service_request_duration_seconds_count\
              {endpoint=\"plan\"} 2"), "{doc}");
+        // The per-phase plan histograms render for every phase label,
+        // the debug endpoint has its own request series.
+        for phase in PLAN_PHASES {
+            assert!(doc.contains(&format!(
+                "hybridpar_service_plan_phase_duration_seconds_bucket\
+                 {{phase=\"{phase}\",")), "{phase}: {doc}");
+        }
+        assert!(doc.contains(
+            "hybridpar_service_requests_total{endpoint=\"debug\",\
+             code=\"200\"} 0"), "{doc}");
+    }
+
+    #[test]
+    fn plan_phases_are_observed_and_sum_close_to_the_handler_time() {
+        let svc =
+            PlannerService::new(&ServiceOptions::default()).unwrap();
+        let (code, _, phases) =
+            svc.handle_plan_timed(br#"{"model":"gnmt","devices":8}"#);
+        assert_eq!(code, 200);
+        assert!(phases.parse_s >= 0.0 && phases.plan_s > 0.0,
+                "a cache miss runs the planner: {phases:?}");
+        // Every phase histogram saw exactly one observation.
+        for (i, phase) in PLAN_PHASES.iter().enumerate() {
+            assert_eq!(svc.metrics.plan_phase[i].count(), 1, "{phase}");
+        }
+        // A repeat is a cache hit: plan and serialize stay zero.
+        let (_, _, hit) =
+            svc.handle_plan_timed(br#"{"model":"gnmt","devices":8}"#);
+        assert_eq!((hit.plan_s, hit.serialize_s), (0.0, 0.0));
+        assert_eq!(svc.metrics.plan_phase[2].count(), 2);
+        // Parse failures still observe (as near-zero plan/serialize).
+        let (code, _, _) = svc.handle_plan_timed(b"not json");
+        assert_eq!(code, 400);
+        assert_eq!(svc.metrics.plan_phase[0].count(), 3);
+    }
+
+    #[test]
+    fn debug_ring_keeps_the_last_entries_in_order() {
+        let svc =
+            PlannerService::new(&ServiceOptions::default()).unwrap();
+        for i in 0..(DEBUG_RING_CAP + 10) {
+            svc.log_request(&format!("{i:x}"), "healthz", 200,
+                            1e-4, None);
+        }
+        let all = svc.debug_trace_doc(usize::MAX);
+        let doc = Json::parse(&all).unwrap();
+        let rows = doc.as_obj().unwrap()["requests"].as_arr().unwrap();
+        assert_eq!(rows.len(), DEBUG_RING_CAP, "ring is bounded");
+        let first = rows[0].as_obj().unwrap()["id"].as_str().unwrap();
+        assert_eq!(first, format!("{:x}", 10), "oldest survivors first");
+        // ?n= trims to the most recent n, still oldest-first.
+        let tail = svc.debug_trace_doc(2);
+        let doc = Json::parse(&tail).unwrap();
+        let rows = doc.as_obj().unwrap()["requests"].as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        let last = rows[1].as_obj().unwrap()["id"].as_str().unwrap();
+        assert_eq!(last, format!("{:x}", DEBUG_RING_CAP + 9));
+    }
+
+    #[test]
+    fn plan_phases_land_in_the_ring_and_ids_are_unique() {
+        let svc =
+            PlannerService::new(&ServiceOptions::default()).unwrap();
+        let (_, _, phases) =
+            svc.handle_plan_timed(br#"{"model":"gnmt","devices":8}"#);
+        let (a, b) = (svc.next_request_id(), svc.next_request_id());
+        assert_ne!(a, b, "generated request ids must be unique");
+        svc.log_request(&a, "plan", 200, 0.01, Some(phases));
+        let doc = svc.debug_trace_doc(1);
+        assert!(doc.contains("\"phases\":{"), "{doc}");
+        assert!(doc.contains("\"plan_s\":"), "{doc}");
+        assert!(doc.contains(&format!("\"id\":\"{a}\"")), "{doc}");
+        Json::parse(&doc).unwrap();
     }
 
     #[test]

@@ -52,6 +52,24 @@ impl SimConfig {
     }
 }
 
+/// One cross-device transfer slice on one physical link — the network
+/// half of a timeline (`trace` turns these into Perfetto tracks, one per
+/// link, alongside the per-device op tracks from `op_start`/`op_finish`).
+#[derive(Clone, Copy, Debug)]
+pub struct Transfer {
+    /// Index into `hw.links`.
+    pub link: usize,
+    /// Producing / consuming op of the DFG edge being moved.
+    pub src_op: usize,
+    pub dst_op: usize,
+    /// Payload bytes.
+    pub bytes: f64,
+    /// Slice start time on this link (seconds).
+    pub start_s: f64,
+    /// Slice duration on this link (seconds).
+    pub dur_s: f64,
+}
+
 /// Simulation result.
 #[derive(Clone, Debug)]
 pub struct SimResult {
@@ -65,6 +83,8 @@ pub struct SimResult {
     pub op_start: Vec<f64>,
     /// Finish time per op.
     pub op_finish: Vec<f64>,
+    /// Every cross-device transfer slice, in delivery order.
+    pub transfers: Vec<Transfer>,
 }
 
 impl SimResult {
@@ -154,6 +174,7 @@ pub fn simulate(dfg: &Dfg, hw: &HwGraph, placement: &[usize],
     let mut device_busy = vec![0.0f64; hw.nodes.len()];
     let mut link_free = vec![0.0f64; hw.links.len()];
     let mut link_busy = vec![0.0f64; hw.links.len()];
+    let mut transfers: Vec<Transfer> = Vec::new();
     let mut op_start = vec![f64::NAN; n];
     let mut op_finish = vec![f64::NAN; n];
     let mut started = vec![false; n];
@@ -224,13 +245,34 @@ pub fn simulate(dfg: &Dfg, hw: &HwGraph, placement: &[usize],
                                 let start = t.max(link_free[*li]);
                                 link_free[*li] = start + xfer;
                                 link_busy[*li] += xfer;
+                                transfers.push(Transfer {
+                                    link: *li,
+                                    src_op: e.src,
+                                    dst_op: e.dst,
+                                    bytes: e.bytes,
+                                    start_s: start,
+                                    dur_s: xfer,
+                                });
                                 t = start + xfer;
                             }
                         } else {
+                            // Store-and-forward slices for the timeline,
+                            // uncontended: each hop starts when the
+                            // previous one ends.
+                            let mut hop = t;
                             for li in &path {
                                 let l = hw.links[*li];
-                                link_busy[*li] +=
-                                    e.bytes / l.bandwidth + l.latency;
+                                let xfer = e.bytes / l.bandwidth + l.latency;
+                                link_busy[*li] += xfer;
+                                transfers.push(Transfer {
+                                    link: *li,
+                                    src_op: e.src,
+                                    dst_op: e.dst,
+                                    bytes: e.bytes,
+                                    start_s: hop,
+                                    dur_s: xfer,
+                                });
+                                hop += xfer;
                             }
                             t += route_t;
                         }
@@ -258,7 +300,14 @@ pub fn simulate(dfg: &Dfg, hw: &HwGraph, placement: &[usize],
         bail!("deadlock: only {completed}/{n} ops completed");
     }
     let makespan = op_finish.iter().fold(0.0f64, |a, &b| a.max(b));
-    Ok(SimResult { makespan, device_busy, link_busy, op_start, op_finish })
+    Ok(SimResult {
+        makespan,
+        device_busy,
+        link_busy,
+        op_start,
+        op_finish,
+        transfers,
+    })
 }
 
 /// Execute one bucketed-overlap DP step as a DAG (the cross-check behind
@@ -457,6 +506,33 @@ mod tests {
         assert!(simulate_bucketed_overlap(&hw, 0.01, 2, c_k, 0.02,
                                           SimConfig::ideal())
             .is_err(), "window larger than compute must be rejected");
+    }
+
+    #[test]
+    fn transfers_record_every_cross_device_slice() {
+        let g = diamond();
+        let hw = dgx1(2);
+        let times = vec![1.0, 2.0, 2.0, 1.0];
+        for cfg in [SimConfig::ideal(), SimConfig::default()] {
+            let r = simulate(&g, &hw, &[0, 1, 0, 0], &times, cfg).unwrap();
+            // Two cross-device edges (a->b, b->d), each at least one hop.
+            assert!(r.transfers.len() >= 2, "{} slices", r.transfers.len());
+            let sliced: f64 = r.transfers.iter().map(|t| t.dur_s).sum();
+            let busy: f64 = r.link_busy.iter().sum();
+            assert!((sliced - busy).abs() < 1e-12,
+                    "slices must account exactly for link busy time");
+            for t in &r.transfers {
+                assert!(t.link < hw.links.len());
+                assert!(t.start_s >= 0.0 && t.dur_s > 0.0);
+                assert!(t.start_s + t.dur_s <= r.makespan + 1e-9,
+                        "slices live inside the step");
+            }
+        }
+        // Same-device placement moves nothing.
+        let r = simulate(&g, &hw, &[0, 0, 0, 0], &times,
+                         SimConfig::default())
+            .unwrap();
+        assert!(r.transfers.is_empty());
     }
 
     #[test]

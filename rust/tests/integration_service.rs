@@ -596,6 +596,94 @@ fn plan_cache_persists_across_restarts() {
 }
 
 #[test]
+fn request_ids_are_echoed_minted_and_unique() {
+    let handle = spawn_service(2, 16);
+    let addr = handle.addr();
+
+    // A client-supplied X-Request-Id is echoed back verbatim.
+    let body = r#"{"model":"gnmt","devices":8}"#;
+    let raw = format!(
+        "POST /plan HTTP/1.1\r\nHost: t\r\nX-Request-Id: trace-abc-7\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len());
+    let echoed = raw_request(addr, raw.as_bytes());
+    assert_eq!(echoed.status, 200);
+    assert_eq!(echoed.header("x-request-id"), Some("trace-abc-7"),
+               "client-supplied ids must be echoed");
+
+    // Without the header the service mints one — present and unique
+    // across requests.
+    let a = request(addr, "POST", "/plan", body);
+    let b = request(addr, "POST", "/plan", body);
+    let id_a = a.header("x-request-id").expect("minted id").to_string();
+    let id_b = b.header("x-request-id").expect("minted id").to_string();
+    assert_ne!(id_a, id_b, "minted ids must be unique per request");
+
+    // Every response shape carries one: 404s, 400s, and the chunked
+    // sweep stream's head.
+    let nf = get(addr, "/nope");
+    assert_eq!(nf.status, 404);
+    assert!(nf.header("x-request-id").is_some(), "404 carries an id");
+    let bad = request(addr, "POST", "/plan", "{not json");
+    assert_eq!(bad.status, 400);
+    assert!(bad.header("x-request-id").is_some(), "400 carries an id");
+    let sweep = request(addr, "POST", "/sweep",
+                        r#"{"models":["gnmt"],"devices":[8],
+                            "families":["dp"],"curve_max_devices":8}"#);
+    assert_eq!(sweep.status, 200);
+    assert_eq!(sweep.header("transfer-encoding"), Some("chunked"));
+    assert!(sweep.header("x-request-id").is_some(),
+            "chunked heads carry an id");
+
+    handle.stop();
+}
+
+#[test]
+fn plan_phase_histograms_and_debug_trace_expose_telemetry() {
+    let handle = spawn_service(2, 16);
+    let addr = handle.addr();
+
+    // A cold/hot pair: two /plan observations per phase histogram.
+    let body = r#"{"model":"gnmt","devices":8}"#;
+    assert_eq!(request(addr, "POST", "/plan", body).status, 200);
+    assert_eq!(request(addr, "POST", "/plan", body).status, 200);
+
+    let metrics = get(addr, "/metrics");
+    assert_eq!(metrics.status, 200);
+    for phase in ["parse", "cache_lookup", "plan", "serialize"] {
+        assert!(metrics.text().contains(&format!(
+            "hybridpar_service_plan_phase_duration_seconds_count\
+             {{phase=\"{phase}\"}} 2")), "{}", metrics.text());
+    }
+
+    // /debug/trace replays the ring: both /plan requests, with their
+    // per-phase breakdown, plus the /metrics request itself.
+    let trace = get(addr, "/debug/trace?n=16");
+    assert_eq!(trace.status, 200);
+    let text = trace.text();
+    assert!(text.starts_with("{\"requests\":["), "{text}");
+    assert_eq!(text.matches("\"endpoint\":\"plan\"").count(), 2, "{text}");
+    assert_eq!(text.matches("\"phases\":{").count(), 2,
+               "only /plan entries carry a phase breakdown: {text}");
+    for key in ["\"parse_s\":", "\"cache_lookup_s\":", "\"plan_s\":",
+                "\"serialize_s\":"] {
+        assert!(text.contains(key), "{text}");
+    }
+    assert!(text.contains("\"endpoint\":\"metrics\""), "{text}");
+    // ?n= bounds the tail: asking for 1 returns exactly one entry.
+    let one = get(addr, "/debug/trace?n=1");
+    assert_eq!(one.text().matches("\"endpoint\":").count(), 1,
+               "{}", one.text());
+    // The debug endpoint itself is metered under its own label.
+    let after = get(addr, "/metrics");
+    assert!(after.text().contains(
+        "hybridpar_service_requests_total{endpoint=\"debug\",\
+         code=\"200\"} 2"), "{}", after.text());
+
+    handle.stop();
+}
+
+#[test]
 fn sharded_sweep_merge_is_byte_identical_to_single_replica() {
     let r1 = spawn_service(2, 16);
     let r2 = spawn_service(2, 16);

@@ -9,8 +9,8 @@
 //!   threading are transparent).
 
 use hybridpar::coordinator::Strategy;
-use hybridpar::planner::sweep::{run_sweep, BatchSpec, StrategyFamily,
-                                SweepSpec};
+use hybridpar::planner::sweep::{run_sweep, run_sweep_observed, BatchSpec,
+                                StrategyFamily, SweepSpec};
 use hybridpar::planner::{PlanMechanism, PlanRequest, Planner};
 
 fn small_grid() -> SweepSpec {
@@ -41,6 +41,38 @@ fn sweep_output_is_byte_identical_across_thread_counts() {
                    "JSON diverged at threads={threads}");
         assert_eq!(parallel.to_csv(), csv_1,
                    "CSV diverged at threads={threads}");
+    }
+}
+
+#[test]
+fn progress_observer_leaves_the_output_byte_identical() {
+    // The contract behind `sweep --progress`: the heartbeat callback is
+    // a pure observer. Stdout (JSON and CSV) must be byte-identical
+    // with and without it, at any thread count, and the callback must
+    // count monotonically to the grid cardinality in canonical order.
+    let mut spec = small_grid();
+    let quiet = run_sweep(&spec).unwrap();
+    let json = quiet.to_json().to_string();
+    let csv = quiet.to_csv();
+    for threads in [1usize, 4] {
+        spec.threads = threads;
+        let mut beats: Vec<(usize, usize)> = Vec::new();
+        let observed = run_sweep_observed(&spec, |done, total| {
+            beats.push((done, total));
+        })
+        .unwrap();
+        assert_eq!(observed.to_json().to_string(), json,
+                   "progress observation perturbed JSON at \
+                    threads={threads}");
+        assert_eq!(observed.to_csv(), csv,
+                   "progress observation perturbed CSV at \
+                    threads={threads}");
+        let total = spec.cardinality();
+        assert_eq!(beats.len(), total);
+        for (i, (done, t)) in beats.iter().enumerate() {
+            assert_eq!((*done, *t), (i + 1, total),
+                       "heartbeat must be monotonic in delivery order");
+        }
     }
 }
 

@@ -1,0 +1,208 @@
+//! Integration: tracing and plan explainability.
+//!
+//! * timeline determinism — `plan --trace-out`'s Chrome trace-event
+//!   document is a pure function of the plan: byte-identical across
+//!   repeated generation, fresh planners, and concurrent threads;
+//! * the acceptance scenario — BigLSTM on DGX-1 forced onto the 2-stage
+//!   GPipe pipeline renders one device track per stage whose extent
+//!   matches the plan's predicted step time within 1%;
+//! * sweep timelines — the `sweep --trace-dir` path (re-deriving each
+//!   scenario's `PlanRequest` via `sweep::plan_request`) is equally
+//!   deterministic across sweep thread counts;
+//! * explain round-trip — `--explain` waterfalls survive
+//!   `Plan::to_json_string` → `Plan::from_json` losslessly, sum to the
+//!   reported step time exactly, and stay OFF the wire by default.
+
+use hybridpar::planner::sweep::{self, run_sweep, StrategyFamily,
+                                SweepSpec};
+use hybridpar::planner::timeline::plan_timeline;
+use hybridpar::planner::{Plan, PlanRequest, Planner};
+use hybridpar::trace::PID_DEVICES;
+use hybridpar::util::json::Json;
+
+fn parse(doc: &str) -> Json {
+    Json::parse(doc.trim_end()).expect("timeline must be valid JSON")
+}
+
+/// The acceptance query: BigLSTM on 16 GB DGX-1 parts goes pipelined.
+fn biglstm_pipelined() -> (Planner, PlanRequest, Plan) {
+    let planner = Planner::new();
+    let req = PlanRequest::new("biglstm", "dgx1")
+        .devices(8)
+        .device_mem_gb(16.0);
+    let plan = planner.plan(&req).unwrap();
+    assert_eq!(plan.mechanism, "pipelined",
+               "16 GB parts must force BigLSTM onto the pipeline");
+    (planner, req, plan)
+}
+
+#[test]
+fn biglstm_timeline_has_a_track_per_device_and_matches_step_time() {
+    let (planner, req, plan) = biglstm_pipelined();
+    let doc = plan_timeline(&planner, &req, &plan).unwrap();
+    let j = parse(&doc);
+    assert_eq!(j.get("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+
+    // One named device track per pipeline stage, each carrying >= 1 span.
+    let device_tids: Vec<usize> = evs
+        .iter()
+        .filter(|e| {
+            e.get("ph").unwrap().as_str().unwrap() == "M"
+                && e.get("name").unwrap().as_str().unwrap() == "thread_name"
+                && e.get("pid").unwrap().as_usize().unwrap()
+                    == PID_DEVICES as usize
+        })
+        .map(|e| e.get("tid").unwrap().as_usize().unwrap())
+        .collect();
+    assert_eq!(device_tids.len(), plan.mp_degree);
+    let spans: Vec<&Json> = evs
+        .iter()
+        .filter(|e| {
+            e.get("ph").unwrap().as_str().unwrap() == "X"
+                && e.get("pid").unwrap().as_usize().unwrap()
+                    == PID_DEVICES as usize
+        })
+        .collect();
+    for tid in &device_tids {
+        assert!(
+            spans.iter().any(
+                |e| e.get("tid").unwrap().as_usize().unwrap() == *tid),
+            "device track tid={tid} must carry at least one span");
+    }
+
+    // Track extent agrees with the reported step time within 1%.
+    let extent_us = spans
+        .iter()
+        .map(|e| {
+            e.get("ts").unwrap().as_f64().unwrap()
+                + e.get("dur").unwrap().as_f64().unwrap()
+        })
+        .fold(0.0f64, f64::max);
+    let predicted_us = plan.predicted_step_s * 1e6;
+    assert!((extent_us - predicted_us).abs() / predicted_us < 0.01,
+            "extent {extent_us} µs vs predicted {predicted_us} µs");
+}
+
+#[test]
+fn timelines_are_byte_identical_across_planners_and_threads() {
+    let (planner, req, plan) = biglstm_pipelined();
+    let want = plan_timeline(&planner, &req, &plan).unwrap();
+
+    // Same planner, repeated generation.
+    assert_eq!(plan_timeline(&planner, &req, &plan).unwrap(), want);
+
+    // A fresh planner instance renders the same bytes.
+    let other = Planner::new();
+    assert_eq!(plan_timeline(&other, &req, &plan).unwrap(), want);
+
+    // Concurrent generation on independent planners: the recorder's
+    // virtual clock keeps wall time and scheduling noise out of the
+    // document.
+    let docs: Vec<String> = std::thread::scope(|scope| {
+        (0..4)
+            .map(|_| {
+                scope.spawn(|| {
+                    let p = Planner::new();
+                    let req = PlanRequest::new("biglstm", "dgx1")
+                        .devices(8)
+                        .device_mem_gb(16.0);
+                    let plan = p.plan(&req).unwrap();
+                    plan_timeline(&p, &req, &plan).unwrap()
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for d in &docs {
+        assert_eq!(d, &want, "threaded timeline generation diverged");
+    }
+}
+
+#[test]
+fn sweep_timelines_are_deterministic_across_thread_counts() {
+    // The `sweep --trace-dir` path: rebuild each scenario's PlanRequest
+    // with sweep::plan_request and render its timeline. Thread count
+    // must not perturb a single byte.
+    let spec = |threads: usize| SweepSpec {
+        models: vec!["gnmt".into(), "biglstm".into()],
+        topologies: vec!["dgx1".into()],
+        devices: vec![8],
+        families: vec![StrategyFamily::DpOnly, StrategyFamily::Pipelined],
+        mp_degrees: vec![2],
+        curve_max_devices: 8,
+        threads,
+        ..Default::default()
+    };
+    let timelines = |threads: usize| -> Vec<String> {
+        let s = spec(threads);
+        let r = run_sweep(&s).unwrap();
+        let tracer = Planner::new();
+        r.results
+            .iter()
+            .filter_map(|sr| {
+                let plan = sr.plan.as_ref()?;
+                let req = sweep::plan_request(&tracer, &s, &sr.scenario);
+                Some(plan_timeline(&tracer, &req, plan).unwrap())
+            })
+            .collect()
+    };
+    let serial = timelines(1);
+    assert!(!serial.is_empty());
+    for doc in &serial {
+        let j = parse(doc);
+        assert!(!j.get("traceEvents").unwrap().as_arr().unwrap()
+            .is_empty());
+    }
+    assert_eq!(timelines(4), serial,
+               "sweep timelines diverged across thread counts");
+}
+
+#[test]
+fn explain_round_trips_and_sums_to_the_reported_step_time() {
+    let planner = Planner::new();
+    let req = PlanRequest::new("gnmt", "dgx1").devices(8).explain(true);
+    let plan = planner.plan(&req).unwrap();
+    let ex = plan.explain.as_ref().expect("explain(true) attaches it");
+
+    // The waterfall is algebraic: each row's parts sum to its total
+    // exactly, and the chosen row's total IS the reported step time.
+    for row in std::iter::once(&ex.chosen).chain(&ex.candidates) {
+        let sum = row.compute_s + row.mp_overhead_s + row.exchange_s;
+        assert!((sum - row.total_s).abs() <= 1e-12 + 1e-9 * row.total_s,
+                "waterfall must sum exactly: {row:?}");
+    }
+    assert_eq!(ex.chosen.total_s, plan.predicted_step_s,
+               "the chosen row's total IS the reported step time");
+
+    // Wire round-trip: to_json_string -> parse -> from_json is lossless.
+    let doc = plan.to_json_string();
+    let back = Plan::from_json(&Json::parse(doc.trim_end()).unwrap())
+        .unwrap();
+    assert_eq!(back, plan, "explain must survive the wire round-trip");
+
+    // The text rendering covers every candidate row.
+    let text = plan.explain_text();
+    assert!(text.contains("chosen waterfall"), "{text}");
+    for row in &ex.candidates {
+        assert!(text.contains(&row.mechanism),
+                "explain_text must mention {}: {text}", row.mechanism);
+    }
+}
+
+#[test]
+fn explain_stays_off_the_wire_by_default() {
+    let planner = Planner::new();
+    let req = PlanRequest::new("gnmt", "dgx1").devices(8);
+    let plan = planner.plan(&req).unwrap();
+    assert!(plan.explain.is_none());
+    let j = Json::parse(plan.to_json_string().trim_end()).unwrap();
+    assert!(j.opt("explain").is_none(),
+            "default plans must not grow an explain key");
+    // And the default wire spelling of a request carries explain=false,
+    // so cached bodies stay byte-identical to pre-explain builds.
+    let round = Plan::from_json(&j).unwrap();
+    assert_eq!(round, plan);
+}
